@@ -1,0 +1,63 @@
+//! End-to-end driver over the full three-layer stack (DESIGN.md §validation):
+//! pretrains the byte-GPT teacher through the PJRT `teacher_train_step`
+//! artifact (L2+L1 compute lowered from jax/Pallas), runs DataSVD, DP
+//! selection, nested KD consolidation, and evaluates every budget — logging
+//! the loss curves that EXPERIMENTS.md records.
+//!
+//! Run (after `make artifacts && cargo build --release`):
+//!   cargo run --release --example e2e_flexrank            # full run
+//!   cargo run --release --example e2e_flexrank -- --smoke # 3-step smoke
+//!
+//! Flags: --pretrain-steps N --consolidate-steps N --seed S --fresh
+
+use anyhow::Result;
+use flexrank::cli::Args;
+use flexrank::config::RunConfig;
+use flexrank::runtime::Engine;
+use flexrank::training::pipeline;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rc = if args.flag("smoke") {
+        RunConfig::smoke().with_args(&args)?
+    } else {
+        RunConfig::default().with_args(&args)?
+    };
+
+    let engine = Engine::new(flexrank::artifacts_dir())?;
+    println!(
+        "engine: platform={} model={} ({} factorized layers)",
+        engine.platform(),
+        engine.manifest.config.name,
+        engine.manifest.config.n_fact_layers()
+    );
+
+    let out = pipeline::run(&engine, &rc, args.flag("fresh"))?;
+
+    println!("\n== pretraining loss curve (first/last 5) ==");
+    let pl = &out.pretrain_losses;
+    if !pl.is_empty() {
+        let head: Vec<String> = pl.iter().take(5).map(|x| format!("{x:.3}")).collect();
+        let tail: Vec<String> = pl.iter().rev().take(5).rev().map(|x| format!("{x:.3}")).collect();
+        println!("  {} ... {}", head.join(" "), tail.join(" "));
+    }
+    println!("\n== consolidation KD-loss curve (first/last 5) ==");
+    let kl = &out.kd_losses;
+    if !kl.is_empty() {
+        let head: Vec<String> = kl.iter().take(5).map(|x| format!("{x:.4}")).collect();
+        let tail: Vec<String> = kl.iter().rev().take(5).rev().map(|x| format!("{x:.4}")).collect();
+        println!("  {} ... {}", head.join(" "), tail.join(" "));
+    }
+
+    println!("\n== budget table (eval CE loss on held-out corpus) ==");
+    println!("budget  datasvd-init  flexrank  profile-head");
+    for (b, prof, before, after) in &out.budget_rows {
+        println!(
+            "  {b:.2}      {before:.4}     {after:.4}  {:?}",
+            &prof[..4.min(prof.len())]
+        );
+    }
+    println!("\nfull model inference cost: {} params (GAR form)", out.full_cost);
+    println!("e2e_flexrank OK");
+    Ok(())
+}

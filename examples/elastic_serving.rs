@@ -1,0 +1,69 @@
+//! Elastic serving demo: loads the GAR tier executables, replays a Poisson
+//! request trace with mixed SLOs through the coordinator (router → dynamic
+//! batcher → PJRT), and reports per-tier latency + throughput — the paper's
+//! "deploy everywhere" story under one roof.
+//!
+//! Run (after `make artifacts && cargo build --release`):
+//!   cargo run --release --example elastic_serving
+//!   cargo run --release --example elastic_serving -- --policy adaptive --rate 400
+
+use anyhow::Result;
+use flexrank::cli::Args;
+use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg};
+use flexrank::data::{Corpus, TraceCfg, TraceGen};
+use flexrank::runtime::Engine;
+use flexrank::training::params::{decompose_teacher, student_from_factors, ParamSet};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let engine = Engine::new(flexrank::artifacts_dir())?;
+    let cfg = engine.manifest.config.clone();
+
+    // Use the consolidated student when available, else a freshly decomposed
+    // teacher (serving mechanics are identical).
+    let stem = flexrank::training::pipeline::stage_dir().join("student_kd");
+    let student = if flexrank::training::ckpt::exists(&stem) {
+        println!("using consolidated student checkpoint");
+        flexrank::training::ckpt::load(&stem)?
+    } else {
+        println!("no pipeline checkpoint — decomposing fresh teacher");
+        let teacher = ParamSet::from_specs(
+            &engine.manifest.teacher_init,
+            engine.manifest.load_teacher_init()?,
+        );
+        let factors = decompose_teacher(&cfg, &teacher, None)?;
+        student_from_factors(&cfg, &teacher, &factors)?
+    };
+
+    let corpus = Corpus::generate(200_000, 5);
+    let trace = TraceGen::new(
+        TraceCfg {
+            n_requests: args.usize_or("requests", 300)?,
+            rate: args.f64_or("rate", 250.0)?,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            seed: args.u64_or("seed", 7)?,
+            ..Default::default()
+        },
+        &corpus.heldout,
+    )
+    .generate();
+
+    let policy = match args.get_or("policy", "static") {
+        "adaptive" => PolicyKind::Adaptive,
+        _ => PolicyKind::Static,
+    };
+    let report = serve_trace(
+        &engine,
+        &student,
+        trace,
+        &ServeCfg {
+            policy,
+            max_wait_ms: args.f64_or("max-wait-ms", 4.0)?,
+            ..Default::default()
+        },
+    )?;
+    report.print();
+    println!("elastic_serving OK");
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Controlled Pareto-recovery experiments (the paper's Sec. 3.4 / Sec. 4
+//! story) as a single runnable: regenerates Figs. 2, 3, and 8 back to back
+//! on pure-rust substrates — no artifacts required.
+//!
+//! Run: `cargo run --release --example pareto_recovery [-- --steps N]`
+
+use anyhow::Result;
+use flexrank::cli::Args;
+use flexrank::eval::figures;
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "figure".into());
+    argv.insert(1, "fig2".into());
+    let args = Args::parse(argv.clone());
+
+    println!("=== Fig 2: PTS vs ASL vs NSL (linear theory) ===");
+    figures::run_cli(&args)?;
+
+    println!("\n=== Fig 3: Pareto-front recovery (digits net) ===");
+    argv[1] = "fig3".into();
+    figures::run_cli(&Args::parse(argv.clone()))?;
+
+    println!("\n=== Fig 8: single-budget vs nested training ===");
+    argv[1] = "fig8".into();
+    figures::run_cli(&Args::parse(argv.clone()))?;
+
+    println!("\npareto_recovery OK (CSVs under results/)");
+    Ok(())
+}

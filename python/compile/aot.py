@@ -1,0 +1,248 @@
+"""AOT export: lower every L2 entry point to HLO **text** in ``artifacts/``.
+
+Run once by ``make artifacts`` — python never runs on the request path.  The
+rust runtime loads these with ``HloModuleProto::from_text_file`` and executes
+them via the PJRT CPU client.
+
+Interchange is HLO text, NOT a serialized ``HloModuleProto``: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Alongside each ``<name>.hlo.txt`` we write ``manifest.json`` describing the
+exact flattened input/output order (pytree-path names, shapes, dtypes) so the
+rust side never has to guess jax's dict-key flattening order.
+
+Two-phase serving export: phase 1 (default) uses uniform-rank tier profiles;
+after the rust DP stage writes ``artifacts/profiles.json`` the serving
+forwards are re-lowered at the Pareto profiles (``make serve-artifacts``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+_REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return ".".join(out)
+
+
+def _spec_of(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [
+        {
+            "name": _path_str(path),
+            "shape": list(np.shape(leaf)),
+            "dtype": str(np.asarray(leaf).dtype) if not hasattr(leaf, "dtype") else str(leaf.dtype),
+        }
+        for path, leaf in flat
+    ]
+
+
+class Exporter:
+    def __init__(self, cfg: M.Config, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.manifest = {
+            "config": json.loads(json.dumps(cfg.__dict__)),
+            "artifacts": {},
+        }
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, *example_args):
+        """Lower fn(*example_args) and record its I/O spec in the manifest."""
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example_args)
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _spec_of(list(example_args)),
+            "outputs": _spec_of(outs),
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+def _tier_profiles(cfg: M.Config, out_dir: str) -> list:
+    """Per-tier rank profiles: DP output if present, else uniform ranks."""
+    pj = os.path.join(out_dir, "profiles.json")
+    if os.path.exists(pj):
+        with open(pj) as f:
+            data = json.load(f)
+        profs = data["tiers"]
+        assert len(profs) == len(cfg.serve_tiers)
+        print(f"  using DP profiles from {pj}")
+        return [[int(r) for r in p] for p in profs]
+    return [
+        [max(4, round(t * cfg.rank_full))] * cfg.n_fact_layers for t in cfg.serve_tiers
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=os.environ.get("FLEXRANK_CONFIG", "base"))
+    ap.add_argument("--out", default=os.path.join(_REPO, "artifacts"))
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact names to (re)export (default: all)",
+    )
+    args = ap.parse_args()
+    cfg = M.load_config(args.config)
+    ex = Exporter(cfg, args.out)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    print(f"AOT export: config={cfg.name} -> {args.out}")
+    d = cfg.d_model
+    tshape = jax.ShapeDtypeStruct  # alias
+
+    tp = M.init_teacher(cfg)
+    tp_spec = jax.tree_util.tree_map(lambda x: tshape(x.shape, x.dtype), tp)
+    sp = M.init_student_svd(cfg, tp)
+    sp_spec = jax.tree_util.tree_map(lambda x: tshape(x.shape, x.dtype), sp)
+    masks_spec = tshape((cfg.n_blocks, 4, cfg.rank_full), jnp.float32)
+    step_spec = tshape((), jnp.float32)
+
+    tok_train = tshape((cfg.batch_train, cfg.seq_len + 1), jnp.int32)
+    tok_eval = tshape((cfg.batch_eval, cfg.seq_len + 1), jnp.int32)
+    tok_fwd = tshape((cfg.batch_eval, cfg.seq_len), jnp.int32)
+    tok_calib = tshape((cfg.batch_calib, cfg.seq_len), jnp.int32)
+    tok_serve = tshape((cfg.batch_serve, cfg.seq_len), jnp.int32)
+
+    # --- teacher -----------------------------------------------------------
+    if want("teacher_fwd"):
+        ex.export("teacher_fwd", lambda p, t: (M.teacher_fwd(cfg, p, t),), tp_spec, tok_fwd)
+    if want("teacher_acts"):
+        ex.export("teacher_acts", lambda p, t: M.teacher_fwd_acts(cfg, p, t), tp_spec, tok_calib)
+    if want("teacher_train_step"):
+        ex.export(
+            "teacher_train_step",
+            lambda p, m, v, s, t: M.teacher_train_step(cfg, p, m, v, s, t),
+            tp_spec, tp_spec, tp_spec, step_spec, tok_train,
+        )
+
+    # --- student -----------------------------------------------------------
+    if want("student_eval"):
+        ex.export(
+            "student_eval",
+            lambda p, mk, t: (M.student_eval(cfg, p, mk, t),),
+            sp_spec, masks_spec, tok_eval,
+        )
+    if want("student_logits"):
+        ex.export(
+            "student_logits",
+            lambda p, mk, t: (M.student_fwd(cfg, p, mk, t, pallas_attention=True),),
+            sp_spec, masks_spec, tok_fwd,
+        )
+    if want("kd_train_step"):
+        ex.export(
+            "kd_train_step",
+            lambda p, m, v, s, tpar, mk, t: M.kd_train_step(cfg, p, m, v, s, tpar, mk, t),
+            sp_spec, sp_spec, sp_spec, step_spec, tp_spec, masks_spec, tok_train,
+        )
+
+    # --- GAR serving tiers + LoRA (Tab. 1) ---------------------------------
+    profiles = _tier_profiles(cfg, args.out)
+    lora_spec = [tshape(s, jnp.float32) for _, s in M.lora_param_spec(cfg)]
+    for i, prof in enumerate(profiles):
+        gar_spec = [tshape(s, jnp.float32) for _, s in M.gar_param_spec(cfg, prof)]
+        if want(f"serve_gar_t{i}"):
+            ex.export(
+                f"serve_gar_t{i}",
+                lambda fp, t, prof=prof: (M.gar_fwd(cfg, fp, prof, t),),
+                gar_spec, tok_serve,
+            )
+            ex.manifest["artifacts"][f"serve_gar_t{i}"]["profile"] = prof
+            ex.manifest["artifacts"][f"serve_gar_t{i}"]["tier"] = cfg.serve_tiers[i]
+        if want(f"lora_train_step_t{i}"):
+            ex.export(
+                f"lora_train_step_t{i}",
+                lambda gp, lp, m, v, s, t, prof=prof: M.lora_train_step(
+                    cfg, gp, lp, m, v, s, prof, t
+                ),
+                gar_spec, lora_spec, lora_spec, lora_spec, step_spec, tok_train,
+            )
+        if want(f"lora_logits_t{i}"):
+            ex.export(
+                f"lora_logits_t{i}",
+                lambda gp, lp, t, prof=prof: (M.gar_lora_fwd(cfg, gp, lp, prof, t),),
+                gar_spec, lora_spec, tok_fwd,
+            )
+
+    # --- Fig. 10 bench kernels ----------------------------------------------
+    bdim, bb = cfg.bench_dim, cfg.bench_batch
+    if want("bench_dense"):
+        ex.export(
+            "bench_dense", M.bench_dense,
+            tshape((bb, bdim), jnp.float32), tshape((bdim, bdim), jnp.float32),
+        )
+    for r in cfg.bench_ranks:
+        if r > bdim:
+            continue
+        if want(f"bench_lowrank_r{r}"):
+            ex.export(
+                f"bench_lowrank_r{r}", M.bench_lowrank,
+                tshape((bb, bdim), jnp.float32),
+                tshape((bdim, r), jnp.float32), tshape((r, bdim), jnp.float32),
+            )
+        if want(f"bench_gar_r{r}") and r < bdim:
+            ex.export(
+                f"bench_gar_r{r}", M.bench_gar,
+                tshape((bb, bdim), jnp.float32),
+                tshape((bdim - r, r), jnp.float32), tshape((bdim, r), jnp.float32),
+            )
+
+    # --- initial teacher parameters (random init, canonical flat order) -----
+    flat, _ = jax.tree_util.tree_flatten(tp)
+    blob = np.concatenate([np.asarray(a, np.float32).ravel() for a in flat])
+    blob.tofile(os.path.join(args.out, "teacher_init.bin"))
+    ex.manifest["teacher_init"] = {
+        "file": "teacher_init.bin",
+        "params": _spec_of(tp),
+        "total_f32": int(blob.size),
+    }
+    ex.manifest["profiles"] = profiles
+    ex.finish()
+    print(f"wrote manifest with {len(ex.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

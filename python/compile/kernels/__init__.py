@@ -1,0 +1,24 @@
+"""L1 Pallas kernels for FlexRank (always ``interpret=True`` — see DESIGN.md).
+
+Exports:
+  pl_matmul          — generic tiled matmul (the composable primitive)
+  factorized_linear  — masked factorized linear, differentiable (custom VJP)
+  gar_matmul         — gauge-aligned rank-r forward (serving hot path)
+  kd_loss            — fused temperature-scaled KL distillation loss
+  attention, attention_bh — blocked causal attention
+"""
+
+from .matmul import pl_matmul
+from .factorized_matmul import factorized_linear
+from .gar_matmul import gar_matmul
+from .kd_loss import kd_loss
+from .attention import attention, attention_bh
+
+__all__ = [
+    "pl_matmul",
+    "factorized_linear",
+    "gar_matmul",
+    "kd_loss",
+    "attention",
+    "attention_bh",
+]

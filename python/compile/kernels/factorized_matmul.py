@@ -1,0 +1,112 @@
+"""Masked factorized linear — FlexRank's training-time hot spot.
+
+Computes ``y = ((x @ V) * mask) @ U^T`` where ``mask`` is the per-component
+rank mask of the currently sampled budget profile (Alg. 1, knowledge
+consolidation).  The paper (App. D.4) notes an unfused ``B @ (X @ A)`` is
+memory-bound; this kernel fuses both factor products in a single Pallas
+program so the intermediate ``t = x @ V`` never round-trips through HBM.
+
+Differentiability: ``pallas_call`` has no automatic VJP, so the public entry
+point ``factorized_linear`` carries a ``jax.custom_vjp`` whose backward pass
+is itself built from the tiled Pallas matmul (``pl_matmul``) — every matmul in
+the lowered train-step HLO is a Pallas kernel.
+
+VMEM model (per program instance, f32): ``bb·n + n·br + bm·br + bb·bm`` words.
+At the base config (n ≤ 512, bb = bm = br = 128) that is ≤ 640 KiB, well
+inside the 16 MiB VMEM budget documented in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pl_matmul, _ceil_div
+
+_BB, _BM, _BR = 128, 128, 128
+
+
+def _fact_kernel(x_ref, v_ref, mask_ref, u_ref, o_ref):
+    """One (i, j, k) step: o[i,j] += ((x[i] @ V[:,k]) * mask[k]) @ U[j,k]^T.
+
+    x block:    (bb, n)   — full contraction dim resident.
+    V block:    (n, br)   — an r-chunk of the right factor.
+    mask block: (br,)     — matching chunk of the rank mask.
+    U block:    (bm, br)  — matching chunk of the left factor rows j.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    t = jnp.dot(x_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+    t = t * mask_ref[...][None, :]
+    o_ref[...] += jnp.dot(t, u_ref[...].T, preferred_element_type=jnp.float32)
+
+
+def _fact_fwd_pallas(
+    x: jax.Array, u: jax.Array, v: jax.Array, mask: jax.Array,
+    bb: int, bm: int, br: int,
+) -> jax.Array:
+    b, n = x.shape
+    m, r = u.shape
+    assert v.shape == (n, r) and mask.shape == (r,)
+    bb, bm, br = min(bb, b), min(bm, m), min(br, r)
+    gb, gm, gr = _ceil_div(b, bb), _ceil_div(m, bm), _ceil_div(r, br)
+    pb, pm, pr = gb * bb, gm * bm, gr * br
+    if pb != b:
+        x = jnp.pad(x, ((0, pb - b), (0, 0)))
+    if (pm, pr) != (m, r):
+        u = jnp.pad(u, ((0, pm - m), (0, pr - r)))
+    if pr != r:
+        v = jnp.pad(v, ((0, 0), (0, pr - r)))
+        mask = jnp.pad(mask, (0, pr - r))
+
+    out = pl.pallas_call(
+        _fact_kernel,
+        grid=(gb, gm, gr),
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((n, br), lambda i, j, k: (0, k)),
+            pl.BlockSpec((br,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bm, br), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pm), jnp.float32),
+        interpret=True,
+    )(x, v, mask, u)
+    return out[:b, :m]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def factorized_linear(x, u, v, mask):
+    """``((x @ V) * mask) @ U^T`` with Pallas fwd and bwd (differentiable)."""
+    return _fact_fwd_pallas(x, u, v, mask, _BB, _BM, _BR)
+
+
+def _fl_fwd(x, u, v, mask):
+    y = _fact_fwd_pallas(x, u, v, mask, _BB, _BM, _BR)
+    # Rematerialize t in the backward pass instead of saving it: residuals are
+    # the (small) operands only, matching the paper's memory-bound concern.
+    return y, (x, u, v, mask)
+
+
+def _fl_bwd(res, g):
+    x, u, v, mask = res
+    # t = x @ V                      (b, r)
+    # y = (t * mask) @ U^T           (b, m)
+    t = pl_matmul(x, v)
+    gu_path = pl_matmul(g, u)                      # (b, r) = g @ U
+    dt = gu_path * mask[None, :]                   # (b, r)
+    dx = pl_matmul(dt, v.T)                        # (b, n)
+    dv = pl_matmul(x.T, dt)                        # (n, r)
+    du = pl_matmul(g.T, t * mask[None, :])         # (m, r)
+    dmask = jnp.sum(t * gu_path, axis=0)           # (r,)
+    return dx, du, dv, dmask
+
+
+factorized_linear.defvjp(_fl_fwd, _fl_bwd)

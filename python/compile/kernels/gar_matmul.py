@@ -1,0 +1,115 @@
+"""GAR (Gauge-Aligned Reparametrization) forward — FlexRank's serving-time
+hot spot (Sec. 3.5).
+
+After rank selection the factorization is re-gauged so ``Ũ = [I_r; Û]``:
+the first ``r`` output coordinates are exactly ``t = x @ Ṽ`` and only the
+remaining ``m - r`` rows need the second product ``t @ Û^T``.  Total cost is
+``O((m + n − r)·r)`` vs ``O((m + n)·r)`` for the naive factorization and
+``O(m·n)`` dense — the identity block is never stored nor multiplied.
+
+The kernel is fused: one Pallas program computes the ``t`` block once in VMEM
+and emits both output segments, so ``t`` never round-trips through HBM.
+
+VMEM model (per instance, f32): ``bb·n + n·r + (m−r)·r + bb·m`` words — at the
+Fig. 10 bench scale (m = n = 256..1024, bb = 128) ≤ ~5 MiB, inside budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _ceil_div
+
+_BB = 128
+
+
+def _gar_kernel(x_ref, vt_ref, uh_ref, o_ref, *, r: int):
+    """One batch-block step: t = x@Ṽ; o = [t, t @ Û^T] written in one pass."""
+    t = jnp.dot(x_ref[...], vt_ref[...], preferred_element_type=jnp.float32)
+    rest = jnp.dot(t, uh_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.concatenate([t, rest], axis=-1)
+
+
+@jax.jit
+def gar_matmul(x: jax.Array, u_hat: jax.Array, v_tilde: jax.Array) -> jax.Array:
+    """``y = [x@Ṽ, (x@Ṽ)@Û^T]`` — see module docstring.
+
+    Args:
+      x:       (B, n) input activations.
+      u_hat:   (m − r, r) non-identity block of the re-gauged left factor.
+      v_tilde: (n, r) re-gauged right factor.
+
+    Returns:
+      (B, m) output.
+    """
+    b, n = x.shape
+    mr, r = u_hat.shape
+    m = mr + r
+    assert v_tilde.shape == (n, r), (v_tilde.shape, (n, r))
+
+    if mr == 0:
+        # Full-rank square layer: Ũ = I, output is t = x @ Ṽ directly.
+        from .matmul import pl_matmul
+
+        return pl_matmul(x, v_tilde)
+
+    bb = min(_BB, b)
+    gb = _ceil_div(b, bb)
+    pb = gb * bb
+    if pb != b:
+        x = jnp.pad(x, ((0, pb - b), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_gar_kernel, r=r),
+        grid=(gb,),
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, r), lambda i: (0, 0)),
+            pl.BlockSpec((mr, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pb, m), jnp.float32),
+        interpret=True,
+    )(x, v_tilde, u_hat)
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper.  The LoRA post-adaptation path (Tab. 1) backprops
+# *through* frozen GAR layers to reach upstream adapters, so the kernel needs
+# a VJP; backward products reuse the tiled Pallas matmul.
+# ---------------------------------------------------------------------------
+
+from .matmul import pl_matmul  # noqa: E402
+
+
+@jax.custom_vjp
+def gar_matmul_ad(x: jax.Array, u_hat: jax.Array, v_tilde: jax.Array) -> jax.Array:
+    """Differentiable ``gar_matmul`` (same semantics, custom VJP)."""
+    return gar_matmul(x, u_hat, v_tilde)
+
+
+def _gar_fwd_rule(x, u_hat, v_tilde):
+    return gar_matmul(x, u_hat, v_tilde), (x, u_hat, v_tilde)
+
+
+def _gar_bwd_rule(res, g):
+    x, u_hat, v_tilde = res
+    r = v_tilde.shape[1]
+    if u_hat.shape[0] == 0:
+        dx = pl_matmul(g, v_tilde.T)
+        return dx, jnp.zeros_like(u_hat), pl_matmul(x.T, g)
+    g1, g2 = g[:, :r], g[:, r:]
+    t = pl_matmul(x, v_tilde)                 # rematerialized
+    dt = g1 + pl_matmul(g2, u_hat)            # (B, r)
+    dx = pl_matmul(dt, v_tilde.T)             # (B, n)
+    du_hat = pl_matmul(g2.T, t)               # (m-r, r)
+    dv_tilde = pl_matmul(x.T, dt)             # (n, r)
+    return dx, du_hat, dv_tilde
+
+
+gar_matmul_ad.defvjp(_gar_fwd_rule, _gar_bwd_rule)

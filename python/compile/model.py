@@ -1,0 +1,568 @@
+"""L2 — FlexRank's JAX compute graphs (build-time only, never on the request
+path).
+
+Defines the byte-level GPT used throughout the repo (DESIGN.md §substitutions:
+stands in for GPT-2/Llama at CPU-tractable scale, same per-block layer
+inventory: fused qkv, attention out-proj, MLP fc / fc-proj — the four
+factorization surfaces per block) in two parameterizations:
+
+  * **teacher** — dense weights, plain jnp ops (it is the substrate/baseline
+    and the frozen KD teacher; the paper's contribution does not live here).
+  * **student** — every linear factorized as ``W = V diag(mask) U^T`` with
+    per-component rank masks (Sec. 2.1), the Pallas ``factorized_linear``
+    kernel on the hot path and the Pallas ``kd_loss`` for Eq. 5.
+
+Also defines the **GAR serving forward** (Sec. 3.5) over re-gauged factors
+``(Û, Ṽ)`` at a fixed rank profile, and the AdamW train steps that aot.py
+lowers to HLO text for the rust runtime.
+
+Weight convention: activations are row vectors, ``y = x @ W + b`` with
+``W : (n_in, m_out)``.  Relative to the paper's ``W_paper : (m × n)`` acting
+on column vectors, ``W = W_paper^T``; the factor pair ``(U : (m, r),
+V : (n, r))`` is exactly the paper's, with ``W = V U^T``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention_bh, factorized_linear, gar_matmul, kd_loss, pl_matmul
+from .kernels.gar_matmul import gar_matmul_ad
+from .kernels.matmul import pl_matmul_ad
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+_REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Model + training hyperparameters, shared with rust via configs/*.json."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_blocks: int
+    n_heads: int
+    seq_len: int
+    batch_train: int
+    batch_eval: int
+    batch_calib: int
+    batch_serve: int
+    tau_kd: float
+    lr: float
+    weight_decay: float
+    beta1: float
+    beta2: float
+    adam_eps: float
+    serve_tiers: list
+    bench_ranks: list
+    bench_dim: int
+    bench_batch: int
+    lora_rank: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    # The four factorization surfaces per block, in canonical order.
+    # name -> (n_in, m_out); full rank r = min(n, m) = d_model for all four.
+    def layer_dims(self) -> dict:
+        d, f = self.d_model, self.d_ff
+        return {
+            "qkv": (d, 3 * d),
+            "proj": (d, d),
+            "fc": (d, f),
+            "fcp": (f, d),
+        }
+
+    @property
+    def rank_full(self) -> int:
+        return self.d_model
+
+    @property
+    def n_fact_layers(self) -> int:
+        return 4 * self.n_blocks
+
+
+LAYER_KINDS = ("qkv", "proj", "fc", "fcp")
+
+
+def load_config(name_or_path: str | None = None) -> Config:
+    """Load a Config from configs/ (``FLEXRANK_CONFIG`` env overrides)."""
+    spec = name_or_path or os.environ.get("FLEXRANK_CONFIG", "base")
+    path = spec if os.path.exists(spec) else os.path.join(_REPO, "configs", f"model_{spec}.json")
+    with open(path) as f:
+        return Config(**json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Parameter trees & init
+# ---------------------------------------------------------------------------
+
+
+def init_teacher(cfg: Config, seed: int = 0) -> dict:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    d, f, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    ks = iter(jax.random.split(key, 4 + 8 * cfg.n_blocks))
+    std = 0.02
+    resid_std = std / math.sqrt(2 * cfg.n_blocks)
+
+    def nrm(k, shape, s=std):
+        return (jax.random.normal(k, shape) * s).astype(jnp.float32)
+
+    params: dict = {
+        "tok_emb": nrm(next(ks), (v, d)),
+        "pos_emb": nrm(next(ks), (t, d)),
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+    }
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append(
+            {
+                "ln1_g": jnp.ones((d,), jnp.float32),
+                "ln1_b": jnp.zeros((d,), jnp.float32),
+                "ln2_g": jnp.ones((d,), jnp.float32),
+                "ln2_b": jnp.zeros((d,), jnp.float32),
+                "qkv_w": nrm(next(ks), (d, 3 * d)),
+                "qkv_b": jnp.zeros((3 * d,), jnp.float32),
+                "proj_w": nrm(next(ks), (d, d), resid_std),
+                "proj_b": jnp.zeros((d,), jnp.float32),
+                "fc_w": nrm(next(ks), (d, f)),
+                "fc_b": jnp.zeros((f,), jnp.float32),
+                "fcp_w": nrm(next(ks), (f, d), resid_std),
+                "fcp_b": jnp.zeros((d,), jnp.float32),
+            }
+        )
+    params["blocks"] = blocks
+    return params
+
+
+def init_student_from_factors(cfg: Config, teacher: dict, factors: list) -> dict:
+    """Assemble student params from teacher non-matrix params + (U, V) factors.
+
+    ``factors`` is a flat list of (u, v) pairs in canonical layer order
+    (block-major, LAYER_KINDS within a block) — normally produced by the rust
+    DataSVD stage; python only needs this for tests.
+    """
+    assert len(factors) == cfg.n_fact_layers
+    student: dict = {
+        "tok_emb": teacher["tok_emb"],
+        "pos_emb": teacher["pos_emb"],
+        "lnf_g": teacher["lnf_g"],
+        "lnf_b": teacher["lnf_b"],
+    }
+    blocks = []
+    it = iter(factors)
+    for tb in teacher["blocks"]:
+        sb = {k: tb[k] for k in ("ln1_g", "ln1_b", "ln2_g", "ln2_b",
+                                 "qkv_b", "proj_b", "fc_b", "fcp_b")}
+        for kind in LAYER_KINDS:
+            u, v = next(it)
+            sb[f"{kind}_u"] = u
+            sb[f"{kind}_v"] = v
+        blocks.append(sb)
+    student["blocks"] = blocks
+    return student
+
+
+def init_student_svd(cfg: Config, teacher: dict) -> dict:
+    """Plain-SVD student init (the weight-SVD baseline; DataSVD lives in rust)."""
+    factors = []
+    for tb in teacher["blocks"]:
+        for kind in LAYER_KINDS:
+            w = tb[f"{kind}_w"]  # (n, m) ; paper W = w.T
+            # SVD of W_paper = w.T = P Σ Q^T ; U = P Σ^{1/2}, V = Q Σ^{1/2}.
+            p, s, qt = jnp.linalg.svd(w.T, full_matrices=False)
+            r = cfg.rank_full
+            sh = jnp.sqrt(s[:r])
+            factors.append((p[:, :r] * sh[None, :], qt[:r, :].T * sh[None, :]))
+    return init_student_from_factors(cfg, teacher, factors)
+
+
+def full_masks(cfg: Config) -> jax.Array:
+    """(n_blocks, 4, rank_full) all-ones mask = full-budget profile."""
+    return jnp.ones((cfg.n_blocks, 4, cfg.rank_full), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Shared blocks
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x: jax.Array) -> jax.Array:
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def _split_heads(x: jax.Array, b: int, t: int, h: int, hd: int) -> jax.Array:
+    return x.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array, b: int, t: int, d: int) -> jax.Array:
+    return x.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def _attention_jnp(q, k, v):
+    """vmapped oracle attention — used where gradients must flow (training)."""
+    return jax.vmap(jax.vmap(lambda q, k, v: kref.attention_ref(q, k, v, True)))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Teacher (dense)
+# ---------------------------------------------------------------------------
+
+
+def teacher_fwd(cfg: Config, params: dict, tokens: jax.Array) -> jax.Array:
+    """Dense forward. tokens: (B, T) int32 → logits (B, T, V)."""
+    b, t = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    for blk in params["blocks"]:
+        a = _layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = a @ blk["qkv_w"] + blk["qkv_b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(z, b, t, h, hd) for z in (q, k, v))
+        att = _merge_heads(_attention_jnp(q, k, v), b, t, d)
+        x = x + att @ blk["proj_w"] + blk["proj_b"]
+        a = _layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+        x = x + _gelu(a @ blk["fc_w"] + blk["fc_b"]) @ blk["fcp_w"] + blk["fcp_b"]
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_emb"].T  # tied head
+
+
+def teacher_fwd_acts(cfg: Config, params: dict, tokens: jax.Array):
+    """Forward that additionally returns per-factorized-layer covariance
+    increments ``X_l^T X_l`` (App. C.1 online covariance estimation) — one
+    (n_l, n_l) matrix per factorized layer, canonical order."""
+    b, t = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    covs = []
+
+    def track(a2d):
+        covs.append(jnp.dot(a2d.T, a2d, preferred_element_type=jnp.float32))
+
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    for blk in params["blocks"]:
+        a = _layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+        track(a.reshape(-1, d))
+        qkv = a @ blk["qkv_w"] + blk["qkv_b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(z, b, t, h, hd) for z in (q, k, v))
+        att = _merge_heads(_attention_jnp(q, k, v), b, t, d)
+        track(att.reshape(-1, d))
+        x = x + att @ blk["proj_w"] + blk["proj_b"]
+        a = _layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+        track(a.reshape(-1, d))
+        fco = _gelu(a @ blk["fc_w"] + blk["fc_b"])
+        track(fco.reshape(-1, cfg.d_ff))
+        x = x + fco @ blk["fcp_w"] + blk["fcp_b"]
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T
+    return logits, tuple(covs)
+
+
+def ce_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy. logits (B,T,V), targets (B,T) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Student (factorized + masked, Pallas hot path)
+# ---------------------------------------------------------------------------
+
+
+def student_fwd(
+    cfg: Config,
+    params: dict,
+    masks: jax.Array,
+    tokens: jax.Array,
+    *,
+    pallas_attention: bool = True,
+) -> jax.Array:
+    """Masked factorized forward.  masks: (n_blocks, 4, rank_full)."""
+    b, t = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    def flin(a2d, blk, kind, mask):
+        return factorized_linear(a2d, blk[f"{kind}_u"], blk[f"{kind}_v"], mask)
+
+    attn_fn = attention_bh if pallas_attention else _attention_jnp
+
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    for i, blk in enumerate(params["blocks"]):
+        a = _layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = flin(a.reshape(-1, d), blk, "qkv", masks[i, 0]).reshape(b, t, 3 * d) + blk["qkv_b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(z, b, t, h, hd) for z in (q, k, v))
+        att = _merge_heads(attn_fn(q, k, v), b, t, d)
+        o = flin(att.reshape(-1, d), blk, "proj", masks[i, 1]).reshape(b, t, d) + blk["proj_b"]
+        x = x + o
+        a = _layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+        f = _gelu(flin(a.reshape(-1, d), blk, "fc", masks[i, 2]).reshape(b, t, cfg.d_ff) + blk["fc_b"])
+        x = x + flin(f.reshape(-1, cfg.d_ff), blk, "fcp", masks[i, 3]).reshape(b, t, d) + blk["fcp_b"]
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_emb"].T
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(cfg: Config, params, grads, m, v, step):
+    """One AdamW step over an arbitrary pytree; step is 1-based float32."""
+    b1, b2, eps, lr, wd = cfg.beta1, cfg.beta2, cfg.adam_eps, cfg.lr, cfg.weight_decay
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        return p2, m2, v2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(*z) for z in zip(flat_p, flat_g, flat_m, flat_v)]
+    p2 = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    m2 = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    v2 = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return p2, m2, v2
+
+
+def zeros_like_tree(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# Train steps (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def teacher_train_step(cfg: Config, params, m, v, step, tokens):
+    """Dense LM pretraining step.  tokens: (B, T+1) int32.
+
+    Returns (params', m', v', loss).  This builds the 'pretrained base model'
+    the paper assumes as input (DESIGN.md §substitutions).
+    """
+    x, y = tokens[:, :-1], tokens[:, 1:]
+
+    def loss_fn(p):
+        return ce_loss(teacher_fwd(cfg, p, x), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    p2, m2, v2 = adamw_update(cfg, params, grads, m, v, step)
+    return p2, m2, v2, loss
+
+
+def kd_train_step(cfg: Config, sparams, m, v, step, tparams, masks, tokens):
+    """Knowledge-consolidation step (Alg. 1 lines 14–17, Eq. 5–6).
+
+    The budget profile is selected by the rust driver (sampled ∝ α_k) and
+    arrives as the ``masks`` input, so one lowered executable serves every
+    profile.  Teacher runs forward-only (frozen).
+    """
+    x = tokens[:, :-1]
+    t_logits = jax.lax.stop_gradient(teacher_fwd(cfg, tparams, x))
+    vdim = t_logits.shape[-1]
+
+    def loss_fn(sp):
+        s_logits = student_fwd(cfg, sp, masks, x, pallas_attention=False)
+        return kd_loss(s_logits.reshape(-1, vdim), t_logits.reshape(-1, vdim), cfg.tau_kd)
+
+    loss, grads = jax.value_and_grad(loss_fn)(sparams)
+    p2, m2, v2 = adamw_update(cfg, sparams, grads, m, v, step)
+    return p2, m2, v2, loss
+
+
+def student_eval(cfg: Config, sparams, masks, tokens):
+    """Eval entry: CE loss of the masked student on (B, T+1) token windows."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+    logits = student_fwd(cfg, sparams, masks, x, pallas_attention=True)
+    return ce_loss(logits, y)
+
+
+# ---------------------------------------------------------------------------
+# GAR serving forward (Sec. 3.5) — fixed rank profile, re-gauged factors
+# ---------------------------------------------------------------------------
+
+
+def gar_param_spec(cfg: Config, profile: list) -> list:
+    """Flat (name, shape) list for a GAR submodel at ``profile``.
+
+    ``profile``: n_blocks × 4 ints (rank per factorized layer, canonical
+    order).  Shapes: per layer ``u_hat (m−r, r)``, ``v_tilde (n, r)``.
+    """
+    dims = cfg.layer_dims()
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+    ]
+    for i in range(cfg.n_blocks):
+        for g in ("ln1_g", "ln1_b", "ln2_g", "ln2_b"):
+            spec.append((f"b{i}.{g}", (cfg.d_model,)))
+        for j, kind in enumerate(LAYER_KINDS):
+            n, mm = dims[kind]
+            r = int(profile[i * 4 + j])
+            if mm - r > 0:
+                # Full-rank square layers have an empty Û; zero-size args are
+                # pruned by the MLIR->XLA conversion, so never declare them.
+                spec.append((f"b{i}.{kind}_uhat", (mm - r, r)))
+            spec.append((f"b{i}.{kind}_vt", (n, r)))
+            spec.append((f"b{i}.{kind}_b", (mm,)))
+    return spec
+
+
+def gar_fwd(cfg: Config, flat_params: list, profile: list, tokens: jax.Array) -> jax.Array:
+    """Serving forward over GAR factors (flat param list per gar_param_spec).
+
+    GAR's output coordinates live in the gauge where the first r outputs equal
+    ``t`` directly; the rust GAR stage bakes the corresponding output
+    rotation into ``Û``/``Ṽ`` (identity block convention: first r rows of Ũ),
+    so no runtime permutation is needed here.
+    """
+    spec = gar_param_spec(cfg, profile)
+    p = {name: arr for (name, _), arr in zip(spec, flat_params)}
+    b, t = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    def glin(a2d, i, kind):
+        key = f"b{i}.{kind}_uhat"
+        if key in p:
+            return gar_matmul(a2d, p[key], p[f"b{i}.{kind}_vt"]) + p[f"b{i}.{kind}_b"]
+        # Full-rank square layer: Ũ = I, so y = x @ Ṽ directly.
+        return pl_matmul(a2d, p[f"b{i}.{kind}_vt"]) + p[f"b{i}.{kind}_b"]
+
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t, :]
+    for i in range(cfg.n_blocks):
+        a = _layer_norm(x, p[f"b{i}.ln1_g"], p[f"b{i}.ln1_b"])
+        qkv = glin(a.reshape(-1, d), i, "qkv").reshape(b, t, 3 * d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(z, b, t, h, hd) for z in (q, k, v))
+        att = _merge_heads(attention_bh(q, k, v), b, t, d)
+        x = x + glin(att.reshape(-1, d), i, "proj").reshape(b, t, d)
+        a = _layer_norm(x, p[f"b{i}.ln2_g"], p[f"b{i}.ln2_b"])
+        f = _gelu(glin(a.reshape(-1, d), i, "fc").reshape(b, t, cfg.d_ff))
+        x = x + glin(f.reshape(-1, cfg.d_ff), i, "fcp").reshape(b, t, d)
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T
+
+
+# ---------------------------------------------------------------------------
+# LoRA post-adaptation (Tab. 1) on a frozen GAR submodel
+# ---------------------------------------------------------------------------
+
+
+def lora_param_spec(cfg: Config) -> list:
+    """LoRA adapters: one (A: (n, ra), B: (ra, m)) pair per factorized layer."""
+    dims = cfg.layer_dims()
+    spec = []
+    for i in range(cfg.n_blocks):
+        for kind in LAYER_KINDS:
+            n, mm = dims[kind]
+            spec.append((f"b{i}.{kind}_la", (n, cfg.lora_rank)))
+            spec.append((f"b{i}.{kind}_lb", (cfg.lora_rank, mm)))
+    return spec
+
+
+def init_lora(cfg: Config, seed: int = 0) -> list:
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for _, shape in lora_param_spec(cfg):
+        if shape[0] == cfg.lora_rank:  # B side: zeros (standard LoRA init)
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            key, k = jax.random.split(key)
+            out.append((jax.random.normal(k, shape) * 0.02).astype(jnp.float32))
+    return out
+
+
+def gar_lora_fwd(cfg, gar_flat, lora_flat, profile, tokens, scale: float = 2.0):
+    """GAR forward with additive LoRA on every factorized layer."""
+    spec = gar_param_spec(cfg, profile)
+    p = {name: arr for (name, _), arr in zip(spec, gar_flat)}
+    lp = {name: arr for (name, _), arr in zip(lora_param_spec(cfg), lora_flat)}
+    b, t = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    def glin(a2d, i, kind):
+        key = f"b{i}.{kind}_uhat"
+        if key in p:
+            base = gar_matmul_ad(a2d, p[key], p[f"b{i}.{kind}_vt"])
+        else:
+            base = pl_matmul_ad(a2d, p[f"b{i}.{kind}_vt"])
+        lo = pl_matmul_ad(pl_matmul_ad(a2d, lp[f"b{i}.{kind}_la"]), lp[f"b{i}.{kind}_lb"])
+        return base + scale * lo + p[f"b{i}.{kind}_b"]
+
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t, :]
+    for i in range(cfg.n_blocks):
+        a = _layer_norm(x, p[f"b{i}.ln1_g"], p[f"b{i}.ln1_b"])
+        qkv = glin(a.reshape(-1, d), i, "qkv").reshape(b, t, 3 * d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(z, b, t, h, hd) for z in (q, k, v))
+        att = _merge_heads(_attention_jnp(q, k, v), b, t, d)
+        x = x + glin(att.reshape(-1, d), i, "proj").reshape(b, t, d)
+        a = _layer_norm(x, p[f"b{i}.ln2_g"], p[f"b{i}.ln2_b"])
+        f = _gelu(glin(a.reshape(-1, d), i, "fc").reshape(b, t, cfg.d_ff))
+        x = x + glin(f.reshape(-1, cfg.d_ff), i, "fcp").reshape(b, t, d)
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T
+
+
+def lora_train_step(cfg, gar_flat, lora_flat, m, v, step, profile, tokens):
+    """CE finetuning of LoRA adapters on a frozen GAR submodel (Tab. 1)."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+
+    def loss_fn(lf):
+        return ce_loss(gar_lora_fwd(cfg, gar_flat, lf, profile, x), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(lora_flat)
+    p2, m2, v2 = adamw_update(cfg, lora_flat, grads, m, v, step)
+    return p2, m2, v2, loss
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10 bench entry points (dense vs naive low-rank vs GAR single matmul)
+# ---------------------------------------------------------------------------
+
+
+def bench_dense(x, w):
+    return (pl_matmul(x, w),)
+
+
+def bench_lowrank(x, v, ut):
+    """Naive factorized forward: two full products, identity block included."""
+    return (pl_matmul(pl_matmul(x, v), ut),)
+
+
+def bench_gar(x, u_hat, v_tilde):
+    return (gar_matmul(x, u_hat, v_tilde),)

@@ -1,0 +1,106 @@
+"""AOT export pipeline tests: HLO-text validity, manifest consistency, and
+re-export idempotence at the tiny config (fast)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+_PY_DIR = os.path.dirname(_TESTS_DIR)
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("art_tiny")
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--config", "tiny", "--out", str(out)],
+        cwd=_PY_DIR,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    return out
+
+
+def test_manifest_lists_all_files(tiny_artifacts):
+    m = json.load(open(tiny_artifacts / "manifest.json"))
+    assert m["config"]["name"] == "byte-gpt-tiny"
+    assert len(m["artifacts"]) >= 15
+    for name, a in m["artifacts"].items():
+        path = tiny_artifacts / a["file"]
+        assert path.exists(), f"{name} missing {a['file']}"
+        txt = path.read_text()
+        assert txt.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in txt
+        assert a["inputs"], name
+        assert a["outputs"], name
+
+
+def test_no_zero_size_inputs_declared(tiny_artifacts):
+    """Zero-size args are pruned by the MLIR->XLA conversion; the manifest
+    must never promise them (regression test for the serve_gar crash)."""
+    m = json.load(open(tiny_artifacts / "manifest.json"))
+    for name, a in m["artifacts"].items():
+        for spec in a["inputs"] + a["outputs"]:
+            assert np.prod(spec["shape"]) > 0 or spec["shape"] == [], (name, spec)
+
+
+def test_teacher_init_blob_matches_spec(tiny_artifacts):
+    m = json.load(open(tiny_artifacts / "manifest.json"))
+    ti = m["teacher_init"]
+    blob = np.fromfile(tiny_artifacts / ti["file"], dtype=np.float32)
+    total = sum(int(np.prod(p["shape"])) for p in ti["params"])
+    assert blob.size == total == ti["total_f32"]
+    assert np.isfinite(blob).all()
+
+
+def test_train_step_echoes_param_specs(tiny_artifacts):
+    """kd_train_step outputs must mirror (params, m, v) then the loss."""
+    m = json.load(open(tiny_artifacts / "manifest.json"))
+    a = m["artifacts"]["kd_train_step"]
+    n_student = sum(1 for i in a["inputs"] if i["name"].startswith("0."))
+    outs = a["outputs"]
+    assert len(outs) == 3 * n_student + 1
+    # Output shapes match the student input shapes, tripled.
+    in_shapes = [i["shape"] for i in a["inputs"] if i["name"].startswith("0.")]
+    for rep in range(3):
+        for k, shape in enumerate(in_shapes):
+            assert outs[rep * n_student + k]["shape"] == shape
+    assert outs[-1]["shape"] == []
+
+
+def test_serve_profiles_recorded(tiny_artifacts):
+    m = json.load(open(tiny_artifacts / "manifest.json"))
+    cfg = m["config"]
+    assert len(m["profiles"]) == len(cfg["serve_tiers"])
+    for i, tier in enumerate(cfg["serve_tiers"]):
+        a = m["artifacts"][f"serve_gar_t{i}"]
+        assert a["tier"] == tier
+        assert len(a["profile"]) == 4 * cfg["n_blocks"]
+
+
+def test_selective_reexport(tiny_artifacts):
+    """--only re-exports a single artifact without touching others."""
+    before = (tiny_artifacts / "teacher_fwd.hlo.txt").read_text()
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--config", "tiny",
+            "--out", str(tiny_artifacts),
+            "--only", "teacher_fwd",
+        ],
+        cwd=_PY_DIR,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    after = (tiny_artifacts / "teacher_fwd.hlo.txt").read_text()
+    assert before == after  # deterministic lowering

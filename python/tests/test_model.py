@@ -1,0 +1,196 @@
+"""L2 model-level tests: teacher/student equivalence, GAR exactness, masks,
+train steps, AdamW, covariance capture — all at the tiny config so the suite
+stays fast."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return M.load_config("tiny")
+
+
+@pytest.fixture(scope="module")
+def teacher(cfg):
+    return M.init_teacher(cfg, seed=0)
+
+
+@pytest.fixture(scope="module")
+def student(cfg, teacher):
+    return M.init_student_svd(cfg, teacher)
+
+
+def tokens(cfg, seed=0, extra=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, (cfg.batch_eval, cfg.seq_len + extra)), jnp.int32
+    )
+
+
+def test_teacher_fwd_shape_and_finite(cfg, teacher):
+    t = tokens(cfg)
+    logits = M.teacher_fwd(cfg, teacher, t)
+    assert logits.shape == (cfg.batch_eval, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_student_full_rank_equals_teacher(cfg, teacher, student):
+    t = tokens(cfg, 1)
+    tl = M.teacher_fwd(cfg, teacher, t)
+    sl = M.student_fwd(cfg, student, M.full_masks(cfg), t)
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(tl), rtol=3e-3, atol=3e-3)
+
+
+def test_masking_reduces_monotonically(cfg, teacher, student):
+    """Truncation error (vs teacher) must not grow with more kept ranks."""
+    t = tokens(cfg, 2)
+    tl = np.asarray(M.teacher_fwd(cfg, teacher, t))
+    errs = []
+    for keep in [cfg.rank_full // 4, cfg.rank_full // 2, cfg.rank_full]:
+        masks = np.zeros((cfg.n_blocks, 4, cfg.rank_full), np.float32)
+        masks[:, :, :keep] = 1.0
+        sl = np.asarray(M.student_fwd(cfg, student, jnp.asarray(masks), t))
+        errs.append(float(np.abs(sl - tl).mean()))
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[2] < 1e-2
+
+
+def test_covariance_outputs_match_direct_computation(cfg, teacher):
+    t = tokens(cfg, 3)
+    logits, covs = M.teacher_fwd_acts(cfg, teacher, t)
+    assert len(covs) == cfg.n_fact_layers
+    # Every cov must be PSD-symmetric with the right dims.
+    dims = cfg.layer_dims()
+    expected = []
+    for _ in range(cfg.n_blocks):
+        for kind in M.LAYER_KINDS:
+            expected.append(dims[kind][0])
+    for c, n in zip(covs, expected):
+        c = np.asarray(c)
+        assert c.shape == (n, n)
+        np.testing.assert_allclose(c, c.T, rtol=1e-4, atol=1e-4)
+        ev = np.linalg.eigvalsh(c)
+        assert ev.min() > -1e-3
+    # Logits must equal the plain forward.
+    np.testing.assert_allclose(
+        logits, M.teacher_fwd(cfg, teacher, t), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_teacher_train_step_reduces_loss(cfg, teacher):
+    t = tokens(cfg, 4, extra=1)
+    p = teacher
+    m = M.zeros_like_tree(p)
+    v = M.zeros_like_tree(p)
+    losses = []
+    for step in range(8):
+        p, m, v, loss = jax.jit(
+            lambda p, m, v, s, t: M.teacher_train_step(cfg, p, m, v, s, t)
+        )(p, m, v, jnp.float32(step + 1), t)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_kd_step_loss_near_zero_at_full_rank(cfg, teacher, student):
+    t = tokens(cfg, 5, extra=1)
+    m = M.zeros_like_tree(student)
+    v = M.zeros_like_tree(student)
+    _, _, _, loss = M.kd_train_step(
+        cfg, student, m, v, jnp.float32(1.0), teacher, M.full_masks(cfg), t
+    )
+    # Student == teacher at init, so the KD loss must be ~0.
+    assert float(loss) < 1e-3, float(loss)
+
+
+def test_kd_step_improves_truncated_student(cfg, teacher, student):
+    masks = np.zeros((cfg.n_blocks, 4, cfg.rank_full), np.float32)
+    masks[:, :, : cfg.rank_full // 4] = 1.0
+    masks = jnp.asarray(masks)
+    t = tokens(cfg, 6, extra=1)
+    p = student
+    m = M.zeros_like_tree(p)
+    v = M.zeros_like_tree(p)
+    step_fn = jax.jit(
+        lambda p, m, v, s, t: M.kd_train_step(cfg, p, m, v, s, teacher, masks, t)
+    )
+    first = None
+    loss = None
+    for step in range(10):
+        p, m, v, loss = step_fn(p, m, v, jnp.float32(step + 1), t)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, (first, float(loss))
+
+
+def test_gar_param_spec_omits_empty_uhat(cfg):
+    full = [cfg.rank_full] * cfg.n_fact_layers
+    spec = M.gar_param_spec(cfg, full)
+    names = [n for n, _ in spec]
+    # proj and fcp at full rank are square => no uhat entries.
+    assert not any("proj_uhat" in n for n in names)
+    assert not any("fcp_uhat" in n for n in names)
+    assert any("qkv_uhat" in n for n in names)
+    # No zero-size shapes anywhere.
+    assert all(np.prod(s) > 0 for _, s in spec)
+
+
+def test_gar_fwd_matches_masked_student(cfg, teacher, student):
+    r = cfg.rank_full // 2
+    profile = [r] * cfg.n_fact_layers
+    masks = np.zeros((cfg.n_blocks, 4, cfg.rank_full), np.float32)
+    masks[:, :, :r] = 1.0
+    t = tokens(cfg, 7)
+    sl = M.student_fwd(cfg, student, jnp.asarray(masks), t)
+
+    flat = [student["tok_emb"], student["pos_emb"], student["lnf_g"], student["lnf_b"]]
+    for i, blk in enumerate(student["blocks"]):
+        for g in ("ln1_g", "ln1_b", "ln2_g", "ln2_b"):
+            flat.append(blk[g])
+        for kind in M.LAYER_KINDS:
+            u = np.asarray(blk[f"{kind}_u"])[:, :r]
+            v = np.asarray(blk[f"{kind}_v"])[:, :r]
+            G = np.linalg.inv(u[:r, :])
+            u_t = (u @ G)[r:]
+            v_t = v @ np.linalg.inv(G).T
+            if u_t.shape[0] > 0:
+                flat.append(jnp.asarray(u_t, jnp.float32))
+            flat.append(jnp.asarray(v_t, jnp.float32))
+            flat.append(blk[f"{kind}_b"])
+    gl = M.gar_fwd(cfg, flat, profile, t)
+    np.testing.assert_allclose(np.asarray(gl), np.asarray(sl), rtol=2e-2, atol=2e-2)
+
+
+def test_adamw_moves_toward_target(cfg):
+    # AdamW on a quadratic must shrink the parameter.
+    p = {"w": jnp.ones((4,), jnp.float32) * 5.0}
+    m = M.zeros_like_tree(p)
+    v = M.zeros_like_tree(p)
+    w0 = float(jnp.abs(p["w"]).max())
+    for step in range(300):
+        g = {"w": p["w"]}  # grad of 0.5 w^2
+        p, m, v = M.adamw_update(cfg, p, g, m, v, jnp.float32(step + 1))
+    w1 = float(jnp.abs(p["w"]).max())
+    # Adam's step size is bounded by lr; expect ~lr·steps of progress.
+    assert w1 < w0 - 200 * cfg.lr, (w0, w1)
+
+
+def test_ce_loss_perfect_prediction_is_zero(cfg):
+    logits = jnp.full((1, 3, cfg.vocab), -30.0)
+    targets = jnp.asarray([[1, 2, 3]], jnp.int32)
+    logits = logits.at[0, 0, 1].set(30.0).at[0, 1, 2].set(30.0).at[0, 2, 3].set(30.0)
+    assert float(M.ce_loss(logits, targets)) < 1e-5
+
+
+def test_lora_spec_and_init(cfg):
+    spec = M.lora_param_spec(cfg)
+    lora = M.init_lora(cfg)
+    assert len(spec) == 2 * cfg.n_fact_layers
+    for (name, shape), arr in zip(spec, lora):
+        assert arr.shape == shape
+        if name.endswith("_lb"):
+            assert float(jnp.abs(arr).max()) == 0.0  # B zero-init

@@ -1,0 +1,38 @@
+//! Bench: DataSVD layer decomposition (covariance accumulation + whitened
+//! SVD) at the model's real layer shapes.
+
+use flexrank::bench_harness;
+use flexrank::flexrank::decompose::{CovAccum, DataSvd};
+use flexrank::linalg::Mat;
+use flexrank::rng::Rng;
+
+fn main() {
+    let mut bench = bench_harness::from_env();
+    let mut rng = Rng::new(3);
+    // The byte-GPT base layer shapes: (n_in, m_out).
+    for (name, n, m) in [
+        ("qkv 128x384", 128usize, 384usize),
+        ("proj 128x128", 128, 128),
+        ("fc 128x512", 128, 512),
+        ("fcp 512x128", 512, 128),
+    ] {
+        let w = Mat::randn(n, m, &mut rng);
+        let x = Mat::randn(256, n, &mut rng);
+        let mut cov = CovAccum::new(n);
+        cov.add_batch(&x);
+        bench.run(&format!("cov_accum {name}"), Some((256 * n) as f64), || {
+            let mut c = CovAccum::new(n);
+            c.add_batch(&x);
+            std::hint::black_box(c.count);
+        });
+        bench.run(&format!("datasvd {name}"), Some((n * m) as f64), || {
+            std::hint::black_box(DataSvd::compute(&w, &cov, 1e-7).lambda.len());
+        });
+        bench.run(&format!("plain_svd {name}"), Some((n * m) as f64), || {
+            std::hint::black_box(DataSvd::compute_plain(&w).lambda.len());
+        });
+    }
+    bench
+        .write_csv(flexrank::results_dir().join("bench_decompose.csv"))
+        .expect("csv");
+}

@@ -1,0 +1,40 @@
+//! Bench: DP rank selection (Alg. 2) scaling in layers L and levels K —
+//! validates the paper's O(L·K) probing + near-linear DP claim.
+
+use flexrank::bench_harness;
+use flexrank::flexrank::dp::{dp_rank_selection, Candidate};
+use flexrank::rng::Rng;
+
+fn candidates(l: usize, k: usize, seed: u64) -> Vec<Vec<Candidate>> {
+    let mut rng = Rng::new(seed);
+    (0..l)
+        .map(|_| {
+            let mut err = 0.0;
+            let mut c = vec![Candidate { saving: 0, err: 0.0, rank: k }];
+            for r in (1..k).rev() {
+                err += rng.f64() * 0.1;
+                c.push(Candidate { saving: 500 * (k - r) as u64, err, rank: r });
+            }
+            c.sort_by_key(|x| x.saving);
+            c
+        })
+        .collect()
+}
+
+fn main() {
+    let mut bench = bench_harness::from_env();
+    for (l, k) in [(8usize, 8usize), (16, 8), (32, 8), (16, 16), (64, 16), (128, 16)] {
+        let cands = candidates(l, k, 42);
+        let full: u64 = cands.iter().flat_map(|c| c.iter().map(|x| x.saving)).sum::<u64>() + 1000;
+        // Exact (quant=1) and bucketed (quant=64) variants.
+        bench.run(&format!("dp L={l} K={k} exact"), Some((l * k) as f64), || {
+            std::hint::black_box(dp_rank_selection(&cands, full, 1));
+        });
+        bench.run(&format!("dp L={l} K={k} quant64"), Some((l * k) as f64), || {
+            std::hint::black_box(dp_rank_selection(&cands, full, 64));
+        });
+    }
+    bench
+        .write_csv(flexrank::results_dir().join("bench_dp_select.csv"))
+        .expect("csv");
+}

@@ -1,0 +1,51 @@
+//! Bench: GAR vs naive low-rank vs dense forward (paper Fig. 10).
+//!
+//! Times the AOT single-matmul artifacts through PJRT across the rank sweep
+//! and prints relative-to-dense costs next to the analytic MAC model.
+//! `cargo bench --bench gar_matmul` (BENCH_QUICK=1 for the short profile).
+
+use flexrank::bench_harness;
+use flexrank::runtime::{Engine, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(flexrank::artifacts_dir())?;
+    let cfg = engine.manifest.config.clone();
+    let mut bench = bench_harness::from_env();
+    let (bdim, bb) = (cfg.bench_dim, cfg.bench_batch);
+    let elems = (bb * bdim) as f64;
+
+    let mut run_one = |name: &str| -> anyhow::Result<f64> {
+        let exe = engine.load(name)?;
+        let inputs: Vec<Tensor> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|s| Tensor::f32(s.shape.clone(), vec![0.01; s.numel()]))
+            .collect();
+        let stats = bench.run(name, Some(elems), || {
+            exe.run(&inputs).expect("bench exec failed");
+        });
+        Ok(stats.mean_secs())
+    };
+
+    let dense = run_one("bench_dense")?;
+    println!("\nrank  rel_measured(lowrank)  rel_measured(gar)  rel_macs(lowrank)  rel_macs(gar)");
+    for &r in &cfg.bench_ranks.clone() {
+        if r > bdim {
+            continue;
+        }
+        let low = run_one(&format!("bench_lowrank_r{r}"))? / dense;
+        let (gar, gar_mac) = if r < bdim {
+            (
+                run_one(&format!("bench_gar_r{r}"))? / dense,
+                ((2 * bdim - r) * r) as f64 / (bdim * bdim) as f64,
+            )
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let low_mac = (2 * bdim * r) as f64 / (bdim * bdim) as f64;
+        println!("{r:>4}  {low:>20.3}  {gar:>17.3}  {low_mac:>17.3}  {gar_mac:>13.3}");
+    }
+    bench.write_csv(flexrank::results_dir().join("bench_gar_matmul.csv"))?;
+    Ok(())
+}

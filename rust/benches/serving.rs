@@ -1,0 +1,60 @@
+//! Bench: end-to-end elastic serving throughput/latency under load, static
+//! vs adaptive policy (the L3 headline numbers for EXPERIMENTS.md §Perf).
+
+use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg};
+use flexrank::data::{Corpus, TraceCfg, TraceGen};
+use flexrank::runtime::Engine;
+use flexrank::training::params::{decompose_teacher, student_from_factors, ParamSet};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(flexrank::artifacts_dir())?;
+    let cfg = engine.manifest.config.clone();
+    let teacher = ParamSet::from_specs(
+        &engine.manifest.teacher_init,
+        engine.manifest.load_teacher_init()?,
+    );
+    let factors = decompose_teacher(&cfg, &teacher, None)?;
+    let student = student_from_factors(&cfg, &teacher, &factors)?;
+    let corpus = Corpus::generate(100_000, 5);
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n = if quick { 80 } else { 400 };
+
+    println!("policy    rate(req/s)  achieved(req/s)  p50(ms)  p95(ms)  occupancy");
+    for policy in [PolicyKind::Static, PolicyKind::Adaptive] {
+        for rate in [100.0, 400.0, 1600.0] {
+            let trace = TraceGen::new(
+                TraceCfg {
+                    n_requests: n,
+                    rate,
+                    seq_len: cfg.seq_len,
+                    vocab: cfg.vocab,
+                    seed: 7,
+                    ..Default::default()
+                },
+                &corpus.heldout,
+            )
+            .generate();
+            let report = serve_trace(
+                &engine,
+                &student,
+                trace,
+                &ServeCfg { policy, max_wait_ms: 4.0, replay_speed: 1.0 },
+            )?;
+            // Aggregate across tiers.
+            let mut all: Vec<f64> = Vec::new();
+            for t in 0..report.tier_budgets.len() {
+                all.extend(report.metrics.latency_ms[t].iter());
+            }
+            let stats = flexrank::coordinator::LatencyStats::from_samples(&all);
+            println!(
+                "{:>8}  {rate:>11.0}  {:>15.1}  {:>7.1}  {:>7.1}  {:>8.2}",
+                format!("{policy:?}"),
+                report.throughput_rps(),
+                stats.p50_ms,
+                stats.p95_ms,
+                report.metrics.mean_occupancy(),
+            );
+        }
+    }
+    Ok(())
+}

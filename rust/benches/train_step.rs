@@ -1,0 +1,57 @@
+//! Bench: per-step latency of the training artifacts (dense pretrain step vs
+//! fused KD consolidation step) and of the evaluation forwards — the L2/L1
+//! numbers for EXPERIMENTS.md §Perf.
+
+use flexrank::bench_harness;
+use flexrank::runtime::{DType, Engine, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(flexrank::artifacts_dir())?;
+    let cfg = engine.manifest.config.clone();
+    let mut bench = bench_harness::from_env();
+    let tokens_per_step = (cfg.batch_train * cfg.seq_len) as f64;
+
+    for (name, elems) in [
+        ("teacher_fwd", tokens_per_step),
+        ("student_eval", tokens_per_step),
+        ("serve_gar_t0", (cfg.batch_serve * cfg.seq_len) as f64),
+        ("serve_gar_t3", (cfg.batch_serve * cfg.seq_len) as f64),
+        ("teacher_train_step", tokens_per_step),
+        ("kd_train_step", tokens_per_step),
+    ] {
+        let exe = engine.load(name)?;
+        let inputs: Vec<Tensor> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                DType::F32 => Tensor::f32(s.shape.clone(), vec![0.01; s.numel()]),
+                DType::I32 => Tensor::i32(s.shape.clone(), vec![1; s.numel()]),
+            })
+            .collect();
+        bench.run(name, Some(elems), || {
+            exe.run(&inputs).expect("exec");
+        });
+    }
+
+    // Device-resident variant of the KD step: how much does keeping the
+    // teacher on device save vs full host-literal execution?
+    let exe = engine.load("kd_train_step")?;
+    let inputs: Vec<Tensor> = exe
+        .spec
+        .inputs
+        .iter()
+        .map(|s| match s.dtype {
+            DType::F32 => Tensor::f32(s.shape.clone(), vec![0.01; s.numel()]),
+            DType::I32 => Tensor::i32(s.shape.clone(), vec![1; s.numel()]),
+        })
+        .collect();
+    let bufs = engine.to_device_all(&inputs)?;
+    bench.run("kd_train_step (device-resident)", Some(tokens_per_step), || {
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|d| d.buffer()).collect();
+        exe.run_b(&refs).expect("exec_b");
+    });
+
+    bench.write_csv(flexrank::results_dir().join("bench_train_step.csv"))?;
+    Ok(())
+}

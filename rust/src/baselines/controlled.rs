@@ -1,0 +1,192 @@
+//! Controlled-experiment machinery on pure-rust nets (Figs. 3, 8, 9).
+
+use crate::data::Digits;
+use crate::flexrank::decompose::{CovAccum, DataSvd};
+use crate::flexrank::masks::RankProfile;
+use crate::linalg::Mat;
+use crate::nn::{accuracy, softmax_xent, Activation, Adam, FactLinear, Layer, LayerKind, Net};
+use crate::rng::Rng;
+
+/// Layer widths of the controlled 4-layer net (App. D.1 analogue).
+pub const WIDTHS: [usize; 5] = [64, 32, 24, 16, 10];
+
+/// Train a dense 4-layer teacher on digits; returns (net, test accuracy).
+pub fn train_dense_teacher(d: &Digits, steps: usize, seed: u64) -> (Net, f64) {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for i in 0..WIDTHS.len() - 1 {
+        let act = if i + 2 == WIDTHS.len() { Activation::None } else { Activation::Relu };
+        layers.push(Layer::dense(WIDTHS[i], WIDTHS[i + 1], 0.15, act, &mut rng));
+    }
+    let mut net = Net::new(layers);
+    let mut opt = Adam::new(4e-3);
+    let batch = 64;
+    for _ in 0..steps {
+        let rows: Vec<usize> = (0..batch).map(|_| rng.below(d.x.rows)).collect();
+        let xb = gather(&d.x, &rows);
+        let yb: Vec<usize> = rows.iter().map(|&i| d.y[i]).collect();
+        let (out, cache) = net.forward_cached(&xb, &[]);
+        let (_l, g) = softmax_xent(&out, &yb);
+        let grads = net.backward(&cache, &[], &g);
+        opt.step(&mut net, &grads);
+    }
+    let acc = accuracy(&net.forward(&d.x_test, &[]), &d.y_test);
+    (net, acc)
+}
+
+fn gather(m: &Mat, rows: &[usize]) -> Mat {
+    let mut out = Mat::zeros(rows.len(), m.cols);
+    for (dst, &src) in rows.iter().enumerate() {
+        out.row_mut(dst).copy_from_slice(m.row(src));
+    }
+    out
+}
+
+/// Capture per-layer input activations of a dense net on `x`.
+pub fn layer_inputs(net: &Net, x: &Mat) -> Vec<Mat> {
+    let mut acts = vec![x.clone()];
+    let mut cur = x.clone();
+    for l in &net.layers {
+        let (z, _) = match &l.kind {
+            LayerKind::Dense { w, b } => {
+                let mut z = &cur * w;
+                for i in 0..z.rows {
+                    for (zj, bj) in z.row_mut(i).iter_mut().zip(b) {
+                        *zj += bj;
+                    }
+                }
+                (z, ())
+            }
+            LayerKind::Fact(f) => {
+                let mask = vec![1.0; f.rank()];
+                (f.forward(&cur, &mask).0, ())
+            }
+        };
+        let mut a = z;
+        l.act.apply(&mut a);
+        acts.push(a.clone());
+        cur = a;
+    }
+    acts.pop(); // outputs of last layer are not anyone's input
+    acts
+}
+
+/// DataSVD-decompose a dense net into a factorized student (same biases),
+/// using activation covariances from `x_calib`.  `plain` = weight-SVD.
+pub fn decompose_net(teacher: &Net, x_calib: &Mat, plain: bool) -> Net {
+    let acts = layer_inputs(teacher, x_calib);
+    let layers = teacher
+        .layers
+        .iter()
+        .zip(&acts)
+        .map(|(l, a)| match &l.kind {
+            LayerKind::Dense { w, b } => {
+                let d = if plain {
+                    DataSvd::compute_plain(w)
+                } else {
+                    let mut cov = CovAccum::new(w.rows);
+                    cov.add_batch(a);
+                    DataSvd::compute(w, &cov, 1e-7)
+                };
+                Layer {
+                    kind: LayerKind::Fact(FactLinear::from_factors(d.u, d.v, b.clone())),
+                    act: l.act,
+                }
+            }
+            LayerKind::Fact(_) => l.clone(),
+        })
+        .collect();
+    Net::new(layers)
+}
+
+/// Random-init factorized net with the same architecture (Fig. 3 red).
+pub fn random_student(seed: u64) -> Net {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for i in 0..WIDTHS.len() - 1 {
+        let act = if i + 2 == WIDTHS.len() { Activation::None } else { Activation::Relu };
+        let r = WIDTHS[i].min(WIDTHS[i + 1]);
+        layers.push(Layer::fact(WIDTHS[i], WIDTHS[i + 1], r, 0.15, act, &mut rng));
+    }
+    Net::new(layers)
+}
+
+/// Train one submodel independently at a fixed profile (classification).
+pub fn train_independent(
+    mut net: Net,
+    d: &Digits,
+    profile: &RankProfile,
+    steps: usize,
+    seed: u64,
+) -> (Net, f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut opt = Adam::new(4e-3);
+    let batch = 64;
+    for _ in 0..steps {
+        let rows: Vec<usize> = (0..batch).map(|_| rng.below(d.x.rows)).collect();
+        let xb = gather(&d.x, &rows);
+        let yb: Vec<usize> = rows.iter().map(|&i| d.y[i]).collect();
+        let (out, cache) = net.forward_cached(&xb, profile);
+        let (_l, g) = softmax_xent(&out, &yb);
+        let grads = net.backward(&cache, profile, &g);
+        opt.step(&mut net, &grads);
+    }
+    let test_logits = net.forward(&d.x_test, profile);
+    let acc = accuracy(&test_logits, &d.y_test);
+    let (loss, _) = softmax_xent(&test_logits, &d.y_test);
+    (net, acc, loss)
+}
+
+/// Test loss+accuracy at a profile.
+pub fn eval_net(net: &Net, d: &Digits, profile: &RankProfile) -> (f64, f64) {
+    let logits = net.forward(&d.x_test, profile);
+    let (loss, _) = softmax_xent(&logits, &d.y_test);
+    (loss, accuracy(&logits, &d.y_test))
+}
+
+/// Output-matching probe loss: MSE between the truncated student's logits
+/// and reference logits (teacher / full student) on the test inputs — the
+/// App. C.3 probing loss (smooth, no label noise).
+pub fn eval_probe_mse(net: &Net, x: &Mat, reference: &Mat, profile: &RankProfile) -> f64 {
+    let out = net.forward(x, profile);
+    crate::nn::mse_loss(&out, reference).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+    fn teacher_learns_digits() {
+        let d = Digits::generate(500, 200, 31);
+        let (_net, acc) = train_dense_teacher(&d, 250, 32);
+        assert!(acc > 0.7, "teacher acc {acc}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+    fn decomposition_preserves_function_at_full_rank() {
+        let d = Digits::generate(200, 50, 33);
+        let (teacher, _) = train_dense_teacher(&d, 100, 34);
+        let student = decompose_net(&teacher, &d.x, false);
+        let full: RankProfile = student.fact_ranks();
+        let t_out = teacher.forward(&d.x_test, &[]);
+        let s_out = student.forward(&d.x_test, &full);
+        assert!(
+            s_out.close_to(&t_out, 1e-5),
+            "full-rank student diverges from teacher"
+        );
+    }
+
+    #[test]
+    fn layer_inputs_have_right_dims() {
+        let d = Digits::generate(50, 10, 35);
+        let (teacher, _) = train_dense_teacher(&d, 10, 36);
+        let acts = layer_inputs(&teacher, &d.x);
+        assert_eq!(acts.len(), 4);
+        for (a, w) in acts.iter().zip(&WIDTHS) {
+            assert_eq!(a.cols, *w);
+        }
+    }
+}

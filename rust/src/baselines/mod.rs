@@ -1,0 +1,20 @@
+//! Every comparison system in the paper's evaluation, reimplemented:
+//!
+//! * [`controlled`] — rust-net machinery for the controlled experiments
+//!   (Figs. 3, 8, 9): dense digits teacher, DataSVD decomposition of rust
+//!   nets with activation capture, independent-submodel training.
+//! * [`transformer`] — transformer-scale baselines over the PJRT stack
+//!   (Figs. 4, 5): plain weight-SVD, ACIP-like (frozen SVD + LoRA repair),
+//!   LLM-Pruner-like (magnitude-criterion rank selection + recovery),
+//!   LayerSkip-like (depth elasticity via block-zero profiles), and the
+//!   independent-submodels-at-matched-budget baseline.
+//!
+//! PTS/ASL/NSL (Fig. 2) live in [`crate::flexrank::theory`] since they are
+//! the paper's own theory objects.
+//!
+//! DESIGN.md §substitutions documents where each reimplementation differs
+//! from the original system (all baselines run inside this repo's
+//! factorized-transformer substrate rather than the authors' checkpoints).
+
+pub mod controlled;
+pub mod transformer;

@@ -1,0 +1,147 @@
+//! Transformer-scale baselines over the PJRT stack (Figs. 4, 5).
+//!
+//! Each reimplements the comparison system's *mechanism* inside this repo's
+//! factorized substrate at matched training budget (Sec. 5 "comparison at
+//! matched training budget"); DESIGN.md §substitutions records the mapping.
+
+use anyhow::Result;
+
+use crate::data::TokenBatcher;
+use crate::flexrank::masks::{gar_layer_params, RankProfile};
+use crate::runtime::{Engine, ModelConfig};
+use crate::training::driver;
+use crate::training::params::{decompose_teacher, fact_layers, student_from_factors, ParamSet};
+
+/// Plain weight-SVD student (the "SVD" baseline of Fig. 4).
+pub fn plain_svd_student(engine: &Engine, teacher: &ParamSet) -> Result<ParamSet> {
+    let cfg = engine.manifest.config.clone();
+    let factors = decompose_teacher(&cfg, teacher, None)?;
+    student_from_factors(&cfg, teacher, &factors)
+}
+
+/// LLM-Pruner-like profiles: *magnitude* criterion instead of data+DP.
+/// Component importance = ‖u_i‖‖v_i‖ (the singular value of the balanced
+/// factors); greedily keep the globally largest components until the budget
+/// is filled.  Greedy prefixes are automatically nested.
+pub fn magnitude_profiles(
+    cfg: &ModelConfig,
+    student: &ParamSet,
+    budgets: &[f64],
+) -> Result<Vec<RankProfile>> {
+    let layers = fact_layers(cfg);
+    // Collect (importance, layer) per component.
+    let mut comps: Vec<(f64, usize)> = Vec::new();
+    for (li, (b, kind, _n, _m)) in layers.iter().enumerate() {
+        let u = student.mat(&format!("blocks.{b}.{kind}_u"))?;
+        let v = student.mat(&format!("blocks.{b}.{kind}_v"))?;
+        for c in 0..u.cols {
+            let nu: f64 = (0..u.rows).map(|i| u[(i, c)] * u[(i, c)]).sum::<f64>().sqrt();
+            let nv: f64 = (0..v.rows).map(|i| v[(i, c)] * v[(i, c)]).sum::<f64>().sqrt();
+            comps.push((nu * nv, li));
+        }
+    }
+    comps.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let full_cost: usize = layers
+        .iter()
+        .map(|&(_, _, n, m)| gar_layer_params(n, m, cfg.rank_full()))
+        .sum();
+
+    let mut profiles = Vec::with_capacity(budgets.len());
+    for &beta in budgets {
+        let cap = (beta * full_cost as f64).round() as usize;
+        let mut ranks = vec![0usize; layers.len()];
+        let mut cost = 0usize;
+        for &(_, li) in &comps {
+            let (_, _, n, m) = layers[li];
+            let new_cost =
+                cost - gar_layer_params(n, m, ranks[li]) + gar_layer_params(n, m, ranks[li] + 1);
+            if new_cost > cap {
+                continue;
+            }
+            cost = new_cost;
+            ranks[li] += 1;
+        }
+        // Every layer needs at least rank 1 to keep the network connected.
+        for (li, r) in ranks.iter_mut().enumerate() {
+            if *r == 0 {
+                let _ = li;
+                *r = 1;
+            }
+        }
+        profiles.push(ranks);
+    }
+    Ok(profiles)
+}
+
+/// LayerSkip-like profiles: depth elasticity — trailing blocks are zeroed
+/// entirely (rank 0 on all four surfaces ⇒ the block collapses to its
+/// residual path), leading blocks stay full rank.
+pub fn layerskip_profiles(cfg: &ModelConfig, budgets: &[f64]) -> Vec<RankProfile> {
+    let n_blocks = cfg.n_blocks;
+    budgets
+        .iter()
+        .map(|&beta| {
+            let keep = ((beta * n_blocks as f64).ceil() as usize).clamp(1, n_blocks);
+            let mut prof = Vec::with_capacity(cfg.n_fact_layers());
+            for b in 0..n_blocks {
+                let r = if b < keep { cfg.rank_full() } else { 0 };
+                prof.extend([r; 4]);
+            }
+            prof
+        })
+        .collect()
+}
+
+/// Independent-submodels baseline (Fig. 5 dashed): train each budget's
+/// submodel separately from the same init, splitting the total step budget
+/// evenly.  Returns per-budget (profile, eval loss).
+#[allow(clippy::too_many_arguments)]
+pub fn independent_submodels(
+    engine: &Engine,
+    student0: &ParamSet,
+    teacher: &ParamSet,
+    profiles: &[RankProfile],
+    total_steps: usize,
+    batcher: &mut TokenBatcher,
+    eval_batches: &[Vec<i32>],
+    seed: u64,
+) -> Result<Vec<f64>> {
+    let per = (total_steps / profiles.len()).max(1);
+    let mut out = Vec::with_capacity(profiles.len());
+    for (i, prof) in profiles.iter().enumerate() {
+        let run = driver::consolidate(
+            engine,
+            student0.clone(),
+            teacher,
+            std::slice::from_ref(prof),
+            &[1.0],
+            batcher,
+            per,
+            seed ^ (i as u64 * 0x9e37),
+            0,
+        )?;
+        let loss = driver::eval_student(engine, &run.params, prof, eval_batches)?;
+        out.push(loss);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::load_model_config;
+
+    #[test]
+    fn layerskip_profiles_shape() {
+        let cfg = load_model_config("base").unwrap();
+        let profs = layerskip_profiles(&cfg, &[0.25, 0.5, 1.0]);
+        assert_eq!(profs.len(), 3);
+        // 25% of 4 blocks = 1 block kept.
+        assert_eq!(profs[0][..4], [128, 128, 128, 128]);
+        assert!(profs[0][4..].iter().all(|&r| r == 0));
+        assert!(profs[2].iter().all(|&r| r == 128));
+        // Nested in the chain sense.
+        assert!(crate::flexrank::masks::is_nested(&profs[0], &profs[1]));
+    }
+}

@@ -1,0 +1,165 @@
+//! Micro-benchmark substrate (no `criterion` offline).
+//!
+//! Provides warmup + repeated timed runs with mean / p50 / p95 / stddev and a
+//! criterion-like console report.  Used by every target in `rust/benches/`
+//! (declared with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub std_dev: Duration,
+    pub throughput: Option<f64>,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure budgets.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(700),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; `elems_per_iter` (optional) reports throughput.
+    pub fn run(&mut self, name: &str, elems_per_iter: Option<f64>, mut f: impl FnMut()) -> Stats {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            p50: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            throughput: elems_per_iter.map(|e| e / mean_s),
+        };
+        println!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters){}",
+            stats.name,
+            stats.mean,
+            stats.p50,
+            stats.p95,
+            stats.iters,
+            stats
+                .throughput
+                .map(|t| format!("  {:.3e} elem/s", t))
+                .unwrap_or_default()
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Write results as CSV (name,mean_ns,p50_ns,p95_ns,iters).
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let mut out = String::from("name,mean_ns,p50_ns,p95_ns,std_ns,iters\n");
+        for s in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                s.name,
+                s.mean.as_nanos(),
+                s.p50.as_nanos(),
+                s.p95.as_nanos(),
+                s.std_dev.as_nanos(),
+                s.iters
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+/// `BENCH_QUICK=1` selects the short profile (used by `cargo test` smoke).
+pub fn from_env() -> Bench {
+    if std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+            results: vec![],
+        };
+        let s = b.run("spin", Some(1000.0), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean > Duration::ZERO);
+        assert!(s.throughput.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Config system: model configs (shared with python via configs/*.json) and
+//! run configs (training / selection / serving knobs with CLI overrides).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::json;
+pub use crate::runtime::Manifest;
+pub use crate::runtime::{ArtifactSpec, TensorSpec};
+
+pub use crate::runtime::manifest::ModelConfig;
+
+/// Load a model config by name ("base", "tiny") or path.
+pub fn load_model_config(name_or_path: &str) -> Result<ModelConfig> {
+    let path = if std::path::Path::new(name_or_path).exists() {
+        PathBuf::from(name_or_path)
+    } else {
+        crate::repo_root().join("configs").join(format!("model_{name_or_path}.json"))
+    };
+    ModelConfig::from_json(&json::parse_file(path)?)
+}
+
+/// Knobs for the full FlexRank pipeline run (e2e example + figures).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Teacher pretraining steps (builds the "pretrained base model").
+    pub pretrain_steps: usize,
+    /// Knowledge-consolidation steps (Alg. 1 lines 14-17).
+    pub consolidate_steps: usize,
+    /// Budget grid for DP selection / evaluation, ascending fractions.
+    pub budgets: Vec<f64>,
+    /// Sampling weights alpha_k over budgets during consolidation (Eq. 6).
+    pub alphas: Vec<f64>,
+    /// Calibration batches for DataSVD covariance accumulation.
+    pub calib_batches: usize,
+    /// Eval batches per measurement.
+    pub eval_batches: usize,
+    /// RNG seed for the whole pipeline.
+    pub seed: u64,
+    /// Log every N steps.
+    pub log_every: usize,
+    /// Rank levels per layer in the sensitivity probe (K of App. C.2).
+    pub probe_levels: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        let budgets: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        let alphas = vec![1.0 / budgets.len() as f64; budgets.len()];
+        RunConfig {
+            pretrain_steps: 300,
+            consolidate_steps: 300,
+            budgets,
+            alphas,
+            calib_batches: 16,
+            eval_batches: 4,
+            seed: 1234,
+            log_every: 25,
+            probe_levels: 8,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply CLI overrides: --pretrain-steps, --consolidate-steps, --seed,
+    /// --calib-batches, --eval-batches, --log-every.
+    pub fn with_args(mut self, args: &Args) -> Result<Self> {
+        self.pretrain_steps = args.usize_or("pretrain-steps", self.pretrain_steps)?;
+        self.consolidate_steps = args.usize_or("consolidate-steps", self.consolidate_steps)?;
+        self.calib_batches = args.usize_or("calib-batches", self.calib_batches)?;
+        self.eval_batches = args.usize_or("eval-batches", self.eval_batches)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.log_every = args.usize_or("log-every", self.log_every)?;
+        self.probe_levels = args.usize_or("probe-levels", self.probe_levels)?;
+        Ok(self)
+    }
+
+    /// "Smoke" profile for tests: tiny step counts.
+    pub fn smoke() -> Self {
+        RunConfig {
+            pretrain_steps: 3,
+            consolidate_steps: 3,
+            calib_batches: 2,
+            eval_batches: 1,
+            log_every: 1,
+            probe_levels: 2,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_budgets_ascending_and_weighted() {
+        let rc = RunConfig::default();
+        assert!(rc.budgets.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(rc.budgets.len(), rc.alphas.len());
+        let s: f64 = rc.alphas.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = crate::cli::Args::parse(
+            ["x", "--pretrain-steps", "7", "--seed", "99"].iter().map(|s| s.to_string()),
+        );
+        let rc = RunConfig::default().with_args(&args).unwrap();
+        assert_eq!(rc.pretrain_steps, 7);
+        assert_eq!(rc.seed, 99);
+    }
+
+    #[test]
+    fn model_config_loads() {
+        let mc = load_model_config("tiny").unwrap();
+        assert_eq!(mc.d_model, 32);
+        assert_eq!(mc.n_fact_layers(), 8);
+        assert_eq!(mc.layer_dims().len(), 4);
+    }
+}

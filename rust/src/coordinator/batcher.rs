@@ -1,0 +1,191 @@
+//! Dynamic batcher: per-tier queues with max-batch-size / deadline flushing.
+//!
+//! Pure logic (no engine dependency) so invariants are property-testable:
+//! a batch flushes when it reaches `max_batch` or when its oldest request
+//! has waited `max_wait`; fairness is oldest-first within a tier.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::data::trace::Request;
+
+/// A request waiting in a tier queue.
+#[derive(Debug)]
+pub struct Pending {
+    pub req: Request,
+    pub enqueued: Instant,
+}
+
+/// Per-tier dynamic batching queues.
+pub struct DynamicBatcher {
+    queues: Vec<VecDeque<Pending>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(n_tiers: usize, max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        DynamicBatcher {
+            queues: (0..n_tiers).map(|_| VecDeque::new()).collect(),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    pub fn push(&mut self, tier: usize, req: Request, now: Instant) {
+        self.queues[tier].push_back(Pending { req, enqueued: now });
+    }
+
+    /// Total queued requests across tiers.
+    pub fn depth(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn tier_depth(&self, tier: usize) -> usize {
+        self.queues[tier].len()
+    }
+
+    /// Is any tier ready to flush at `now`?  Ready = full batch available OR
+    /// oldest entry has exceeded the deadline.
+    pub fn ready_tier(&self, now: Instant) -> Option<usize> {
+        // Full batches first (throughput), then expired deadlines (latency),
+        // preferring the tier with the oldest head.
+        for (i, q) in self.queues.iter().enumerate() {
+            if q.len() >= self.max_batch {
+                return Some(i);
+            }
+        }
+        self.queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| {
+                q.front()
+                    .map(|p| now.duration_since(p.enqueued) >= self.max_wait)
+                    .unwrap_or(false)
+            })
+            .min_by_key(|(_, q)| q.front().map(|p| p.enqueued).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    /// Time until the next deadline expiry (None if all queues empty).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front())
+            .map(|p| {
+                let waited = now.duration_since(p.enqueued);
+                self.max_wait.saturating_sub(waited)
+            })
+            .min()
+    }
+
+    /// Pop up to `max_batch` oldest requests from a tier.
+    pub fn take_batch(&mut self, tier: usize) -> Vec<Pending> {
+        let q = &mut self.queues[tier];
+        let n = q.len().min(self.max_batch);
+        q.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::trace::Slo;
+
+    fn req(id: u64) -> Request {
+        Request { id, arrival_s: 0.0, slo: Slo::Standard, tokens: vec![], budget: None }
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(2, 3, Duration::from_millis(100));
+        for i in 0..3 {
+            b.push(1, req(i), now);
+        }
+        assert_eq!(b.ready_tier(now), Some(1));
+        let batch = b.take_batch(1);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline_only_after_wait() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(1, 8, Duration::from_millis(10));
+        b.push(0, req(1), now);
+        assert_eq!(b.ready_tier(now), None);
+        let later = now + Duration::from_millis(11);
+        assert_eq!(b.ready_tier(later), Some(0));
+    }
+
+    #[test]
+    fn oldest_first_order() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(1, 2, Duration::from_millis(1));
+        for i in 0..5 {
+            b.push(0, req(i), now + Duration::from_millis(i as u64));
+        }
+        let ids: Vec<u64> = b.take_batch(0).iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        let ids: Vec<u64> = b.take_batch(0).iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn next_deadline_reflects_oldest() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(2, 8, Duration::from_millis(20));
+        assert_eq!(b.next_deadline(now), None);
+        b.push(0, req(1), now);
+        b.push(1, req(2), now + Duration::from_millis(5));
+        let d = b.next_deadline(now + Duration::from_millis(10)).unwrap();
+        assert!(d <= Duration::from_millis(10), "{d:?}");
+    }
+
+    #[test]
+    fn property_no_request_lost_or_duplicated() {
+        crate::prop::forall(
+            151,
+            50,
+            |rng| {
+                let n_tiers = 1 + rng.below(4);
+                let max_batch = 1 + rng.below(6);
+                let ops: Vec<(usize, u64)> =
+                    (0..rng.below(60)).map(|i| (rng.below(n_tiers), i as u64)).collect();
+                (n_tiers, max_batch, ops)
+            },
+            |(n_tiers, max_batch, ops)| {
+                let now = Instant::now();
+                let mut b = DynamicBatcher::new(*n_tiers, *max_batch, Duration::from_secs(1));
+                for (tier, id) in ops {
+                    b.push(*tier, req(*id), now);
+                }
+                let mut seen = std::collections::HashSet::new();
+                let mut drained = 0;
+                for t in 0..*n_tiers {
+                    loop {
+                        let batch = b.take_batch(t);
+                        if batch.is_empty() {
+                            break;
+                        }
+                        if batch.len() > *max_batch {
+                            return Err("batch exceeds max".into());
+                        }
+                        for p in &batch {
+                            if !seen.insert(p.req.id) {
+                                return Err(format!("dup id {}", p.req.id));
+                            }
+                        }
+                        drained += batch.len();
+                    }
+                }
+                if drained != ops.len() {
+                    return Err(format!("drained {} of {}", drained, ops.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+}

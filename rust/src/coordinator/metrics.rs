@@ -1,0 +1,130 @@
+//! Serving metrics: per-tier latency distributions + throughput.
+
+use std::time::Duration;
+
+/// Latency summary over a set of samples.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples: &[f64]) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)];
+        LatencyStats {
+            count: s.len(),
+            mean_ms: s.iter().sum::<f64>() / s.len() as f64,
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: *s.last().unwrap(),
+        }
+    }
+}
+
+/// Accumulates per-tier samples during a serving run.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// End-to-end latency samples (ms) per tier: queueing + execution.
+    pub latency_ms: Vec<Vec<f64>>,
+    /// Execution-only samples (ms) per tier.
+    pub exec_ms: Vec<Vec<f64>>,
+    /// Batch occupancy (filled slots / batch size) per executed batch.
+    pub occupancy: Vec<f64>,
+    pub batches: usize,
+    pub requests_done: usize,
+}
+
+impl Metrics {
+    pub fn new(n_tiers: usize) -> Metrics {
+        Metrics {
+            latency_ms: vec![Vec::new(); n_tiers],
+            exec_ms: vec![Vec::new(); n_tiers],
+            occupancy: Vec::new(),
+            batches: 0,
+            requests_done: 0,
+        }
+    }
+
+    pub fn record_batch(
+        &mut self,
+        tier: usize,
+        batch_fill: usize,
+        batch_cap: usize,
+        exec: Duration,
+        per_request_latency: &[Duration],
+    ) {
+        self.batches += 1;
+        self.requests_done += batch_fill;
+        self.occupancy.push(batch_fill as f64 / batch_cap as f64);
+        self.exec_ms[tier].push(exec.as_secs_f64() * 1e3);
+        for l in per_request_latency {
+            self.latency_ms[tier].push(l.as_secs_f64() * 1e3);
+        }
+    }
+
+    pub fn tier_latency(&self, tier: usize) -> LatencyStats {
+        LatencyStats::from_samples(&self.latency_ms[tier])
+    }
+
+    pub fn tier_exec(&self, tier: usize) -> LatencyStats {
+        LatencyStats::from_samples(&self.exec_ms[tier])
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.occupancy.is_empty() {
+            0.0
+        } else {
+            self.occupancy.iter().sum::<f64>() / self.occupancy.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencyStats::from_samples(&samples);
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 51.0).abs() <= 1.0);
+        assert!((s.p95_ms - 96.0).abs() <= 1.0);
+        assert_eq!(s.max_ms, 100.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::from_samples(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_ms, 0.0);
+    }
+
+    #[test]
+    fn record_accumulates() {
+        let mut m = Metrics::new(2);
+        m.record_batch(
+            1,
+            3,
+            4,
+            Duration::from_millis(10),
+            &[Duration::from_millis(12), Duration::from_millis(14), Duration::from_millis(11)],
+        );
+        assert_eq!(m.requests_done, 3);
+        assert_eq!(m.batches, 1);
+        assert!((m.mean_occupancy() - 0.75).abs() < 1e-12);
+        assert_eq!(m.tier_latency(1).count, 3);
+        assert_eq!(m.tier_latency(0).count, 0);
+    }
+}

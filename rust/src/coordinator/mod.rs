@@ -1,0 +1,81 @@
+//! Elastic serving coordinator — the L3 deployment layer of the paper's
+//! "train-once, deploy-everywhere" story.
+//!
+//! A single consolidated parameter set yields one GAR submodel executable per
+//! budget tier (`serve_gar_t{i}` artifacts); the coordinator routes incoming
+//! requests to tiers by SLO policy, batches them dynamically (max-batch /
+//! deadline), executes on the PJRT runtime, and reports latency/throughput
+//! metrics per tier.
+//!
+//! Threading: an ingest thread replays the trace through an mpsc channel
+//! (only `Request`s cross threads); the main loop owns the PJRT engine (the
+//! `xla` crate's client wraps raw pointers and is not `Send`), pulls
+//! requests, and drives the batcher — the same ownership layout a
+//! single-device vLLM-style worker uses.
+
+mod batcher;
+mod metrics;
+mod policy;
+mod registry;
+mod server;
+
+pub use batcher::{DynamicBatcher, Pending};
+pub use metrics::{LatencyStats, Metrics};
+pub use policy::{Policy, PolicyKind};
+pub use registry::SubmodelRegistry;
+pub use server::{serve_trace, ServeCfg, ServeReport};
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::data::{TraceCfg, TraceGen};
+use crate::runtime::Engine;
+
+/// `repro serve [--requests N] [--rate R] [--policy static|adaptive]`
+pub fn run_cli(args: &Args) -> Result<()> {
+    let engine = Engine::new(crate::artifacts_dir()).context("engine init")?;
+    let cfg = engine.manifest.config.clone();
+
+    // Student params: prefer the consolidated pipeline checkpoint.
+    let stem = crate::training::pipeline::stage_dir().join("student_kd");
+    let student = if crate::training::ckpt::exists(&stem) {
+        eprintln!("[serve] using consolidated student checkpoint");
+        crate::training::ckpt::load(&stem)?
+    } else {
+        eprintln!("[serve] no checkpoint; decomposing fresh teacher (mechanics demo)");
+        let teacher = crate::training::params::ParamSet::from_specs(
+            &engine.manifest.teacher_init,
+            engine.manifest.load_teacher_init()?,
+        );
+        let factors = crate::training::params::decompose_teacher(&cfg, &teacher, None)?;
+        crate::training::params::student_from_factors(&cfg, &teacher, &factors)?
+    };
+
+    let corpus = crate::data::Corpus::generate(crate::training::CORPUS_BYTES, 5);
+    let trace_cfg = TraceCfg {
+        n_requests: args.usize_or("requests", 200)?,
+        rate: args.f64_or("rate", 100.0)?,
+        seq_len: cfg.seq_len,
+        vocab: cfg.vocab,
+        seed: args.u64_or("seed", 77)?,
+        ..Default::default()
+    };
+    let trace = TraceGen::new(trace_cfg, &corpus.heldout).generate();
+
+    let policy = match args.get_or("policy", "static") {
+        "adaptive" => PolicyKind::Adaptive,
+        _ => PolicyKind::Static,
+    };
+    let serve_cfg = ServeCfg {
+        max_wait_ms: args.f64_or("max-wait-ms", 4.0)?,
+        policy,
+        ..Default::default()
+    };
+    let report = serve_trace(&engine, &student, trace, &serve_cfg)?;
+    report.print();
+
+    let path = crate::results_dir().join("serving_report.json");
+    std::fs::write(&path, report.to_json())?;
+    println!("report -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Tier-selection policy: map a request's SLO (and current load) to a
+//! serving tier.
+//!
+//! * **Static** — fixed SLO→tier map (quality→largest, interactive→smallest).
+//! * **Adaptive** — starts from the static map, then downgrades under queue
+//!   pressure and upgrades when idle: the budget-conditioned inference the
+//!   paper's elasticity enables (Sec. 7 "budget-conditioned or
+//!   input-adaptive inference").
+
+use crate::data::trace::{Request, Slo};
+
+/// Which policy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Static,
+    Adaptive,
+}
+
+/// Tier-selection policy over `n_tiers` tiers (ascending budget order).
+#[derive(Debug, Clone)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    pub n_tiers: usize,
+    /// Queue depth (requests) above which adaptive policy downgrades a step.
+    pub pressure_hi: usize,
+    /// Queue depth below which adaptive policy restores the SLO tier.
+    pub pressure_lo: usize,
+}
+
+impl Policy {
+    pub fn new(kind: PolicyKind, n_tiers: usize) -> Self {
+        Policy { kind, n_tiers, pressure_hi: 24, pressure_lo: 4 }
+    }
+
+    /// Base tier from the SLO class alone.
+    pub fn base_tier(&self, slo: Slo) -> usize {
+        match slo {
+            Slo::Interactive => 0,
+            Slo::Standard => (self.n_tiers.saturating_sub(1)) / 2,
+            Slo::Quality => self.n_tiers - 1,
+        }
+    }
+
+    /// Tier for a request given current total queue depth.
+    pub fn select(&self, req: &Request, queue_depth: usize) -> usize {
+        if let Some(b) = req.budget {
+            // Explicit budget override: smallest tier index covering it.
+            let idx = ((b * self.n_tiers as f64).ceil() as usize).clamp(1, self.n_tiers) - 1;
+            return idx;
+        }
+        let base = self.base_tier(req.slo);
+        match self.kind {
+            PolicyKind::Static => base,
+            PolicyKind::Adaptive => {
+                if queue_depth >= self.pressure_hi {
+                    // Shed load: drop everything one tier (floor at 0).
+                    base.saturating_sub(1)
+                } else if queue_depth <= self.pressure_lo {
+                    base
+                } else {
+                    // Intermediate pressure: only quality keeps its tier.
+                    if req.slo == Slo::Quality {
+                        base
+                    } else {
+                        base.saturating_sub(1)
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(slo: Slo) -> Request {
+        Request { id: 0, arrival_s: 0.0, slo, tokens: vec![], budget: None }
+    }
+
+    #[test]
+    fn static_map_monotone_in_slo() {
+        let p = Policy::new(PolicyKind::Static, 4);
+        let i = p.select(&req(Slo::Interactive), 0);
+        let s = p.select(&req(Slo::Standard), 0);
+        let q = p.select(&req(Slo::Quality), 0);
+        assert!(i <= s && s <= q);
+        assert_eq!(q, 3);
+        assert_eq!(i, 0);
+    }
+
+    #[test]
+    fn adaptive_downgrades_under_pressure() {
+        let p = Policy::new(PolicyKind::Adaptive, 4);
+        let quality = req(Slo::Quality);
+        assert_eq!(p.select(&quality, 0), 3);
+        assert_eq!(p.select(&quality, 100), 2);
+        let standard = req(Slo::Standard);
+        let calm = p.select(&standard, 0);
+        let busy = p.select(&standard, 100);
+        assert!(busy <= calm);
+    }
+
+    #[test]
+    fn explicit_budget_override() {
+        let p = Policy::new(PolicyKind::Static, 4);
+        let mut r = req(Slo::Quality);
+        r.budget = Some(0.25);
+        assert_eq!(p.select(&r, 0), 0);
+        r.budget = Some(1.0);
+        assert_eq!(p.select(&r, 0), 3);
+    }
+
+    #[test]
+    fn property_tier_always_valid() {
+        crate::prop::forall(
+            141,
+            100,
+            |rng| {
+                let n = 1 + rng.below(6);
+                let slo = crate::data::trace::Slo::ALL[rng.below(3)];
+                let depth = rng.below(200);
+                let budget = if rng.f64() < 0.3 { Some(rng.f64().max(0.01)) } else { None };
+                let kind = if rng.f64() < 0.5 { PolicyKind::Static } else { PolicyKind::Adaptive };
+                (n, slo, depth, budget, kind)
+            },
+            |(n, slo, depth, budget, kind)| {
+                let p = Policy::new(*kind, *n);
+                let mut r = req(*slo);
+                r.budget = *budget;
+                let t = p.select(&r, *depth);
+                if t >= *n {
+                    return Err(format!("tier {t} out of range {n}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Submodel registry: one compiled GAR executable + device-resident weights
+//! per budget tier.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::{DeviceTensor, Engine, Executable, Tensor};
+use crate::training::params::{gar_params_for, ParamSet};
+
+/// One deployable tier.
+pub struct Tier {
+    pub idx: usize,
+    /// Budget fraction in (0, 1].
+    pub budget: f64,
+    /// Rank profile baked into the executable.
+    pub profile: Vec<usize>,
+    /// Inference parameter count (GAR form).
+    pub params: usize,
+    exe: std::sync::Arc<Executable>,
+    weights: Vec<DeviceTensor>,
+}
+
+/// Registry over all serving tiers, ordered by ascending budget.
+pub struct SubmodelRegistry {
+    pub tiers: Vec<Tier>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl SubmodelRegistry {
+    /// Load every `serve_gar_t{i}` artifact, re-gauge the student's factors
+    /// per tier profile, and pin the weights on device.
+    pub fn load(engine: &Engine, student: &ParamSet) -> Result<SubmodelRegistry> {
+        let cfg = engine.manifest.config.clone();
+        let mut tiers = Vec::new();
+        for (i, &budget) in cfg.serve_tiers.iter().enumerate() {
+            let name = format!("serve_gar_t{i}");
+            let exe = engine.load(&name)?;
+            let spec = exe.spec.clone();
+            let host = gar_params_for(&cfg, student, &spec)?;
+            let params = host.iter().map(|t| t.len()).sum();
+            let weights = engine.to_device_all(&host)?;
+            tiers.push(Tier {
+                idx: i,
+                budget,
+                profile: spec.profile.clone().unwrap_or_default(),
+                params,
+                exe,
+                weights,
+            });
+        }
+        ensure!(!tiers.is_empty(), "no serving tiers in manifest");
+        Ok(SubmodelRegistry {
+            tiers,
+            batch: cfg.batch_serve,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+        })
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Run one batch (row-major `(batch, seq_len)` tokens) on a tier;
+    /// returns logits as a host tensor `(batch, seq_len, vocab)`.
+    pub fn infer(&self, engine: &Engine, tier: usize, tokens: Vec<i32>) -> Result<Tensor> {
+        let t = &self.tiers[tier];
+        ensure!(tokens.len() == self.batch * self.seq_len, "bad batch size");
+        let tok = engine.to_device(&Tensor::i32(vec![self.batch, self.seq_len], tokens))?;
+        let mut refs: Vec<&xla::PjRtBuffer> = t.weights.iter().map(|d| d.buffer()).collect();
+        refs.push(tok.buffer());
+        let out = t.exe.run_b(&refs)?;
+        Tensor::from_literal(&out[0])
+    }
+}

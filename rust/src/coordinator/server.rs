@@ -1,0 +1,224 @@
+//! The serving loop: ingest thread replays the trace; the main loop routes,
+//! batches, executes, and records metrics.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::trace::Request;
+use crate::json::{self, Value};
+use crate::runtime::Engine;
+use crate::training::params::ParamSet;
+
+use super::batcher::DynamicBatcher;
+use super::metrics::Metrics;
+use super::policy::{Policy, PolicyKind};
+use super::registry::SubmodelRegistry;
+
+/// Serving-run configuration.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    pub policy: PolicyKind,
+    /// Batch deadline (ms): a partial batch flushes after this wait.
+    pub max_wait_ms: f64,
+    /// Replay speed: 1.0 = real-time per the trace, 0.0 = as-fast-as-possible.
+    pub replay_speed: f64,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0 }
+    }
+}
+
+/// Final report of a serving run.
+pub struct ServeReport {
+    pub metrics: Metrics,
+    pub tier_budgets: Vec<f64>,
+    pub tier_params: Vec<usize>,
+    pub tier_requests: Vec<usize>,
+    pub wall_s: f64,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.metrics.requests_done as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn print(&self) {
+        println!("== serving report ==");
+        println!(
+            "requests {}  batches {}  wall {:.2}s  throughput {:.1} req/s  occupancy {:.0}%",
+            self.metrics.requests_done,
+            self.metrics.batches,
+            self.wall_s,
+            self.throughput_rps(),
+            self.metrics.mean_occupancy() * 100.0
+        );
+        for (i, &b) in self.tier_budgets.iter().enumerate() {
+            let l = self.metrics.tier_latency(i);
+            let e = self.metrics.tier_exec(i);
+            println!(
+                "tier {i} (budget {b:.2}, {:.2}M params, {} reqs): \
+                 latency p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms | exec p50 {:.1}ms",
+                self.tier_params[i] as f64 / 1e6,
+                self.tier_requests[i],
+                l.p50_ms,
+                l.p95_ms,
+                l.p99_ms,
+                e.p50_ms,
+            );
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let tiers: Vec<Value> = self
+            .tier_budgets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let l = self.metrics.tier_latency(i);
+                json::obj(vec![
+                    ("tier", Value::Num(i as f64)),
+                    ("budget", Value::Num(b)),
+                    ("params", Value::Num(self.tier_params[i] as f64)),
+                    ("requests", Value::Num(self.tier_requests[i] as f64)),
+                    ("latency_p50_ms", Value::Num(l.p50_ms)),
+                    ("latency_p95_ms", Value::Num(l.p95_ms)),
+                    ("latency_p99_ms", Value::Num(l.p99_ms)),
+                    ("exec_p50_ms", Value::Num(self.metrics.tier_exec(i).p50_ms)),
+                ])
+            })
+            .collect();
+        json::to_string(&json::obj(vec![
+            ("requests", Value::Num(self.metrics.requests_done as f64)),
+            ("batches", Value::Num(self.metrics.batches as f64)),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("throughput_rps", Value::Num(self.throughput_rps())),
+            ("mean_occupancy", Value::Num(self.metrics.mean_occupancy())),
+            ("tiers", Value::Arr(tiers)),
+        ]))
+    }
+}
+
+/// Serve a trace to completion.
+pub fn serve_trace(
+    engine: &Engine,
+    student: &ParamSet,
+    trace: Vec<Request>,
+    cfg: &ServeCfg,
+) -> Result<ServeReport> {
+    let registry = SubmodelRegistry::load(engine, student)?;
+    let n_tiers = registry.n_tiers();
+    let policy = Policy::new(cfg.policy, n_tiers);
+    let mut batcher = DynamicBatcher::new(
+        n_tiers,
+        registry.batch,
+        Duration::from_secs_f64(cfg.max_wait_ms / 1e3),
+    );
+    let mut metrics = Metrics::new(n_tiers);
+    let mut tier_requests = vec![0usize; n_tiers];
+
+    // Ingest thread: replays arrivals on the trace's timeline.
+    let (tx, rx) = mpsc::channel::<Request>();
+    let replay = cfg.replay_speed;
+    let ingest = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        for req in trace {
+            if replay > 0.0 {
+                let due = Duration::from_secs_f64(req.arrival_s / replay);
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            if tx.send(req).is_err() {
+                break;
+            }
+        }
+    });
+
+    let start = Instant::now();
+    let mut open = true;
+    while open || batcher.depth() > 0 {
+        // Drain arrivals (blocking briefly when idle so we don't spin).
+        loop {
+            match rx.try_recv() {
+                Ok(req) => {
+                    let now = Instant::now();
+                    let tier = policy.select(&req, batcher.depth());
+                    tier_requests[tier] += 1;
+                    batcher.push(tier, req, now);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+
+        let now = Instant::now();
+        if let Some(tier) = batcher.ready_tier(now) {
+            let batch = batcher.take_batch(tier);
+            let fill = batch.len();
+            // Pad to the executable's fixed batch.
+            let mut tokens = Vec::with_capacity(registry.batch * registry.seq_len);
+            for p in &batch {
+                tokens.extend_from_slice(&p.req.tokens);
+            }
+            for _ in fill..registry.batch {
+                tokens.extend(std::iter::repeat(0i32).take(registry.seq_len));
+            }
+            let exec_t0 = Instant::now();
+            let _logits = registry.infer(engine, tier, tokens)?;
+            let exec = exec_t0.elapsed();
+            let done = Instant::now();
+            let lats: Vec<Duration> =
+                batch.iter().map(|p| done.duration_since(p.enqueued)).collect();
+            metrics.record_batch(tier, fill, registry.batch, exec, &lats);
+        } else if open {
+            // Idle: wait for the next deadline or a short poll tick.
+            let wait = batcher
+                .next_deadline(now)
+                .unwrap_or(Duration::from_millis(1))
+                .min(Duration::from_millis(2));
+            std::thread::sleep(wait.max(Duration::from_micros(100)));
+        } else if batcher.depth() > 0 {
+            // Channel closed; force-flush remaining by pretending deadlines
+            // expired (take the deepest queue).
+            let tier = (0..n_tiers)
+                .max_by_key(|&t| batcher.tier_depth(t))
+                .unwrap();
+            if batcher.tier_depth(tier) == 0 {
+                break;
+            }
+            let batch = batcher.take_batch(tier);
+            let fill = batch.len();
+            let mut tokens = Vec::with_capacity(registry.batch * registry.seq_len);
+            for p in &batch {
+                tokens.extend_from_slice(&p.req.tokens);
+            }
+            for _ in fill..registry.batch {
+                tokens.extend(std::iter::repeat(0i32).take(registry.seq_len));
+            }
+            let exec_t0 = Instant::now();
+            let _ = registry.infer(engine, tier, tokens)?;
+            let exec = exec_t0.elapsed();
+            let done = Instant::now();
+            let lats: Vec<Duration> =
+                batch.iter().map(|p| done.duration_since(p.enqueued)).collect();
+            metrics.record_batch(tier, fill, registry.batch, exec, &lats);
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    ingest.join().ok();
+
+    Ok(ServeReport {
+        metrics,
+        tier_budgets: registry.tiers.iter().map(|t| t.budget).collect(),
+        tier_params: registry.tiers.iter().map(|t| t.params).collect(),
+        tier_requests,
+        wall_s,
+    })
+}

@@ -1,0 +1,125 @@
+//! Synthetic "digits": structured Gaussian clusters on an 8×8 grid.
+//!
+//! Stands in for MNIST in the paper's controlled setting (App. D.1 / Fig. 3):
+//! 10 class prototypes (smooth random blobs), samples are prototypes with
+//! additive noise and small translations, so classes are separable but not
+//! trivially so — there is real low-rank structure to discover.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// A generated dataset.
+#[derive(Debug, Clone)]
+pub struct Digits {
+    pub x: Mat,
+    pub y: Vec<usize>,
+    pub x_test: Mat,
+    pub y_test: Vec<usize>,
+    pub side: usize,
+    pub classes: usize,
+}
+
+impl Digits {
+    pub fn generate(train_n: usize, test_n: usize, seed: u64) -> Digits {
+        let mut rng = Rng::new(seed);
+        let side = 8usize;
+        let classes = 10usize;
+        let dim = side * side;
+
+        // Smooth prototypes: a few random Gaussian bumps per class.
+        let protos: Vec<Vec<f64>> = (0..classes)
+            .map(|_| {
+                let mut p = vec![0.0f64; dim];
+                for _ in 0..3 {
+                    let cx = rng.range_f64(1.0, side as f64 - 1.0);
+                    let cy = rng.range_f64(1.0, side as f64 - 1.0);
+                    let amp = rng.range_f64(0.6, 1.2);
+                    let s2 = rng.range_f64(1.0, 2.5);
+                    for i in 0..side {
+                        for j in 0..side {
+                            let d2 = (i as f64 - cy).powi(2) + (j as f64 - cx).powi(2);
+                            p[i * side + j] += amp * (-d2 / (2.0 * s2)).exp();
+                        }
+                    }
+                }
+                p
+            })
+            .collect();
+
+        let sample = |rng: &mut Rng| -> (Vec<f64>, usize) {
+            let c = rng.below(classes);
+            let (dx, dy) = (rng.below(3) as i64 - 1, rng.below(3) as i64 - 1);
+            let mut v = vec![0.0f64; dim];
+            for i in 0..side as i64 {
+                for j in 0..side as i64 {
+                    let si = i - dy;
+                    let sj = j - dx;
+                    if (0..side as i64).contains(&si) && (0..side as i64).contains(&sj) {
+                        v[(i * side as i64 + j) as usize] =
+                            protos[c][(si * side as i64 + sj) as usize];
+                    }
+                }
+            }
+            for x in v.iter_mut() {
+                *x += rng.normal() * 0.15;
+            }
+            (v, c)
+        };
+
+        let fill = |n: usize, rng: &mut Rng| -> (Mat, Vec<usize>) {
+            let mut x = Mat::zeros(n, dim);
+            let mut y = Vec::with_capacity(n);
+            for i in 0..n {
+                let (v, c) = sample(rng);
+                x.row_mut(i).copy_from_slice(&v);
+                y.push(c);
+            }
+            (x, y)
+        };
+        let (x, y) = fill(train_n, &mut rng);
+        let (x_test, y_test) = fill(test_n, &mut rng);
+        Digits { x, y, x_test, y_test, side, classes }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.side * self.side
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{accuracy, softmax_xent, Activation, Adam, Layer, Net};
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = Digits::generate(100, 50, 11);
+        let b = Digits::generate(100, 50, 11);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.x.rows, 100);
+        assert_eq!(a.x_test.rows, 50);
+        assert_eq!(a.dim(), 64);
+        assert!(a.y.iter().all(|&c| c < 10));
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+    fn classes_are_learnable() {
+        // A small dense MLP must beat chance comfortably.
+        let d = Digits::generate(600, 200, 12);
+        let mut rng = Rng::new(13);
+        let mut net = Net::new(vec![
+            Layer::dense(64, 32, 0.15, Activation::Relu, &mut rng),
+            Layer::dense(32, 10, 0.15, Activation::None, &mut rng),
+        ]);
+        let mut opt = Adam::new(5e-3);
+        for _ in 0..300 {
+            let (out, cache) = net.forward_cached(&d.x, &[]);
+            let (_l, g) = softmax_xent(&out, &d.y);
+            let grads = net.backward(&cache, &[], &g);
+            opt.step(&mut net, &grads);
+        }
+        let acc = accuracy(&net.forward(&d.x_test, &[]), &d.y_test);
+        assert!(acc > 0.7, "test accuracy {acc}");
+    }
+}

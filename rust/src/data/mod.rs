@@ -1,0 +1,20 @@
+//! Synthetic data substrates (DESIGN.md §substitutions).
+//!
+//! * [`corpus`] — hierarchical-grammar byte corpus (stands in for
+//!   FineWebEdu): Zipf word distribution + sentence templates + nesting, so
+//!   a small LM has real structure to learn; held-out split for eval loss.
+//! * [`digits`] — structured cluster "digits" (stands in for MNIST/ImageNet
+//!   in the controlled Fig. 3 experiments).
+//! * [`domains`] — math-expression and bracket-code corpora for the Tab. 1
+//!   LoRA post-adaptation experiments.
+//! * [`trace`] — synthetic serving request traces (Poisson arrivals, mixed
+//!   budget SLOs) for the coordinator.
+
+pub mod corpus;
+pub mod digits;
+pub mod domains;
+pub mod trace;
+
+pub use corpus::{Corpus, TokenBatcher};
+pub use digits::Digits;
+pub use trace::{Request, TraceCfg, TraceGen};

@@ -1,0 +1,140 @@
+//! Synthetic serving request traces for the elastic coordinator.
+//!
+//! Poisson arrivals; each request carries a latency SLO class and a token
+//! payload.  Stands in for the production traces the paper's deployment
+//! story assumes (DESIGN.md §substitutions).
+
+use crate::rng::Rng;
+
+/// SLO class of a request — maps to a serving tier (budget) by policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Slo {
+    /// Interactive: tight latency, accepts the smallest viable submodel.
+    Interactive,
+    /// Standard: balanced.
+    Standard,
+    /// Batch/quality: wants the largest submodel, latency-insensitive.
+    Quality,
+}
+
+impl Slo {
+    pub const ALL: [Slo; 3] = [Slo::Interactive, Slo::Standard, Slo::Quality];
+}
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time offset from trace start (seconds).
+    pub arrival_s: f64,
+    pub slo: Slo,
+    /// Token window (model seq_len), values in [0, vocab).
+    pub tokens: Vec<i32>,
+    /// Optional explicit budget override in (0, 1].
+    pub budget: Option<f64>,
+}
+
+/// Trace generation knobs.
+#[derive(Debug, Clone)]
+pub struct TraceCfg {
+    pub n_requests: usize,
+    /// Mean arrival rate (req/s).
+    pub rate: f64,
+    /// Mix over SLO classes (interactive, standard, quality).
+    pub slo_mix: [f64; 3],
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        TraceCfg {
+            n_requests: 200,
+            rate: 50.0,
+            slo_mix: [0.5, 0.3, 0.2],
+            seq_len: 64,
+            vocab: 256,
+            seed: 77,
+        }
+    }
+}
+
+/// Deterministic trace generator.
+pub struct TraceGen {
+    cfg: TraceCfg,
+    rng: Rng,
+    t: f64,
+    issued: u64,
+    source: Vec<u8>,
+}
+
+impl TraceGen {
+    pub fn new(cfg: TraceCfg, source_text: &[u8]) -> Self {
+        let rng = Rng::new(cfg.seed);
+        TraceGen { cfg, rng, t: 0.0, issued: 0, source: source_text.to_vec() }
+    }
+
+    /// Generate the full trace.
+    pub fn generate(mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.cfg.n_requests);
+        while out.len() < self.cfg.n_requests {
+            out.push(self.next_request());
+        }
+        out
+    }
+
+    fn next_request(&mut self) -> Request {
+        // Exponential inter-arrival.
+        let u = self.rng.f64().max(1e-12);
+        self.t += -u.ln() / self.cfg.rate;
+        let slo = Slo::ALL[self.rng.weighted(&self.cfg.slo_mix.map(|x| x))];
+        let start = self.rng.below(self.source.len().saturating_sub(self.cfg.seq_len).max(1));
+        let tokens: Vec<i32> = (0..self.cfg.seq_len)
+            .map(|i| {
+                let b = self.source.get(start + i).copied().unwrap_or(b' ');
+                (b as usize % self.cfg.vocab) as i32
+            })
+            .collect();
+        self.issued += 1;
+        Request { id: self.issued, arrival_s: self.t, slo, tokens, budget: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(n: usize, seed: u64) -> Vec<Request> {
+        let cfg = TraceCfg { n_requests: n, seed, ..Default::default() };
+        TraceGen::new(cfg, b"hello world this is source text for requests").generate()
+    }
+
+    #[test]
+    fn arrivals_monotone_and_deterministic() {
+        let a = trace(100, 1);
+        let b = trace(100, 1);
+        assert_eq!(a.len(), 100);
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.slo, y.slo);
+        }
+    }
+
+    #[test]
+    fn slo_mix_roughly_respected() {
+        let a = trace(3000, 2);
+        let inter = a.iter().filter(|r| r.slo == Slo::Interactive).count() as f64 / 3000.0;
+        assert!((inter - 0.5).abs() < 0.05, "interactive fraction {inter}");
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let a = trace(50, 3);
+        assert!(a.iter().all(|r| r.tokens.iter().all(|&t| (0..256).contains(&t))));
+        assert!(a.iter().all(|r| r.tokens.len() == 64));
+    }
+}

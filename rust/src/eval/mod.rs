@@ -1,0 +1,7 @@
+//! Evaluation harness: figure/table regeneration (`repro figure <id>`,
+//! `repro table <id>`) and report/plot utilities.
+
+pub mod figures;
+pub mod report;
+
+pub use report::{ascii_chart, Series, Table};

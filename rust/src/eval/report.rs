@@ -1,0 +1,149 @@
+//! Result reporting: CSV writers + ASCII line charts for figure series.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Series { name: name.into(), points }
+    }
+}
+
+/// Write series as long-form CSV: series,x,y.
+pub fn write_series_csv(path: impl AsRef<Path>, series: &[Series]) -> std::io::Result<()> {
+    let mut out = String::from("series,x,y\n");
+    for s in series {
+        for (x, y) in &s.points {
+            let _ = writeln!(out, "{},{x},{y}", s.name);
+        }
+    }
+    std::fs::write(path, out)
+}
+
+/// Minimal ASCII line chart (markers per series) for terminal inspection.
+pub fn ascii_chart(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let mut all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.clone()).collect();
+    all.retain(|(x, y)| x.is_finite() && y.is_finite());
+    if all.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (xmin, xmax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), &(x, _)| (lo.min(x), hi.max(x)));
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+
+    let markers = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let m = markers[si % markers.len()];
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = m;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = writeln!(out, "  y: [{ymin:.4}, {ymax:.4}]  x: [{xmin:.3}, {xmax:.3}]");
+    for row in grid {
+        let _ = writeln!(out, "  |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "  +{}", "-".repeat(width));
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} = {}", markers[si % markers.len()], s.name);
+    }
+    out
+}
+
+/// Simple fixed-width table printer + CSV writer.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_renders_extremes() {
+        let s = vec![Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)])];
+        let c = ascii_chart("t", &s, 10, 5);
+        assert!(c.contains('*'));
+        assert!(c.contains("a"));
+    }
+
+    #[test]
+    fn chart_handles_empty() {
+        let c = ascii_chart("t", &[], 10, 5);
+        assert!(c.contains("no data"));
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let dir = std::env::temp_dir().join("flexrank_table_test.csv");
+        t.write_csv(&dir).unwrap();
+        let txt = std::fs::read_to_string(&dir).unwrap();
+        assert_eq!(txt, "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,184 @@
+//! Knowledge consolidation for pure-rust nets (Alg. 1 lines 14–17 at
+//! controlled-experiment scale; the transformer path is `training::`).
+//!
+//! Each step samples a budget profile `m_k ∝ α_k` from the nested chain and
+//! takes one distillation (or supervised) gradient step on the masked
+//! factorized student.
+
+use crate::linalg::Mat;
+use crate::nn::{mse_loss, softmax_xent, Adam, Net};
+use crate::rng::Rng;
+
+use super::masks::RankProfile;
+
+/// Supervision signal for consolidation.
+pub enum Target<'a> {
+    /// Distill against a frozen teacher net's logits (MSE on logits — the
+    /// linear-probe analogue of Eq. 5 at this scale).
+    Teacher(&'a Net),
+    /// Supervised regression targets.
+    Regress(&'a Mat),
+    /// Supervised classification labels.
+    Labels(&'a [usize]),
+}
+
+/// Configuration for a consolidation run.
+pub struct ConsolidateCfg {
+    pub steps: usize,
+    pub lr: f64,
+    pub batch: usize,
+    pub log_every: usize,
+}
+
+impl Default for ConsolidateCfg {
+    fn default() -> Self {
+        ConsolidateCfg { steps: 1000, lr: 1e-2, batch: 64, log_every: 0 }
+    }
+}
+
+/// Run nested consolidation: sample profiles ∝ alphas, step Adam on the
+/// masked student.  Returns per-profile final training losses.
+pub fn consolidate(
+    student: &mut Net,
+    profiles: &[RankProfile],
+    alphas: &[f64],
+    x: &Mat,
+    target: Target,
+    cfg: &ConsolidateCfg,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    assert_eq!(profiles.len(), alphas.len());
+    assert!(!profiles.is_empty());
+    let mut opt = Adam::new(cfg.lr);
+    let mut last_loss = vec![f64::NAN; profiles.len()];
+
+    // Precompute teacher logits once (frozen teacher).
+    let teacher_out = match &target {
+        Target::Teacher(t) => {
+            let full = t.fact_ranks();
+            Some(t.forward(x, &full))
+        }
+        _ => None,
+    };
+
+    for step in 0..cfg.steps {
+        let pi = rng.weighted(alphas);
+        let profile = &profiles[pi];
+
+        // Minibatch rows.
+        let rows: Vec<usize> = (0..cfg.batch.min(x.rows)).map(|_| rng.below(x.rows)).collect();
+        let xb = gather_rows(x, &rows);
+
+        let (out, cache) = student.forward_cached(&xb, profile);
+        let (loss, gout) = match &target {
+            Target::Teacher(_) => {
+                let t = gather_rows(teacher_out.as_ref().unwrap(), &rows);
+                mse_loss(&out, &t)
+            }
+            Target::Regress(y) => {
+                let t = gather_rows(y, &rows);
+                mse_loss(&out, &t)
+            }
+            Target::Labels(l) => {
+                let lb: Vec<usize> = rows.iter().map(|&i| l[i]).collect();
+                softmax_xent(&out, &lb)
+            }
+        };
+        let grads = student.backward(&cache, profile, &gout);
+        opt.step(student, &grads);
+        last_loss[pi] = loss;
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("consolidate step {step}: profile {pi} loss {loss:.5}");
+        }
+    }
+    last_loss
+}
+
+fn gather_rows(m: &Mat, rows: &[usize]) -> Mat {
+    let mut out = Mat::zeros(rows.len(), m.cols);
+    for (dst, &src) in rows.iter().enumerate() {
+        out.row_mut(dst).copy_from_slice(m.row(src));
+    }
+    out
+}
+
+/// Evaluate a net's loss at each profile (MSE against targets).
+pub fn eval_profiles(net: &Net, profiles: &[RankProfile], x: &Mat, y: &Mat) -> Vec<f64> {
+    profiles
+        .iter()
+        .map(|p| {
+            let out = net.forward(x, p);
+            mse_loss(&out, y).0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Activation, Layer};
+
+    /// Nested consolidation on a low-rank regression target must produce a
+    /// monotone loss-vs-rank staircase (bigger submodels at least as good).
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+    fn consolidated_losses_monotone_in_rank() {
+        let mut rng = Rng::new(120);
+        let (n, m, k) = (6, 6, 6);
+        // Target with power-law spectrum.
+        let sv: Vec<f64> = (0..k).map(|i| 1.0 / ((i + 1) as f64).powf(1.2)).collect();
+        let w_true = Mat::with_singular_values(n, m, &sv, &mut rng);
+        let x = Mat::randn(256, n, &mut rng);
+        let y = &x * &w_true;
+
+        let mut student = Net::new(vec![Layer::fact(n, m, k, 0.3, Activation::None, &mut rng)]);
+        let profiles: Vec<RankProfile> = (1..=k).map(|r| vec![r]).collect();
+        let alphas = vec![1.0 / k as f64; k];
+        consolidate(
+            &mut student,
+            &profiles,
+            &alphas,
+            &x,
+            Target::Regress(&y),
+            &ConsolidateCfg { steps: 3000, lr: 0.01, batch: 64, log_every: 0 },
+            &mut rng,
+        );
+
+        let losses = eval_profiles(&student, &profiles, &x, &y);
+        // Allow tiny non-monotonicity from stochastic training.
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] * 1.10 + 1e-4, "losses not ~monotone: {losses:?}");
+        }
+        // Full rank must essentially fit.
+        assert!(losses[k - 1] < 5e-2, "full-rank loss {}", losses[k - 1]);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+    fn teacher_distillation_runs() {
+        let mut rng = Rng::new(121);
+        let teacher = Net::new(vec![
+            Layer::fact(4, 8, 4, 0.5, Activation::Relu, &mut rng),
+            Layer::fact(8, 3, 3, 0.5, Activation::None, &mut rng),
+        ]);
+        let mut student = teacher.clone();
+        let x = Mat::randn(128, 4, &mut rng);
+        let profiles = vec![vec![2, 2], vec![4, 3]];
+        let losses = consolidate(
+            &mut student,
+            &profiles,
+            &[0.5, 0.5],
+            &x,
+            Target::Teacher(&teacher),
+            &ConsolidateCfg { steps: 200, lr: 0.005, batch: 32, log_every: 0 },
+            &mut rng,
+        );
+        assert!(losses.iter().all(|l| l.is_finite()));
+        // Full profile distills a clone of the teacher: loss must be small.
+        let full_out = student.forward(&x, &[4, 3]);
+        let t_out = teacher.forward(&x, &[4, 3]);
+        let (l, _) = mse_loss(&full_out, &t_out);
+        assert!(l < 0.1, "full-profile distillation loss {l}");
+    }
+}

@@ -1,0 +1,207 @@
+//! DataSVD layer decomposition (Sec. 3.1, App. C.1).
+//!
+//! Two stages:
+//!  1. **Online covariance estimation** — accumulate `Σ_l = Σ_j x_j x_jᵀ`
+//!     batch by batch; memory is O(n_l²), independent of sample count.
+//!  2. **Whitened SVD** — `Σ^{1/2}` via symmetric eigendecomposition, SVD of
+//!     `W_paper Σ^{1/2} = P Λ Qᵀ`, factors recovered as
+//!     `U = P Λ^{1/2}`, `V = Σ^{-1/2} Q Λ^{1/2}` (Eq. 61).
+//!
+//! Convention note: model weights arrive row-convention (`y = x W`,
+//! `W : n×m`); the paper's matrix is `W_paper = Wᵀ`.
+
+use crate::linalg::{psd_sqrt, svd, Mat};
+
+/// Online accumulator for one layer's activation second moment.
+#[derive(Debug, Clone)]
+pub struct CovAccum {
+    pub sigma: Mat,
+    pub count: usize,
+}
+
+impl CovAccum {
+    pub fn new(n: usize) -> Self {
+        CovAccum { sigma: Mat::zeros(n, n), count: 0 }
+    }
+
+    /// Add a batch of activations X (rows = samples).
+    pub fn add_batch(&mut self, x: &Mat) {
+        assert_eq!(x.cols, self.sigma.rows);
+        for i in 0..x.rows {
+            let row = x.row(i).to_vec();
+            self.sigma.add_outer(1.0, &row, &row);
+        }
+        self.count += x.rows;
+    }
+
+    /// Add a precomputed increment `XᵀX` (as produced by the `teacher_acts`
+    /// artifact) for `rows` samples.
+    pub fn add_gram(&mut self, gram: &Mat, rows: usize) {
+        assert_eq!((gram.rows, gram.cols), (self.sigma.rows, self.sigma.cols));
+        for (s, g) in self.sigma.data.iter_mut().zip(&gram.data) {
+            *s += g;
+        }
+        self.count += rows;
+    }
+}
+
+/// DataSVD result for one layer: importance-ordered factors + spectrum.
+#[derive(Debug, Clone)]
+pub struct DataSvd {
+    /// (m, k) left factor, paper convention (`W_paper = U Vᵀ`).
+    pub u: Mat,
+    /// (n, k) right factor.
+    pub v: Mat,
+    /// Whitened singular values (importance of each component).
+    pub lambda: Vec<f64>,
+}
+
+impl DataSvd {
+    /// Decompose `w` (row-convention n×m) under activation covariance `sigma`.
+    ///
+    /// `eps_rel` regularizes the whitening: eigenvalues below
+    /// `eps_rel * λ_max` are clamped (rank-deficient covariances from small
+    /// calibration sets stay invertible).
+    pub fn compute(w_row: &Mat, cov: &CovAccum, eps_rel: f64) -> DataSvd {
+        let w_paper = w_row.t(); // (m, n)
+        let n = w_row.rows;
+        assert_eq!(cov.sigma.rows, n, "covariance dim != layer input dim");
+
+        // Scale-invariant floor for the whitener.
+        let max_diag = (0..n).map(|i| cov.sigma[(i, i)]).fold(0.0f64, f64::max);
+        let floor = (eps_rel * max_diag).max(1e-12);
+        let (sig_half, sig_inv_half) = psd_sqrt(&cov.sigma, floor);
+
+        // SVD of the whitened weight.
+        let wh = &w_paper * &sig_half; // (m, n)
+        let d = svd(&wh);
+        let k = d.s.len();
+
+        // U = P Λ^{1/2}, V = Σ^{-1/2} Q Λ^{1/2}.
+        let mut u = d.u.clone(); // (m, k)
+        let mut q = d.vt.t(); // (n, k)
+        for i in 0..k {
+            let sh = d.s[i].max(0.0).sqrt();
+            u.scale_col(i, sh);
+            q.scale_col(i, sh);
+        }
+        let v = &sig_inv_half * &q; // (n, k)
+        DataSvd { u, v, lambda: d.s.clone() }
+    }
+
+    /// Plain weight-SVD (the "SVD" baseline): identity covariance.
+    pub fn compute_plain(w_row: &Mat) -> DataSvd {
+        let d = svd(&w_row.t());
+        let (u, v) = d.balanced_factors();
+        DataSvd { u, v, lambda: d.s }
+    }
+
+    /// Effective row-convention weight at rank r: `(U_r V_rᵀ)ᵀ = V_r U_rᵀ`.
+    pub fn truncated_weight(&self, r: usize) -> Mat {
+        let r = r.min(self.lambda.len());
+        &self.v.slice_cols(0, r) * &self.u.slice_cols(0, r).t()
+    }
+
+    /// Data-weighted reconstruction error `‖(W − W_r) Σ^{1/2}‖_F²` per
+    /// sample — the objective of Eq. 3 evaluated at rank r.
+    pub fn recon_error(&self, w_row: &Mat, cov: &CovAccum, r: usize) -> f64 {
+        let diff = &w_row.t() - &self.truncated_weight(r).t(); // (m, n) paper conv
+        // ‖D Σ^{1/2}‖² = tr(D Σ Dᵀ)
+        let ds = &diff * &cov.sigma;
+        let mut tr = 0.0;
+        for i in 0..diff.rows {
+            for j in 0..diff.cols {
+                tr += ds[(i, j)] * diff[(i, j)];
+            }
+        }
+        tr / cov.count.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_setup(rng: &mut Rng, n: usize, m: usize, samples: usize) -> (Mat, CovAccum, Mat) {
+        let w = Mat::randn(n, m, rng);
+        let x = Mat::randn(samples, n, rng);
+        let mut cov = CovAccum::new(n);
+        cov.add_batch(&x);
+        (w, cov, x)
+    }
+
+    #[test]
+    fn full_rank_reconstructs_weight() {
+        let mut rng = Rng::new(80);
+        let (w, cov, _x) = random_setup(&mut rng, 6, 5, 64);
+        let d = DataSvd::compute(&w, &cov, 1e-10);
+        let w_full = d.truncated_weight(5);
+        assert!(w_full.close_to(&w, 1e-6), "dist {}", w_full.frob_dist(&w));
+    }
+
+    #[test]
+    fn datasvd_beats_plain_svd_on_anisotropic_data() {
+        // When inputs concentrate along few directions, DataSVD's truncation
+        // error in *output* space (Eq. 3) must not exceed plain SVD's.
+        let mut rng = Rng::new(81);
+        let n = 8;
+        let m = 6;
+        let w = Mat::randn(n, m, &mut rng);
+        // Anisotropic activations: strong first 2 directions.
+        let basis = Mat::randn(n, n, &mut rng).orthonormal_cols(n);
+        let mut x = Mat::zeros(256, n);
+        for i in 0..x.rows {
+            for k in 0..n {
+                let scale = if k < 2 { 4.0 } else { 0.25 };
+                let c = rng.normal() * scale;
+                for j in 0..n {
+                    x[(i, j)] += c * basis[(j, k)];
+                }
+            }
+        }
+        let mut cov = CovAccum::new(n);
+        cov.add_batch(&x);
+
+        let data = DataSvd::compute(&w, &cov, 1e-10);
+        let plain = DataSvd::compute_plain(&w);
+
+        for r in 1..5 {
+            let err_data = output_err(&x, &w, &data.truncated_weight(r));
+            let err_plain = output_err(&x, &w, &plain.truncated_weight(r));
+            assert!(
+                err_data <= err_plain * 1.02 + 1e-9,
+                "r={r}: data {err_data} > plain {err_plain}"
+            );
+        }
+    }
+
+    fn output_err(x: &Mat, w: &Mat, w_approx: &Mat) -> f64 {
+        let d = &(x * w) - &(x * w_approx);
+        d.frob_norm().powi(2) / x.rows as f64
+    }
+
+    #[test]
+    fn recon_error_decreases_in_rank() {
+        let mut rng = Rng::new(82);
+        let (w, cov, _) = random_setup(&mut rng, 7, 7, 128);
+        let d = DataSvd::compute(&w, &cov, 1e-10);
+        let errs: Vec<f64> = (0..=7).map(|r| d.recon_error(&w, &cov, r)).collect();
+        for win in errs.windows(2) {
+            assert!(win[0] >= win[1] - 1e-9);
+        }
+        assert!(errs[7] < 1e-8);
+    }
+
+    #[test]
+    fn gram_accumulation_matches_batch() {
+        let mut rng = Rng::new(83);
+        let x = Mat::randn(32, 5, &mut rng);
+        let mut a = CovAccum::new(5);
+        a.add_batch(&x);
+        let mut b = CovAccum::new(5);
+        b.add_gram(&(&x.t() * &x), 32);
+        assert!(a.sigma.close_to(&b.sigma, 1e-9));
+        assert_eq!(a.count, b.count);
+    }
+}

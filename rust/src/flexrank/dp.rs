@@ -1,0 +1,291 @@
+//! Dynamic-programming rank selection — Algorithm 2 + subroutines of
+//! Algorithm 3 (ExpandLayer, KeepMinErrorPerSaving, ParetoPrune, Backtrack,
+//! ParetoFilter, NestedChain).
+//!
+//! Frames nested submodel search as a Multi-Choice Knapsack over per-layer
+//! (saving, error) candidates under the additive-error probe (App. C.2/C.3):
+//! states are (total saving, total error) pairs, pruned to the Pareto
+//! frontier after every layer, with backpointers for profile reconstruction.
+//!
+//! Savings can be grouped into buckets (`quant > 1`) to bound the state
+//! count on large models; `quant = 1` is exact.
+
+use super::masks::{is_nested, NestedChain, RankProfile};
+
+/// One rank-drop option for a layer: truncating to `rank` saves `saving`
+/// parameters at probe-error increase `err`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub saving: u64,
+    pub err: f64,
+    pub rank: usize,
+}
+
+/// DP output: the componentwise-nested chain plus the full Pareto set.
+#[derive(Debug, Clone)]
+pub struct DpResult {
+    /// Nested chain, ascending in cost (descending total saving).
+    pub chain: NestedChain,
+    /// All Pareto-optimal (saving, err, profile) triples, saving ascending.
+    pub pareto: Vec<(u64, f64, RankProfile)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct State {
+    saving: u64,
+    err: f64,
+}
+
+/// Run the DP over per-layer candidate lists.
+///
+/// * `candidates[l]` — options for layer l (must include the no-drop option
+///   `saving = 0`, `err = 0`, `rank = full`).
+/// * `full_cost` — parameter cost of the full model (profile costs are
+///   `full_cost − saving`).
+/// * `quant` — saving bucket width for state grouping (1 = exact).
+pub fn dp_rank_selection(
+    candidates: &[Vec<Candidate>],
+    full_cost: u64,
+    quant: u64,
+) -> DpResult {
+    let quant = quant.max(1);
+    let l_total = candidates.len();
+
+    // Frontier after each layer + backpointers (state -> (prev_state, rank)).
+    let mut frontier: Vec<State> = vec![State { saving: 0, err: 0.0 }];
+    let mut backptrs: Vec<Vec<(usize, usize)>> = Vec::with_capacity(l_total);
+
+    for cands in candidates {
+        // ExpandLayer: cross product of frontier with this layer's options.
+        let mut expanded: Vec<(State, usize, usize)> = Vec::with_capacity(frontier.len() * cands.len());
+        for (i, st) in frontier.iter().enumerate() {
+            for c in cands {
+                expanded.push((
+                    State { saving: st.saving + c.saving, err: st.err + c.err },
+                    i,
+                    c.rank,
+                ));
+            }
+        }
+
+        // KeepMinErrorPerSaving (bucketed by `quant`).
+        expanded.sort_by(|a, b| {
+            (a.0.saving / quant)
+                .cmp(&(b.0.saving / quant))
+                .then(a.0.err.partial_cmp(&b.0.err).unwrap())
+        });
+        let mut grouped: Vec<(State, usize, usize)> = Vec::new();
+        let mut last_bucket = u64::MAX;
+        for e in expanded {
+            let bucket = e.0.saving / quant;
+            if bucket != last_bucket {
+                grouped.push(e);
+                last_bucket = bucket;
+            }
+        }
+
+        // ParetoPrune: scan from largest saving down, keep strictly-improving
+        // errors (non-dominated set for maximize-saving / minimize-error).
+        let mut new_frontier: Vec<State> = Vec::new();
+        let mut new_bp: Vec<(usize, usize)> = Vec::new();
+        let mut e_best = f64::INFINITY;
+        for (st, prev, rank) in grouped.into_iter().rev() {
+            if st.err < e_best {
+                e_best = st.err;
+                new_frontier.push(st);
+                new_bp.push((prev, rank));
+            }
+        }
+        new_frontier.reverse();
+        new_bp.reverse();
+
+        frontier = new_frontier;
+        backptrs.push(new_bp);
+    }
+
+    // Backtrack every final state into a profile.
+    let mut pareto: Vec<(u64, f64, RankProfile)> = Vec::with_capacity(frontier.len());
+    for (fi, st) in frontier.iter().enumerate() {
+        let mut ranks = vec![0usize; l_total];
+        let mut h = fi;
+        for l in (0..l_total).rev() {
+            let (prev, rank) = backptrs[l][h];
+            ranks[l] = rank;
+            h = prev;
+        }
+        pareto.push((st.saving, st.err, ranks));
+    }
+    pareto.sort_by_key(|p| p.0);
+
+    // ParetoFilter (already non-dominated by construction, but re-assert) —
+    // scan ascending saving keeping strictly-decreasing error from the right.
+    let mut filtered: Vec<(u64, f64, RankProfile)> = Vec::new();
+    let mut e_best = f64::INFINITY;
+    for p in pareto.iter().rev() {
+        if p.1 < e_best {
+            e_best = p.1;
+            filtered.push(p.clone());
+        }
+    }
+    filtered.reverse();
+
+    // NestedChain: ascending saving (= descending rank), keep profiles whose
+    // ranks are componentwise ≤ the previously kept one.
+    let mut chain_profiles: Vec<RankProfile> = Vec::new();
+    let mut chain_savings: Vec<u64> = Vec::new();
+    let mut chain_errors: Vec<f64> = Vec::new();
+    for (s, e, prof) in filtered.iter() {
+        match chain_profiles.last() {
+            None => {
+                chain_profiles.push(prof.clone());
+                chain_savings.push(*s);
+                chain_errors.push(*e);
+            }
+            Some(last) => {
+                if is_nested(prof, last) {
+                    chain_profiles.push(prof.clone());
+                    chain_savings.push(*s);
+                    chain_errors.push(*e);
+                }
+            }
+        }
+    }
+    // Ascending cost = descending saving.
+    chain_profiles.reverse();
+    chain_savings.reverse();
+    chain_errors.reverse();
+    let costs: Vec<usize> = chain_savings
+        .iter()
+        .map(|&s| (full_cost - s) as usize)
+        .collect();
+
+    DpResult {
+        chain: NestedChain { profiles: chain_profiles, costs, errors: chain_errors },
+        pareto: filtered,
+    }
+}
+
+/// Brute-force reference (exponential): enumerate all combinations, return
+/// the Pareto set of (saving, error).  Test/validation only.
+pub fn brute_force_pareto(candidates: &[Vec<Candidate>]) -> Vec<(u64, f64, RankProfile)> {
+    let mut all: Vec<(u64, f64, RankProfile)> = vec![(0, 0.0, vec![])];
+    for cands in candidates {
+        let mut next = Vec::with_capacity(all.len() * cands.len());
+        for (s, e, prof) in &all {
+            for c in cands {
+                let mut p = prof.clone();
+                p.push(c.rank);
+                next.push((s + c.saving, e + c.err, p));
+            }
+        }
+        all = next;
+    }
+    all.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap()));
+    let mut out: Vec<(u64, f64, RankProfile)> = Vec::new();
+    let mut e_best = f64::INFINITY;
+    for p in all.iter().rev() {
+        if p.1 < e_best {
+            e_best = p.1;
+            out.push(p.clone());
+        }
+    }
+    out.reverse();
+    // Dedup equal savings (keep min error, already ensured by scan order).
+    out.dedup_by_key(|p| p.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    fn layer_cands(rng: &mut crate::rng::Rng, full_rank: usize, dim_sum: u64) -> Vec<Candidate> {
+        // Monotone: smaller rank -> bigger saving, bigger error.
+        let mut out = vec![Candidate { saving: 0, err: 0.0, rank: full_rank }];
+        let mut err = 0.0;
+        for r in (1..full_rank).rev() {
+            err += rng.f64() * 0.3;
+            out.push(Candidate {
+                saving: dim_sum * (full_rank - r) as u64,
+                err,
+                rank: r,
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn dp_matches_brute_force_exact() {
+        prop::forall(
+            71,
+            20,
+            |rng| {
+                let l = 2 + rng.below(3);
+                (0..l)
+                    .map(|_| {
+                        let fr = 2 + rng.below(3);
+                        let ds = 3 + rng.below(5) as u64;
+                        layer_cands(rng, fr, ds)
+                    })
+                    .collect::<Vec<Vec<Candidate>>>()
+            },
+            |cands| {
+                let full: u64 = 10_000;
+                let dp = dp_rank_selection(cands, full, 1);
+                let bf = brute_force_pareto(cands);
+                if dp.pareto.len() != bf.len() {
+                    return Err(format!("front sizes {} vs {}", dp.pareto.len(), bf.len()));
+                }
+                for (d, b) in dp.pareto.iter().zip(&bf) {
+                    if d.0 != b.0 || (d.1 - b.1).abs() > 1e-12 {
+                        return Err(format!("state mismatch {:?} vs {:?}", (d.0, d.1), (b.0, b.1)));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn chain_is_nested_and_costs_ascend() {
+        let mut rng = crate::rng::Rng::new(72);
+        let cands: Vec<Vec<Candidate>> =
+            (0..4).map(|_| layer_cands(&mut rng, 5, 7)).collect();
+        let dp = dp_rank_selection(&cands, 1_000, 1);
+        assert!(dp.chain.validate(), "chain must be nested + cost-ascending");
+        assert!(!dp.chain.profiles.is_empty());
+        // Chain endpoints: full model present (saving 0 => cost == full).
+        assert_eq!(*dp.chain.costs.last().unwrap(), 1_000);
+        assert_eq!(dp.chain.errors.last().copied().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn quantization_stays_near_exact() {
+        let mut rng = crate::rng::Rng::new(73);
+        let cands: Vec<Vec<Candidate>> =
+            (0..5).map(|_| layer_cands(&mut rng, 6, 11)).collect();
+        let exact = dp_rank_selection(&cands, 10_000, 1);
+        let quant = dp_rank_selection(&cands, 10_000, 8);
+        // For every exact front point there is a quantized point within one
+        // bucket of saving whose error is no worse than the bucket-mate's.
+        for (s, e, _) in &exact.pareto {
+            let ok = quant
+                .pareto
+                .iter()
+                .any(|(qs, qe, _)| qs + 8 >= *s && *qe <= *e + 1e-9);
+            assert!(ok, "exact point (s={s}, e={e}) lost under quantization");
+        }
+    }
+
+    #[test]
+    fn errors_decrease_with_cost_along_chain() {
+        let mut rng = crate::rng::Rng::new(74);
+        let cands: Vec<Vec<Candidate>> =
+            (0..3).map(|_| layer_cands(&mut rng, 4, 9)).collect();
+        let dp = dp_rank_selection(&cands, 500, 1);
+        for w in dp.chain.errors.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "errors must fall as cost rises");
+        }
+    }
+}

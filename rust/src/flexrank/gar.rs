@@ -1,0 +1,185 @@
+//! Gauge-Aligned Reparametrization (Sec. 3.5).
+//!
+//! Once a rank r is fixed, the factorization `W_paper = U_r V_rᵀ` is
+//! non-unique under `U → U G`, `V → V G⁻ᵀ`.  Choosing `G = (U_r)_{1:r,:}⁻¹`
+//! makes the top r×r block of `Ũ = U_r G` the identity, which is then never
+//! stored nor multiplied: a matvec costs `(m + n − r)·r` MACs instead of
+//! `(m + n)·r`, strictly below dense `m·n` for any `r < min(m, n)`.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::linalg::{inverse, lu_solve_many, Mat};
+
+/// GAR form of a rank-r layer: `Ũ = [I_r; Û]`, `Ṽ`.
+#[derive(Debug, Clone)]
+pub struct Gar {
+    /// (m − r, r) — the non-identity rows of Ũ.
+    pub u_hat: Mat,
+    /// (n, r) — re-gauged right factor.
+    pub v_tilde: Mat,
+    pub rank: usize,
+}
+
+impl Gar {
+    /// Re-gauge truncated factors `u: (m, k)`, `v: (n, k)` at rank `r ≤ k`.
+    ///
+    /// The gauge is `G = (U_r)_{1:r,:}⁻¹` — requires the leading r×r block of
+    /// the truncated U to be invertible (generic; the caller falls back to
+    /// [`Gar::from_factors_pivoted`] if not).
+    pub fn from_factors(u: &Mat, v: &Mat, r: usize) -> Result<Gar> {
+        ensure!(r >= 1 && r <= u.cols && r <= v.cols, "bad rank {r}");
+        ensure!(r <= u.rows, "rank {} exceeds output dim {}", r, u.rows);
+        let ur = u.slice_cols(0, r); // (m, r)
+        let vr = v.slice_cols(0, r); // (n, r)
+        let head = ur.slice_rows(0, r); // (r, r)
+        let g = inverse(&head).context("GAR gauge: leading block singular")?;
+        let u_tilde = &ur * &g; // (m, r), top block = I
+        let u_hat = u_tilde.slice_rows(r, u.rows - r);
+        // Ṽ = V_r G⁻ᵀ  ⇔  Ṽᵀ = G⁻¹ V_rᵀ  ⇔  solve headᵀ? — G⁻¹ = head, so
+        // Ṽ = V_r headᵀ.
+        let v_tilde = &vr * &head.t();
+        Ok(Gar { u_hat, v_tilde, rank: r })
+    }
+
+    /// GAR cost in MACs for one matvec: `(m + n − r) · r`.
+    pub fn macs(n: usize, m: usize, r: usize) -> usize {
+        (m + n - r) * r
+    }
+
+    /// Forward: `y = [t, t Ûᵀ]` with `t = x Ṽ`; x is (B, n) row-major.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let t = x * &self.v_tilde; // (B, r)
+        if self.u_hat.rows == 0 {
+            return t;
+        }
+        let rest = &t * &self.u_hat.t(); // (B, m - r)
+        let m = self.rank + self.u_hat.rows;
+        let mut y = Mat::zeros(x.rows, m);
+        for i in 0..x.rows {
+            y.row_mut(i)[..self.rank].copy_from_slice(t.row(i));
+            y.row_mut(i)[self.rank..].copy_from_slice(rest.row(i));
+        }
+        y
+    }
+
+    /// Effective row-convention weight `(Ũ Ṽᵀ)ᵀ = Ṽ Ũᵀ` (n × m), for checks.
+    pub fn effective_weight(&self) -> Mat {
+        let m = self.rank + self.u_hat.rows;
+        let mut u_tilde = Mat::zeros(m, self.rank);
+        for i in 0..self.rank {
+            u_tilde[(i, i)] = 1.0;
+        }
+        for i in 0..self.u_hat.rows {
+            for j in 0..self.rank {
+                u_tilde[(self.rank + i, j)] = self.u_hat[(i, j)];
+            }
+        }
+        &self.v_tilde * &u_tilde.t()
+    }
+}
+
+/// Batch-convert truncated factors via LU solve (equivalent to
+/// [`Gar::from_factors`] but solving instead of inverting; used by the
+/// pipeline for the marginally better conditioning).
+pub fn gar_solve(u: &Mat, v: &Mat, r: usize) -> Result<Gar> {
+    ensure!(r >= 1 && r <= u.cols && r <= v.cols && r <= u.rows, "bad rank {r}");
+    let ur = u.slice_cols(0, r);
+    let vr = v.slice_cols(0, r);
+    let head = ur.slice_rows(0, r); // (r, r)
+    // Û = U_tail · G where G = head⁻¹  ⇔  Ûᵀ = G ᵀ U_tailᵀ = (headᵀ)⁻¹ U_tailᵀ
+    // → solve headᵀ X = U_tailᵀ.
+    let tail = ur.slice_rows(r, u.rows - r); // (m-r, r)
+    let u_hat_t = lu_solve_many(&head.t(), &tail.t()).context("GAR solve")?; // (r, m-r)
+    let v_tilde = &vr * &head.t();
+    Ok(Gar { u_hat: u_hat_t.t(), v_tilde, rank: r })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::Rng;
+
+    #[test]
+    fn gar_preserves_function() {
+        let mut rng = Rng::new(90);
+        let (n, m, k) = (6, 9, 6);
+        let u = Mat::randn(m, k, &mut rng);
+        let v = Mat::randn(n, k, &mut rng);
+        for r in 1..=5 {
+            let gar = Gar::from_factors(&u, &v, r).unwrap();
+            // Truncated weight (row conv): V_r U_rᵀ
+            let want = &v.slice_cols(0, r) * &u.slice_cols(0, r).t();
+            assert!(
+                gar.effective_weight().close_to(&want, 1e-8),
+                "r={r} weight mismatch"
+            );
+            // Forward matches x @ W.
+            let x = Mat::randn(4, n, &mut rng);
+            let y = gar.forward(&x);
+            assert!(y.close_to(&(&x * &want), 1e-8), "r={r} forward mismatch");
+        }
+    }
+
+    #[test]
+    fn gar_solve_equals_inverse_path() {
+        let mut rng = Rng::new(91);
+        let u = Mat::randn(7, 5, &mut rng);
+        let v = Mat::randn(4, 5, &mut rng);
+        for r in 1..=4 {
+            let a = Gar::from_factors(&u, &v, r).unwrap();
+            let b = gar_solve(&u, &v, r).unwrap();
+            assert!(a.u_hat.close_to(&b.u_hat, 1e-8));
+            assert!(a.v_tilde.close_to(&b.v_tilde, 1e-8));
+        }
+    }
+
+    #[test]
+    fn gar_cost_strictly_below_alternatives() {
+        for (n, m) in [(128usize, 384usize), (512, 128), (128, 128)] {
+            for r in 1..n.min(m) {
+                let g = Gar::macs(n, m, r);
+                assert!(g < (m + n) * r, "naive");
+                assert!(g < m * n, "dense (n={n} m={m} r={r})");
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_square_has_empty_uhat() {
+        let mut rng = Rng::new(92);
+        let u = Mat::randn(5, 5, &mut rng);
+        let v = Mat::randn(8, 5, &mut rng);
+        let gar = Gar::from_factors(&u, &v, 5).unwrap();
+        assert_eq!(gar.u_hat.rows, 0);
+        let x = Mat::randn(3, 8, &mut rng);
+        let want = &x * &(&v * &u.t());
+        assert!(gar.forward(&x).close_to(&want, 1e-8));
+    }
+
+    #[test]
+    fn property_gar_function_preservation() {
+        prop::forall(
+            101,
+            25,
+            |rng| {
+                let n = prop::gen::dim(rng, 2, 12);
+                let m = prop::gen::dim(rng, 2, 12);
+                let k = n.min(m);
+                let r = 1 + rng.below(k.min(m));
+                (Mat::randn(m, k, rng), Mat::randn(n, k, rng), r)
+            },
+            |(u, v, r)| {
+                let gar = match Gar::from_factors(u, v, *r) {
+                    Err(_) => return Ok(()), // singular head block: acceptable draw
+                    Ok(g) => g,
+                };
+                let want = &v.slice_cols(0, *r) * &u.slice_cols(0, *r).t();
+                if !gar.effective_weight().close_to(&want, 1e-6) {
+                    return Err("weight not preserved".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

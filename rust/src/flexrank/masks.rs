@@ -1,0 +1,125 @@
+//! Rank profiles (the configuration vectors m_k of Sec. 3.2) and nested
+//! chains over them.
+
+/// Per-factorized-layer rank assignment — the paper's configuration vector
+/// `m_k = {r_{k,l}}`.
+pub type RankProfile = Vec<usize>;
+
+/// Inference-time parameter cost of one factorized layer at rank r under GAR
+/// (Sec. 3.5): `(m + n − r) · r` — strictly less than `(m + n) · r` naive and
+/// `m·n` dense for any `r < min(m, n)`.
+pub fn gar_layer_params(n: usize, m: usize, r: usize) -> usize {
+    (m + n - r) * r
+}
+
+/// Total inference parameter cost of a profile over layer dims
+/// `(n_in, m_out)` per layer.
+pub fn profile_cost(dims: &[(usize, usize)], profile: &RankProfile) -> usize {
+    assert_eq!(dims.len(), profile.len());
+    dims.iter()
+        .zip(profile)
+        .map(|(&(n, m), &r)| gar_layer_params(n, m, r))
+        .sum()
+}
+
+/// True iff `a ≤ b` componentwise (the paper's nestedness m_{k-1} ≤ m_k).
+pub fn is_nested(a: &RankProfile, b: &RankProfile) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+/// A componentwise-nested chain of profiles, ascending in cost.
+#[derive(Debug, Clone)]
+pub struct NestedChain {
+    pub profiles: Vec<RankProfile>,
+    /// Inference cost of each profile (same order).
+    pub costs: Vec<usize>,
+    /// Probe error of each profile (same order).
+    pub errors: Vec<f64>,
+}
+
+impl NestedChain {
+    /// Check the chain invariant.
+    pub fn validate(&self) -> bool {
+        self.profiles.windows(2).all(|w| is_nested(&w[0], &w[1]))
+            && self.costs.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    /// SELECTPROFILES (Alg. 1 line 13/19): for each budget fraction, the
+    /// largest-cost profile with cost ≤ budget·full_cost (or the smallest
+    /// profile if none fits).
+    pub fn select(&self, budgets: &[f64], full_cost: usize) -> Vec<RankProfile> {
+        budgets
+            .iter()
+            .map(|&beta| {
+                let cap = (beta * full_cost as f64).round() as usize;
+                let mut best: Option<usize> = None;
+                for (i, &c) in self.costs.iter().enumerate() {
+                    if c <= cap {
+                        best = Some(i);
+                    }
+                }
+                self.profiles[best.unwrap_or(0)].clone()
+            })
+            .collect()
+    }
+}
+
+/// Uniform profile: same rank everywhere.
+pub fn uniform_profile(n_layers: usize, r: usize) -> RankProfile {
+    vec![r; n_layers]
+}
+
+/// Profile → per-layer 0/1 prefix masks flattened (for the PJRT student
+/// `masks` input, shape (n_blocks, 4, rank_full) row-major).
+pub fn profile_to_masks(profile: &RankProfile, rank_full: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(profile.len() * rank_full);
+    for &r in profile {
+        for i in 0..rank_full {
+            out.push(if i < r { 1.0 } else { 0.0 });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gar_cost_below_naive_and_dense() {
+        let (n, m) = (128, 512);
+        for r in 1..128 {
+            let gar = gar_layer_params(n, m, r);
+            assert!(gar < (m + n) * r);
+            assert!(gar < m * n, "r={r}");
+        }
+    }
+
+    #[test]
+    fn nestedness_check() {
+        assert!(is_nested(&vec![1, 2, 3], &vec![1, 2, 3]));
+        assert!(is_nested(&vec![1, 2, 2], &vec![1, 2, 3]));
+        assert!(!is_nested(&vec![2, 2, 3], &vec![1, 9, 9]));
+        assert!(!is_nested(&vec![1, 2], &vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn select_profiles_respects_budgets() {
+        let chain = NestedChain {
+            profiles: vec![vec![1, 1], vec![2, 2], vec![4, 4]],
+            costs: vec![10, 20, 40],
+            errors: vec![3.0, 1.0, 0.0],
+        };
+        assert!(chain.validate());
+        let sel = chain.select(&[0.25, 0.55, 1.0], 40);
+        assert_eq!(sel[0], vec![1, 1]);
+        assert_eq!(sel[1], vec![2, 2]);
+        assert_eq!(sel[2], vec![4, 4]);
+    }
+
+    #[test]
+    fn masks_are_prefix() {
+        let m = profile_to_masks(&vec![2, 0, 3], 3);
+        assert_eq!(m, vec![1., 1., 0., 0., 0., 0., 1., 1., 1.]);
+    }
+}

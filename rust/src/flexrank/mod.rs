@@ -1,0 +1,29 @@
+//! The paper's contribution (Secs. 3–4), as a library:
+//!
+//! * [`decompose`] — DataSVD: online covariance accumulation + whitened SVD
+//!   (Sec. 3.1, App. C.1).
+//! * [`masks`] — rank profiles, budgets, nested chains (Sec. 2.1, 3.2).
+//! * [`sensitivity`] — per-layer rank-reduction probing (App. C.2 step 1).
+//! * [`dp`] — the MCKP dynamic program with nestedness (Alg. 2 + 3).
+//! * [`pareto`] — Pareto-front utilities over (cost, error) points.
+//! * [`gar`] — Gauge-Aligned Reparametrization (Sec. 3.5).
+//! * [`theory`] — Sec. 4 objects: optimality gap ℰ(U,V,r), water-filling
+//!   ASL minimizer (Lemma B.6), PTS/ASL/NSL trainers for linear models.
+//! * [`consolidate`] — nested knowledge distillation for pure-rust nets
+//!   (Alg. 1 lines 14–17 at controlled-experiment scale; the transformer
+//!   path lives in `training::`).
+
+pub mod consolidate;
+pub mod decompose;
+pub mod dp;
+pub mod gar;
+pub mod masks;
+pub mod pareto;
+pub mod sensitivity;
+pub mod theory;
+
+pub use decompose::{CovAccum, DataSvd};
+pub use dp::{dp_rank_selection, Candidate, DpResult};
+pub use gar::Gar;
+pub use masks::{profile_cost, NestedChain, RankProfile};
+pub use pareto::{pareto_front, ParetoPoint};

@@ -1,0 +1,100 @@
+//! Pareto-front utilities over (cost, error) points.
+
+/// A point in the (cost, error) objective space, tagged with its index into
+/// the originating collection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    pub cost: f64,
+    pub error: f64,
+    pub idx: usize,
+}
+
+/// Non-dominated subset (minimize both cost and error), sorted by cost
+/// ascending / error descending.  Ties in cost keep the lower error.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<ParetoPoint> {
+    let mut idxs: Vec<usize> = (0..points.len()).collect();
+    idxs.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+    });
+    let mut out: Vec<ParetoPoint> = Vec::new();
+    let mut best_err = f64::INFINITY;
+    for i in idxs {
+        let (c, e) = points[i];
+        if e < best_err {
+            best_err = e;
+            out.push(ParetoPoint { cost: c, error: e, idx: i });
+        }
+    }
+    out
+}
+
+/// Is point (cost, error) dominated by any point in `points`?
+pub fn is_dominated(cost: f64, error: f64, points: &[(f64, f64)]) -> bool {
+    points
+        .iter()
+        .any(|&(c, e)| c <= cost && e <= error && (c < cost || e < error))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn front_of_staircase() {
+        let pts = vec![(1.0, 3.0), (2.0, 2.0), (3.0, 1.0), (2.5, 2.5), (1.0, 4.0)];
+        let f = pareto_front(&pts);
+        let got: Vec<usize> = f.iter().map(|p| p.idx).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn front_drops_duplicate_costs() {
+        let pts = vec![(1.0, 3.0), (1.0, 2.0)];
+        let f = pareto_front(&pts);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].idx, 1);
+    }
+
+    #[test]
+    fn property_front_is_nondominated_and_complete() {
+        prop::forall(
+            61,
+            30,
+            |rng| {
+                let n = 1 + rng.below(40);
+                (0..n)
+                    .map(|_| (rng.f64() * 10.0, rng.f64() * 10.0))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let front = pareto_front(pts);
+                // every front point is non-dominated
+                for p in &front {
+                    if is_dominated(p.cost, p.error, pts) {
+                        return Err(format!("front point {p:?} dominated"));
+                    }
+                }
+                // every non-front point is dominated or duplicates a front point
+                let fr: Vec<(f64, f64)> = front.iter().map(|p| (p.cost, p.error)).collect();
+                for (i, &(c, e)) in pts.iter().enumerate() {
+                    let on_front = front.iter().any(|p| p.idx == i);
+                    if !on_front && !is_dominated(c, e, &fr) && !fr.contains(&(c, e)) {
+                        return Err(format!("point {i} ({c},{e}) should be on front"));
+                    }
+                }
+                // sorted ascending cost, descending error
+                for w in front.windows(2) {
+                    if w[0].cost >= w[1].cost || w[0].error <= w[1].error {
+                        return Err("front not strictly staircase".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Layer probing (App. C.2 step 1): measure the model's loss when a single
+//! layer is truncated to each candidate rank, all other layers at full
+//! capacity — producing the per-layer (saving, Δerror) candidate lists the
+//! DP consumes.
+
+use super::dp::Candidate;
+use super::masks::{gar_layer_params, RankProfile};
+
+/// Anything that can be evaluated at a rank profile (pure-rust nets, the
+/// PJRT student executable, test stubs).
+pub trait ProbeModel {
+    /// Full rank of each factorized layer.
+    fn full_ranks(&self) -> Vec<usize>;
+    /// (n_in, m_out) of each factorized layer.
+    fn layer_dims(&self) -> Vec<(usize, usize)>;
+    /// Loss at a profile (lower = better).
+    fn eval(&mut self, profile: &RankProfile) -> f64;
+}
+
+/// Probe result: candidate lists per layer + full-model reference loss.
+pub struct Sensitivity {
+    pub candidates: Vec<Vec<Candidate>>,
+    pub full_loss: f64,
+    pub full_cost: u64,
+}
+
+/// Evaluate the sensitivity matrix S (L × K): truncate layer `l` to each
+/// rank in `rank_grid(l)` while all other layers stay full.
+///
+/// `grid_per_layer` gives candidate ranks per layer (ascending); the no-drop
+/// option is added automatically.  Errors are clamped at ≥ 0 (a truncation
+/// can measure spuriously better than full on a small probe set; the DP
+/// needs monotone non-negative penalties).
+pub fn probe<M: ProbeModel>(
+    model: &mut M,
+    grid_per_layer: &[Vec<usize>],
+) -> Sensitivity {
+    let full_ranks = model.full_ranks();
+    let dims = model.layer_dims();
+    assert_eq!(grid_per_layer.len(), full_ranks.len());
+
+    let full_profile: RankProfile = full_ranks.clone();
+    let full_loss = model.eval(&full_profile);
+    let full_cost: u64 = dims
+        .iter()
+        .zip(&full_ranks)
+        .map(|(&(n, m), &r)| gar_layer_params(n, m, r) as u64)
+        .sum();
+
+    let mut candidates = Vec::with_capacity(full_ranks.len());
+    for (l, grid) in grid_per_layer.iter().enumerate() {
+        let (n, m) = dims[l];
+        let rf = full_ranks[l];
+        let full_params = gar_layer_params(n, m, rf) as u64;
+        let mut cands = vec![Candidate { saving: 0, err: 0.0, rank: rf }];
+        for &r in grid {
+            if r >= rf {
+                continue;
+            }
+            let mut profile = full_profile.clone();
+            profile[l] = r;
+            let loss = model.eval(&profile);
+            cands.push(Candidate {
+                saving: full_params - gar_layer_params(n, m, r) as u64,
+                err: (loss - full_loss).max(0.0),
+                rank: r,
+            });
+        }
+        // Ascending saving (descending rank).
+        cands.sort_by_key(|c| c.saving);
+        candidates.push(cands);
+    }
+    Sensitivity { candidates, full_loss, full_cost }
+}
+
+/// Uniform rank grid: K levels spread over [1, full_rank].
+pub fn uniform_grid(full_rank: usize, k: usize) -> Vec<usize> {
+    (1..=k)
+        .map(|i| ((i * full_rank) as f64 / k as f64).round().max(1.0) as usize)
+        .collect::<Vec<_>>()
+        .into_iter()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Additive stub: loss = Σ_l w_l · (full_l − r_l).
+    struct Stub {
+        fulls: Vec<usize>,
+        weights: Vec<f64>,
+        evals: usize,
+    }
+
+    impl ProbeModel for Stub {
+        fn full_ranks(&self) -> Vec<usize> {
+            self.fulls.clone()
+        }
+        fn layer_dims(&self) -> Vec<(usize, usize)> {
+            self.fulls.iter().map(|&r| (r * 2, r * 3)).collect()
+        }
+        fn eval(&mut self, profile: &RankProfile) -> f64 {
+            self.evals += 1;
+            profile
+                .iter()
+                .zip(&self.fulls)
+                .zip(&self.weights)
+                .map(|((&r, &f), &w)| w * (f - r) as f64)
+                .sum()
+        }
+    }
+
+    #[test]
+    fn probe_recovers_additive_weights() {
+        let mut stub = Stub { fulls: vec![4, 4], weights: vec![1.0, 3.0], evals: 0 };
+        let grids = vec![vec![1, 2, 3], vec![1, 2, 3]];
+        let s = probe(&mut stub, &grids);
+        assert_eq!(s.full_loss, 0.0);
+        // Layer 1 candidates must have 3x the error of layer 0 at same drop.
+        let e0: Vec<f64> = s.candidates[0].iter().map(|c| c.err).collect();
+        let e1: Vec<f64> = s.candidates[1].iter().map(|c| c.err).collect();
+        for (a, b) in e0.iter().zip(&e1) {
+            assert!((b - 3.0 * a).abs() < 1e-12);
+        }
+        // Evaluation count: 1 (full) + 3 + 3 = O(L*K), not K^L.
+        assert_eq!(stub.evals, 7);
+    }
+
+    #[test]
+    fn probe_clamps_negative_errors() {
+        struct Noisy;
+        impl ProbeModel for Noisy {
+            fn full_ranks(&self) -> Vec<usize> {
+                vec![3]
+            }
+            fn layer_dims(&self) -> Vec<(usize, usize)> {
+                vec![(4, 4)]
+            }
+            fn eval(&mut self, profile: &RankProfile) -> f64 {
+                if profile[0] == 2 {
+                    -1.0 // "better than full" noise
+                } else {
+                    0.0
+                }
+            }
+        }
+        let s = probe(&mut Noisy, &[vec![1, 2]]);
+        assert!(s.candidates[0].iter().all(|c| c.err >= 0.0));
+    }
+
+    #[test]
+    fn uniform_grid_spans_range() {
+        let g = uniform_grid(128, 8);
+        assert_eq!(g.len(), 8);
+        assert_eq!(*g.last().unwrap(), 128);
+        assert!(g[0] >= 1);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+}

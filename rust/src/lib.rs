@@ -1,0 +1,62 @@
+//! FlexRank — nested low-rank knowledge decomposition for adaptive model
+//! deployment (reproduction of Zaccone et al., ICML 2026).
+//!
+//! Crate layout mirrors DESIGN.md:
+//!
+//! * [`linalg`] — dense matrix substrate: matmul, QR, Jacobi SVD, symmetric
+//!   eigendecomposition, inverse; everything DataSVD/GAR/theory need.
+//! * [`nn`] — pure-rust trainable networks (manual backprop) for the paper's
+//!   controlled experiments (Figs. 2, 3, 8, 9).
+//! * [`flexrank`] — the paper's contribution: DataSVD decomposition, DP rank
+//!   selection (Alg. 2+3), GAR reparametrization, nested masks, sensitivity
+//!   probing, Pareto utilities, PTS/ASL/NSL theory, KD consolidation.
+//! * [`baselines`] — every comparison system in the evaluation: plain SVD,
+//!   ACIP-like, LLM-Pruner-like, LayerSkip-like, independent submodels.
+//! * [`runtime`] — PJRT executor over the AOT artifacts (`artifacts/*.hlo.txt`),
+//!   device-resident buffers on the hot path.
+//! * [`training`] — teacher pretraining + knowledge-consolidation drivers.
+//! * [`coordinator`] — the elastic serving layer: router, dynamic batcher,
+//!   submodel registry, SLO policy, metrics.
+//! * [`data`] — synthetic corpora / datasets / request traces (substitutes
+//!   for FineWebEdu, ImageNet, etc. per DESIGN.md §substitutions).
+//! * [`eval`] — evaluation harnesses and figure/table printers.
+//! * Support substrates (offline image has no tokio/clap/serde/criterion):
+//!   [`json`], [`cli`], [`bench_harness`], [`prop`], [`rng`], [`config`].
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod linalg;
+pub mod nn;
+pub mod prop;
+pub mod rng;
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod flexrank;
+pub mod runtime;
+pub mod training;
+
+/// Canonical repo root (compile-time; binaries run from the workspace).
+pub fn repo_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Default artifacts directory (`$FLEXRANK_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("FLEXRANK_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| repo_root().join("artifacts"))
+}
+
+/// Default results directory (`$FLEXRANK_RESULTS` overrides).
+pub fn results_dir() -> std::path::PathBuf {
+    let d: std::path::PathBuf = std::env::var("FLEXRANK_RESULTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| repo_root().join("results"));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}

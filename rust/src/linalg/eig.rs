@@ -1,0 +1,151 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//! Used for covariance whitening in DataSVD: `Σ^{±1/2} = Q Λ^{±1/2} Qᵀ`.
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: `a = q * diag(l) * qᵀ`,
+/// eigenvalues sorted descending.
+#[derive(Debug, Clone)]
+pub struct SymEig {
+    pub q: Mat,
+    pub l: Vec<f64>,
+}
+
+impl SymEig {
+    /// Rebuild `Q f(Λ) Qᵀ` for an elementwise spectral function `f`.
+    pub fn rebuild(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let n = self.l.len();
+        let mut scaled = self.q.clone(); // Q f(Λ)
+        for j in 0..n {
+            let fj = f(self.l[j]);
+            scaled.scale_col(j, fj);
+        }
+        &scaled * &self.q.t()
+    }
+}
+
+/// Cyclic Jacobi eigensolver for symmetric `a`.
+pub fn sym_eig(a: &Mat) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut q = Mat::eye(n);
+
+    let max_sweeps = 80;
+    for _ in 0..max_sweeps {
+        // Off-diagonal magnitude.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apq = m[(p, r)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(r, r)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // M <- Jᵀ M J on rows/cols p, r.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, r)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, r)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(r, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(r, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let qkp = q[(k, p)];
+                    let qkq = q[(k, r)];
+                    q[(k, p)] = c * qkp - s * qkq;
+                    q[(k, r)] = s * qkp + c * qkq;
+                }
+            }
+        }
+    }
+
+    // Sort descending by eigenvalue.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+    let mut ql = Mat::zeros(n, n);
+    let mut l = Vec::with_capacity(n);
+    for (dst, &src) in idx.iter().enumerate() {
+        l.push(m[(src, src)]);
+        for i in 0..n {
+            ql[(i, dst)] = q[(i, src)];
+        }
+    }
+    SymEig { q: ql, l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::Rng;
+
+    #[test]
+    fn eig_reconstructs() {
+        let mut rng = Rng::new(12);
+        let b = Mat::randn(8, 8, &mut rng);
+        let a = &(&b + &b.t()).scale(0.5) * &Mat::eye(8); // symmetric
+        let e = sym_eig(&a);
+        let recon = e.rebuild(|l| l);
+        assert!(recon.close_to(&a, 1e-9), "dist {}", recon.frob_dist(&a));
+        // Q orthonormal.
+        assert!((&e.q.t() * &e.q).close_to(&Mat::eye(8), 1e-9));
+        // Sorted descending.
+        assert!(e.l.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+    }
+
+    #[test]
+    fn psd_eigs_nonnegative() {
+        let mut rng = Rng::new(13);
+        let b = Mat::randn(10, 6, &mut rng);
+        let a = &b.t() * &b;
+        let e = sym_eig(&a);
+        assert!(e.l.iter().all(|&l| l > -1e-9));
+    }
+
+    #[test]
+    fn property_spectral_function() {
+        prop::forall(
+            31,
+            12,
+            |r| {
+                let n = prop::gen::dim(r, 2, 14);
+                let b = Mat::randn(n, n, r);
+                (&b + &b.t()).scale(0.5)
+            },
+            |a| {
+                let e = sym_eig(a);
+                // f = identity must reconstruct.
+                let recon = e.rebuild(|l| l);
+                if !recon.close_to(a, 1e-7) {
+                    return Err(format!("reconstruct dist {}", recon.frob_dist(a)));
+                }
+                // f = square must equal A*A.
+                let sq = e.rebuild(|l| l * l);
+                let want = a * a;
+                if !sq.close_to(&want, 1e-6) {
+                    return Err("spectral square mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

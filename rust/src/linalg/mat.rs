@@ -1,0 +1,321 @@
+//! Dense row-major f64 matrix with the operations the repo needs.
+
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+use crate::rng::Rng;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    /// Random matrix with prescribed singular values: `P diag(sv) Qᵀ` with
+    /// random orthonormal P, Q (used by theory experiments, Fig. 2).
+    pub fn with_singular_values(m: usize, n: usize, sv: &[f64], rng: &mut Rng) -> Self {
+        let k = sv.len().min(m.min(n));
+        let p = Mat::randn(m, m, rng).orthonormal_cols(k);
+        let q = Mat::randn(n, n, rng).orthonormal_cols(k);
+        let mut out = Mat::zeros(m, n);
+        for t in 0..k {
+            for i in 0..m {
+                for j in 0..n {
+                    out[(i, j)] += sv[t] * p[(i, t)] * q[(j, t)];
+                }
+            }
+        }
+        out
+    }
+
+    /// First `k` columns of the Q factor of a QR of self (orthonormal).
+    pub fn orthonormal_cols(&self, k: usize) -> Mat {
+        let (q, _r) = super::qr(self);
+        q.slice_cols(0, k)
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Columns [lo, lo+k).
+    pub fn slice_cols(&self, lo: usize, k: usize) -> Mat {
+        assert!(lo + k <= self.cols);
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[lo..lo + k]);
+        }
+        out
+    }
+
+    /// Rows [lo, lo+k).
+    pub fn slice_rows(&self, lo: usize, k: usize) -> Mat {
+        assert!(lo + k <= self.rows);
+        Mat {
+            rows: k,
+            cols: self.cols,
+            data: self.data[lo * self.cols..(lo + k) * self.cols].to_vec(),
+        }
+    }
+
+    /// Scale column j by s.
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        for i in 0..self.rows {
+            self[(i, j)] *= s;
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn frob_dist(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn close_to(&self, other: &Mat, tol: f64) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())))
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// `self * diag(d)` (column scaling).
+    pub fn mul_diag(&self, d: &[f64]) -> Mat {
+        assert_eq!(d.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..out.rows {
+            for j in 0..out.cols {
+                out[(i, j)] *= d[j];
+            }
+        }
+        out
+    }
+
+    /// Outer-product accumulation: `self += s * x yᵀ`.
+    pub fn add_outer(&mut self, s: f64, x: &[f64], y: &[f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        for i in 0..self.rows {
+            let xi = s * x[i];
+            let row = self.row_mut(i);
+            for (rj, yj) in row.iter_mut().zip(y) {
+                *rj += xi * yj;
+            }
+        }
+    }
+
+    /// Nuclear norm (sum of singular values).
+    pub fn nuclear_norm(&self) -> f64 {
+        super::svd(self).s.iter().sum()
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+
+    /// ikj-ordered matmul (cache-friendly; sizes here are ≤ ~1024).
+    fn mul(self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = rhs.row(k);
+                let orow = out.row_mut(i);
+                for (o, r) in orow.iter_mut().zip(rrow) {
+                    *o += a * r;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&rhs.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(4, 7, &mut rng);
+        let i = Mat::eye(7);
+        assert!((&a * &i).close_to(&a, 1e-12));
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = &a * &b;
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(3, 5, &mut rng);
+        assert!(a.t().t().close_to(&a, 0.0));
+    }
+
+    #[test]
+    fn outer_accumulation() {
+        let mut m = Mat::zeros(2, 3);
+        m.add_outer(2.0, &[1.0, 2.0], &[1.0, 0.0, 1.0]);
+        assert_eq!(m.data, vec![2.0, 0.0, 2.0, 4.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn with_singular_values_has_them() {
+        let mut rng = Rng::new(3);
+        let sv = vec![3.0, 2.0, 1.0];
+        let a = Mat::with_singular_values(6, 5, &sv, &mut rng);
+        let s = super::super::svd(&a).s;
+        for (got, want) in s.iter().zip(&sv) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+        for extra in &s[3..] {
+            assert!(extra.abs() < 1e-8);
+        }
+    }
+}

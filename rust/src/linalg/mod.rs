@@ -1,0 +1,50 @@
+//! Dense linear-algebra substrate (f64, row-major).
+//!
+//! Everything FlexRank's offline stages need, implemented from scratch:
+//! blocked matmul, Householder QR, one-sided Jacobi SVD, cyclic-Jacobi
+//! symmetric eigendecomposition, LU solve/inverse, and PSD square roots
+//! (for the whitening step of DataSVD, App. C.1).
+//!
+//! Sizes in this repo are ≤ ~1024, where Jacobi methods are accurate and
+//! fast enough; precision is f64 internally even though model weights are
+//! f32 (decomposition quality dominates the error budget).
+
+mod eig;
+mod mat;
+mod qr;
+mod solve;
+mod svd;
+
+pub use eig::{sym_eig, SymEig};
+pub use mat::Mat;
+pub use qr::qr;
+pub use solve::{inverse, lu_solve, lu_solve_many};
+pub use svd::{svd, Svd};
+
+/// PSD square root via symmetric eigendecomposition: `A^{1/2} = Q Λ^{1/2} Qᵀ`.
+/// Returns `(A^{1/2}, A^{-1/2})`.  Eigenvalues are clamped at `floor`
+/// (covariances from finite samples can have tiny negative eigenvalues).
+pub fn psd_sqrt(a: &Mat, floor: f64) -> (Mat, Mat) {
+    let e = sym_eig(a);
+    let half = e.rebuild(|l| l.max(floor).sqrt());
+    let inv_half = e.rebuild(|l| 1.0 / l.max(floor).sqrt());
+    (half, inv_half)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn psd_sqrt_roundtrip() {
+        let mut rng = Rng::new(5);
+        let b = Mat::randn(6, 6, &mut rng);
+        let a = &b.t() * &b; // PSD
+        let (h, hi) = psd_sqrt(&a, 1e-12);
+        let back = &h * &h;
+        assert!(a.close_to(&back, 1e-8), "sqrt^2 != a");
+        let ident = &h * &hi;
+        assert!(ident.close_to(&Mat::eye(6), 1e-6), "h * h^-1 != I");
+    }
+}

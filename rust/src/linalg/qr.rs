@@ -1,0 +1,124 @@
+//! Householder QR (thin): A (m×n, m ≥ n) = Q (m×n) R (n×n).
+//! Used for random orthonormal bases and as a building block in tests.
+
+use super::Mat;
+
+/// Thin QR via Householder reflections.  For m < n, factorizes the leading
+/// m columns' span (Q is m×min(m,n), R is min(m,n)×n).
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let m = a.rows;
+    let n = a.cols;
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Store Householder vectors.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Build the Householder vector for column j below the diagonal.
+        let mut v: Vec<f64> = (j..m).map(|i| r[(i, j)]).collect();
+        let alpha = -v[0].signum() * v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        v[0] -= alpha;
+        let vnorm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if vnorm > 1e-300 {
+            for x in v.iter_mut() {
+                *x /= vnorm;
+            }
+            // Apply H = I - 2 v vᵀ to R[j.., j..].
+            for col in j..n {
+                let dot: f64 = (j..m).map(|i| v[i - j] * r[(i, col)]).sum();
+                for i in j..m {
+                    r[(i, col)] -= 2.0 * v[i - j] * dot;
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{k-1} I_{m×k}.
+    let mut q = Mat::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        if v.iter().all(|x| *x == 0.0) {
+            continue;
+        }
+        for col in 0..k {
+            let dot: f64 = (j..m).map(|i| v[i - j] * q[(i, col)]).sum();
+            for i in j..m {
+                q[(i, col)] -= 2.0 * v[i - j] * dot;
+            }
+        }
+    }
+
+    // R upper-triangular k×n.
+    let mut rk = Mat::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            rk[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, rk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs_tall() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(8, 5, &mut rng);
+        let (q, r) = qr(&a);
+        assert!((&q * &r).close_to(&a, 1e-9));
+        // Orthonormal columns.
+        let qtq = &q.t() * &q;
+        assert!(qtq.close_to(&Mat::eye(5), 1e-9));
+    }
+
+    #[test]
+    fn qr_reconstructs_square() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(6, 6, &mut rng);
+        let (q, r) = qr(&a);
+        assert!((&q * &r).close_to(&a, 1e-9));
+    }
+
+    #[test]
+    fn qr_wide() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(3, 7, &mut rng);
+        let (q, r) = qr(&a);
+        assert_eq!(q.cols, 3);
+        assert_eq!(r.rows, 3);
+        assert!((&q * &r).close_to(&a, 1e-9));
+    }
+
+    #[test]
+    fn property_qr_orthonormal() {
+        crate::prop::forall(
+            11,
+            25,
+            |r| {
+                let m = crate::prop::gen::dim(r, 2, 20);
+                let n = crate::prop::gen::dim(r, 2, 20);
+                let a = Mat::randn(m, n, r);
+                (m, n, a)
+            },
+            |(_m, n, a)| {
+                let (q, r) = qr(a);
+                let k = q.cols;
+                if !(&q * &r).close_to(a, 1e-8) {
+                    return Err("QR != A".into());
+                }
+                let qtq = &q.t() * &q;
+                if !qtq.close_to(&Mat::eye(k.min(*n).min(k)), 1e-8) {
+                    return Err("Q not orthonormal".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! LU decomposition with partial pivoting: solve + inverse.
+//! Used by GAR (`G = U_{1:r,:}^{-1}`, Sec. 3.5).
+
+use anyhow::{bail, Result};
+
+use super::Mat;
+
+/// Solve `A x = b` for square A via LU with partial pivoting.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let x = lu_solve_many(a, &Mat::from_vec(b.len(), 1, b.to_vec()))?;
+    Ok(x.data)
+}
+
+/// Solve `A X = B` (B: n×k) via LU with partial pivoting.
+pub fn lu_solve_many(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("lu_solve: matrix not square ({}x{})", a.rows, a.cols);
+    }
+    let n = a.rows;
+    if b.rows != n {
+        bail!("lu_solve: rhs rows {} != {}", b.rows, n);
+    }
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+
+    for col in 0..n {
+        // Pivot.
+        let (pi, pmax) = (col..n)
+            .map(|i| (i, lu[(i, col)].abs()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if pmax < 1e-300 {
+            bail!("lu_solve: singular matrix (pivot {pmax:.3e} at col {col})");
+        }
+        if pi != col {
+            for j in 0..n {
+                let tmp = lu[(col, j)];
+                lu[(col, j)] = lu[(pi, j)];
+                lu[(pi, j)] = tmp;
+            }
+            piv.swap(col, pi);
+        }
+        // Eliminate.
+        for i in (col + 1)..n {
+            let f = lu[(i, col)] / lu[(col, col)];
+            lu[(i, col)] = f;
+            for j in (col + 1)..n {
+                let v = lu[(col, j)];
+                lu[(i, j)] -= f * v;
+            }
+        }
+    }
+
+    // Apply to each RHS column.
+    let k = b.cols;
+    let mut x = Mat::zeros(n, k);
+    for c in 0..k {
+        // Permute + forward substitution (L has unit diagonal).
+        let mut y: Vec<f64> = (0..n).map(|i| b[(piv[i], c)]).collect();
+        for i in 0..n {
+            for j in 0..i {
+                y[i] -= lu[(i, j)] * y[j];
+            }
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            for j in (i + 1)..n {
+                y[i] -= lu[(i, j)] * y[j];
+            }
+            y[i] /= lu[(i, i)];
+        }
+        for i in 0..n {
+            x[(i, c)] = y[i];
+        }
+    }
+    Ok(x)
+}
+
+/// Matrix inverse via LU solve against the identity.
+pub fn inverse(a: &Mat) -> Result<Mat> {
+    lu_solve_many(a, &Mat::eye(a.rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::Rng;
+
+    #[test]
+    fn solve_known_system() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = lu_solve(&a, &[3.0, 5.0]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(14);
+        let a = Mat::randn(7, 7, &mut rng);
+        let ai = inverse(&a).unwrap();
+        assert!((&a * &ai).close_to(&Mat::eye(7), 1e-8));
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(inverse(&a).is_err());
+    }
+
+    #[test]
+    fn property_solve_random() {
+        prop::forall(
+            41,
+            20,
+            |r| {
+                let n = prop::gen::dim(r, 1, 16);
+                let a = Mat::randn(n, n, r);
+                let x: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                (a, x)
+            },
+            |(a, x)| {
+                let b = a.matvec(x);
+                match lu_solve(a, &b) {
+                    Err(_) => Ok(()), // singular draw: acceptable
+                    Ok(got) => {
+                        for (g, w) in got.iter().zip(x) {
+                            if (g - w).abs() > 1e-6 * (1.0 + w.abs()) {
+                                return Err(format!("{g} vs {w}"));
+                            }
+                        }
+                        Ok(())
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! One-sided Jacobi SVD: A = U diag(s) Vᵀ with singular values sorted
+//! descending.  The workhorse of DataSVD (Sec. 3.1) and every SVD baseline.
+
+use super::Mat;
+
+/// SVD result: `a ≈ u * diag(s) * vt` with `u: m×k`, `s: k`, `vt: k×n`,
+/// `k = min(m, n)`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub vt: Mat,
+}
+
+impl Svd {
+    /// Rank-r truncation `A_r = Σ_{i<r} s_i u_i v_iᵀ` (Eckart–Young optimum).
+    pub fn truncate(&self, r: usize) -> Mat {
+        let r = r.min(self.s.len());
+        let ur = self.u.slice_cols(0, r);
+        let mut svt = self.vt.slice_rows(0, r);
+        for i in 0..r {
+            for j in 0..svt.cols {
+                svt[(i, j)] *= self.s[i];
+            }
+        }
+        &ur * &svt
+    }
+
+    /// Paper-form factors `U = P Σ^{1/2}` (m×k), `V = Q Σ^{1/2}` (n×k) so
+    /// that `A = U Vᵀ` with components ordered by importance.
+    pub fn balanced_factors(&self) -> (Mat, Mat) {
+        let k = self.s.len();
+        let mut u = self.u.clone();
+        let mut v = self.vt.t();
+        for i in 0..k {
+            let sh = self.s[i].max(0.0).sqrt();
+            u.scale_col(i, sh);
+            v.scale_col(i, sh);
+        }
+        (u, v)
+    }
+}
+
+/// One-sided Jacobi SVD.  Orthogonalizes columns of a working copy of A by
+/// Givens rotations until convergence; column norms become singular values.
+pub fn svd(a: &Mat) -> Svd {
+    // Work on the transposed problem when m < n so the iteration always sees
+    // columns of the tall matrix.
+    if a.rows < a.cols {
+        let s = svd(&a.t());
+        return Svd { u: s.vt.t(), s: s.s, vt: s.u.t() };
+    }
+
+    let m = a.rows;
+    let n = a.cols;
+    let mut u = a.clone(); // m×n, columns will become s_j * u_j
+    let mut v = Mat::eye(n);
+
+    let eps = 1e-12;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram entries.
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation that annihilates the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // Extract singular values = column norms; normalize U columns.
+    let mut svals: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm = (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut uu = Mat::zeros(m, n);
+    let mut vv = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (dst, &(norm, j)) in svals.iter().enumerate() {
+        s.push(norm);
+        let inv = if norm > 1e-300 { 1.0 / norm } else { 0.0 };
+        for i in 0..m {
+            uu[(i, dst)] = u[(i, j)] * inv;
+        }
+        for i in 0..n {
+            vv[(i, dst)] = v[(i, j)];
+        }
+    }
+    Svd { u: uu, s, vt: vv.t() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::rng::Rng;
+
+    fn check_svd(a: &Mat, tol: f64) -> Result<(), String> {
+        let d = svd(a);
+        let k = a.rows.min(a.cols);
+        // Reconstruction.
+        let recon = d.truncate(k);
+        if !recon.close_to(a, tol) {
+            return Err(format!("reconstruction err {}", recon.frob_dist(a)));
+        }
+        // Orthonormality.
+        let utu = &d.u.t() * &d.u;
+        if !utu.close_to(&Mat::eye(k), 1e-7) {
+            return Err("U not orthonormal".into());
+        }
+        let vvt = &d.vt * &d.vt.t();
+        if !vvt.close_to(&Mat::eye(k), 1e-7) {
+            return Err("V not orthonormal".into());
+        }
+        // Descending s.
+        if !d.s.windows(2).all(|w| w[0] >= w[1] - 1e-12) {
+            return Err("singular values not sorted".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn svd_tall_square_wide() {
+        let mut rng = Rng::new(8);
+        for (m, n) in [(10, 4), (6, 6), (4, 10)] {
+            let a = Mat::randn(m, n, &mut rng);
+            check_svd(&a, 1e-8).unwrap();
+        }
+    }
+
+    #[test]
+    fn truncation_is_eckart_young() {
+        // For known singular values, truncation error² = sum of dropped s².
+        let mut rng = Rng::new(9);
+        let sv = vec![4.0, 2.0, 1.0, 0.5];
+        let a = Mat::with_singular_values(8, 6, &sv, &mut rng);
+        let d = svd(&a);
+        for r in 0..4 {
+            let err = d.truncate(r).frob_dist(&a);
+            let want = sv[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+            assert!((err - want).abs() < 1e-7, "r={r}: {err} vs {want}");
+        }
+    }
+
+    #[test]
+    fn balanced_factors_multiply_back() {
+        let mut rng = Rng::new(10);
+        let a = Mat::randn(7, 5, &mut rng);
+        let d = svd(&a);
+        let (u, v) = d.balanced_factors();
+        assert!((&u * &v.t()).close_to(&a, 1e-8));
+    }
+
+    #[test]
+    fn property_svd_random_shapes() {
+        prop::forall(
+            21,
+            15,
+            |r| {
+                let m = prop::gen::dim(r, 1, 24);
+                let n = prop::gen::dim(r, 1, 24);
+                Mat::randn(m, n, r)
+            },
+            |a| check_svd(a, 1e-7),
+        );
+    }
+
+    #[test]
+    fn property_rank_deficient() {
+        prop::forall(
+            22,
+            10,
+            |r| {
+                let m = prop::gen::dim(r, 3, 16);
+                let n = prop::gen::dim(r, 3, 16);
+                let k = prop::gen::dim(r, 1, m.min(n));
+                let b = Mat::randn(m, k, r);
+                let c = Mat::randn(k, n, r);
+                (&b * &c, k)
+            },
+            |(a, k)| {
+                let d = svd(a);
+                // All singular values beyond rank k must be ~0.
+                for (i, s) in d.s.iter().enumerate().skip(*k) {
+                    if *s > 1e-6 * d.s[0].max(1.0) {
+                        return Err(format!("s[{i}]={s} nonzero beyond rank {k}"));
+                    }
+                }
+                // Full orthonormality does not hold for the zero-sv columns
+                // (they are left as zero vectors); reconstruction must still
+                // be exact and the rank-k truncation must match A.
+                let recon = d.truncate(*k);
+                if !recon.close_to(a, 1e-6) {
+                    return Err(format!("rank-k reconstruction err {}", recon.frob_dist(a)));
+                }
+                Ok(())
+            },
+        );
+    }
+}

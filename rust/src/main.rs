@@ -1,0 +1,64 @@
+//! `repro` — FlexRank leader binary.
+//!
+//! Subcommands (see README):
+//!   smoke                 — load + execute one artifact, sanity-check numbers
+//!   pipeline              — full FlexRank run: pretrain → DataSVD → DP → KD
+//!   serve                 — elastic serving demo over a synthetic trace
+//!   figure <figN>         — regenerate a paper figure's series into results/
+//!   table  <tabN>         — regenerate a paper table
+//!   profiles              — write artifacts/profiles.json from DP selection
+
+use anyhow::Result;
+use flexrank::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("smoke") => cmd_smoke(&args),
+        Some("pipeline") => flexrank::training::pipeline::run_cli(&args),
+        Some("serve") => flexrank::coordinator::run_cli(&args),
+        Some("figure") => flexrank::eval::figures::run_cli(&args),
+        Some("table") => flexrank::eval::figures::run_table_cli(&args),
+        Some("profiles") => flexrank::training::pipeline::write_profiles_cli(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand: {o}");
+            }
+            eprintln!(
+                "usage: repro <smoke|pipeline|serve|figure|table|profiles> [--flags]\n\
+                 figures: fig2 fig3 fig4 fig5 fig6 fig7a fig7b fig8 fig9 fig10; tables: tab1"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Minimal artifact round-trip: run teacher_fwd on zero tokens and check the
+/// output shape; proves the python→HLO→rust→PJRT chain end to end.
+fn cmd_smoke(_args: &Args) -> Result<()> {
+    use flexrank::runtime::{Engine, Tensor};
+
+    let engine = Engine::new(flexrank::artifacts_dir())?;
+    println!("platform: {}", engine.platform());
+    let cfg = engine.manifest.config.clone();
+    println!("model: {} (d={}, blocks={})", cfg.name, cfg.d_model, cfg.n_blocks);
+
+    let exe = engine.load("teacher_fwd")?;
+    let mut inputs = engine.manifest.load_teacher_init()?;
+    inputs.push(Tensor::i32(
+        vec![cfg.batch_eval, cfg.seq_len],
+        vec![0; cfg.batch_eval * cfg.seq_len],
+    ));
+    let out = exe.run(&inputs)?;
+    let logits = &out[0];
+    println!("teacher_fwd logits shape: {:?}", logits.shape());
+    anyhow::ensure!(
+        logits.shape() == [cfg.batch_eval, cfg.seq_len, cfg.vocab],
+        "unexpected logits shape"
+    );
+    let vals = logits.as_f32()?;
+    anyhow::ensure!(vals.iter().all(|x| x.is_finite()), "non-finite logits");
+    println!("smoke OK (|logits| mean = {:.4})",
+        vals.iter().map(|x| x.abs()).sum::<f32>() / vals.len() as f32);
+    Ok(())
+}

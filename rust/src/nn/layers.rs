@@ -1,0 +1,270 @@
+//! Layers: dense / factorized linear with rank masks, activations.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Elementwise nonlinearity between layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    None,
+}
+
+impl Activation {
+    pub fn apply(&self, x: &mut Mat) {
+        if let Activation::Relu = self {
+            for v in x.data.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Multiply grad by activation derivative evaluated at pre-activation z.
+    pub fn backprop(&self, z: &Mat, g: &mut Mat) {
+        if let Activation::Relu = self {
+            for (gv, zv) in g.data.iter_mut().zip(&z.data) {
+                if *zv <= 0.0 {
+                    *gv = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Factorized linear layer: `y = ((x V) ⊙ mask) Uᵀ + b`.
+///
+/// `u: (m, r)`, `v: (n, r)` exactly as in the paper (`W_paper = U Vᵀ`,
+/// row-convention `W = V Uᵀ`).  The mask is a 0/1 vector over components;
+/// nested submodels use prefix masks, theory experiments use arbitrary sets.
+#[derive(Debug, Clone)]
+pub struct FactLinear {
+    pub u: Mat,
+    pub v: Mat,
+    pub b: Vec<f64>,
+}
+
+impl FactLinear {
+    pub fn new_random(n: usize, m: usize, r: usize, std: f64, rng: &mut Rng) -> Self {
+        FactLinear {
+            u: Mat::randn(m, r, rng).scale(std),
+            v: Mat::randn(n, r, rng).scale(std),
+            b: vec![0.0; m],
+        }
+    }
+
+    /// Build from paper-form factors.
+    pub fn from_factors(u: Mat, v: Mat, b: Vec<f64>) -> Self {
+        assert_eq!(u.cols, v.cols);
+        assert_eq!(u.rows, b.len());
+        FactLinear { u, v, b }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.v.rows
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.u.rows
+    }
+
+    /// Effective dense weight at a mask: `W = V diag(mask) Uᵀ` (n×m).
+    pub fn effective_weight(&self, mask: &[f64]) -> Mat {
+        &self.v.mul_diag(mask) * &self.u.t()
+    }
+
+    /// Forward: returns (y, t) where t = x V (cached for backprop).
+    pub fn forward(&self, x: &Mat, mask: &[f64]) -> (Mat, Mat) {
+        let t = x * &self.v; // (B, r)
+        let tm = t.mul_diag(mask);
+        let mut y = &tm * &self.u.t(); // (B, m)
+        for i in 0..y.rows {
+            for (yj, bj) in y.row_mut(i).iter_mut().zip(&self.b) {
+                *yj += bj;
+            }
+        }
+        (y, t)
+    }
+
+    /// Backward: given upstream grad g (B×m), cached t = xV, input x.
+    /// Returns (dx, du, dv, db).
+    pub fn backward(&self, x: &Mat, t: &Mat, mask: &[f64], g: &Mat) -> (Mat, Mat, Mat, Vec<f64>) {
+        let gu = g * &self.u; // (B, r)
+        let dt = gu.mul_diag(mask); // (B, r)
+        let dx = &dt * &self.v.t(); // (B, n)
+        let du = &g.t() * &t.mul_diag(mask); // (m, r)
+        let dv = &x.t() * &dt; // (n, r)
+        let mut db = vec![0.0; self.b.len()];
+        for i in 0..g.rows {
+            for (dbj, gj) in db.iter_mut().zip(g.row(i)) {
+                *dbj += gj;
+            }
+        }
+        (dx, du, dv, db)
+    }
+}
+
+/// Dense or factorized layer body.
+#[derive(Debug, Clone)]
+pub enum LayerKind {
+    /// Dense: `y = x W + b`, `w: (n, m)`.
+    Dense { w: Mat, b: Vec<f64> },
+    Fact(FactLinear),
+}
+
+/// A layer: linear body + activation.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub kind: LayerKind,
+    pub act: Activation,
+}
+
+impl Layer {
+    pub fn dense(n: usize, m: usize, std: f64, act: Activation, rng: &mut Rng) -> Self {
+        Layer {
+            kind: LayerKind::Dense { w: Mat::randn(n, m, rng).scale(std), b: vec![0.0; m] },
+            act,
+        }
+    }
+
+    pub fn fact(n: usize, m: usize, r: usize, std: f64, act: Activation, rng: &mut Rng) -> Self {
+        Layer { kind: LayerKind::Fact(FactLinear::new_random(n, m, r, std, rng)), act }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match &self.kind {
+            LayerKind::Dense { w, .. } => w.rows,
+            LayerKind::Fact(f) => f.in_dim(),
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match &self.kind {
+            LayerKind::Dense { w, .. } => w.cols,
+            LayerKind::Fact(f) => f.out_dim(),
+        }
+    }
+
+    /// Full rank if factorized, else 0 (dense layers are never truncated).
+    pub fn rank(&self) -> usize {
+        match &self.kind {
+            LayerKind::Dense { .. } => 0,
+            LayerKind::Fact(f) => f.rank(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn fact_forward_matches_effective_weight() {
+        let mut rng = Rng::new(20);
+        let f = FactLinear::new_random(5, 4, 3, 0.5, &mut rng);
+        let mask = vec![1.0, 0.0, 1.0];
+        let x = Mat::randn(6, 5, &mut rng);
+        let (y, _t) = f.forward(&x, &mask);
+        let w = f.effective_weight(&mask);
+        let want = &x * &w;
+        assert!(y.close_to(&want, 1e-10));
+    }
+
+    #[test]
+    fn fact_backward_matches_finite_difference() {
+        let mut rng = Rng::new(21);
+        let f = FactLinear::new_random(4, 3, 3, 0.5, &mut rng);
+        let mask = vec![1.0, 1.0, 0.0];
+        let x = Mat::randn(2, 4, &mut rng);
+
+        // Loss = sum(y²)/2 so dL/dy = y.
+        let (y, t) = f.forward(&x, &mask);
+        let (dx, du, dv, db) = f.backward(&x, &t, &mask, &y);
+
+        let eps = 1e-6;
+        let loss = |f: &FactLinear, x: &Mat| -> f64 {
+            let (y, _) = f.forward(x, &mask);
+            0.5 * y.data.iter().map(|v| v * v).sum::<f64>()
+        };
+        // dU check (a few entries).
+        for &(i, j) in &[(0usize, 0usize), (2, 1), (1, 2)] {
+            let mut fp = f.clone();
+            fp.u[(i, j)] += eps;
+            let num = (loss(&fp, &x) - loss(&f, &x)) / eps;
+            assert!((num - du[(i, j)]).abs() < 1e-4, "dU[{i},{j}]: {num} vs {}", du[(i, j)]);
+        }
+        // dV check.
+        for &(i, j) in &[(0usize, 0usize), (3, 2)] {
+            let mut fp = f.clone();
+            fp.v[(i, j)] += eps;
+            let num = (loss(&fp, &x) - loss(&f, &x)) / eps;
+            assert!((num - dv[(i, j)]).abs() < 1e-4, "dV[{i},{j}]: {num} vs {}", dv[(i, j)]);
+        }
+        // db check.
+        {
+            let mut fp = f.clone();
+            fp.b[1] += eps;
+            let num = (loss(&fp, &x) - loss(&f, &x)) / eps;
+            assert!((num - db[1]).abs() < 1e-4);
+        }
+        // dx check.
+        {
+            let mut xp = x.clone();
+            xp[(0, 1)] += eps;
+            let num = (loss(&f, &xp) - loss(&f, &x)) / eps;
+            assert!((num - dx[(0, 1)]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn relu_backprop_zeroes_negative() {
+        let z = Mat::from_rows(&[&[-1.0, 2.0]]);
+        let mut g = Mat::from_rows(&[&[3.0, 4.0]]);
+        Activation::Relu.backprop(&z, &mut g);
+        assert_eq!(g.data, vec![0.0, 4.0]);
+    }
+
+    #[test]
+    fn property_masked_rank_prefix_monotone_capacity() {
+        // Effective weight of prefix-r mask equals sum of first r rank-1 terms.
+        prop::forall(
+            51,
+            15,
+            |rng| {
+                let n = prop::gen::dim(rng, 2, 8);
+                let m = prop::gen::dim(rng, 2, 8);
+                let r = n.min(m);
+                (FactLinear::new_random(n, m, r, 0.7, rng), r)
+            },
+            |(f, r)| {
+                let mut acc = Mat::zeros(f.in_dim(), f.out_dim());
+                for k in 1..=*r {
+                    let mut mask = vec![0.0; *r];
+                    for m in mask.iter_mut().take(k) {
+                        *m = 1.0;
+                    }
+                    let w = f.effective_weight(&mask);
+                    // Rank-1 increment: w_k - w_{k-1} = v_k u_kᵀ.
+                    let inc = &w - &acc;
+                    let mut want = Mat::zeros(f.in_dim(), f.out_dim());
+                    for i in 0..f.in_dim() {
+                        for j in 0..f.out_dim() {
+                            want[(i, j)] = f.v[(i, k - 1)] * f.u[(j, k - 1)];
+                        }
+                    }
+                    if !inc.close_to(&want, 1e-9) {
+                        return Err(format!("increment mismatch at rank {k}"));
+                    }
+                    acc = w;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! Losses with gradients: MSE (regression / matrix-recovery) and softmax
+//! cross-entropy (classification), plus accuracy.
+
+use crate::linalg::Mat;
+
+/// Mean-squared error over all entries; returns (loss, dL/dpred).
+pub fn mse_loss(pred: &Mat, target: &Mat) -> (f64, Mat) {
+    assert_eq!((pred.rows, pred.cols), (target.rows, target.cols));
+    let n = (pred.rows * pred.cols) as f64;
+    let mut grad = Mat::zeros(pred.rows, pred.cols);
+    let mut loss = 0.0;
+    for i in 0..pred.data.len() {
+        let d = pred.data[i] - target.data[i];
+        loss += d * d;
+        grad.data[i] = 2.0 * d / n;
+    }
+    (loss / n, grad)
+}
+
+/// Softmax cross-entropy with integer labels; returns (mean loss, dL/dlogits).
+pub fn softmax_xent(logits: &Mat, labels: &[usize]) -> (f64, Mat) {
+    assert_eq!(logits.rows, labels.len());
+    let b = logits.rows as f64;
+    let mut grad = Mat::zeros(logits.rows, logits.cols);
+    let mut loss = 0.0;
+    for i in 0..logits.rows {
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for v in row {
+            z += (v - mx).exp();
+        }
+        let logz = z.ln() + mx;
+        loss += logz - row[labels[i]];
+        for j in 0..logits.cols {
+            let p = (row[j] - logz).exp();
+            grad[(i, j)] = (p - if j == labels[i] { 1.0 } else { 0.0 }) / b;
+        }
+    }
+    (loss / b, grad)
+}
+
+/// Top-1 accuracy of logits vs labels.
+pub fn accuracy(logits: &Mat, labels: &[usize]) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..logits.rows {
+        let row = logits.row(i);
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if arg == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / logits.rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_at_target() {
+        let a = Mat::from_rows(&[&[1.0, 2.0]]);
+        let (l, g) = mse_loss(&a, &a);
+        assert_eq!(l, 0.0);
+        assert!(g.data.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn mse_gradient_finite_difference() {
+        let p = Mat::from_rows(&[&[1.0, -2.0], &[0.5, 3.0]]);
+        let t = Mat::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        let (l0, g) = mse_loss(&p, &t);
+        let eps = 1e-6;
+        let mut p2 = p.clone();
+        p2[(1, 0)] += eps;
+        let (l1, _) = mse_loss(&p2, &t);
+        assert!(((l1 - l0) / eps - g[(1, 0)]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn xent_uniform_logits() {
+        let logits = Mat::zeros(2, 4);
+        let (l, _) = softmax_xent(&logits, &[0, 3]);
+        assert!((l - (4f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xent_gradient_sums_to_zero_per_row() {
+        let logits = Mat::from_rows(&[&[2.0, -1.0, 0.5]]);
+        let (_, g) = softmax_xent(&logits, &[1]);
+        let s: f64 = g.row(0).iter().sum();
+        assert!(s.abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 0.0]]);
+        assert!((accuracy(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! Pure-rust trainable networks (manual backprop, f64).
+//!
+//! This substrate powers the paper's *controlled* experiments, which need
+//! thousands of tiny independent training runs (Fig. 2 PTS/ASL/NSL fronts,
+//! Fig. 3 Pareto recovery, Fig. 8 single-budget training, Fig. 9 exhaustive
+//! DP validation over 10^4 submodels) — far too many to route through PJRT
+//! executables with baked shapes.  The transformer-scale path runs through
+//! `runtime`/`training` instead.
+//!
+//! Layers: dense or factorized (`W = V diag(mask) Uᵀ`, paper convention) with
+//! per-layer rank masks; losses: MSE + softmax cross-entropy; optimizers:
+//! SGD(+momentum) and Adam.
+
+mod layers;
+mod loss;
+mod net;
+mod optim;
+
+pub use layers::{Activation, FactLinear, Layer, LayerKind};
+pub use loss::{accuracy, mse_loss, softmax_xent};
+pub use net::{Net, NetGrads};
+pub use optim::{Adam, Sgd};

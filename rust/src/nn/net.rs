@@ -1,0 +1,249 @@
+//! Sequential network with per-layer rank masks + manual backprop.
+
+use crate::linalg::Mat;
+
+use super::layers::{Layer, LayerKind};
+
+/// Sequential net.  Factorized layers take a mask from the rank profile;
+/// dense layers ignore it.
+#[derive(Debug, Clone)]
+pub struct Net {
+    pub layers: Vec<Layer>,
+}
+
+/// Per-layer gradients, same structure as the net.
+#[derive(Debug, Clone)]
+pub struct NetGrads {
+    /// (du_or_dw, dv_opt, db) per layer.
+    pub layers: Vec<(Mat, Option<Mat>, Vec<f64>)>,
+}
+
+/// Forward cache (inputs + pre-activations + factorized t = xV per layer).
+pub struct Cache {
+    xs: Vec<Mat>,
+    zs: Vec<Mat>,
+    ts: Vec<Option<Mat>>,
+}
+
+impl Net {
+    pub fn new(layers: Vec<Layer>) -> Self {
+        for w in layers.windows(2) {
+            assert_eq!(w[0].out_dim(), w[1].in_dim(), "layer dims must chain");
+        }
+        Net { layers }
+    }
+
+    /// Ranks of the factorized layers, in order (dense layers excluded).
+    pub fn fact_ranks(&self) -> Vec<usize> {
+        self.layers.iter().filter(|l| l.rank() > 0).map(|l| l.rank()).collect()
+    }
+
+    /// Total parameter count at a given prefix-rank profile (inference form:
+    /// (m + n) * r per factorized layer + biases; dense layers full size).
+    pub fn param_count(&self, profile: &[usize]) -> usize {
+        let mut pi = 0;
+        let mut total = 0;
+        for l in &self.layers {
+            match &l.kind {
+                LayerKind::Dense { w, b } => total += w.rows * w.cols + b.len(),
+                LayerKind::Fact(f) => {
+                    let r = profile[pi].min(f.rank());
+                    pi += 1;
+                    total += (f.in_dim() + f.out_dim()) * r + f.b.len();
+                }
+            }
+        }
+        total
+    }
+
+    /// Build per-layer masks from a prefix-rank profile.
+    fn masks(&self, profile: &[usize]) -> Vec<Option<Vec<f64>>> {
+        let mut pi = 0;
+        self.layers
+            .iter()
+            .map(|l| match &l.kind {
+                LayerKind::Dense { .. } => None,
+                LayerKind::Fact(f) => {
+                    let r = profile[pi].min(f.rank());
+                    pi += 1;
+                    let mut m = vec![0.0; f.rank()];
+                    for v in m.iter_mut().take(r) {
+                        *v = 1.0;
+                    }
+                    Some(m)
+                }
+            })
+            .collect()
+    }
+
+    /// Forward at a prefix-rank profile; returns output.
+    pub fn forward(&self, x: &Mat, profile: &[usize]) -> Mat {
+        self.forward_cached(x, profile).0
+    }
+
+    /// Forward keeping the cache needed for [`Net::backward`].
+    pub fn forward_cached(&self, x: &Mat, profile: &[usize]) -> (Mat, Cache) {
+        let masks = self.masks(profile);
+        let mut xs = vec![x.clone()];
+        let mut zs = Vec::with_capacity(self.layers.len());
+        let mut ts = Vec::with_capacity(self.layers.len());
+        let mut cur = x.clone();
+        for (l, mask) in self.layers.iter().zip(&masks) {
+            let (z, t) = match (&l.kind, mask) {
+                (LayerKind::Dense { w, b }, _) => {
+                    let mut z = &cur * w;
+                    for i in 0..z.rows {
+                        for (zj, bj) in z.row_mut(i).iter_mut().zip(b) {
+                            *zj += bj;
+                        }
+                    }
+                    (z, None)
+                }
+                (LayerKind::Fact(f), Some(m)) => {
+                    let (z, t) = f.forward(&cur, m);
+                    (z, Some(t))
+                }
+                _ => unreachable!(),
+            };
+            zs.push(z.clone());
+            ts.push(t);
+            let mut a = z;
+            l.act.apply(&mut a);
+            xs.push(a.clone());
+            cur = a;
+        }
+        (cur, Cache { xs, zs, ts })
+    }
+
+    /// Backward pass from dL/dout; returns parameter grads.
+    pub fn backward(&self, cache: &Cache, profile: &[usize], gout: &Mat) -> NetGrads {
+        let masks = self.masks(profile);
+        let mut g = gout.clone();
+        let mut grads: Vec<(Mat, Option<Mat>, Vec<f64>)> = Vec::with_capacity(self.layers.len());
+        for (idx, l) in self.layers.iter().enumerate().rev() {
+            // Through the activation.
+            l.act.backprop(&cache.zs[idx], &mut g);
+            let x = &cache.xs[idx];
+            match (&l.kind, &masks[idx]) {
+                (LayerKind::Dense { w, b }, _) => {
+                    let dw = &x.t() * &g;
+                    let mut db = vec![0.0; b.len()];
+                    for i in 0..g.rows {
+                        for (dbj, gj) in db.iter_mut().zip(g.row(i)) {
+                            *dbj += gj;
+                        }
+                    }
+                    let dx = &g * &w.t();
+                    grads.push((dw, None, db));
+                    g = dx;
+                }
+                (LayerKind::Fact(f), Some(m)) => {
+                    let t = cache.ts[idx].as_ref().unwrap();
+                    let (dx, du, dv, db) = f.backward(x, t, m, &g);
+                    grads.push((du, Some(dv), db));
+                    g = dx;
+                }
+                _ => unreachable!(),
+            }
+        }
+        grads.reverse();
+        NetGrads { layers: grads }
+    }
+
+    /// Flat list of mutable parameter matrices + biases (for optimizers).
+    pub fn params_mut(&mut self) -> Vec<(&mut Mat, Option<&mut Mat>, &mut Vec<f64>)> {
+        self.layers
+            .iter_mut()
+            .map(|l| match &mut l.kind {
+                LayerKind::Dense { w, b } => (w, None, b),
+                LayerKind::Fact(f) => (&mut f.u, Some(&mut f.v), &mut f.b),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{mse_loss, Activation, Layer};
+    use crate::rng::Rng;
+
+    fn tiny_net(rng: &mut Rng) -> Net {
+        Net::new(vec![
+            Layer::fact(3, 5, 3, 0.5, Activation::Relu, rng),
+            Layer::fact(5, 2, 2, 0.5, Activation::None, rng),
+        ])
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(30);
+        let net = tiny_net(&mut rng);
+        let x = Mat::randn(7, 3, &mut rng);
+        let y = net.forward(&x, &[3, 2]);
+        assert_eq!((y.rows, y.cols), (7, 2));
+    }
+
+    #[test]
+    fn truncation_changes_output() {
+        let mut rng = Rng::new(31);
+        let net = tiny_net(&mut rng);
+        let x = Mat::randn(4, 3, &mut rng);
+        let full = net.forward(&x, &[3, 2]);
+        let cut = net.forward(&x, &[1, 1]);
+        assert!(!full.close_to(&cut, 1e-6));
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(32);
+        let mut net = tiny_net(&mut rng);
+        let x = Mat::randn(4, 3, &mut rng);
+        let target = Mat::randn(4, 2, &mut rng);
+        let profile = [3, 2];
+
+        let (y, cache) = net.forward_cached(&x, &profile);
+        let (l0, gout) = mse_loss(&y, &target);
+        let grads = net.backward(&cache, &profile, &gout);
+
+        let eps = 1e-6;
+        // Check dU of layer 0, a few entries; and dV of layer 1.
+        let check = |net: &mut Net, li: usize, which: usize, i: usize, j: usize, want: f64| {
+            {
+                let mut ps = net.params_mut();
+                let (u, v, _) = &mut ps[li];
+                match which {
+                    0 => u[(i, j)] += eps,
+                    _ => v.as_mut().unwrap()[(i, j)] += eps,
+                }
+            }
+            let y2 = net.forward(&x, &profile);
+            let (l1, _) = mse_loss(&y2, &target);
+            {
+                let mut ps = net.params_mut();
+                let (u, v, _) = &mut ps[li];
+                match which {
+                    0 => u[(i, j)] -= eps,
+                    _ => v.as_mut().unwrap()[(i, j)] -= eps,
+                }
+            }
+            let num = (l1 - l0) / eps;
+            assert!((num - want).abs() < 1e-4, "num {num} vs analytic {want}");
+        };
+
+        let du0 = grads.layers[0].0.clone();
+        check(&mut net, 0, 0, 1, 1, du0[(1, 1)]);
+        let dv1 = grads.layers[1].1.clone().unwrap();
+        check(&mut net, 1, 1, 2, 0, dv1[(2, 0)]);
+    }
+
+    #[test]
+    fn param_count_monotone_in_profile() {
+        let mut rng = Rng::new(33);
+        let net = tiny_net(&mut rng);
+        let p1 = net.param_count(&[1, 1]);
+        let p2 = net.param_count(&[2, 2]);
+        let p3 = net.param_count(&[3, 2]);
+        assert!(p1 < p2 && p2 < p3);
+    }
+}

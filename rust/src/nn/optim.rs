@@ -1,0 +1,192 @@
+//! Optimizers over [`Net`] parameters: SGD(+momentum) and Adam.
+
+use crate::linalg::Mat;
+
+use super::net::{Net, NetGrads};
+
+/// SGD with optional momentum.
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    vel: Option<Vec<(Mat, Option<Mat>, Vec<f64>)>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64) -> Self {
+        Sgd { lr, momentum, vel: None }
+    }
+
+    pub fn step(&mut self, net: &mut Net, grads: &NetGrads) {
+        if self.momentum == 0.0 {
+            for ((u, v, b), (du, dv, db)) in net.params_mut().into_iter().zip(&grads.layers) {
+                axpy_mat(u, du, -self.lr);
+                if let (Some(v), Some(dv)) = (v, dv) {
+                    axpy_mat(v, dv, -self.lr);
+                }
+                axpy_vec(b, db, -self.lr);
+            }
+            return;
+        }
+        let vel = self.vel.get_or_insert_with(|| {
+            grads
+                .layers
+                .iter()
+                .map(|(du, dv, db)| {
+                    (
+                        Mat::zeros(du.rows, du.cols),
+                        dv.as_ref().map(|d| Mat::zeros(d.rows, d.cols)),
+                        vec![0.0; db.len()],
+                    )
+                })
+                .collect()
+        });
+        for (((u, v, b), (du, dv, db)), (vu, vv, vb)) in
+            net.params_mut().into_iter().zip(&grads.layers).zip(vel.iter_mut())
+        {
+            update_momentum(vu, du, self.momentum);
+            axpy_mat(u, vu, -self.lr);
+            if let (Some(v), Some(dv), Some(vv)) = (v, dv, vv.as_mut()) {
+                update_momentum(vv, dv, self.momentum);
+                axpy_mat(v, vv, -self.lr);
+            }
+            for (vbi, dbi) in vb.iter_mut().zip(db) {
+                *vbi = self.momentum * *vbi + dbi;
+            }
+            axpy_vec(b, vb, -self.lr);
+        }
+    }
+}
+
+fn update_momentum(vel: &mut Mat, grad: &Mat, mu: f64) {
+    for (v, g) in vel.data.iter_mut().zip(&grad.data) {
+        *v = mu * *v + g;
+    }
+}
+
+fn axpy_mat(x: &mut Mat, d: &Mat, a: f64) {
+    for (xi, di) in x.data.iter_mut().zip(&d.data) {
+        *xi += a * di;
+    }
+}
+
+fn axpy_vec(x: &mut [f64], d: &[f64], a: f64) {
+    for (xi, di) in x.iter_mut().zip(d) {
+        *xi += a * di;
+    }
+}
+
+/// Adam (no weight decay — the controlled experiments match the paper's
+/// plain matrix-recovery objectives).
+pub struct Adam {
+    pub lr: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+    t: u64,
+    m: Option<Vec<(Mat, Option<Mat>, Vec<f64>)>>,
+    v: Option<Vec<(Mat, Option<Mat>, Vec<f64>)>>,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Self {
+        Adam { lr, b1: 0.9, b2: 0.999, eps: 1e-8, t: 0, m: None, v: None }
+    }
+
+    pub fn step(&mut self, net: &mut Net, grads: &NetGrads) {
+        self.t += 1;
+        let zeros = || {
+            grads
+                .layers
+                .iter()
+                .map(|(du, dv, db)| {
+                    (
+                        Mat::zeros(du.rows, du.cols),
+                        dv.as_ref().map(|d| Mat::zeros(d.rows, d.cols)),
+                        vec![0.0; db.len()],
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        if self.m.is_none() {
+            self.m = Some(zeros());
+            self.v = Some(zeros());
+        }
+        let bc1 = 1.0 - self.b1.powi(self.t as i32);
+        let bc2 = 1.0 - self.b2.powi(self.t as i32);
+        let (b1, b2, eps, lr) = (self.b1, self.b2, self.eps, self.lr);
+        let upd_mat = |p: &mut Mat, g: &Mat, m: &mut Mat, v: &mut Mat| {
+            for i in 0..p.data.len() {
+                m.data[i] = b1 * m.data[i] + (1.0 - b1) * g.data[i];
+                v.data[i] = b2 * v.data[i] + (1.0 - b2) * g.data[i] * g.data[i];
+                let mh = m.data[i] / bc1;
+                let vh = v.data[i] / bc2;
+                p.data[i] -= lr * mh / (vh.sqrt() + eps);
+            }
+        };
+        let upd_vec = |p: &mut [f64], g: &[f64], m: &mut [f64], v: &mut [f64]| {
+            for i in 0..p.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+            }
+        };
+        let ms = self.m.as_mut().unwrap();
+        let vs = self.v.as_mut().unwrap();
+        for ((((u, v, b), (du, dv, db)), (mu, mv, mb)), (vu, vv, vb)) in net
+            .params_mut()
+            .into_iter()
+            .zip(&grads.layers)
+            .zip(ms.iter_mut())
+            .zip(vs.iter_mut())
+        {
+            upd_mat(u, du, mu, vu);
+            if let (Some(v), Some(dv), Some(mv), Some(vv)) = (v, dv, mv.as_mut(), vv.as_mut()) {
+                upd_mat(v, dv, mv, vv);
+            }
+            upd_vec(b, db, mb, vb);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::nn::{mse_loss, Activation, Layer, Net};
+    use crate::rng::Rng;
+
+    /// Both optimizers should fit a small regression problem.
+    fn fit(opt: &mut dyn FnMut(&mut Net, &NetGrads), steps: usize) -> f64 {
+        let mut rng = Rng::new(40);
+        let w_true = Mat::randn(4, 3, &mut rng);
+        let x = Mat::randn(64, 4, &mut rng);
+        let y = &x * &w_true;
+        let mut net = Net::new(vec![Layer::fact(4, 3, 3, 0.3, Activation::None, &mut rng)]);
+        let profile = [3];
+        let mut last = f64::INFINITY;
+        for _ in 0..steps {
+            let (pred, cache) = net.forward_cached(&x, &profile);
+            let (l, g) = mse_loss(&pred, &y);
+            let grads = net.backward(&cache, &profile, &g);
+            opt(&mut net, &grads);
+            last = l;
+        }
+        last
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+    fn sgd_converges() {
+        let mut sgd = Sgd::new(0.05, 0.9);
+        let l = fit(&mut |n, g| sgd.step(n, g), 400);
+        assert!(l < 1e-3, "sgd final loss {l}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+    fn adam_converges() {
+        let mut adam = Adam::new(0.02);
+        let l = fit(&mut |n, g| adam.step(n, g), 400);
+        assert!(l < 1e-3, "adam final loss {l}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Tiny property-testing substrate (no `proptest` offline).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` over `cases` generated
+//! inputs; on failure it reports the case index and seed so the exact input
+//! reproduces.  Generators are plain closures over [`crate::rng::Rng`].
+
+use crate::rng::Rng;
+
+/// Run a property over `cases` generated inputs; panics with a reproducible
+/// seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Rng;
+
+    /// Random dimension in [lo, hi].
+    pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Random f32 matrix entries (flat), N(0, scale).
+    pub fn mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
+        rng.normal_vec(rows * cols, scale)
+    }
+
+    /// Strictly-decreasing positive singular values with power-law decay.
+    pub fn powerlaw_sv(rng: &mut Rng, k: usize, decay: f64) -> Vec<f64> {
+        let base = 1.0 + rng.f64();
+        (0..k).map(|i| base / ((i + 1) as f64).powf(decay)).collect()
+    }
+}
+
+/// Assert two slices are elementwise close; returns Err for prop usage.
+pub fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(0, 50, |r| r.below(100), |x| if *x < 100 { Ok(()) } else { Err("oob".into()) });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(0, 50, |r| r.below(100), |x| if *x < 5 { Ok(()) } else { Err("big".into()) });
+    }
+
+    #[test]
+    fn close_detects_divergence() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3).is_ok());
+        assert!(close(&[1.0, 2.0], &[1.0, 2.1], 1e-3).is_err());
+        assert!(close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT engine: compile-once, execute-many over the AOT artifacts.
+//!
+//! All artifacts are lowered with `return_tuple=True`, and the PJRT client
+//! (xla_extension 0.5.1, `untuple_result` off) hands the whole result back as
+//! **one tuple buffer**; [`Executable::run`]/[`run_b`] decompose it into
+//! per-output tensors/literals.
+//!
+//! Hot-loop note (DESIGN.md §Perf): inputs that don't change across calls
+//! (teacher params during consolidation, submodel weights during serving)
+//! are uploaded once with [`Engine::to_device`] and passed as
+//! [`xla::PjRtBuffer`]s via [`Executable::run_b`]; only the step-varying
+//! tensors round-trip through host memory.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`); see
+//! DESIGN.md for why serialized protos are rejected by xla_extension 0.5.1.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns per-output host tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let lits = inputs.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        let parts = self.untuple(out)?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with device buffers; returns per-output host literals.
+    /// (PJRT returns one tuple buffer; elements only exist as host literals.)
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} buffers, expect {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let out = self.exe.execute_b(inputs)?;
+        self.untuple(out)
+    }
+
+    /// Execute with host literals; returns per-output host literals.
+    /// Literal reuse avoids Tensor<->Literal conversions in tight loops.
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} literals, expect {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let out = self.exe.execute::<&xla::Literal>(inputs)?;
+        self.untuple(out)
+    }
+
+    fn untuple(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let replica = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.spec.name))?;
+        ensure!(!replica.is_empty(), "{}: no output buffers", self.spec.name);
+        // return_tuple=True => exactly one tuple buffer.
+        let lit = replica[0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: got {} outputs, manifest says {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        Ok(parts)
+    }
+
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, expect {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            ensure!(
+                t.shape() == s.shape.as_slice() && t.dtype() == s.dtype,
+                "{}: input '{}' shape/dtype mismatch: got {:?} {:?}, expect {:?} {:?}",
+                self.spec.name,
+                s.name,
+                t.shape(),
+                t.dtype(),
+                s.shape,
+                s.dtype
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The engine owns the PJRT client and a lazily-populated executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Build from an artifacts directory (loads manifest, creates CPU client).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))
+            .with_context(|| format!("artifact {name}"))?;
+        let executable = Arc::new(Executable { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Copy a host tensor to a device buffer (persistent across calls).
+    ///
+    /// TFRT-CPU `BufferFromHostLiteral` copies **asynchronously** and the
+    /// crate's shim does not await the transfer — the returned handle keeps
+    /// the source literal alive until the buffer is dropped (freeing the
+    /// literal early is a use-after-free that crashes inside XLA).
+    pub fn to_device(&self, t: &Tensor) -> Result<DeviceTensor> {
+        self.literal_to_device(t.to_literal()?)
+    }
+
+    /// Move a host literal to a device buffer (keeps the literal alive).
+    pub fn literal_to_device(&self, lit: xla::Literal) -> Result<DeviceTensor> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("to_device: {e:?}"))?;
+        Ok(DeviceTensor { buf, _lit: lit })
+    }
+
+    /// Copy many host tensors to device buffers.
+    pub fn to_device_all(&self, ts: &[Tensor]) -> Result<Vec<DeviceTensor>> {
+        ts.iter().map(|t| self.to_device(t)).collect()
+    }
+}
+
+/// A device buffer pinned together with its source literal (see
+/// [`Engine::to_device`] for why the literal must outlive the buffer).
+pub struct DeviceTensor {
+    pub buf: xla::PjRtBuffer,
+    _lit: xla::Literal,
+}
+
+impl DeviceTensor {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}

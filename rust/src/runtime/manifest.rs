@@ -1,0 +1,217 @@
+//! Parse `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest pins the exact flattened input/output order of every HLO
+//! artifact (jax pytree flattening is sorted-dict-key order; the rust side
+//! never re-derives it — it just follows the manifest).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{self, Value};
+use crate::runtime::tensor::DType;
+
+/// Shape + dtype + pytree-path name of one artifact input/output leaf.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: DType::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One lowered HLO entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Rank profile (serving artifacts only).
+    pub profile: Option<Vec<usize>>,
+    /// Budget tier in (0, 1] (serving artifacts only).
+    pub tier: Option<f64>,
+}
+
+/// Model config subset the runtime needs (mirror of configs/*.json).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_blocks: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub batch_calib: usize,
+    pub batch_serve: usize,
+    pub serve_tiers: Vec<f64>,
+    pub bench_ranks: Vec<usize>,
+    pub bench_dim: usize,
+    pub bench_batch: usize,
+    pub lora_rank: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ModelConfig {
+            name: v.req("name")?.as_str()?.to_string(),
+            vocab: v.req("vocab")?.as_usize()?,
+            d_model: v.req("d_model")?.as_usize()?,
+            n_blocks: v.req("n_blocks")?.as_usize()?,
+            n_heads: v.req("n_heads")?.as_usize()?,
+            seq_len: v.req("seq_len")?.as_usize()?,
+            batch_train: v.req("batch_train")?.as_usize()?,
+            batch_eval: v.req("batch_eval")?.as_usize()?,
+            batch_calib: v.req("batch_calib")?.as_usize()?,
+            batch_serve: v.req("batch_serve")?.as_usize()?,
+            serve_tiers: v.req("serve_tiers")?.as_f64_vec()?,
+            bench_ranks: v.req("bench_ranks")?.as_usize_vec()?,
+            bench_dim: v.req("bench_dim")?.as_usize()?,
+            bench_batch: v.req("bench_batch")?.as_usize()?,
+            lora_rank: v.req("lora_rank")?.as_usize()?,
+        })
+    }
+
+    /// The four factorization surfaces per block: (kind, n_in, m_out).
+    pub fn layer_dims(&self) -> Vec<(&'static str, usize, usize)> {
+        let d = self.d_model;
+        vec![
+            ("qkv", d, 3 * d),
+            ("proj", d, d),
+            ("fc", d, 4 * d),
+            ("fcp", 4 * d, d),
+        ]
+    }
+
+    /// Full rank of every factorized layer (= d_model in this architecture).
+    pub fn rank_full(&self) -> usize {
+        self.d_model
+    }
+
+    /// Number of factorized layers (4 per block).
+    pub fn n_fact_layers(&self) -> usize {
+        4 * self.n_blocks
+    }
+}
+
+/// The whole manifest: config + artifact specs + teacher init blob spec.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub teacher_init: Vec<TensorSpec>,
+    pub teacher_init_file: String,
+    pub profiles: Vec<Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let v = json::parse_file(&path).with_context(|| format!("loading {}", path.display()))?;
+
+        let config = ModelConfig::from_json(v.req("config")?)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, av) in v.req("artifacts")?.as_obj()? {
+            let inputs = av
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = av
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let profile = av.get("profile").map(|p| p.as_usize_vec()).transpose()?;
+            let tier = av.get("tier").map(|t| t.as_f64()).transpose()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: av.req("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                    profile,
+                    tier,
+                },
+            );
+        }
+        let ti = v.req("teacher_init")?;
+        let teacher_init = ti
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let profiles = v
+            .req("profiles")?
+            .as_arr()?
+            .iter()
+            .map(|p| p.as_usize_vec())
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir,
+            config,
+            artifacts,
+            teacher_init,
+            teacher_init_file: ti.req("file")?.as_str()?.to_string(),
+            profiles,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Read `teacher_init.bin` and split into per-parameter tensors
+    /// (canonical flat order).
+    pub fn load_teacher_init(&self) -> Result<Vec<crate::runtime::Tensor>> {
+        let path = self.dir.join(&self.teacher_init_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(self.teacher_init.len());
+        let mut off = 0usize;
+        for spec in &self.teacher_init {
+            let n = spec.numel();
+            anyhow::ensure!(off + n <= floats.len(), "teacher_init.bin too short");
+            out.push(crate::runtime::Tensor::f32(
+                spec.shape.clone(),
+                floats[off..off + n].to_vec(),
+            ));
+            off += n;
+        }
+        anyhow::ensure!(off == floats.len(), "teacher_init.bin has trailing data");
+        Ok(out)
+    }
+}

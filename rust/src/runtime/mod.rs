@@ -1,0 +1,15 @@
+//! Runtime — load and execute the AOT artifacts via the PJRT CPU client.
+//!
+//! `make artifacts` (python, build-time) lowers every L2 entry point to HLO
+//! text; this module is the only place that touches XLA at runtime.  The hot
+//! path keeps parameters device-resident (`execute_b` over [`xla::PjRtBuffer`])
+//! so train steps / serving requests never round-trip weights through host
+//! memory (see DESIGN.md §Perf).
+
+mod engine;
+pub mod manifest;
+mod tensor;
+
+pub use engine::{DeviceTensor, Engine, Executable};
+pub use manifest::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,143 @@
+//! Host-side tensor: the interchange type between rust logic and PJRT.
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`Tensor`] (the repo only needs f32 + i32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar extraction (first element) for loss outputs.
+    pub fn item_f32(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+
+    /// Convert to an XLA literal of matching shape/dtype.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Build from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![7, -1, 0, 3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7, -1, 0, 3]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        let t = Tensor::scalar_f32(2.5);
+        assert_eq!(t.item_f32().unwrap(), 2.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+    }
+}

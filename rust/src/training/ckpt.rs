@@ -1,0 +1,105 @@
+//! Checkpoint I/O for [`ParamSet`]s: a JSON sidecar (names/shapes/dtypes) +
+//! a raw little-endian blob.  Keeps pipeline stages (pretrain → decompose →
+//! consolidate → figures) resumable and independently runnable.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::json::{self, Value};
+use crate::runtime::Tensor;
+
+use super::params::ParamSet;
+
+/// Write `<stem>.json` + `<stem>.bin`.
+pub fn save(ps: &ParamSet, stem: impl AsRef<Path>) -> Result<()> {
+    let stem = stem.as_ref();
+    let mut entries = Vec::new();
+    let mut blob: Vec<u8> = Vec::new();
+    for (name, t) in &ps.map {
+        let (dtype, bytes): (&str, Vec<u8>) = match t {
+            Tensor::F32 { data, .. } => {
+                ("float32", data.iter().flat_map(|x| x.to_le_bytes()).collect())
+            }
+            Tensor::I32 { data, .. } => {
+                ("int32", data.iter().flat_map(|x| x.to_le_bytes()).collect())
+            }
+        };
+        entries.push(json::obj(vec![
+            ("name", Value::Str(name.clone())),
+            ("shape", json::arr_usize(t.shape())),
+            ("dtype", Value::Str(dtype.into())),
+            ("offset", Value::Num(blob.len() as f64)),
+        ]));
+        blob.extend(bytes);
+    }
+    let meta = json::obj(vec![("params", Value::Arr(entries))]);
+    std::fs::write(stem.with_extension("json"), json::to_string(&meta))?;
+    std::fs::write(stem.with_extension("bin"), blob)?;
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save`].
+pub fn load(stem: impl AsRef<Path>) -> Result<ParamSet> {
+    let stem = stem.as_ref();
+    let meta = json::parse_file(stem.with_extension("json"))
+        .with_context(|| format!("loading {}", stem.display()))?;
+    let blob = std::fs::read(stem.with_extension("bin"))?;
+    let mut ps = ParamSet::default();
+    for e in meta.req("params")?.as_arr()? {
+        let name = e.req("name")?.as_str()?;
+        let shape = e.req("shape")?.as_usize_vec()?;
+        let off = e.req("offset")?.as_usize()?;
+        let n: usize = shape.iter().product();
+        ensure!(off + 4 * n <= blob.len(), "checkpoint blob too short for {name}");
+        let raw = &blob[off..off + 4 * n];
+        let t = match e.req("dtype")?.as_str()? {
+            "float32" => Tensor::f32(
+                shape,
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            "int32" => Tensor::i32(
+                shape,
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            other => bail!("bad dtype {other}"),
+        };
+        ps.map.insert(name.to_string(), t);
+    }
+    Ok(ps)
+}
+
+/// Does a checkpoint exist at this stem?
+pub fn exists(stem: impl AsRef<Path>) -> bool {
+    stem.as_ref().with_extension("json").exists() && stem.as_ref().with_extension("bin").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ps = ParamSet::default();
+        ps.insert("a.w", Tensor::f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 9.0, -7.25]));
+        ps.insert("b", Tensor::i32(vec![2], vec![5, -6]));
+        let dir = std::env::temp_dir().join("flexrank_ckpt_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let stem = dir.join("ck");
+        save(&ps, &stem).unwrap();
+        assert!(exists(&stem));
+        let back = load(&stem).unwrap();
+        assert_eq!(back.map.len(), 2);
+        assert_eq!(back.get("a.w").unwrap().as_f32().unwrap(), ps.get("a.w").unwrap().as_f32().unwrap());
+        assert_eq!(back.get("b").unwrap().as_i32().unwrap(), &[5, -6]);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load("/nonexistent/path/ck").is_err());
+    }
+}

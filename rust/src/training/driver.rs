@@ -1,0 +1,313 @@
+//! Training flows over the PJRT artifacts: teacher pretraining, calibration,
+//! knowledge consolidation, and evaluation.
+//!
+//! Hot-loop layout (DESIGN.md §Perf): the frozen teacher parameters are
+//! uploaded to device buffers **once**; per step only the step-varying
+//! tensors (student params/opt-state from the previous step's outputs,
+//! masks, tokens, step counter) cross the host boundary — outputs arrive as
+//! one tuple buffer (xla_extension 0.5.1 doesn't untuple), so a per-step
+//! host round-trip of the student state is unavoidable at this API level.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::TokenBatcher;
+use crate::flexrank::decompose::CovAccum;
+use crate::flexrank::masks::{profile_to_masks, RankProfile};
+use crate::flexrank::sensitivity::ProbeModel;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::runtime::{Engine, Tensor};
+
+use super::params::ParamSet;
+
+/// Result of a training run: final params + loss curve.
+pub struct TrainRun {
+    pub params: ParamSet,
+    pub losses: Vec<f32>,
+}
+
+/// Pretrain the dense teacher (builds the "pretrained base model").
+pub fn pretrain_teacher(
+    engine: &Engine,
+    init: ParamSet,
+    batcher: &mut TokenBatcher,
+    steps: usize,
+    log_every: usize,
+) -> Result<TrainRun> {
+    let exe = engine.load("teacher_train_step")?;
+    let spec = exe.spec.clone();
+    let cfg = engine.manifest.config.clone();
+
+    let mut p = init;
+    let mut m = p.zeros_like();
+    let mut v = p.zeros_like();
+    let mut losses = Vec::with_capacity(steps);
+    let n_params = p.map.len();
+
+    for step in 0..steps {
+        let tokens = Tensor::i32(
+            vec![cfg.batch_train, cfg.seq_len + 1],
+            batcher.next_batch(),
+        );
+        let mut inputs = p.ordered_for(&spec, 0)?;
+        inputs.extend(m.ordered_for(&spec, 1)?);
+        inputs.extend(v.ordered_for(&spec, 2)?);
+        inputs.push(Tensor::scalar_f32((step + 1) as f32));
+        inputs.push(tokens);
+        let out = exe.run(&inputs)?;
+        p = ParamSet::from_outputs(&spec, 0, &out, 0)?;
+        m = ParamSet::from_outputs(&spec, 1, &out, n_params)?;
+        v = ParamSet::from_outputs(&spec, 2, &out, 2 * n_params)?;
+        let loss = out[3 * n_params].item_f32()?;
+        losses.push(loss);
+        if log_every > 0 && step % log_every == 0 {
+            eprintln!("pretrain step {step}: loss {loss:.4}");
+        }
+    }
+    Ok(TrainRun { params: p, losses })
+}
+
+/// Accumulate per-layer activation covariances over `batches` calibration
+/// batches via the `teacher_acts` artifact (App. C.1 stage 1).
+pub fn calibrate(
+    engine: &Engine,
+    teacher: &ParamSet,
+    batcher: &mut TokenBatcher,
+    batches: usize,
+) -> Result<Vec<CovAccum>> {
+    let exe = engine.load("teacher_acts")?;
+    let spec = exe.spec.clone();
+    let cfg = engine.manifest.config.clone();
+    let n_layers = cfg.n_fact_layers();
+    ensure!(
+        spec.outputs.len() == 1 + n_layers,
+        "teacher_acts outputs {} != 1+{n_layers}",
+        spec.outputs.len()
+    );
+
+    // Covariance dims from the output specs (skip logits at index 0).
+    let mut covs: Vec<CovAccum> = spec.outputs[1..]
+        .iter()
+        .map(|s| CovAccum::new(s.shape[0]))
+        .collect();
+
+    let tparams = teacher.ordered_for(&spec, 0)?;
+    let rows_per_batch = cfg.batch_calib * cfg.seq_len;
+    for _ in 0..batches {
+        let tokens: Vec<i32> = batcher.next_batch()[..cfg.batch_calib * (cfg.seq_len + 1)]
+            .chunks(cfg.seq_len + 1)
+            .flat_map(|w| w[..cfg.seq_len].to_vec())
+            .collect();
+        let mut inputs = tparams.clone();
+        inputs.push(Tensor::i32(vec![cfg.batch_calib, cfg.seq_len], tokens));
+        let out = exe.run(&inputs)?;
+        for (li, cov) in covs.iter_mut().enumerate() {
+            let t = &out[1 + li];
+            let n = cov.sigma.rows;
+            cov.add_gram(&Mat::from_f32(n, n, t.as_f32()?), rows_per_batch);
+        }
+    }
+    Ok(covs)
+}
+
+/// Evaluate the masked student's CE loss at a profile, averaged over
+/// deterministic held-out batches.
+pub fn eval_student(
+    engine: &Engine,
+    student: &ParamSet,
+    profile: &RankProfile,
+    eval_batches: &[Vec<i32>],
+) -> Result<f64> {
+    let exe = engine.load("student_eval")?;
+    let spec = exe.spec.clone();
+    let cfg = engine.manifest.config.clone();
+    let masks = Tensor::f32(
+        vec![cfg.n_blocks, 4, cfg.rank_full()],
+        profile_to_masks(profile, cfg.rank_full()),
+    );
+    let sp = student.ordered_for(&spec, 0)?;
+    let mut total = 0.0f64;
+    for batch in eval_batches {
+        let mut inputs = sp.clone();
+        inputs.push(masks.clone());
+        inputs.push(Tensor::i32(vec![cfg.batch_eval, cfg.seq_len + 1], batch.clone()));
+        let out = exe.run(&inputs)?;
+        total += out[0].item_f32()? as f64;
+    }
+    Ok(total / eval_batches.len().max(1) as f64)
+}
+
+/// Next-byte top-1 accuracy of the masked student (the repo's stand-in for
+/// the paper's zero-shot commonsense accuracy — DESIGN.md §substitutions).
+pub fn student_accuracy(
+    engine: &Engine,
+    student: &ParamSet,
+    profile: &RankProfile,
+    eval_batches: &[Vec<i32>],
+) -> Result<f64> {
+    let exe = engine.load("student_logits")?;
+    let spec = exe.spec.clone();
+    let cfg = engine.manifest.config.clone();
+    let masks = Tensor::f32(
+        vec![cfg.n_blocks, 4, cfg.rank_full()],
+        profile_to_masks(profile, cfg.rank_full()),
+    );
+    let sp = student.ordered_for(&spec, 0)?;
+    let (b, t, v) = (cfg.batch_eval, cfg.seq_len, cfg.vocab);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for batch in eval_batches {
+        // eval batches are (b, t+1): inputs are [.., :t], targets [.., 1:].
+        let mut x = Vec::with_capacity(b * t);
+        for row in batch.chunks(t + 1) {
+            x.extend_from_slice(&row[..t]);
+        }
+        let mut inputs = sp.clone();
+        inputs.push(masks.clone());
+        inputs.push(Tensor::i32(vec![b, t], x));
+        let out = exe.run(&inputs)?;
+        let lf = out[0].as_f32()?;
+        for (ri, row) in batch.chunks(t + 1).enumerate() {
+            for pos in 0..t {
+                let logits = &lf[(ri * t + pos) * v..(ri * t + pos + 1) * v];
+                let arg = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                total += 1;
+                if arg as i32 == row[pos + 1] {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// ProbeModel over the PJRT student — powers DP sensitivity probing.
+pub struct StudentProbe<'a> {
+    pub engine: &'a Engine,
+    pub student: &'a ParamSet,
+    pub eval_batches: Vec<Vec<i32>>,
+    pub evals: usize,
+}
+
+impl ProbeModel for StudentProbe<'_> {
+    fn full_ranks(&self) -> Vec<usize> {
+        let cfg = &self.engine.manifest.config;
+        vec![cfg.rank_full(); cfg.n_fact_layers()]
+    }
+
+    fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let cfg = &self.engine.manifest.config;
+        super::params::fact_layers(cfg)
+            .into_iter()
+            .map(|(_, _, n, m)| (n, m))
+            .collect()
+    }
+
+    fn eval(&mut self, profile: &RankProfile) -> f64 {
+        self.evals += 1;
+        eval_student(self.engine, self.student, profile, &self.eval_batches)
+            .expect("student probe eval failed")
+    }
+}
+
+/// Knowledge consolidation (Alg. 1 lines 14–17): sample a profile ∝ alphas
+/// each step, run the fused KD train step.  Teacher params are device-
+/// resident for the whole run.
+#[allow(clippy::too_many_arguments)]
+pub fn consolidate(
+    engine: &Engine,
+    student: ParamSet,
+    teacher: &ParamSet,
+    profiles: &[RankProfile],
+    alphas: &[f64],
+    batcher: &mut TokenBatcher,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+) -> Result<TrainRun> {
+    ensure!(profiles.len() == alphas.len() && !profiles.is_empty(), "bad profiles/alphas");
+    let exe = engine.load("kd_train_step")?;
+    let spec = exe.spec.clone();
+    let cfg = engine.manifest.config.clone();
+    let mut rng = Rng::new(seed);
+
+    // Teacher stays on device for the whole run.
+    let teacher_host = teacher.ordered_for(&spec, 4)?;
+    let teacher_bufs = engine.to_device_all(&teacher_host)?;
+
+    // Pre-build mask tensors per profile.
+    let mask_tensors: Vec<Tensor> = profiles
+        .iter()
+        .map(|p| {
+            Tensor::f32(
+                vec![cfg.n_blocks, 4, cfg.rank_full()],
+                profile_to_masks(p, cfg.rank_full()),
+            )
+        })
+        .collect();
+
+    // §Perf: the train step echoes (params, m, v) in its input order, so the
+    // student state cycles as raw literals — no per-step Tensor conversions
+    // or name matching on the hot path (before/after in EXPERIMENTS.md).
+    let n_params = student.map.len();
+    let mut state_lits: Vec<xla::Literal> = Vec::with_capacity(3 * n_params);
+    for t in student.ordered_for(&spec, 0)? {
+        state_lits.push(t.to_literal()?);
+    }
+    let zeros = student.zeros_like();
+    for arg in [1usize, 2] {
+        for t in zeros.ordered_for(&spec, arg)? {
+            state_lits.push(t.to_literal()?);
+        }
+    }
+
+    let mut losses = Vec::with_capacity(steps);
+    let t_loop = std::time::Instant::now();
+    for step in 0..steps {
+        let pi = rng.weighted(alphas);
+        let tokens = Tensor::i32(vec![cfg.batch_train, cfg.seq_len + 1], batcher.next_batch());
+
+        // Upload step-varying inputs; reuse persistent teacher buffers.
+        let mut bufs = Vec::with_capacity(spec.inputs.len());
+        for lit in state_lits.drain(..) {
+            bufs.push(engine.literal_to_device(lit)?);
+        }
+        bufs.push(engine.to_device(&Tensor::scalar_f32((step + 1) as f32))?);
+        let masks_buf = engine.to_device(&mask_tensors[pi])?;
+        let tokens_buf = engine.to_device(&tokens)?;
+        let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|d| d.buffer()).collect();
+        refs.extend(teacher_bufs.iter().map(|d| d.buffer()));
+        refs.push(masks_buf.buffer());
+        refs.push(tokens_buf.buffer());
+
+        let mut out_lits = exe.run_b(&refs).context("kd step")?;
+        let loss_lit = out_lits.pop().expect("loss output");
+        let loss = Tensor::from_literal(&loss_lit)?.item_f32()?;
+        state_lits = out_lits; // (params', m', v') cycle back verbatim
+        losses.push(loss);
+        if log_every > 0 && step % log_every == 0 {
+            eprintln!("consolidate step {step}: profile {pi} kd-loss {loss:.5}");
+        }
+    }
+    if steps > 0 {
+        eprintln!(
+            "[consolidate] {:.2} steps/s ({} steps)",
+            steps as f64 / t_loop.elapsed().as_secs_f64(),
+            steps
+        );
+    }
+
+    // Materialize the final parameter set from the cycled literals.
+    let out: Vec<Tensor> = state_lits
+        .iter()
+        .take(n_params)
+        .map(Tensor::from_literal)
+        .collect::<Result<Vec<_>>>()?;
+    let p = ParamSet::from_outputs(&spec, 0, &out, 0)?;
+    Ok(TrainRun { params: p, losses })
+}

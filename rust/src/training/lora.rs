@@ -1,0 +1,202 @@
+//! LoRA post-adaptation on frozen GAR submodels (Tab. 1).
+//!
+//! For each serving tier: freeze the GAR-form submodel extracted from the
+//! consolidated student, train LoRA adapters (A: N(0, .02), B: 0) on a
+//! domain corpus via the `lora_train_step_t{i}` artifact, then report the
+//! answer-span accuracy via `lora_logits_t{i}`.
+
+use anyhow::{ensure, Result};
+
+use crate::data::domains::{self, Domain, DomainData};
+use crate::data::TokenBatcher;
+use crate::rng::Rng;
+use crate::runtime::{Engine, Tensor};
+
+use super::params::{gar_params_for, ParamSet};
+
+/// Initialize LoRA tensors per the artifact's arg-1 spec.
+fn init_lora(spec: &crate::runtime::ArtifactSpec, lora_rank: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    spec.inputs
+        .iter()
+        .filter(|i| i.name.starts_with("1."))
+        .map(|i| {
+            if i.shape[0] == lora_rank {
+                Tensor::zeros(&i.shape) // B side
+            } else {
+                Tensor::f32(i.shape.clone(), rng.normal_vec(i.numel(), 0.02))
+            }
+        })
+        .collect()
+}
+
+/// Train LoRA adapters for tier `tier_idx` on `domain`; returns
+/// (final loss, answer accuracy).
+pub fn adapt_tier(
+    engine: &Engine,
+    student: &ParamSet,
+    tier_idx: usize,
+    domain: Domain,
+    steps: usize,
+    seed: u64,
+) -> Result<(f32, f64)> {
+    let data = domains::generate(domain, 800, seed);
+    let (gar, lora, loss) = adapt_on_text(engine, student, tier_idx, &data.text, steps, seed)?;
+    let acc = eval_answer_accuracy(engine, tier_idx, &gar, &lora, &data)?;
+    Ok((loss, acc))
+}
+
+/// Train LoRA adapters for a tier on arbitrary text (also used by the
+/// ACIP-like baseline's "LoRA repair" stage on the main corpus); returns
+/// (gar params, adapted lora params, final CE loss).
+pub fn adapt_on_text(
+    engine: &Engine,
+    student: &ParamSet,
+    tier_idx: usize,
+    text: &[u8],
+    steps: usize,
+    seed: u64,
+) -> Result<(Vec<Tensor>, Vec<Tensor>, f32)> {
+    let cfg = engine.manifest.config.clone();
+    let step_exe = engine.load(&format!("lora_train_step_t{tier_idx}"))?;
+    let spec = step_exe.spec.clone();
+
+    // Frozen GAR params for this tier (device-resident for the whole run).
+    let serve_spec = engine.manifest.artifact(&format!("serve_gar_t{tier_idx}"))?.clone();
+    let gar = gar_params_for(&cfg, student, &serve_spec)?;
+    let gar_bufs = engine.to_device_all(&gar)?;
+
+    ensure!(text.len() > cfg.seq_len + 1, "lora corpus too small");
+    let mut batcher =
+        TokenBatcher::new(text, cfg.batch_train, cfg.seq_len + 1, cfg.vocab, seed ^ 0x9);
+
+    let mut lora = init_lora(&spec, cfg.lora_rank, seed ^ 0x1);
+    let mut m: Vec<Tensor> = lora.iter().map(|t| Tensor::zeros(t.shape())).collect();
+    let mut v = m.clone();
+    let n_lora = lora.len();
+    let mut last_loss = f32::NAN;
+
+    for step in 0..steps {
+        let tokens = Tensor::i32(vec![cfg.batch_train, cfg.seq_len + 1], batcher.next_batch());
+        let mut bufs = Vec::new();
+        for t in lora.iter().chain(m.iter()).chain(v.iter()) {
+            bufs.push(engine.to_device(t)?);
+        }
+        bufs.push(engine.to_device(&Tensor::scalar_f32((step + 1) as f32))?);
+        bufs.push(engine.to_device(&tokens)?);
+        let mut refs: Vec<&xla::PjRtBuffer> = gar_bufs.iter().map(|d| d.buffer()).collect();
+        refs.extend(bufs.iter().map(|d| d.buffer()));
+        let out_l = step_exe.run_b(&refs)?;
+        let out: Vec<Tensor> = out_l.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
+        lora = out[..n_lora].to_vec();
+        m = out[n_lora..2 * n_lora].to_vec();
+        v = out[2 * n_lora..3 * n_lora].to_vec();
+        last_loss = out[3 * n_lora].item_f32()?;
+    }
+    Ok((gar, lora, last_loss))
+}
+
+/// CE loss of an adapted (gar, lora) tier on deterministic windows of `text`.
+pub fn ce_on_text(
+    engine: &Engine,
+    tier_idx: usize,
+    gar: &[Tensor],
+    lora: &[Tensor],
+    text: &[u8],
+    n_batches: usize,
+) -> Result<f64> {
+    let cfg = engine.manifest.config.clone();
+    let exe = engine.load(&format!("lora_logits_t{tier_idx}"))?;
+    let (b, t, v) = (cfg.batch_eval, cfg.seq_len, cfg.vocab);
+    let batcher = TokenBatcher::new(text, b, t + 1, cfg.vocab, 0);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for batch in batcher.eval_batches(n_batches) {
+        let mut x = Vec::with_capacity(b * t);
+        for row in batch.chunks(t + 1) {
+            x.extend_from_slice(&row[..t]);
+        }
+        let mut inputs: Vec<Tensor> = gar.to_vec();
+        inputs.extend(lora.iter().cloned());
+        inputs.push(Tensor::i32(vec![b, t], x));
+        let out = exe.run(&inputs)?;
+        let lf = out[0].as_f32()?;
+        for (ri, row) in batch.chunks(t + 1).enumerate() {
+            for pos in 0..t {
+                let logits = &lf[(ri * t + pos) * v..(ri * t + pos + 1) * v];
+                let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse = logits.iter().map(|x| (x - mx).exp()).sum::<f32>().ln() + mx;
+                total += (lse - logits[row[pos + 1] as usize]) as f64;
+                count += 1;
+            }
+        }
+    }
+    Ok(total / count.max(1) as f64)
+}
+
+/// Greedy answer-span accuracy via `lora_logits_t{i}`.
+pub fn eval_answer_accuracy(
+    engine: &Engine,
+    tier_idx: usize,
+    gar: &[Tensor],
+    lora: &[Tensor],
+    data: &DomainData,
+) -> Result<f64> {
+    let cfg = engine.manifest.config.clone();
+    let exe = engine.load(&format!("lora_logits_t{tier_idx}"))?;
+    let b = cfg.batch_eval;
+    let t_len = cfg.seq_len;
+
+    // Collect (context, want) pairs over answer spans (cap for runtime).
+    let mut cases: Vec<(Vec<i32>, u8, usize)> = Vec::new(); // (window, want, pos_in_window)
+    for &(start, len) in data.answer_spans.iter().take(120) {
+        for k in 0..len {
+            let pos = start + k;
+            if pos == 0 || pos >= data.text.len() {
+                continue;
+            }
+            let lo = pos.saturating_sub(t_len);
+            let ctx = &data.text[lo..pos];
+            let mut window = vec![b' ' as i32; t_len];
+            let off = t_len - ctx.len();
+            for (i, &byte) in ctx.iter().enumerate() {
+                window[off + i] = (byte as usize % cfg.vocab) as i32;
+            }
+            cases.push((window, data.text[pos], t_len - 1));
+        }
+    }
+    ensure!(!cases.is_empty(), "no answer cases");
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in cases.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * t_len);
+        for (w, _, _) in chunk {
+            tokens.extend_from_slice(w);
+        }
+        // pad the batch
+        for _ in chunk.len()..b {
+            tokens.extend(std::iter::repeat(b' ' as i32).take(t_len));
+        }
+        let mut inputs: Vec<Tensor> = gar.to_vec();
+        inputs.extend(lora.iter().cloned());
+        inputs.push(Tensor::i32(vec![b, t_len], tokens));
+        let out = exe.run(&inputs)?;
+        let logits = &out[0]; // (b, t, vocab)
+        let lf = logits.as_f32()?;
+        for (ri, (_, want, pos)) in chunk.iter().enumerate() {
+            let row = &lf[(ri * t_len + pos) * cfg.vocab..(ri * t_len + pos + 1) * cfg.vocab];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            total += 1;
+            if arg == (*want as usize % cfg.vocab) {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}

@@ -1,0 +1,12 @@
+//! Training drivers over the PJRT artifacts: teacher pretraining,
+//! calibration, knowledge consolidation, checkpointing, LoRA adaptation,
+//! and the end-to-end pipeline orchestration.
+
+pub mod ckpt;
+pub mod driver;
+pub mod lora;
+pub mod params;
+pub mod pipeline;
+
+/// Corpus size used by the pipeline + figures (bytes).
+pub const CORPUS_BYTES: usize = 400_000;

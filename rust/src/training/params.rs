@@ -1,0 +1,294 @@
+//! Parameter-tree plumbing between rust and the AOT artifacts.
+//!
+//! jax flattens dict pytrees in sorted-key order; the manifest records the
+//! exact flattened names per artifact (e.g. `0.blocks.2.qkv_u` for the first
+//! argument's tree).  This module holds named parameter sets and assembles
+//! ordered input vectors for any artifact by name matching — rust never
+//! re-derives jax's ordering.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::flexrank::decompose::{CovAccum, DataSvd};
+use crate::flexrank::gar::gar_solve;
+use crate::linalg::Mat;
+use crate::runtime::{ArtifactSpec, ModelConfig, Tensor};
+
+/// A named set of tensors (one model's parameters).
+#[derive(Debug, Clone, Default)]
+pub struct ParamSet {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    /// Build from parallel name/tensor lists.
+    pub fn from_named(names: &[String], tensors: Vec<Tensor>) -> Self {
+        assert_eq!(names.len(), tensors.len());
+        ParamSet { map: names.iter().cloned().zip(tensors).collect() }
+    }
+
+    /// Build from the manifest's teacher_init spec + blob tensors.
+    pub fn from_specs(specs: &[crate::runtime::TensorSpec], tensors: Vec<Tensor>) -> Self {
+        let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        Self::from_named(&names, tensors)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("param '{name}' missing"))
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Matrix view of an f32 2-D param.
+    pub fn mat(&self, name: &str) -> Result<Mat> {
+        let t = self.get(name)?;
+        let sh = t.shape();
+        ensure!(sh.len() == 2, "param '{name}' not 2-D: {sh:?}");
+        Ok(Mat::from_f32(sh[0], sh[1], t.as_f32()?))
+    }
+
+    /// Total f32 element count.
+    pub fn numel(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Ordered inputs for artifact argument `arg_idx`, matched by name.
+    /// Spec names look like `"{arg_idx}.{param_path}"`; scalar/plain args
+    /// have just `"{arg_idx}"`.
+    pub fn ordered_for(&self, spec: &ArtifactSpec, arg_idx: usize) -> Result<Vec<Tensor>> {
+        let prefix = format!("{arg_idx}.");
+        let mut out = Vec::new();
+        for inp in &spec.inputs {
+            if let Some(rest) = inp.name.strip_prefix(&prefix) {
+                let t = self
+                    .map
+                    .get(rest)
+                    .ok_or_else(|| anyhow!("{}: missing param '{rest}'", spec.name))?;
+                ensure!(
+                    t.shape() == inp.shape.as_slice(),
+                    "{}: param '{rest}' shape {:?} != spec {:?}",
+                    spec.name,
+                    t.shape(),
+                    inp.shape
+                );
+                out.push(t.clone());
+            }
+        }
+        if out.is_empty() {
+            bail!("{}: no inputs under arg {arg_idx}", spec.name);
+        }
+        Ok(out)
+    }
+
+    /// Rebuild a ParamSet from artifact *outputs* `[lo, lo+n)` given the
+    /// naming of input arg `arg_idx` (train steps echo the param tree).
+    pub fn from_outputs(
+        spec: &ArtifactSpec,
+        arg_idx: usize,
+        outputs: &[Tensor],
+        out_lo: usize,
+    ) -> Result<ParamSet> {
+        let prefix = format!("{arg_idx}.");
+        let names: Vec<String> = spec
+            .inputs
+            .iter()
+            .filter_map(|i| i.name.strip_prefix(&prefix).map(String::from))
+            .collect();
+        ensure!(
+            out_lo + names.len() <= outputs.len(),
+            "{}: outputs too short",
+            spec.name
+        );
+        Ok(ParamSet {
+            map: names
+                .iter()
+                .cloned()
+                .zip(outputs[out_lo..out_lo + names.len()].iter().cloned())
+                .collect(),
+        })
+    }
+
+    /// All-zeros clone (optimizer-state init).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            map: self
+                .map
+                .iter()
+                .map(|(k, t)| (k.clone(), Tensor::zeros(t.shape())))
+                .collect(),
+        }
+    }
+}
+
+/// The four factorized-layer kinds per block, canonical order (matches
+/// python's `LAYER_KINDS`).
+pub const LAYER_KINDS: [&str; 4] = ["qkv", "proj", "fc", "fcp"];
+
+/// Canonical factorized-layer list: (block, kind, n_in, m_out).
+pub fn fact_layers(cfg: &ModelConfig) -> Vec<(usize, &'static str, usize, usize)> {
+    let dims = cfg.layer_dims();
+    let mut out = Vec::with_capacity(cfg.n_fact_layers());
+    for b in 0..cfg.n_blocks {
+        for &(kind, n, m) in &dims {
+            out.push((b, kind, n, m));
+        }
+    }
+    out
+}
+
+/// Build student params from teacher params + per-layer DataSVD factors
+/// (canonical layer order).  Copies embeddings/LN/biases, replaces each
+/// `{kind}_w` with `{kind}_u` / `{kind}_v`.
+pub fn student_from_factors(
+    cfg: &ModelConfig,
+    teacher: &ParamSet,
+    factors: &[(Mat, Mat)],
+) -> Result<ParamSet> {
+    ensure!(factors.len() == cfg.n_fact_layers(), "factor count mismatch");
+    let mut out = ParamSet::default();
+    for name in ["tok_emb", "pos_emb", "lnf_g", "lnf_b"] {
+        out.insert(name, teacher.get(name)?.clone());
+    }
+    let r = cfg.rank_full();
+    for (li, (b, kind, n, m)) in fact_layers(cfg).into_iter().enumerate() {
+        let (u, v) = &factors[li];
+        ensure!(u.rows == m && v.rows == n, "factor dims for {kind} wrong");
+        let uc = u.slice_cols(0, r.min(u.cols));
+        let vc = v.slice_cols(0, r.min(v.cols));
+        out.insert(
+            &format!("blocks.{b}.{kind}_u"),
+            Tensor::f32(vec![m, r], pad_cols_f32(&uc, r)),
+        );
+        out.insert(
+            &format!("blocks.{b}.{kind}_v"),
+            Tensor::f32(vec![n, r], pad_cols_f32(&vc, r)),
+        );
+        out.insert(
+            &format!("blocks.{b}.{kind}_b"),
+            teacher.get(&format!("blocks.{b}.{kind}_b"))?.clone(),
+        );
+    }
+    for b in 0..cfg.n_blocks {
+        for g in ["ln1_g", "ln1_b", "ln2_g", "ln2_b"] {
+            out.insert(
+                &format!("blocks.{b}.{g}"),
+                teacher.get(&format!("blocks.{b}.{g}"))?.clone(),
+            );
+        }
+    }
+    Ok(out)
+}
+
+fn pad_cols_f32(m: &Mat, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m.rows * cols];
+    for i in 0..m.rows {
+        for j in 0..m.cols.min(cols) {
+            out[i * cols + j] = m[(i, j)] as f32;
+        }
+    }
+    out
+}
+
+/// DataSVD-decompose every factorized layer of a teacher.
+/// `covs` are per-layer covariance accumulators (canonical order); pass
+/// `None` for plain weight-SVD (the "SVD" baseline).
+pub fn decompose_teacher(
+    cfg: &ModelConfig,
+    teacher: &ParamSet,
+    covs: Option<&[CovAccum]>,
+) -> Result<Vec<(Mat, Mat)>> {
+    let mut out = Vec::with_capacity(cfg.n_fact_layers());
+    for (li, (b, kind, _n, _m)) in fact_layers(cfg).into_iter().enumerate() {
+        let w = teacher.mat(&format!("blocks.{b}.{kind}_w"))?; // (n, m) row conv
+        let d = match covs {
+            Some(cs) => DataSvd::compute(&w, &cs[li], 1e-7),
+            None => DataSvd::compute_plain(&w),
+        };
+        out.push((d.u, d.v));
+    }
+    Ok(out)
+}
+
+/// Build the GAR flat parameter list for a serving artifact at `profile`
+/// from student params (Sec. 3.5 — gauge per layer, identity block first).
+pub fn gar_params_for(
+    cfg: &ModelConfig,
+    student: &ParamSet,
+    spec: &ArtifactSpec,
+) -> Result<Vec<Tensor>> {
+    let profile = spec
+        .profile
+        .as_ref()
+        .ok_or_else(|| anyhow!("{} has no profile", spec.name))?;
+    ensure!(profile.len() == cfg.n_fact_layers(), "profile length mismatch");
+
+    let mut named = ParamSet::default();
+    for name in ["tok_emb", "pos_emb", "lnf_g", "lnf_b"] {
+        named.insert(name, student.get(name)?.clone());
+    }
+    for (li, (b, kind, n, m)) in fact_layers(cfg).into_iter().enumerate() {
+        let r = profile[li];
+        let u = student.mat(&format!("blocks.{b}.{kind}_u"))?;
+        let v = student.mat(&format!("blocks.{b}.{kind}_v"))?;
+        let gar = gar_solve(&u, &v, r)?;
+        if m - r > 0 {
+            // Full-rank square layers have an empty Û — the artifact does not
+            // declare the zero-size arg (see gar_param_spec in model.py).
+            named.insert(
+                &format!("b{b}.{kind}_uhat"),
+                Tensor::f32(vec![m - r, r], gar.u_hat.to_f32()),
+            );
+        }
+        named.insert(
+            &format!("b{b}.{kind}_vt"),
+            Tensor::f32(vec![n, r], gar.v_tilde.to_f32()),
+        );
+        named.insert(
+            &format!("b{b}.{kind}_b"),
+            student.get(&format!("blocks.{b}.{kind}_b"))?.clone(),
+        );
+    }
+    for b in 0..cfg.n_blocks {
+        for g in ["ln1_g", "ln1_b", "ln2_g", "ln2_b"] {
+            named.insert(&format!("b{b}.{g}"), student.get(&format!("blocks.{b}.{g}"))?.clone());
+        }
+    }
+
+    // Order per the artifact's arg-0 spec (names are "0.<idx>" for a flat
+    // list input — match by *shape-compatible sequence* instead: gar specs
+    // are lowered from a plain list, so names are "0.0", "0.1", ...  We
+    // reconstruct the canonical order from gar_param_spec's known layout.)
+    let mut ordered: Vec<Tensor> = Vec::new();
+    let push = |ordered: &mut Vec<Tensor>, t: &Tensor| ordered.push(t.clone());
+    push(&mut ordered, named.get("tok_emb")?);
+    push(&mut ordered, named.get("pos_emb")?);
+    push(&mut ordered, named.get("lnf_g")?);
+    push(&mut ordered, named.get("lnf_b")?);
+    for b in 0..cfg.n_blocks {
+        for g in ["ln1_g", "ln1_b", "ln2_g", "ln2_b"] {
+            push(&mut ordered, named.get(&format!("b{b}.{g}"))?);
+        }
+        for kind in LAYER_KINDS {
+            if let Ok(uhat) = named.get(&format!("b{b}.{kind}_uhat")) {
+                push(&mut ordered, uhat);
+            }
+            push(&mut ordered, named.get(&format!("b{b}.{kind}_vt"))?);
+            push(&mut ordered, named.get(&format!("b{b}.{kind}_b"))?);
+        }
+    }
+    // Validate against the spec's leading shapes (arg 0 count = ordered len).
+    for (t, s) in ordered.iter().zip(&spec.inputs) {
+        ensure!(
+            t.shape() == s.shape.as_slice(),
+            "{}: gar param '{}' shape {:?} != spec {:?}",
+            spec.name,
+            s.name,
+            t.shape(),
+            s.shape
+        );
+    }
+    Ok(ordered)
+}

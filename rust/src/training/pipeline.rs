@@ -1,0 +1,246 @@
+//! The full FlexRank pipeline (Alg. 1), orchestrated from rust:
+//!
+//!   pretrain teacher → calibrate (covariances) → DataSVD decomposition →
+//!   sensitivity probe → DP rank selection → nested KD consolidation →
+//!   evaluation across budgets → profiles.json for the serving AOT phase.
+//!
+//! Stages checkpoint under `results/` so figure harnesses can reuse them.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::config::RunConfig;
+use crate::data::{Corpus, TokenBatcher};
+use crate::flexrank::dp::dp_rank_selection;
+use crate::flexrank::masks::NestedChain;
+use crate::flexrank::sensitivity::{probe, uniform_grid};
+use crate::json::{self, Value};
+use crate::runtime::Engine;
+use crate::training::driver;
+use crate::training::params::{decompose_teacher, student_from_factors, ParamSet};
+use crate::training::{ckpt, CORPUS_BYTES};
+
+/// Everything a pipeline run produces.
+pub struct PipelineOut {
+    pub teacher: ParamSet,
+    pub student: ParamSet,
+    pub student_init: ParamSet,
+    pub chain: NestedChain,
+    pub full_cost: u64,
+    /// (budget, profile, eval loss before KD, eval loss after KD)
+    pub budget_rows: Vec<(f64, Vec<usize>, f64, f64)>,
+    pub pretrain_losses: Vec<f32>,
+    pub kd_losses: Vec<f32>,
+}
+
+/// Stage outputs directory.
+pub fn stage_dir() -> PathBuf {
+    crate::results_dir().join("pipeline")
+}
+
+/// Run (or resume) the full pipeline.
+pub fn run(engine: &Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> {
+    let cfg = engine.manifest.config.clone();
+    let dir = stage_dir();
+    std::fs::create_dir_all(&dir)?;
+
+    let corpus = Corpus::generate(CORPUS_BYTES, rc.seed);
+    let mut train_b = TokenBatcher::new(
+        &corpus.train,
+        cfg.batch_train,
+        cfg.seq_len + 1,
+        cfg.vocab,
+        rc.seed ^ 0xA5,
+    );
+    let eval_b = TokenBatcher::new(
+        &corpus.heldout,
+        cfg.batch_eval,
+        cfg.seq_len + 1,
+        cfg.vocab,
+        rc.seed ^ 0x5A,
+    );
+    let eval_batches = eval_b.eval_batches(rc.eval_batches);
+
+    // --- Stage 1: teacher pretraining --------------------------------------
+    let teacher_stem = dir.join("teacher");
+    let (teacher, pretrain_losses) = if !fresh && ckpt::exists(&teacher_stem) {
+        eprintln!("[pipeline] reusing teacher checkpoint");
+        (ckpt::load(&teacher_stem)?, Vec::new())
+    } else {
+        eprintln!("[pipeline] pretraining teacher for {} steps", rc.pretrain_steps);
+        let init = ParamSet::from_specs(
+            &engine.manifest.teacher_init,
+            engine.manifest.load_teacher_init()?,
+        );
+        let run = driver::pretrain_teacher(
+            engine,
+            init,
+            &mut train_b,
+            rc.pretrain_steps,
+            rc.log_every,
+        )?;
+        ckpt::save(&run.params, &teacher_stem)?;
+        (run.params, run.losses)
+    };
+
+    // --- Stage 2: calibration + DataSVD decomposition ----------------------
+    let student_stem = dir.join("student_init");
+    let student0 = if !fresh && ckpt::exists(&student_stem) {
+        eprintln!("[pipeline] reusing DataSVD student init");
+        ckpt::load(&student_stem)?
+    } else {
+        eprintln!("[pipeline] calibrating covariances ({} batches)", rc.calib_batches);
+        let mut calib_b = TokenBatcher::new(
+            &corpus.train,
+            cfg.batch_train, // batcher batch; calibrate() slices what it needs
+            cfg.seq_len + 1,
+            cfg.vocab,
+            rc.seed ^ 0x33,
+        );
+        let covs = driver::calibrate(engine, &teacher, &mut calib_b, rc.calib_batches)?;
+        eprintln!("[pipeline] DataSVD decomposition of {} layers", cfg.n_fact_layers());
+        let factors = decompose_teacher(&cfg, &teacher, Some(&covs))?;
+        let s = student_from_factors(&cfg, &teacher, &factors)?;
+        ckpt::save(&s, &student_stem)?;
+        s
+    };
+
+    // --- Stage 3: sensitivity probe + DP selection -------------------------
+    eprintln!("[pipeline] probing layer sensitivities");
+    let mut probe_model = driver::StudentProbe {
+        engine,
+        student: &student0,
+        eval_batches: eval_batches.clone(),
+        evals: 0,
+    };
+    let k_levels = rc.probe_levels;
+    let grids: Vec<Vec<usize>> =
+        (0..cfg.n_fact_layers()).map(|_| uniform_grid(cfg.rank_full(), k_levels)).collect();
+    let sens = probe(&mut probe_model, &grids);
+    eprintln!(
+        "[pipeline] probe done ({} evals, full loss {:.4})",
+        probe_model.evals, sens.full_loss
+    );
+    let quant = (sens.full_cost / 4096).max(1);
+    let dp = dp_rank_selection(&sens.candidates, sens.full_cost, quant);
+    eprintln!(
+        "[pipeline] DP: {} pareto states, chain of {}",
+        dp.pareto.len(),
+        dp.chain.profiles.len()
+    );
+
+    // --- Stage 4: consolidation over budget profiles -----------------------
+    let budget_profiles = dp.chain.select(&rc.budgets, sens.full_cost as usize);
+    let consolidated_stem = dir.join("student_kd");
+    let (student, kd_losses) = if !fresh && ckpt::exists(&consolidated_stem) {
+        eprintln!("[pipeline] reusing consolidated student");
+        (ckpt::load(&consolidated_stem)?, Vec::new())
+    } else {
+        eprintln!("[pipeline] consolidating for {} steps", rc.consolidate_steps);
+        let run = driver::consolidate(
+            engine,
+            student0.clone(),
+            &teacher,
+            &budget_profiles,
+            &rc.alphas,
+            &mut train_b,
+            rc.consolidate_steps,
+            rc.seed ^ 0x77,
+            rc.log_every,
+        )?;
+        ckpt::save(&run.params, &consolidated_stem)?;
+        (run.params, run.losses)
+    };
+
+    // --- Stage 5: evaluation across budgets ---------------------------------
+    eprintln!("[pipeline] evaluating across {} budgets", rc.budgets.len());
+    let mut budget_rows = Vec::new();
+    for (beta, profile) in rc.budgets.iter().zip(&budget_profiles) {
+        let before = driver::eval_student(engine, &student0, profile, &eval_batches)?;
+        let after = driver::eval_student(engine, &student, profile, &eval_batches)?;
+        eprintln!(
+            "  budget {beta:.2}: ranks {:?}.. loss {before:.4} -> {after:.4}",
+            &profile[..4.min(profile.len())]
+        );
+        budget_rows.push((*beta, profile.clone(), before, after));
+    }
+
+    Ok(PipelineOut {
+        teacher,
+        student,
+        student_init: student0,
+        chain: dp.chain,
+        full_cost: sens.full_cost,
+        budget_rows,
+        pretrain_losses,
+        kd_losses,
+    })
+}
+
+/// `repro pipeline [--smoke] [--fresh] [--pretrain-steps N] ...`
+pub fn run_cli(args: &Args) -> Result<()> {
+    let rc = if args.flag("smoke") {
+        RunConfig::smoke().with_args(args)?
+    } else {
+        RunConfig::default().with_args(args)?
+    };
+    let engine = Engine::new(crate::artifacts_dir()).context("engine init")?;
+    let out = run(&engine, &rc, args.flag("fresh"))?;
+
+    // Persist the budget table for figures/EXPERIMENTS.md.
+    let rows: Vec<Value> = out
+        .budget_rows
+        .iter()
+        .map(|(b, prof, before, after)| {
+            json::obj(vec![
+                ("budget", Value::Num(*b)),
+                ("profile", json::arr_usize(prof)),
+                ("loss_datasvd_init", Value::Num(*before)),
+                ("loss_flexrank", Value::Num(*after)),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("full_cost", Value::Num(out.full_cost as f64)),
+        (
+            "pretrain_losses",
+            json::arr_f64(&out.pretrain_losses.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        ),
+        (
+            "kd_losses",
+            json::arr_f64(&out.kd_losses.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        ),
+        ("budgets", Value::Arr(rows)),
+    ]);
+    let path = crate::results_dir().join("pipeline_summary.json");
+    std::fs::write(&path, json::to_string(&doc))?;
+    println!("pipeline complete -> {}", path.display());
+    Ok(())
+}
+
+/// `repro profiles` — run stages 1–3 and write artifacts/profiles.json with
+/// the DP profiles for the serving tiers (phase-2 AOT input).
+pub fn write_profiles_cli(args: &Args) -> Result<()> {
+    let rc = if args.flag("smoke") {
+        RunConfig::smoke().with_args(args)?
+    } else {
+        RunConfig::default().with_args(args)?
+    };
+    let engine = Engine::new(crate::artifacts_dir())?;
+    let cfg = engine.manifest.config.clone();
+    let out = run(&engine, &rc, args.flag("fresh"))?;
+    let tier_profiles = out.chain.select(&cfg.serve_tiers, out.full_cost as usize);
+    let doc = json::obj(vec![(
+        "tiers",
+        Value::Arr(tier_profiles.iter().map(|p| json::arr_usize(p)).collect()),
+    )]);
+    let path = crate::artifacts_dir().join("profiles.json");
+    std::fs::write(&path, json::to_string(&doc))?;
+    println!(
+        "wrote {} (run `make serve-artifacts` to re-lower serving forwards)",
+        path.display()
+    );
+    Ok(())
+}

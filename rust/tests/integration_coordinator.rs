@@ -1,0 +1,121 @@
+//! Integration: the elastic serving coordinator end to end over a synthetic
+//! trace (requires `make artifacts`).
+
+use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg};
+use flexrank::data::trace::Slo;
+use flexrank::data::{Corpus, TraceCfg, TraceGen};
+use flexrank::runtime::Engine;
+use flexrank::training::params::{decompose_teacher, student_from_factors, ParamSet};
+
+fn setup() -> (Engine, ParamSet) {
+    let e = Engine::new(flexrank::artifacts_dir()).expect("run `make artifacts` first");
+    let cfg = e.manifest.config.clone();
+    let teacher = ParamSet::from_specs(
+        &e.manifest.teacher_init,
+        e.manifest.load_teacher_init().unwrap(),
+    );
+    let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+    let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+    (e, student)
+}
+
+fn trace(e: &Engine, n: usize, rate: f64) -> Vec<flexrank::data::Request> {
+    let cfg = e.manifest.config.clone();
+    let corpus = Corpus::generate(50_000, 5);
+    TraceGen::new(
+        TraceCfg {
+            n_requests: n,
+            rate,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            seed: 11,
+            ..Default::default()
+        },
+        &corpus.heldout,
+    )
+    .generate()
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn serves_every_request_exactly_once() {
+    let (e, student) = setup();
+    let t = trace(&e, 60, 500.0);
+    let report = serve_trace(
+        &e,
+        &student,
+        t,
+        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 0.0 },
+    )
+    .unwrap();
+    assert_eq!(report.metrics.requests_done, 60);
+    assert_eq!(report.tier_requests.iter().sum::<usize>(), 60);
+    assert!(report.metrics.batches >= 60 / e.manifest.config.batch_serve);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn quality_requests_go_to_biggest_tier_statically() {
+    let (e, student) = setup();
+    let mut t = trace(&e, 24, 1000.0);
+    for r in &mut t {
+        r.slo = Slo::Quality;
+    }
+    let report = serve_trace(
+        &e,
+        &student,
+        t,
+        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 0.0 },
+    )
+    .unwrap();
+    let last = report.tier_requests.len() - 1;
+    assert_eq!(report.tier_requests[last], 24);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn adaptive_policy_sheds_load_downward() {
+    let (e, student) = setup();
+    // As-fast-as-possible replay creates queue pressure immediately.
+    let t = trace(&e, 120, 1e9);
+    let report = serve_trace(
+        &e,
+        &student,
+        t,
+        &ServeCfg { policy: PolicyKind::Adaptive, max_wait_ms: 1.0, replay_speed: 0.0 },
+    )
+    .unwrap();
+    // Under pressure the adaptive policy must route strictly more requests
+    // to lower tiers than the static SLO map would (static: 50/30/20 split
+    // over interactive/standard/quality at tiers 0/1/3).
+    assert!(report.tier_requests[0] > 0);
+    let low = report.tier_requests[0] + report.tier_requests[1];
+    let high: usize = report.tier_requests[2..].iter().sum();
+    assert!(low > high, "adaptive should shift mass down: {:?}", report.tier_requests);
+    assert_eq!(report.metrics.requests_done, 120);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn smaller_tiers_execute_faster() {
+    let (e, student) = setup();
+    let mut t = trace(&e, 40, 1e9);
+    // Alternate strictly between the smallest and largest tier via budgets.
+    for (i, r) in t.iter_mut().enumerate() {
+        r.budget = Some(if i % 2 == 0 { 0.01 } else { 1.0 });
+    }
+    let report = serve_trace(
+        &e,
+        &student,
+        t,
+        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 },
+    )
+    .unwrap();
+    let small = report.metrics.tier_exec(0).p50_ms;
+    let big = report.metrics.tier_exec(report.tier_budgets.len() - 1).p50_ms;
+    assert!(small > 0.0 && big > 0.0);
+    assert!(
+        small < big,
+        "tier0 exec {small}ms should beat tier3 {big}ms"
+    );
+}

@@ -1,0 +1,48 @@
+//! Integration: the full FlexRank pipeline in smoke mode (few steps each
+//! stage) — proves all stages compose: pretrain → calibrate → DataSVD →
+//! probe → DP → consolidate → eval.  Requires `make artifacts`.
+
+use flexrank::config::RunConfig;
+use flexrank::runtime::Engine;
+use flexrank::training::pipeline;
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn smoke_pipeline_composes_all_stages() {
+    // Isolated results dir so we never clobber a real run's checkpoints.
+    let dir = std::env::temp_dir().join(format!("flexrank_it_{}", std::process::id()));
+    std::env::set_var("FLEXRANK_RESULTS", &dir);
+    let _ = std::fs::create_dir_all(&dir);
+
+    let engine = Engine::new(flexrank::artifacts_dir()).expect("run `make artifacts` first");
+    let mut rc = RunConfig::smoke();
+    rc.budgets = vec![0.25, 0.5, 1.0];
+    rc.alphas = vec![1.0 / 3.0; 3];
+
+    let out = pipeline::run(&engine, &rc, true).expect("pipeline failed");
+
+    // Chain invariants.
+    assert!(out.chain.validate(), "DP chain must be nested + cost-ascending");
+    assert!(!out.chain.profiles.is_empty());
+    assert!(out.full_cost > 0);
+
+    // Budget rows: ascending budgets, finite losses, profiles nested.
+    assert_eq!(out.budget_rows.len(), 3);
+    for ((b, prof, before, after), expect_b) in out.budget_rows.iter().zip([0.25, 0.5, 1.0]) {
+        assert_eq!(*b, expect_b);
+        assert!(before.is_finite() && after.is_finite());
+        assert_eq!(prof.len(), engine.manifest.config.n_fact_layers());
+    }
+    for w in out.budget_rows.windows(2) {
+        assert!(
+            flexrank::flexrank::masks::is_nested(&w[0].1, &w[1].1),
+            "budget profiles must be nested"
+        );
+    }
+
+    // Pretraining made progress even in 3 steps (loss must drop from ~ln V).
+    assert!(out.pretrain_losses.first().unwrap() > out.pretrain_losses.last().unwrap());
+
+    std::env::remove_var("FLEXRANK_RESULTS");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,187 @@
+//! Cross-layer integration tests: rust ⇄ AOT artifacts ⇄ PJRT.
+//!
+//! Require `make artifacts` (base config) to have run — the Makefile's
+//! `test` target guarantees that ordering.
+
+use flexrank::flexrank::masks::{profile_to_masks, uniform_profile};
+use flexrank::runtime::{Engine, Tensor};
+use flexrank::training::params::{
+    decompose_teacher, gar_params_for, student_from_factors, ParamSet,
+};
+
+fn engine() -> Engine {
+    Engine::new(flexrank::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn teacher(engine: &Engine) -> ParamSet {
+    ParamSet::from_specs(
+        &engine.manifest.teacher_init,
+        engine.manifest.load_teacher_init().unwrap(),
+    )
+}
+
+#[test]
+fn teacher_fwd_produces_finite_logits() {
+    let e = engine();
+    let cfg = e.manifest.config.clone();
+    let exe = e.load("teacher_fwd").unwrap();
+    let mut inputs = teacher(&e).ordered_for(&exe.spec, 0).unwrap();
+    inputs.push(Tensor::i32(
+        vec![cfg.batch_eval, cfg.seq_len],
+        vec![7; cfg.batch_eval * cfg.seq_len],
+    ));
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out[0].shape(), &[cfg.batch_eval, cfg.seq_len, cfg.vocab]);
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn student_full_rank_matches_teacher_through_pjrt() {
+    // The whole chain: rust SVD decomposition -> student params -> masked
+    // student executable must reproduce the dense teacher executable.
+    let e = engine();
+    let cfg = e.manifest.config.clone();
+    let t = teacher(&e);
+    let factors = decompose_teacher(&cfg, &t, None).unwrap();
+    let student = student_from_factors(&cfg, &t, &factors).unwrap();
+
+    let tok = Tensor::i32(
+        vec![cfg.batch_eval, cfg.seq_len],
+        (0..cfg.batch_eval * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect(),
+    );
+
+    let te = e.load("teacher_fwd").unwrap();
+    let mut ti = t.ordered_for(&te.spec, 0).unwrap();
+    ti.push(tok.clone());
+    let t_logits = te.run(&ti).unwrap();
+
+    let se = e.load("student_logits").unwrap();
+    let mut si = student.ordered_for(&se.spec, 0).unwrap();
+    si.push(Tensor::f32(
+        vec![cfg.n_blocks, 4, cfg.rank_full()],
+        profile_to_masks(&uniform_profile(cfg.n_fact_layers(), cfg.rank_full()), cfg.rank_full()),
+    ));
+    si.push(tok);
+    let s_logits = se.run(&si).unwrap();
+
+    let a = t_logits[0].as_f32().unwrap();
+    let b = s_logits[0].as_f32().unwrap();
+    let max_err = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 5e-3, "teacher/student divergence {max_err}");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn gar_serving_matches_masked_student() {
+    // GAR extraction in rust + the GAR serving executable must agree with
+    // the masked student executable at the tier profile.
+    let e = engine();
+    let cfg = e.manifest.config.clone();
+    let t = teacher(&e);
+    let factors = decompose_teacher(&cfg, &t, None).unwrap();
+    let student = student_from_factors(&cfg, &t, &factors).unwrap();
+
+    let serve = e.load("serve_gar_t1").unwrap();
+    let profile = serve.spec.profile.clone().unwrap();
+    let gar = gar_params_for(&cfg, &student, &serve.spec).unwrap();
+
+    let tok = Tensor::i32(
+        vec![cfg.batch_serve, cfg.seq_len],
+        (0..cfg.batch_serve * cfg.seq_len).map(|i| ((i * 3) % cfg.vocab) as i32).collect(),
+    );
+    let mut gi = gar.clone();
+    gi.push(tok.clone());
+    let g_logits = serve.run(&gi).unwrap();
+
+    let se = e.load("student_logits").unwrap();
+    let mut si = student.ordered_for(&se.spec, 0).unwrap();
+    si.push(Tensor::f32(
+        vec![cfg.n_blocks, 4, cfg.rank_full()],
+        profile_to_masks(&profile, cfg.rank_full()),
+    ));
+    // student_logits is lowered at batch_eval; replicate serve batch rows.
+    let mut tok_eval = tok.as_i32().unwrap().to_vec();
+    while tok_eval.len() < cfg.batch_eval * cfg.seq_len {
+        let row = tok_eval[..cfg.seq_len].to_vec();
+        tok_eval.extend(row);
+    }
+    si.push(Tensor::i32(vec![cfg.batch_eval, cfg.seq_len], tok_eval));
+    let s_logits = se.run(&si).unwrap();
+
+    let a = g_logits[0].as_f32().unwrap();
+    let b = s_logits[0].as_f32().unwrap();
+    let n = cfg.batch_serve * cfg.seq_len * cfg.vocab;
+    let max_err = a[..n]
+        .iter()
+        .zip(&b[..n])
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 5e-3, "gar/masked divergence {max_err}");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn run_b_device_resident_path_matches_host_path() {
+    let e = engine();
+    let exe = e.load("teacher_fwd").unwrap();
+    let cfg = e.manifest.config.clone();
+    let mut inputs = teacher(&e).ordered_for(&exe.spec, 0).unwrap();
+    inputs.push(Tensor::i32(
+        vec![cfg.batch_eval, cfg.seq_len],
+        vec![42; cfg.batch_eval * cfg.seq_len],
+    ));
+    let host_out = exe.run(&inputs).unwrap();
+
+    let bufs = e.to_device_all(&inputs).unwrap();
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|d| d.buffer()).collect();
+    let dev_out = exe.run_b(&refs).unwrap();
+    let dev_t = Tensor::from_literal(&dev_out[0]).unwrap();
+    assert_eq!(host_out[0].as_f32().unwrap(), dev_t.as_f32().unwrap());
+}
+
+#[test]
+fn manifest_rejects_wrong_shapes() {
+    let e = engine();
+    let exe = e.load("teacher_fwd").unwrap();
+    let cfg = e.manifest.config.clone();
+    let mut inputs = teacher(&e).ordered_for(&exe.spec, 0).unwrap();
+    // Wrong token shape must be caught by the spec check, not by XLA.
+    inputs.push(Tensor::i32(vec![1, cfg.seq_len], vec![0; cfg.seq_len]));
+    assert!(exe.run(&inputs).is_err());
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow under debug; run via `cargo test --release` (make test)")]
+fn kd_train_step_first_loss_is_zero_at_full_rank() {
+    // Student initialized from the teacher's exact factorization ⇒ KD loss
+    // of the very first consolidation step must be ~0 (Eq. 5 at θ ≈ θ_orig).
+    let e = engine();
+    let cfg = e.manifest.config.clone();
+    let t = teacher(&e);
+    let factors = decompose_teacher(&cfg, &t, None).unwrap();
+    let student = student_from_factors(&cfg, &t, &factors).unwrap();
+    let exe = e.load("kd_train_step").unwrap();
+    let spec = exe.spec.clone();
+
+    let mut inputs = student.ordered_for(&spec, 0).unwrap();
+    inputs.extend(student.zeros_like().ordered_for(&spec, 1).unwrap());
+    inputs.extend(student.zeros_like().ordered_for(&spec, 2).unwrap());
+    inputs.push(Tensor::scalar_f32(1.0));
+    inputs.extend(t.ordered_for(&spec, 4).unwrap());
+    inputs.push(Tensor::f32(
+        vec![cfg.n_blocks, 4, cfg.rank_full()],
+        profile_to_masks(&uniform_profile(cfg.n_fact_layers(), cfg.rank_full()), cfg.rank_full()),
+    ));
+    inputs.push(Tensor::i32(
+        vec![cfg.batch_train, cfg.seq_len + 1],
+        (0..cfg.batch_train * (cfg.seq_len + 1)).map(|i| (i % cfg.vocab) as i32).collect(),
+    ));
+    let out = exe.run(&inputs).unwrap();
+    let loss = out.last().unwrap().item_f32().unwrap();
+    assert!(loss.abs() < 1e-3, "first KD loss {loss}");
+}
