@@ -1,39 +1,26 @@
-//! Elastic serving demo: loads the GAR tier executables, replays a Poisson
-//! request trace with mixed SLOs through the coordinator (router → dynamic
-//! batcher → PJRT), and reports per-tier latency + throughput — the paper's
-//! "deploy everywhere" story under one roof.
+//! Elastic serving demo: re-gauges one student into a GAR submodel per
+//! budget tier, replays a Poisson request trace with mixed SLOs through the
+//! coordinator (router → dynamic batcher → native kernel backend), and
+//! reports per-tier latency + throughput — the paper's "deploy everywhere"
+//! story under one roof.  Runs fully offline (no artifacts, no PJRT).
 //!
-//! Run (after `make artifacts && cargo build --release`):
+//! Run:
 //!   cargo run --release --example elastic_serving
 //!   cargo run --release --example elastic_serving -- --policy adaptive --rate 400
 
 use anyhow::Result;
 use flexrank::cli::Args;
-use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg};
+use flexrank::coordinator::{serve_trace, serving_student, PolicyKind, ServeCfg, SubmodelRegistry};
 use flexrank::data::{Corpus, TraceCfg, TraceGen};
-use flexrank::runtime::Engine;
-use flexrank::training::params::{decompose_teacher, student_from_factors, ParamSet};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let engine = Engine::new(flexrank::artifacts_dir())?;
-    let cfg = engine.manifest.config.clone();
+    let cfg = flexrank::config::load_model_config(args.get_or("config", "base"))?;
 
-    // Use the consolidated student when available, else a freshly decomposed
-    // teacher (serving mechanics are identical).
-    let stem = flexrank::training::pipeline::stage_dir().join("student_kd");
-    let student = if flexrank::training::ckpt::exists(&stem) {
-        println!("using consolidated student checkpoint");
-        flexrank::training::ckpt::load(&stem)?
-    } else {
-        println!("no pipeline checkpoint — decomposing fresh teacher");
-        let teacher = ParamSet::from_specs(
-            &engine.manifest.teacher_init,
-            engine.manifest.load_teacher_init()?,
-        );
-        let factors = decompose_teacher(&cfg, &teacher, None)?;
-        student_from_factors(&cfg, &teacher, &factors)?
-    };
+    // Consolidated student checkpoint when available, else a freshly
+    // decomposed random teacher (serving mechanics are identical).
+    let student = serving_student(&cfg, args.u64_or("seed", 7)?)?;
+    let mut registry = SubmodelRegistry::load_native(&cfg, &student, None)?;
 
     let corpus = Corpus::generate(200_000, 5);
     let trace = TraceGen::new(
@@ -54,8 +41,7 @@ fn main() -> Result<()> {
         _ => PolicyKind::Static,
     };
     let report = serve_trace(
-        &engine,
-        &student,
+        &mut registry,
         trace,
         &ServeCfg {
             policy,

@@ -1,50 +1,70 @@
 //! Bench: GAR vs naive low-rank vs dense forward (paper Fig. 10).
 //!
-//! Times the AOT single-matmul artifacts through PJRT across the rank sweep
-//! and prints relative-to-dense costs next to the analytic MAC model.
+//! Times the native kernels across the rank sweep and prints
+//! relative-to-dense costs next to the analytic MAC model
+//! `(m + n − r)·r / (m·n)`.  (The PJRT artifact variant of these numbers
+//! lives in `benches/train_step.rs` behind `--features pjrt`.)
+//!
 //! `cargo bench --bench gar_matmul` (BENCH_QUICK=1 for the short profile).
 
 use flexrank::bench_harness;
-use flexrank::runtime::{Engine, Tensor};
+use flexrank::flexrank::gar::Gar;
+use flexrank::linalg::{kernels, Mat};
+use flexrank::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::new(flexrank::artifacts_dir())?;
-    let cfg = engine.manifest.config.clone();
+    let cfg = flexrank::config::load_model_config("base")?;
     let mut bench = bench_harness::from_env();
+    let mut rng = Rng::new(10);
     let (bdim, bb) = (cfg.bench_dim, cfg.bench_batch);
     let elems = (bb * bdim) as f64;
 
-    let mut run_one = |name: &str| -> anyhow::Result<f64> {
-        let exe = engine.load(name)?;
-        let inputs: Vec<Tensor> = exe
-            .spec
-            .inputs
-            .iter()
-            .map(|s| Tensor::f32(s.shape.clone(), vec![0.01; s.numel()]))
-            .collect();
-        let stats = bench.run(name, Some(elems), || {
-            exe.run(&inputs).expect("bench exec failed");
-        });
-        Ok(stats.mean_secs())
-    };
+    let x = Mat::randn(bb, bdim, &mut rng);
+    let w = Mat::randn(bdim, bdim, &mut rng);
+    let dense = bench
+        .run("bench_dense", Some(elems), || {
+            std::hint::black_box(kernels::matmul(&x, &w).data.len());
+        })
+        .mean_secs();
 
-    let dense = run_one("bench_dense")?;
     println!("\nrank  rel_measured(lowrank)  rel_measured(gar)  rel_macs(lowrank)  rel_macs(gar)");
-    for &r in &cfg.bench_ranks.clone() {
+    for &r in &cfg.bench_ranks {
         if r > bdim {
             continue;
         }
-        let low = run_one(&format!("bench_lowrank_r{r}"))? / dense;
-        let (gar, gar_mac) = if r < bdim {
-            (
-                run_one(&format!("bench_gar_r{r}"))? / dense,
-                ((2 * bdim - r) * r) as f64 / (bdim * bdim) as f64,
-            )
+        // Naive factorized: two full products through (n, r) and (r, m).
+        let v = Mat::randn(bdim, r, &mut rng);
+        let ut = Mat::randn(r, bdim, &mut rng);
+        let low = bench
+            .run(&format!("bench_lowrank_r{r}"), Some(elems), || {
+                let t = kernels::matmul(&x, &v);
+                std::hint::black_box(kernels::matmul(&t, &ut).data.len());
+            })
+            .mean_secs()
+            / dense;
+        let (gar_rel, gar_mac) = if r < bdim {
+            let gar = Gar {
+                u_hat: Mat::randn(bdim - r, r, &mut rng),
+                v_tilde: Mat::randn(bdim, r, &mut rng),
+                rank: r,
+            };
+            let mut arena = kernels::Arena::new();
+            let warm = gar.forward_arena(&x, &mut arena);
+            arena.give(warm.data);
+            let g = bench
+                .run(&format!("bench_gar_r{r}"), Some(elems), || {
+                    let y = gar.forward_arena(&x, &mut arena);
+                    std::hint::black_box(y.data[0]);
+                    arena.give(y.data);
+                })
+                .mean_secs()
+                / dense;
+            (g, ((2 * bdim - r) * r) as f64 / (bdim * bdim) as f64)
         } else {
             (f64::NAN, f64::NAN)
         };
         let low_mac = (2 * bdim * r) as f64 / (bdim * bdim) as f64;
-        println!("{r:>4}  {low:>20.3}  {gar:>17.3}  {low_mac:>17.3}  {gar_mac:>13.3}");
+        println!("{r:>4}  {low:>20.3}  {gar_rel:>17.3}  {low_mac:>17.3}  {gar_mac:>13.3}");
     }
     bench.write_csv(flexrank::results_dir().join("bench_gar_matmul.csv"))?;
     Ok(())

@@ -1,0 +1,144 @@
+//! Bench: the native kernel layer vs the naive reference loops.
+//!
+//! Covers the two acceptance surfaces of the kernel PR:
+//!   * blocked+parallel matmul vs the seed's scalar ikj loop (f64 and f32)
+//!     across square and model-shaped problems, and
+//!   * the fused GAR forward vs the two-matmul + row-copy implementation
+//!     across the rank sweep.
+//!
+//! Emits `results/BENCH_kernels.json` (kernel, shape, mean ns, GFLOP/s,
+//! speedup-vs-reference) via `bench_harness::write_kernel_json` — the seed
+//! of the perf trajectory — plus the usual CSV.
+//!
+//! `cargo bench --bench kernels` (`BENCH_QUICK=1` for the short profile).
+
+use flexrank::bench_harness::{self, write_kernel_json, KernelRecord};
+use flexrank::flexrank::gar::Gar;
+use flexrank::linalg::{kernels, reference, Mat};
+use flexrank::rng::Rng;
+
+fn main() {
+    let mut bench = bench_harness::from_env();
+    let mut rng = Rng::new(17);
+    let mut records: Vec<KernelRecord> = Vec::new();
+
+    // --- matmul: square sweep + the model's layer shapes -------------------
+    let shapes: &[(usize, usize, usize)] = &[
+        (128, 128, 128),
+        (256, 256, 256),
+        (512, 512, 512),
+        (512, 128, 384), // (B·T, n, m) of the qkv layer
+        (512, 512, 128), // fcp layer
+    ];
+    for &(m, k, n) in shapes {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let shape = format!("{m}x{k}x{n}");
+        let flops = (2 * m * k * n) as f64;
+
+        let refstats = bench.run(&format!("matmul_ref {shape}"), Some(flops), || {
+            std::hint::black_box(reference::matmul(&a, &b).data.len());
+        });
+        let blk = bench.run(&format!("matmul_f64 {shape}"), Some(flops), || {
+            std::hint::black_box(kernels::matmul(&a, &b).data.len());
+        });
+        records.push(KernelRecord::from_stats(&blk, &refstats, &shape, flops));
+
+        // Allocation-free variant (the serving configuration).
+        let mut out = Mat::zeros(m, n);
+        let into = bench.run(&format!("matmul_f64_into {shape}"), Some(flops), || {
+            kernels::matmul_into(&a, &b, &mut out);
+            std::hint::black_box(out.data[0]);
+        });
+        records.push(KernelRecord::from_stats(&into, &refstats, &shape, flops));
+
+        // f32 path.
+        let a32 = a.to_f32();
+        let b32 = b.to_f32();
+        let mut o32 = vec![0f32; m * n];
+        let f32s = bench.run(&format!("matmul_f32 {shape}"), Some(flops), || {
+            kernels::matmul_f32(&a32, &b32, m, k, n, &mut o32);
+            std::hint::black_box(o32[0]);
+        });
+        records.push(KernelRecord::from_stats(&f32s, &refstats, &shape, flops));
+    }
+
+    // --- fused GAR forward vs two-matmul + copy across the rank sweep ------
+    let (bsz, n, m) = (256usize, 256usize, 256usize);
+    let x = Mat::randn(bsz, n, &mut rng);
+    for r in [8usize, 16, 32, 64, 128, 192] {
+        let gar = Gar {
+            u_hat: Mat::randn(m - r, r, &mut rng),
+            v_tilde: Mat::randn(n, r, &mut rng),
+            rank: r,
+        };
+        let shape = format!("B={bsz} n={n} m={m} r={r}");
+        // (n + m − r)·r MACs per row, 2 flops per MAC.
+        let flops = (2 * bsz * (n + m - r) * r) as f64;
+
+        let refstats = bench.run(&format!("gar_forward_ref r={r}"), Some(flops), || {
+            std::hint::black_box(
+                reference::gar_forward(&gar.u_hat, &gar.v_tilde, gar.rank, &x).data.len(),
+            );
+        });
+        let fused = bench.run(&format!("gar_forward_fused r={r}"), Some(flops), || {
+            std::hint::black_box(gar.forward(&x).data.len());
+        });
+        records.push(KernelRecord::from_stats(&fused, &refstats, &shape, flops));
+
+        // Arena-backed zero-alloc variant.
+        let mut arena = kernels::Arena::new();
+        let warm = gar.forward_arena(&x, &mut arena);
+        arena.give(warm.data);
+        let fused_a = bench.run(&format!("gar_forward_arena r={r}"), Some(flops), || {
+            let y = gar.forward_arena(&x, &mut arena);
+            std::hint::black_box(y.data[0]);
+            arena.give(y.data);
+        });
+        records.push(KernelRecord::from_stats(&fused_a, &refstats, &shape, flops));
+    }
+
+    // --- covariance gram accumulation (DataSVD stage 1) --------------------
+    {
+        let x = Mat::randn(512, 128, &mut rng);
+        let flops = (2 * 512 * 128 * 128) as f64;
+        let refstats = bench.run("cov_accum_ref 512x128", Some(flops), || {
+            let mut sigma = Mat::zeros(128, 128);
+            for i in 0..x.rows {
+                let row = x.row(i).to_vec();
+                sigma.add_outer(1.0, &row, &row);
+            }
+            std::hint::black_box(sigma.data[0]);
+        });
+        let mut sigma = Mat::zeros(128, 128);
+        let tn = bench.run("cov_accum_tn 512x128", Some(flops), || {
+            kernels::matmul_tn_acc(&x, &x, &mut sigma);
+            std::hint::black_box(sigma.data[0]);
+        });
+        records.push(KernelRecord::from_stats(&tn, &refstats, "512x128 gram", flops));
+    }
+
+    let dir = flexrank::results_dir();
+    bench.write_csv(dir.join("bench_kernels.csv")).expect("csv");
+    write_kernel_json(dir.join("BENCH_kernels.json"), &records).expect("json");
+    println!("\nwrote {}", dir.join("BENCH_kernels.json").display());
+
+    // Loud acceptance summary.
+    for rec in &records {
+        if rec.kernel.starts_with("matmul_f64 512x512x512") {
+            println!(
+                "matmul 512³ speedup vs reference: {:.2}x ({:.2} GFLOP/s)",
+                rec.speedup_vs_reference, rec.gflops
+            );
+        }
+    }
+    let slow_gar: Vec<&KernelRecord> = records
+        .iter()
+        .filter(|r| r.kernel.starts_with("gar_forward_fused") && r.speedup_vs_reference <= 1.0)
+        .collect();
+    if slow_gar.is_empty() {
+        println!("fused GAR forward faster than two-matmul reference at every benched rank");
+    } else {
+        println!("WARNING: fused GAR not faster at: {slow_gar:?}");
+    }
+}

@@ -1,22 +1,19 @@
 //! Bench: end-to-end elastic serving throughput/latency under load, static
-//! vs adaptive policy (the L3 headline numbers for EXPERIMENTS.md §Perf).
+//! vs adaptive policy — the L3 headline numbers, now on the native kernel
+//! backend (runs fully offline, no PJRT).
 
-use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg};
+use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg, SubmodelRegistry};
 use flexrank::data::{Corpus, TraceCfg, TraceGen};
-use flexrank::runtime::Engine;
-use flexrank::training::params::{decompose_teacher, student_from_factors, ParamSet};
+use flexrank::training::params::{decompose_teacher, random_teacher, student_from_factors};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::new(flexrank::artifacts_dir())?;
-    let cfg = engine.manifest.config.clone();
-    let teacher = ParamSet::from_specs(
-        &engine.manifest.teacher_init,
-        engine.manifest.load_teacher_init()?,
-    );
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let cfg = flexrank::config::load_model_config(if quick { "tiny" } else { "base" })?;
+    let teacher = random_teacher(&cfg, 7);
     let factors = decompose_teacher(&cfg, &teacher, None)?;
     let student = student_from_factors(&cfg, &teacher, &factors)?;
+    let mut registry = SubmodelRegistry::load_native(&cfg, &student, None)?;
     let corpus = Corpus::generate(100_000, 5);
-    let quick = std::env::var("BENCH_QUICK").is_ok();
     let n = if quick { 80 } else { 400 };
 
     println!("policy    rate(req/s)  achieved(req/s)  p50(ms)  p95(ms)  occupancy");
@@ -35,8 +32,7 @@ fn main() -> anyhow::Result<()> {
             )
             .generate();
             let report = serve_trace(
-                &engine,
-                &student,
+                &mut registry,
                 trace,
                 &ServeCfg { policy, max_wait_ms: 4.0, replay_speed: 1.0 },
             )?;

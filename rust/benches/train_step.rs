@@ -2,9 +2,18 @@
 //! fused KD consolidation step) and of the evaluation forwards — the L2/L1
 //! numbers for EXPERIMENTS.md §Perf.
 
+#[cfg(feature = "pjrt")]
 use flexrank::bench_harness;
+#[cfg(feature = "pjrt")]
 use flexrank::runtime::{DType, Engine, Tensor};
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("train_step benches the AOT train-step artifacts; rebuild with --features pjrt");
+    eprintln!("(the offline kernel numbers live in `cargo bench --bench kernels`)");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let engine = Engine::new(flexrank::artifacts_dir())?;
     let cfg = engine.manifest.config.clone();

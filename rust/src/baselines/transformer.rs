@@ -6,13 +6,20 @@
 
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use crate::data::TokenBatcher;
 use crate::flexrank::masks::{gar_layer_params, RankProfile};
-use crate::runtime::{Engine, ModelConfig};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
+use crate::runtime::ModelConfig;
+#[cfg(feature = "pjrt")]
 use crate::training::driver;
-use crate::training::params::{decompose_teacher, fact_layers, student_from_factors, ParamSet};
+use crate::training::params::{fact_layers, ParamSet};
+#[cfg(feature = "pjrt")]
+use crate::training::params::{decompose_teacher, student_from_factors};
 
 /// Plain weight-SVD student (the "SVD" baseline of Fig. 4).
+#[cfg(feature = "pjrt")]
 pub fn plain_svd_student(engine: &Engine, teacher: &ParamSet) -> Result<ParamSet> {
     let cfg = engine.manifest.config.clone();
     let factors = decompose_teacher(&cfg, teacher, None)?;
@@ -96,6 +103,7 @@ pub fn layerskip_profiles(cfg: &ModelConfig, budgets: &[f64]) -> Vec<RankProfile
 /// Independent-submodels baseline (Fig. 5 dashed): train each budget's
 /// submodel separately from the same init, splitting the total step budget
 /// evenly.  Returns per-budget (profile, eval loss).
+#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 pub fn independent_submodels(
     engine: &Engine,

@@ -133,6 +133,55 @@ impl Bench {
     }
 }
 
+/// One kernel-vs-reference comparison row for `BENCH_kernels.json` — the
+/// machine-readable perf trajectory the kernel bench seeds.
+#[derive(Debug, Clone)]
+pub struct KernelRecord {
+    /// Kernel name, e.g. `matmul_f64` / `gar_forward_fused`.
+    pub kernel: String,
+    /// Shape label, e.g. `512x512x512` or `B=64 n=256 m=256 r=32`.
+    pub shape: String,
+    pub mean_ns: f64,
+    pub gflops: f64,
+    /// Kernel-vs-naive-reference speedup (>1 = kernel faster).
+    pub speedup_vs_reference: f64,
+}
+
+impl KernelRecord {
+    /// Build from a kernel [`Stats`] + its reference [`Stats`] at `flops`
+    /// floating-point operations per iteration.
+    pub fn from_stats(kernel: &Stats, reference: &Stats, shape: &str, flops: f64) -> KernelRecord {
+        KernelRecord {
+            kernel: kernel.name.clone(),
+            shape: shape.to_string(),
+            mean_ns: kernel.mean.as_nanos() as f64,
+            gflops: flops / kernel.mean_secs() / 1e9,
+            speedup_vs_reference: reference.mean_secs() / kernel.mean_secs(),
+        }
+    }
+}
+
+/// Write kernel comparison records as JSON (`BENCH_kernels.json` schema).
+pub fn write_kernel_json(
+    path: impl AsRef<std::path::Path>,
+    records: &[KernelRecord],
+) -> std::io::Result<()> {
+    use crate::json::{obj, to_string, Value};
+    let rows: Vec<Value> = records
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("kernel", Value::Str(r.kernel.clone())),
+                ("shape", Value::Str(r.shape.clone())),
+                ("mean_ns", Value::Num(r.mean_ns)),
+                ("gflops", Value::Num(r.gflops)),
+                ("speedup_vs_reference", Value::Num(r.speedup_vs_reference)),
+            ])
+        })
+        .collect();
+    std::fs::write(path, to_string(&Value::Arr(rows)))
+}
+
 /// `BENCH_QUICK=1` selects the short profile (used by `cargo test` smoke).
 pub fn from_env() -> Bench {
     if std::env::var("BENCH_QUICK").is_ok() {

@@ -49,12 +49,19 @@ impl DynamicBatcher {
     /// Is any tier ready to flush at `now`?  Ready = full batch available OR
     /// oldest entry has exceeded the deadline.
     pub fn ready_tier(&self, now: Instant) -> Option<usize> {
-        // Full batches first (throughput), then expired deadlines (latency),
-        // preferring the tier with the oldest head.
-        for (i, q) in self.queues.iter().enumerate() {
-            if q.len() >= self.max_batch {
-                return Some(i);
-            }
+        // Full batches first (throughput), then expired deadlines (latency).
+        // Among multiple full queues, prefer the one with the oldest head —
+        // the lowest-index scan this replaced starved higher tiers whenever
+        // a low tier refilled faster than it drained.  Matches the fairness
+        // rule of the deadline path below.
+        let full = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.len() >= self.max_batch)
+            .min_by_key(|(_, q)| q.front().map(|p| p.enqueued));
+        if let Some((i, _)) = full {
+            return Some(i);
         }
         self.queues
             .iter()
@@ -108,6 +115,23 @@ mod tests {
         let batch = b.take_batch(1);
         assert_eq!(batch.len(), 3);
         assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn full_batch_fairness_prefers_oldest_head() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(3, 2, Duration::from_millis(100));
+        // Tier 2 fills first (older head), tier 0 fills later.  The old
+        // lowest-index scan would pick tier 0 and starve tier 2 forever
+        // under sustained low-tier load.
+        b.push(2, req(1), now);
+        b.push(2, req(2), now + Duration::from_millis(1));
+        b.push(0, req(3), now + Duration::from_millis(5));
+        b.push(0, req(4), now + Duration::from_millis(6));
+        assert_eq!(b.ready_tier(now + Duration::from_millis(7)), Some(2));
+        // After draining tier 2, tier 0 is next.
+        b.take_batch(2);
+        assert_eq!(b.ready_tier(now + Duration::from_millis(7)), Some(0));
     }
 
     #[test]

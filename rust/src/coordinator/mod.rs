@@ -1,17 +1,18 @@
 //! Elastic serving coordinator — the L3 deployment layer of the paper's
 //! "train-once, deploy-everywhere" story.
 //!
-//! A single consolidated parameter set yields one GAR submodel executable per
-//! budget tier (`serve_gar_t{i}` artifacts); the coordinator routes incoming
-//! requests to tiers by SLO policy, batches them dynamically (max-batch /
-//! deadline), executes on the PJRT runtime, and reports latency/throughput
-//! metrics per tier.
+//! A single consolidated parameter set yields one GAR submodel per budget
+//! tier; the coordinator routes incoming requests to tiers by SLO policy,
+//! batches them dynamically (max-batch / deadline), executes on the native
+//! kernel backend ([`crate::runtime::native`]), and reports
+//! latency/throughput metrics per tier.  No PJRT/XLA required — the PJRT
+//! registry survives behind the `pjrt` feature.
 //!
 //! Threading: an ingest thread replays the trace through an mpsc channel
-//! (only `Request`s cross threads); the main loop owns the PJRT engine (the
-//! `xla` crate's client wraps raw pointers and is not `Send`), pulls
-//! requests, and drives the batcher — the same ownership layout a
-//! single-device vLLM-style worker uses.
+//! (only `Request`s cross threads); the main loop owns the registry and its
+//! scratch arena, pulls requests, and drives the batcher — the same
+//! ownership layout a single-device vLLM-style worker uses.  The kernels
+//! themselves fan out over `std::thread::scope` inside each forward.
 
 mod batcher;
 mod metrics;
@@ -22,34 +23,42 @@ mod server;
 pub use batcher::{DynamicBatcher, Pending};
 pub use metrics::{LatencyStats, Metrics};
 pub use policy::{Policy, PolicyKind};
-pub use registry::SubmodelRegistry;
+#[cfg(feature = "pjrt")]
+pub use registry::PjrtRegistry;
+pub use registry::{SubmodelRegistry, Tier};
 pub use server::{serve_trace, ServeCfg, ServeReport};
 
 use anyhow::{Context, Result};
 
 use crate::cli::Args;
 use crate::data::{TraceCfg, TraceGen};
-use crate::runtime::Engine;
+use crate::training::params::{
+    decompose_teacher, random_teacher, student_from_factors, ParamSet,
+};
 
-/// `repro serve [--requests N] [--rate R] [--policy static|adaptive]`
-pub fn run_cli(args: &Args) -> Result<()> {
-    let engine = Engine::new(crate::artifacts_dir()).context("engine init")?;
-    let cfg = engine.manifest.config.clone();
-
-    // Student params: prefer the consolidated pipeline checkpoint.
-    let stem = crate::training::pipeline::stage_dir().join("student_kd");
-    let student = if crate::training::ckpt::exists(&stem) {
+/// Student params for serving: the consolidated pipeline checkpoint when
+/// present, else a freshly decomposed random teacher (mechanics demo).
+pub fn serving_student(cfg: &crate::runtime::ModelConfig, seed: u64) -> Result<ParamSet> {
+    let stem = crate::training::stage_dir().join("student_kd");
+    if crate::training::ckpt::exists(&stem) {
         eprintln!("[serve] using consolidated student checkpoint");
-        crate::training::ckpt::load(&stem)?
-    } else {
-        eprintln!("[serve] no checkpoint; decomposing fresh teacher (mechanics demo)");
-        let teacher = crate::training::params::ParamSet::from_specs(
-            &engine.manifest.teacher_init,
-            engine.manifest.load_teacher_init()?,
-        );
-        let factors = crate::training::params::decompose_teacher(&cfg, &teacher, None)?;
-        crate::training::params::student_from_factors(&cfg, &teacher, &factors)?
-    };
+        return crate::training::ckpt::load(&stem);
+    }
+    eprintln!("[serve] no checkpoint; decomposing a fresh random teacher (mechanics demo)");
+    let teacher = random_teacher(cfg, seed);
+    let factors = decompose_teacher(cfg, &teacher, None)?;
+    student_from_factors(cfg, &teacher, &factors)
+}
+
+/// `repro serve [--requests N] [--rate R] [--policy static|adaptive]
+/// [--config base|tiny]`
+pub fn run_cli(args: &Args) -> Result<()> {
+    let cfg = crate::config::load_model_config(args.get_or("config", "base"))
+        .context("model config")?;
+    let seed = args.u64_or("seed", 77)?;
+    let student = serving_student(&cfg, seed ^ 0x5eed)?;
+    let mut registry =
+        SubmodelRegistry::load_native(&cfg, &student, None).context("registry load")?;
 
     let corpus = crate::data::Corpus::generate(crate::training::CORPUS_BYTES, 5);
     let trace_cfg = TraceCfg {
@@ -57,7 +66,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         rate: args.f64_or("rate", 100.0)?,
         seq_len: cfg.seq_len,
         vocab: cfg.vocab,
-        seed: args.u64_or("seed", 77)?,
+        seed,
         ..Default::default()
     };
     let trace = TraceGen::new(trace_cfg, &corpus.heldout).generate();
@@ -71,7 +80,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         policy,
         ..Default::default()
     };
-    let report = serve_trace(&engine, &student, trace, &serve_cfg)?;
+    let report = serve_trace(&mut registry, trace, &serve_cfg)?;
     report.print();
 
     let path = crate::results_dir().join("serving_report.json");

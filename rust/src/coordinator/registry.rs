@@ -1,22 +1,27 @@
-//! Submodel registry: one compiled GAR executable + device-resident weights
-//! per budget tier.
+//! Submodel registry: one re-gauged GAR submodel per budget tier.
+//!
+//! The default backend is [`crate::runtime::native`]: tiers share a single
+//! preallocated [`Scratch`], so the serving hot path performs zero heap
+//! allocations per request once loaded.  The PJRT-executable variant
+//! ([`PjrtRegistry`]) survives behind the `pjrt` feature for machines with
+//! the XLA toolchain.
 
 use anyhow::{ensure, Result};
 
-use crate::runtime::{DeviceTensor, Engine, Executable, Tensor};
-use crate::training::params::{gar_params_for, ParamSet};
+use crate::runtime::native::{uniform_budget_profile, GarSubmodel, Scratch};
+use crate::runtime::ModelConfig;
+use crate::training::params::ParamSet;
 
 /// One deployable tier.
 pub struct Tier {
     pub idx: usize,
     /// Budget fraction in (0, 1].
     pub budget: f64,
-    /// Rank profile baked into the executable.
+    /// Rank profile baked into the submodel.
     pub profile: Vec<usize>,
     /// Inference parameter count (GAR form).
     pub params: usize,
-    exe: std::sync::Arc<Executable>,
-    weights: Vec<DeviceTensor>,
+    model: GarSubmodel,
 }
 
 /// Registry over all serving tiers, ordered by ascending budget.
@@ -25,12 +30,99 @@ pub struct SubmodelRegistry {
     pub batch: usize,
     pub seq_len: usize,
     pub vocab: usize,
+    scratch: Scratch,
 }
 
 impl SubmodelRegistry {
+    /// Re-gauge the student's factors at every serving tier.  `profiles`
+    /// supplies one rank profile per tier (e.g. from DP selection); when
+    /// `None`, each tier gets the uniform budget profile.
+    pub fn load_native(
+        cfg: &ModelConfig,
+        student: &ParamSet,
+        profiles: Option<&[Vec<usize>]>,
+    ) -> Result<SubmodelRegistry> {
+        ensure!(!cfg.serve_tiers.is_empty(), "no serving tiers configured");
+        if let Some(ps) = profiles {
+            ensure!(
+                ps.len() == cfg.serve_tiers.len(),
+                "{} profiles for {} tiers",
+                ps.len(),
+                cfg.serve_tiers.len()
+            );
+        }
+        let mut tiers = Vec::with_capacity(cfg.serve_tiers.len());
+        for (i, &budget) in cfg.serve_tiers.iter().enumerate() {
+            let profile = match profiles {
+                Some(ps) => ps[i].clone(),
+                None => uniform_budget_profile(cfg, budget),
+            };
+            let model = GarSubmodel::from_student(cfg, student, &profile)?;
+            tiers.push(Tier { idx: i, budget, profile, params: model.n_params, model });
+        }
+        let scratch = Scratch::new(
+            cfg.batch_serve * cfg.seq_len,
+            cfg.d_model,
+            cfg.seq_len,
+            cfg.vocab,
+        );
+        Ok(SubmodelRegistry {
+            tiers,
+            batch: cfg.batch_serve,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            scratch,
+        })
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Run one batch (row-major `(batch, seq_len)` tokens, padded to the
+    /// fixed serving batch) on a tier; returns the logits
+    /// `(batch·seq_len, vocab)` borrowed from the shared scratch.
+    pub fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]> {
+        ensure!(tier < self.tiers.len(), "tier {tier} out of range");
+        ensure!(tokens.len() == self.batch * self.seq_len, "bad batch size");
+        let (batch, seq_len, vocab) = (self.batch, self.seq_len, self.vocab);
+        let Self { tiers, scratch, .. } = self;
+        tiers[tier].model.forward(tokens, batch, scratch)?;
+        Ok(scratch.logits(batch * seq_len, vocab))
+    }
+
+    /// Scratch buffer identity (tests assert it never reallocates).
+    pub fn scratch_fingerprint(&self) -> Vec<usize> {
+        self.scratch.fingerprint()
+    }
+}
+
+/// PJRT-backed registry: one compiled GAR executable + device-resident
+/// weights per tier (requires `make artifacts` and the `xla` crate).
+#[cfg(feature = "pjrt")]
+pub struct PjrtRegistry {
+    pub tiers: Vec<PjrtTier>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+#[cfg(feature = "pjrt")]
+pub struct PjrtTier {
+    pub idx: usize,
+    pub budget: f64,
+    pub profile: Vec<usize>,
+    pub params: usize,
+    exe: std::sync::Arc<crate::runtime::Executable>,
+    weights: Vec<crate::runtime::DeviceTensor>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtRegistry {
     /// Load every `serve_gar_t{i}` artifact, re-gauge the student's factors
     /// per tier profile, and pin the weights on device.
-    pub fn load(engine: &Engine, student: &ParamSet) -> Result<SubmodelRegistry> {
+    pub fn load(engine: &crate::runtime::Engine, student: &ParamSet) -> Result<PjrtRegistry> {
+        use crate::training::params::gar_params_for;
         let cfg = engine.manifest.config.clone();
         let mut tiers = Vec::new();
         for (i, &budget) in cfg.serve_tiers.iter().enumerate() {
@@ -40,7 +132,7 @@ impl SubmodelRegistry {
             let host = gar_params_for(&cfg, student, &spec)?;
             let params = host.iter().map(|t| t.len()).sum();
             let weights = engine.to_device_all(&host)?;
-            tiers.push(Tier {
+            tiers.push(PjrtTier {
                 idx: i,
                 budget,
                 profile: spec.profile.clone().unwrap_or_default(),
@@ -50,7 +142,7 @@ impl SubmodelRegistry {
             });
         }
         ensure!(!tiers.is_empty(), "no serving tiers in manifest");
-        Ok(SubmodelRegistry {
+        Ok(PjrtRegistry {
             tiers,
             batch: cfg.batch_serve,
             seq_len: cfg.seq_len,
@@ -58,13 +150,14 @@ impl SubmodelRegistry {
         })
     }
 
-    pub fn n_tiers(&self) -> usize {
-        self.tiers.len()
-    }
-
-    /// Run one batch (row-major `(batch, seq_len)` tokens) on a tier;
-    /// returns logits as a host tensor `(batch, seq_len, vocab)`.
-    pub fn infer(&self, engine: &Engine, tier: usize, tokens: Vec<i32>) -> Result<Tensor> {
+    /// Run one batch on a tier; returns logits as a host tensor.
+    pub fn infer(
+        &self,
+        engine: &crate::runtime::Engine,
+        tier: usize,
+        tokens: Vec<i32>,
+    ) -> Result<crate::runtime::Tensor> {
+        use crate::runtime::Tensor;
         let t = &self.tiers[tier];
         ensure!(tokens.len() == self.batch * self.seq_len, "bad batch size");
         let tok = engine.to_device(&Tensor::i32(vec![self.batch, self.seq_len], tokens))?;
@@ -72,5 +165,34 @@ impl SubmodelRegistry {
         refs.push(tok.buffer());
         let out = t.exe.run_b(&refs)?;
         Tensor::from_literal(&out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::training::params::{decompose_teacher, random_teacher, student_from_factors};
+
+    #[test]
+    fn native_registry_loads_and_infers_all_tiers() {
+        let cfg = crate::config::load_model_config("tiny").unwrap();
+        let teacher = random_teacher(&cfg, 3);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let mut reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+        assert_eq!(reg.n_tiers(), cfg.serve_tiers.len());
+        // Params strictly increase with budget.
+        for w in reg.tiers.windows(2) {
+            assert!(w[0].params < w[1].params, "tier params must ascend");
+        }
+        let tokens = vec![1i32; cfg.batch_serve * cfg.seq_len];
+        let fp = reg.scratch_fingerprint();
+        for tier in 0..reg.n_tiers() {
+            let logits = reg.infer(tier, &tokens).unwrap();
+            assert_eq!(logits.len(), cfg.batch_serve * cfg.seq_len * cfg.vocab);
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+        // The shared scratch never reallocated across tiers/requests.
+        assert_eq!(reg.scratch_fingerprint(), fp);
     }
 }

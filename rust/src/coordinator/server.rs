@@ -1,5 +1,5 @@
 //! The serving loop: ingest thread replays the trace; the main loop routes,
-//! batches, executes, and records metrics.
+//! batches, executes on the native backend, and records metrics.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -8,10 +8,8 @@ use anyhow::Result;
 
 use crate::data::trace::Request;
 use crate::json::{self, Value};
-use crate::runtime::Engine;
-use crate::training::params::ParamSet;
 
-use super::batcher::DynamicBatcher;
+use super::batcher::{DynamicBatcher, Pending};
 use super::metrics::Metrics;
 use super::policy::{Policy, PolicyKind};
 use super::registry::SubmodelRegistry;
@@ -102,14 +100,40 @@ impl ServeReport {
     }
 }
 
-/// Serve a trace to completion.
+/// Execute one batch on a tier: pad tokens into the reusable buffer, run
+/// the native forward, record metrics.  Shared by the steady-state and
+/// drain paths (they were previously copy-pasted).
+fn run_batch(
+    registry: &mut SubmodelRegistry,
+    metrics: &mut Metrics,
+    tokens: &mut Vec<i32>,
+    lats: &mut Vec<Duration>,
+    tier: usize,
+    batch: &[Pending],
+) -> Result<()> {
+    let fill = batch.len();
+    let (cap, seq) = (registry.batch, registry.seq_len);
+    tokens.clear();
+    for p in batch {
+        tokens.extend_from_slice(&p.req.tokens);
+    }
+    tokens.resize(cap * seq, 0);
+    let exec_t0 = Instant::now();
+    let _logits = registry.infer(tier, tokens)?;
+    let exec = exec_t0.elapsed();
+    let done = Instant::now();
+    lats.clear();
+    lats.extend(batch.iter().map(|p| done.duration_since(p.enqueued)));
+    metrics.record_batch(tier, fill, cap, exec, lats);
+    Ok(())
+}
+
+/// Serve a trace to completion over a loaded registry.
 pub fn serve_trace(
-    engine: &Engine,
-    student: &ParamSet,
+    registry: &mut SubmodelRegistry,
     trace: Vec<Request>,
     cfg: &ServeCfg,
 ) -> Result<ServeReport> {
-    let registry = SubmodelRegistry::load(engine, student)?;
     let n_tiers = registry.n_tiers();
     let policy = Policy::new(cfg.policy, n_tiers);
     let mut batcher = DynamicBatcher::new(
@@ -119,6 +143,9 @@ pub fn serve_trace(
     );
     let mut metrics = Metrics::new(n_tiers);
     let mut tier_requests = vec![0usize; n_tiers];
+    // Reused across batches so the hot path stays allocation-free.
+    let mut tokens: Vec<i32> = Vec::with_capacity(registry.batch * registry.seq_len);
+    let mut lats: Vec<Duration> = Vec::with_capacity(registry.batch);
 
     // Ingest thread: replays arrivals on the trace's timeline.
     let (tx, rx) = mpsc::channel::<Request>();
@@ -161,22 +188,7 @@ pub fn serve_trace(
         let now = Instant::now();
         if let Some(tier) = batcher.ready_tier(now) {
             let batch = batcher.take_batch(tier);
-            let fill = batch.len();
-            // Pad to the executable's fixed batch.
-            let mut tokens = Vec::with_capacity(registry.batch * registry.seq_len);
-            for p in &batch {
-                tokens.extend_from_slice(&p.req.tokens);
-            }
-            for _ in fill..registry.batch {
-                tokens.extend(std::iter::repeat(0i32).take(registry.seq_len));
-            }
-            let exec_t0 = Instant::now();
-            let _logits = registry.infer(engine, tier, tokens)?;
-            let exec = exec_t0.elapsed();
-            let done = Instant::now();
-            let lats: Vec<Duration> =
-                batch.iter().map(|p| done.duration_since(p.enqueued)).collect();
-            metrics.record_batch(tier, fill, registry.batch, exec, &lats);
+            run_batch(registry, &mut metrics, &mut tokens, &mut lats, tier, &batch)?;
         } else if open {
             // Idle: wait for the next deadline or a short poll tick.
             let wait = batcher
@@ -185,30 +197,13 @@ pub fn serve_trace(
                 .min(Duration::from_millis(2));
             std::thread::sleep(wait.max(Duration::from_micros(100)));
         } else if batcher.depth() > 0 {
-            // Channel closed; force-flush remaining by pretending deadlines
-            // expired (take the deepest queue).
-            let tier = (0..n_tiers)
-                .max_by_key(|&t| batcher.tier_depth(t))
-                .unwrap();
+            // Channel closed; force-flush what remains, deepest queue first.
+            let tier = (0..n_tiers).max_by_key(|&t| batcher.tier_depth(t)).unwrap();
             if batcher.tier_depth(tier) == 0 {
                 break;
             }
             let batch = batcher.take_batch(tier);
-            let fill = batch.len();
-            let mut tokens = Vec::with_capacity(registry.batch * registry.seq_len);
-            for p in &batch {
-                tokens.extend_from_slice(&p.req.tokens);
-            }
-            for _ in fill..registry.batch {
-                tokens.extend(std::iter::repeat(0i32).take(registry.seq_len));
-            }
-            let exec_t0 = Instant::now();
-            let _ = registry.infer(engine, tier, tokens)?;
-            let exec = exec_t0.elapsed();
-            let done = Instant::now();
-            let lats: Vec<Duration> =
-                batch.iter().map(|p| done.duration_since(p.enqueued)).collect();
-            metrics.record_batch(tier, fill, registry.batch, exec, &lats);
+            run_batch(registry, &mut metrics, &mut tokens, &mut lats, tier, &batch)?;
         }
     }
     let wall_s = start.elapsed().as_secs_f64();

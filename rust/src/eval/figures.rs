@@ -9,11 +9,16 @@
 
 use anyhow::{bail, Result};
 
-use crate::baselines::{controlled, transformer};
+use crate::baselines::controlled;
+#[cfg(feature = "pjrt")]
+use crate::baselines::transformer;
 use crate::cli::Args;
 use crate::config::RunConfig;
+#[cfg(feature = "pjrt")]
 use crate::data::domains::Domain;
-use crate::data::{Corpus, Digits, TokenBatcher};
+#[cfg(feature = "pjrt")]
+use crate::data::{Corpus, TokenBatcher};
+use crate::data::Digits;
 use crate::eval::report::{ascii_chart, write_series_csv, Series, Table};
 use crate::flexrank::consolidate::{consolidate, ConsolidateCfg, Target};
 use crate::flexrank::dp::{dp_rank_selection, Candidate};
@@ -21,7 +26,9 @@ use crate::flexrank::masks::RankProfile;
 use crate::flexrank::theory::{self, LinearFactors, Strategy};
 use crate::linalg::Mat;
 use crate::rng::Rng;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use crate::training::{driver, lora, pipeline, CORPUS_BYTES};
 
 pub fn run_cli(args: &Args) -> Result<()> {
@@ -33,13 +40,19 @@ pub fn run_cli(args: &Args) -> Result<()> {
     match which {
         "fig2" => fig2(args),
         "fig3" => fig3(args),
+        #[cfg(feature = "pjrt")]
         "fig4" => fig4(args),
+        #[cfg(feature = "pjrt")]
         "fig5" => fig5(args),
+        #[cfg(feature = "pjrt")]
         "fig6" => fig6(args),
+        #[cfg(feature = "pjrt")]
         "fig7a" => fig7a(args),
+        #[cfg(feature = "pjrt")]
         "fig7b" => fig7b(args),
         "fig8" => fig8(args),
         "fig9" => fig9(args),
+        #[cfg(feature = "pjrt")]
         "fig10" => fig10(args),
         "all-controlled" => {
             fig2(args)?;
@@ -47,13 +60,20 @@ pub fn run_cli(args: &Args) -> Result<()> {
             fig8(args)?;
             fig9(args)
         }
+        #[cfg(not(feature = "pjrt"))]
+        "fig4" | "fig5" | "fig6" | "fig7a" | "fig7b" | "fig10" => {
+            bail!("figure '{which}' runs over the AOT artifacts; rebuild with --features pjrt")
+        }
         other => bail!("unknown figure '{other}'"),
     }
 }
 
 pub fn run_table_cli(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
+        #[cfg(feature = "pjrt")]
         Some("tab1") => tab1(args),
+        #[cfg(not(feature = "pjrt"))]
+        Some("tab1") => bail!("tab1 runs over the AOT artifacts; rebuild with --features pjrt"),
         other => bail!("unknown table {other:?} (expected tab1)"),
     }
 }
@@ -201,6 +221,7 @@ fn fig3(args: &Args) -> Result<()> {
 // Fig. 4 — accuracy/loss vs budget: FlexRank vs SVD / DataSVD / ACIP-like
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn fig4(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
     let engine = Engine::new(crate::artifacts_dir())?;
@@ -262,6 +283,7 @@ fn fig4(args: &Args) -> Result<()> {
 // Fig. 5 — beyond rank-based: pruner-like, layerskip-like, independent
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn fig5(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
     let engine = Engine::new(crate::artifacts_dir())?;
@@ -328,6 +350,7 @@ fn fig5(args: &Args) -> Result<()> {
 // Fig. 6 — compression-profile heatmaps over submodels
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn fig6(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
     let engine = Engine::new(crate::artifacts_dir())?;
@@ -362,6 +385,7 @@ fn fig6(args: &Args) -> Result<()> {
 // Fig. 7a — calibration sample-count ablation for DataSVD
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn fig7a(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
     let engine = Engine::new(crate::artifacts_dir())?;
@@ -408,6 +432,7 @@ fn fig7a(args: &Args) -> Result<()> {
 // Fig. 7b — local (per-layer optimal) vs global (e2e) nestedness
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn fig7b(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
     let engine = Engine::new(crate::artifacts_dir())?;
@@ -712,6 +737,7 @@ fn spearman(a: &[f64], b: &[f64]) -> f64 {
 // Fig. 10 — GAR vs naive low-rank vs dense forward cost
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn fig10(args: &Args) -> Result<()> {
     let engine = Engine::new(crate::artifacts_dir())?;
     let cfg = engine.manifest.config.clone();
@@ -777,6 +803,7 @@ fn fig10(args: &Args) -> Result<()> {
 // Tab. 1 — LoRA post-adaptation across elastic sizes
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn tab1(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
     let engine = Engine::new(crate::artifacts_dir())?;

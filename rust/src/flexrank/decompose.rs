@@ -10,7 +10,7 @@
 //! Convention note: model weights arrive row-convention (`y = x W`,
 //! `W : n×m`); the paper's matrix is `W_paper = Wᵀ`.
 
-use crate::linalg::{psd_sqrt, svd, Mat};
+use crate::linalg::{kernels, psd_sqrt, svd, Mat};
 
 /// Online accumulator for one layer's activation second moment.
 #[derive(Debug, Clone)]
@@ -24,13 +24,11 @@ impl CovAccum {
         CovAccum { sigma: Mat::zeros(n, n), count: 0 }
     }
 
-    /// Add a batch of activations X (rows = samples).
+    /// Add a batch of activations X (rows = samples): `Σ += XᵀX` in one
+    /// panel-packed kernel call (no per-row temporaries).
     pub fn add_batch(&mut self, x: &Mat) {
         assert_eq!(x.cols, self.sigma.rows);
-        for i in 0..x.rows {
-            let row = x.row(i).to_vec();
-            self.sigma.add_outer(1.0, &row, &row);
-        }
+        kernels::matmul_tn_acc(x, x, &mut self.sigma);
         self.count += x.rows;
     }
 

@@ -8,7 +8,7 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::linalg::{inverse, lu_solve_many, Mat};
+use crate::linalg::{inverse, kernels, lu_solve_many, Mat};
 
 /// GAR form of a rank-r layer: `Ũ = [I_r; Û]`, `Ṽ`.
 #[derive(Debug, Clone)]
@@ -46,19 +46,39 @@ impl Gar {
         (m + n - r) * r
     }
 
+    /// Output dimension `m = r + (m − r)`.
+    pub fn out_dim(&self) -> usize {
+        self.rank + self.u_hat.rows
+    }
+
     /// Forward: `y = [t, t Ûᵀ]` with `t = x Ṽ`; x is (B, n) row-major.
+    ///
+    /// Fused single-kernel path: `t` lands in scratch once, and the output
+    /// stage streams `[t, t·Ûᵀ]` directly into `y` — no intermediate `rest`
+    /// matrix and no assembly copy loop (the old implementation is preserved
+    /// as [`crate::linalg::reference::gar_forward`]).
     pub fn forward(&self, x: &Mat) -> Mat {
-        let t = x * &self.v_tilde; // (B, r)
-        if self.u_hat.rows == 0 {
-            return t;
-        }
-        let rest = &t * &self.u_hat.t(); // (B, m - r)
-        let m = self.rank + self.u_hat.rows;
-        let mut y = Mat::zeros(x.rows, m);
-        for i in 0..x.rows {
-            y.row_mut(i)[..self.rank].copy_from_slice(t.row(i));
-            y.row_mut(i)[self.rank..].copy_from_slice(rest.row(i));
-        }
+        let mut t = Mat::zeros(x.rows, self.rank);
+        let mut y = Mat::zeros(x.rows, self.out_dim());
+        self.forward_into(x, &mut t, &mut y);
+        y
+    }
+
+    /// Allocation-free fused forward: `t` is `(B, r)` scratch, `y` the
+    /// `(B, m)` output — both fully overwritten, reusable across calls.
+    pub fn forward_into(&self, x: &Mat, t: &mut Mat, y: &mut Mat) {
+        kernels::matmul_into(x, &self.v_tilde, t);
+        kernels::gar_emit(t, &self.u_hat, y);
+    }
+
+    /// Fused forward drawing scratch from (and returning it to) `arena` —
+    /// zero allocations once the arena is warm.
+    pub fn forward_arena(&self, x: &Mat, arena: &mut kernels::Arena) -> Mat {
+        let mut t = Mat::from_vec(x.rows, self.rank, arena.take(x.rows * self.rank));
+        let m = self.out_dim();
+        let mut y = Mat::from_vec(x.rows, m, arena.take(x.rows * m));
+        self.forward_into(x, &mut t, &mut y);
+        arena.give(t.data);
         y
     }
 
@@ -74,7 +94,7 @@ impl Gar {
                 u_tilde[(self.rank + i, j)] = self.u_hat[(i, j)];
             }
         }
-        &self.v_tilde * &u_tilde.t()
+        kernels::matmul_nt(&self.v_tilde, &u_tilde)
     }
 }
 
@@ -155,6 +175,49 @@ mod tests {
         let x = Mat::randn(3, 8, &mut rng);
         let want = &x * &(&v * &u.t());
         assert!(gar.forward(&x).close_to(&want, 1e-8));
+    }
+
+    #[test]
+    fn property_fused_forward_matches_reference() {
+        use crate::linalg::reference;
+        prop::forall(
+            102,
+            30,
+            |rng| {
+                // Random GAR factors directly (no invertibility concerns),
+                // including the edge shapes: B = 1, n = 1, r = m (empty Û).
+                let n = prop::gen::dim(rng, 1, 12);
+                let m = prop::gen::dim(rng, 1, 12);
+                let r = 1 + rng.below(m);
+                let b = prop::gen::dim(rng, 1, 9);
+                let gar = Gar {
+                    u_hat: Mat::randn(m - r, r, rng),
+                    v_tilde: Mat::randn(n, r, rng),
+                    rank: r,
+                };
+                (gar, Mat::randn(b, n, rng))
+            },
+            |(gar, x)| {
+                let fused = gar.forward(x);
+                let naive = reference::gar_forward(&gar.u_hat, &gar.v_tilde, gar.rank, x);
+                if !fused.close_to(&naive, 1e-10) {
+                    return Err(format!(
+                        "fused/reference mismatch (B={} n={} m={} r={})",
+                        x.rows,
+                        gar.v_tilde.rows,
+                        gar.out_dim(),
+                        gar.rank
+                    ));
+                }
+                // Arena path must agree bit-for-bit with the plain path.
+                let mut arena = crate::linalg::kernels::Arena::new();
+                let a1 = gar.forward_arena(x, &mut arena);
+                if !a1.close_to(&fused, 0.0) {
+                    return Err("arena path diverged".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

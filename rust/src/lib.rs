@@ -3,8 +3,11 @@
 //!
 //! Crate layout mirrors DESIGN.md:
 //!
-//! * [`linalg`] — dense matrix substrate: matmul, QR, Jacobi SVD, symmetric
-//!   eigendecomposition, inverse; everything DataSVD/GAR/theory need.
+//! * [`linalg`] — dense matrix substrate: QR, Jacobi SVD, symmetric
+//!   eigendecomposition, inverse; matmul/transpose/matvec run on
+//!   [`linalg::kernels`] (cache-blocked, panel-packed, multi-threaded f64 +
+//!   f32 micro-kernels, fused GAR emit, scratch arena) with the naive loops
+//!   preserved in [`linalg::reference`] as the property-test oracle.
 //! * [`nn`] — pure-rust trainable networks (manual backprop) for the paper's
 //!   controlled experiments (Figs. 2, 3, 8, 9).
 //! * [`flexrank`] — the paper's contribution: DataSVD decomposition, DP rank
@@ -12,8 +15,10 @@
 //!   probing, Pareto utilities, PTS/ASL/NSL theory, KD consolidation.
 //! * [`baselines`] — every comparison system in the evaluation: plain SVD,
 //!   ACIP-like, LLM-Pruner-like, LayerSkip-like, independent submodels.
-//! * [`runtime`] — PJRT executor over the AOT artifacts (`artifacts/*.hlo.txt`),
-//!   device-resident buffers on the hot path.
+//! * [`runtime`] — execution backends: [`runtime::native`] (GAR submodel
+//!   forwards over the kernel layer, allocation-free serving scratch; the
+//!   default) and the PJRT executor over the AOT artifacts behind the
+//!   `pjrt` feature.
 //! * [`training`] — teacher pretraining + knowledge-consolidation drivers.
 //! * [`coordinator`] — the elastic serving layer: router, dynamic batcher,
 //!   submodel registry, SLO policy, metrics.
@@ -41,8 +46,11 @@ pub mod runtime;
 pub mod training;
 
 /// Canonical repo root (compile-time; binaries run from the workspace).
+/// `CARGO_MANIFEST_DIR` points at `rust/`; configs/artifacts/results live
+/// one level up.
 pub fn repo_root() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    d.parent().map(|p| p.to_path_buf()).unwrap_or(d)
 }
 
 /// Default artifacts directory (`$FLEXRANK_ARTIFACTS` overrides).

@@ -1,0 +1,614 @@
+//! Native compute kernels: cache-blocked, panel-packed, multi-threaded
+//! matmul (f64 and f32 paths), blocked transpose, unrolled matvec, the fused
+//! GAR emit, and a reusable scratch [`Arena`] so hot-path ops stop
+//! allocating per call.
+//!
+//! Design (CPU, row-major):
+//!
+//! * **k-panel blocking** — the inner product dimension is processed in
+//!   panels of [`KC`] rows of B, so the streamed B panel stays L2-resident
+//!   while a block of output rows is updated.  For row-major `A·B` both
+//!   operands stream contiguously, so the classic pack step reduces to
+//!   panel streaming; the one kernel whose access pattern is genuinely
+//!   strided — `Aᵀ·B` (gradient accumulation, covariance grams) — packs the
+//!   A column panel into a thread-local contiguous buffer first.
+//! * **4-way unrolled micro-kernels** — the axpy update accumulates four
+//!   B rows per pass over the output row (4× less write traffic, enough
+//!   independent streams for the FP pipelines to auto-vectorize), and dot
+//!   products carry four accumulators.
+//! * **`std::thread::scope` outer loops** — output row blocks fan out over
+//!   hardware threads above [`PAR_MIN_OPS`] MACs; below that the spawn cost
+//!   dominates and the kernels stay serial.
+//!
+//! The pre-existing naive loops live on in [`super::reference`]; property
+//! tests assert the two agree to 1e-10 across random and degenerate shapes.
+
+use crate::linalg::Mat;
+
+/// Depth of one k-panel (B panel of `KC × n` stays cache-resident).
+pub const KC: usize = 256;
+
+/// MAC count below which kernels stay single-threaded (spawn cost floor).
+pub const PAR_MIN_OPS: usize = 1 << 20;
+
+/// Upper bound on worker threads per kernel call.
+pub const MAX_THREADS: usize = 16;
+
+/// Worker-thread count for a kernel of `ops` MACs.
+fn threads_for(ops: usize) -> usize {
+    if ops < PAR_MIN_OPS {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, MAX_THREADS)
+}
+
+// ---------------------------------------------------------------------------
+// Slice-level kernels, generated for f64 and f32.
+// ---------------------------------------------------------------------------
+
+macro_rules! kernels_for {
+    ($ty:ty, $dot:ident, $axpy4:ident, $mm:ident, $mm_rows:ident,
+     $nt:ident, $nt_rows:ident, $tn_acc:ident) => {
+        /// Four-accumulator dot product.
+        #[inline]
+        pub fn $dot(a: &[$ty], b: &[$ty]) -> $ty {
+            debug_assert_eq!(a.len(), b.len());
+            let n4 = a.len() & !3;
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            let mut i = 0;
+            while i < n4 {
+                s0 += a[i] * b[i];
+                s1 += a[i + 1] * b[i + 1];
+                s2 += a[i + 2] * b[i + 2];
+                s3 += a[i + 3] * b[i + 3];
+                i += 4;
+            }
+            let mut s = (s0 + s1) + (s2 + s3);
+            while i < a.len() {
+                s += a[i] * b[i];
+                i += 1;
+            }
+            s
+        }
+
+        /// Micro-kernel: `orow += Σ_kk aseg[kk] · b_panel_row(kk)`, four B
+        /// rows per pass.  `aseg` and `b_panel` cover the same k-range
+        /// (`b_panel` holds `aseg.len()` rows of length `n`).
+        #[inline]
+        fn $axpy4(aseg: &[$ty], b_panel: &[$ty], n: usize, orow: &mut [$ty]) {
+            debug_assert_eq!(b_panel.len(), aseg.len() * n);
+            debug_assert_eq!(orow.len(), n);
+            let k4 = aseg.len() & !3;
+            let mut kk = 0;
+            while kk < k4 {
+                let a0 = aseg[kk];
+                let a1 = aseg[kk + 1];
+                let a2 = aseg[kk + 2];
+                let a3 = aseg[kk + 3];
+                let b0 = &b_panel[kk * n..kk * n + n];
+                let b1 = &b_panel[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b_panel[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b_panel[(kk + 3) * n..(kk + 3) * n + n];
+                for ((((o, v0), v1), v2), v3) in
+                    orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                {
+                    *o += a0 * *v0 + a1 * *v1 + a2 * *v2 + a3 * *v3;
+                }
+                kk += 4;
+            }
+            while kk < aseg.len() {
+                let av = aseg[kk];
+                if av != 0.0 {
+                    let brow = &b_panel[kk * n..kk * n + n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+                kk += 1;
+            }
+        }
+
+        /// `out = A·B` with `A (m×k)`, `B (k×n)`, all row-major slices.
+        pub fn $mm(a: &[$ty], b: &[$ty], m: usize, k: usize, n: usize, out: &mut [$ty]) {
+            assert_eq!(a.len(), m * k, "matmul: A size");
+            assert_eq!(b.len(), k * n, "matmul: B size");
+            assert_eq!(out.len(), m * n, "matmul: out size");
+            for o in out.iter_mut() {
+                *o = 0.0;
+            }
+            if m == 0 || n == 0 || k == 0 {
+                return;
+            }
+            let nthreads = threads_for(m * k * n).min(m);
+            if nthreads <= 1 {
+                $mm_rows(a, b, k, n, 0, out);
+                return;
+            }
+            let rows_per = (m + nthreads - 1) / nthreads;
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    s.spawn(move || $mm_rows(a, b, k, n, i0, chunk));
+                }
+            });
+        }
+
+        /// Serial worker over output rows `[i0, i0 + chunk.len()/n)`.
+        fn $mm_rows(a: &[$ty], b: &[$ty], k: usize, n: usize, i0: usize, chunk: &mut [$ty]) {
+            let rows = chunk.len() / n;
+            let mut kb = 0;
+            while kb < k {
+                let kend = (kb + KC).min(k);
+                let b_panel = &b[kb * n..kend * n];
+                for i in 0..rows {
+                    let aseg = &a[(i0 + i) * k + kb..(i0 + i) * k + kend];
+                    let orow = &mut chunk[i * n..(i + 1) * n];
+                    $axpy4(aseg, b_panel, n, orow);
+                }
+                kb += KC;
+            }
+        }
+
+        /// `out = A·Bᵀ` with `A (m×k)`, `B (n×k)` — both stream contiguous
+        /// rows, so each output entry is one unrolled dot product.
+        pub fn $nt(a: &[$ty], b: &[$ty], m: usize, k: usize, n: usize, out: &mut [$ty]) {
+            assert_eq!(a.len(), m * k, "matmul_nt: A size");
+            assert_eq!(b.len(), n * k, "matmul_nt: B size");
+            assert_eq!(out.len(), m * n, "matmul_nt: out size");
+            if m == 0 || n == 0 {
+                return;
+            }
+            if k == 0 {
+                for o in out.iter_mut() {
+                    *o = 0.0;
+                }
+                return;
+            }
+            let nthreads = threads_for(m * k * n).min(m);
+            if nthreads <= 1 {
+                $nt_rows(a, b, k, n, 0, out);
+                return;
+            }
+            let rows_per = (m + nthreads - 1) / nthreads;
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    s.spawn(move || $nt_rows(a, b, k, n, i0, chunk));
+                }
+            });
+        }
+
+        fn $nt_rows(a: &[$ty], b: &[$ty], k: usize, n: usize, i0: usize, chunk: &mut [$ty]) {
+            let rows = chunk.len() / n;
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * k..(i0 + i + 1) * k];
+                let orow = &mut chunk[i * n..(i + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = $dot(arow, &b[j * k..(j + 1) * k]);
+                }
+            }
+        }
+
+        /// `out += Aᵀ·B` with `A (k×m)`, `B (k×n)` — the one layout where A
+        /// access is column-strided, so each worker packs its A column panel
+        /// into a contiguous buffer before running the axpy micro-kernel.
+        pub fn $tn_acc(a: &[$ty], b: &[$ty], k: usize, m: usize, n: usize, out: &mut [$ty]) {
+            assert_eq!(a.len(), k * m, "matmul_tn: A size");
+            assert_eq!(b.len(), k * n, "matmul_tn: B size");
+            assert_eq!(out.len(), m * n, "matmul_tn: out size");
+            if m == 0 || n == 0 || k == 0 {
+                return;
+            }
+            let nthreads = threads_for(m * k * n).min(m);
+            let rows_per = (m + nthreads - 1) / nthreads;
+            let worker = |i0: usize, chunk: &mut [$ty]| {
+                let rows = chunk.len() / n;
+                let mut pack = vec![0.0; KC.min(k) * rows];
+                let mut kb = 0;
+                while kb < k {
+                    let kend = (kb + KC).min(k);
+                    let klen = kend - kb;
+                    // Pack A[kb..kend, i0..i0+rows] transposed: row i of the
+                    // pack holds column (i0+i) of A over this k-panel.
+                    for i in 0..rows {
+                        let prow = &mut pack[i * klen..(i + 1) * klen];
+                        for (kk, p) in prow.iter_mut().enumerate() {
+                            *p = a[(kb + kk) * m + i0 + i];
+                        }
+                    }
+                    let b_panel = &b[kb * n..kend * n];
+                    for i in 0..rows {
+                        let aseg = &pack[i * klen..(i + 1) * klen];
+                        let orow = &mut chunk[i * n..(i + 1) * n];
+                        $axpy4(aseg, b_panel, n, orow);
+                    }
+                    kb += KC;
+                }
+            };
+            if nthreads <= 1 {
+                worker(0, out);
+                return;
+            }
+            let worker = &worker;
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    s.spawn(move || worker(i0, chunk));
+                }
+            });
+        }
+    };
+}
+
+kernels_for!(f64, dot_f64, axpy4_f64, matmul_f64, mm_rows_f64, matmul_nt_f64, nt_rows_f64, matmul_tn_acc_f64);
+kernels_for!(f32, dot_f32, axpy4_f32, matmul_f32, mm_rows_f32, matmul_nt_f32, nt_rows_f32, matmul_tn_acc_f32);
+
+// ---------------------------------------------------------------------------
+// Mat-level wrappers (f64 path used by linalg/nn/flexrank).
+// ---------------------------------------------------------------------------
+
+/// Blocked parallel `a · b`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// Allocation-free `out = a · b` (out must be pre-sized `a.rows × b.cols`).
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols), "matmul out dims");
+    matmul_f64(&a.data, &b.data, a.rows, a.cols, b.cols, &mut out.data);
+}
+
+/// `a · bᵀ` without materializing the transpose.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt dim mismatch");
+    let mut out = Mat::zeros(a.rows, b.rows);
+    matmul_nt_f64(&a.data, &b.data, a.rows, a.cols, b.rows, &mut out.data);
+    out
+}
+
+/// `aᵀ · b` without materializing the transpose (panel-packed).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.cols, b.cols);
+    matmul_tn_acc(a, b, &mut out);
+    out
+}
+
+/// `out += aᵀ · b` (gram/gradient accumulation without temporaries).
+pub fn matmul_tn_acc(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows, "matmul_tn dim mismatch");
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols), "matmul_tn out dims");
+    matmul_tn_acc_f64(&a.data, &b.data, a.rows, a.cols, b.cols, &mut out.data);
+}
+
+/// Tile edge for the blocked transpose (fits two f64 tiles in L1).
+const TB: usize = 32;
+
+/// Cache-blocked transpose.
+pub fn transpose(a: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.cols, a.rows);
+    for ib in (0..a.rows).step_by(TB) {
+        let iend = (ib + TB).min(a.rows);
+        for jb in (0..a.cols).step_by(TB) {
+            let jend = (jb + TB).min(a.cols);
+            for i in ib..iend {
+                let arow = &a.data[i * a.cols..(i + 1) * a.cols];
+                for j in jb..jend {
+                    out.data[j * a.rows + i] = arow[j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Allocation-free matvec: `y = a · x`.
+pub fn matvec_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.cols, "matvec dim mismatch");
+    assert_eq!(y.len(), a.rows, "matvec out dims");
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot_f64(&a.data[i * a.cols..(i + 1) * a.cols], x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused GAR emit
+// ---------------------------------------------------------------------------
+
+/// Fused GAR output stage: given `t = x·Ṽ` `(B × r)` and `û (m−r × r)`,
+/// stream `y = [t, t·ûᵀ]` `(B × m)` directly — no intermediate `rest`
+/// matrix, no second pass over the output.
+pub fn gar_emit(t: &Mat, u_hat: &Mat, y: &mut Mat) {
+    let r = t.cols;
+    let mr = u_hat.rows;
+    let m = r + mr;
+    assert!(mr == 0 || u_hat.cols == r, "gar_emit: û rank mismatch");
+    assert_eq!((y.rows, y.cols), (t.rows, m), "gar_emit: out dims");
+    if t.rows == 0 || m == 0 {
+        return;
+    }
+    let nthreads = threads_for(t.rows * r * (mr + 1)).min(t.rows);
+    let worker = |i0: usize, chunk: &mut [f64]| {
+        let rows = chunk.len() / m;
+        for i in 0..rows {
+            let trow = &t.data[(i0 + i) * r..(i0 + i + 1) * r];
+            let yrow = &mut chunk[i * m..(i + 1) * m];
+            yrow[..r].copy_from_slice(trow);
+            for (j, o) in yrow[r..].iter_mut().enumerate() {
+                *o = dot_f64(trow, &u_hat.data[j * r..(j + 1) * r]);
+            }
+        }
+    };
+    if nthreads <= 1 {
+        worker(0, &mut y.data);
+        return;
+    }
+    let rows_per = (t.rows + nthreads - 1) / nthreads;
+    let worker = &worker;
+    std::thread::scope(|s| {
+        for (ci, chunk) in y.data.chunks_mut(rows_per * m).enumerate() {
+            let i0 = ci * rows_per;
+            s.spawn(move || worker(i0, chunk));
+        }
+    });
+}
+
+/// f32 fused GAR emit with an output column offset and stride: writes
+/// `[t, t·ûᵀ]` into `y[row*stride + off ..]` — lets the native serving
+/// backend stream layer outputs straight into a wider activation buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn gar_emit_f32(
+    t: &[f32],
+    rows: usize,
+    r: usize,
+    u_hat: &[f32],
+    mr: usize,
+    y: &mut [f32],
+    stride: usize,
+    off: usize,
+) {
+    let m = r + mr;
+    assert_eq!(t.len(), rows * r, "gar_emit_f32: t size");
+    assert_eq!(u_hat.len(), mr * r, "gar_emit_f32: û size");
+    assert!(off + m <= stride || (rows == 0), "gar_emit_f32: stride too small");
+    assert!(y.len() >= rows * stride, "gar_emit_f32: out size");
+    for i in 0..rows {
+        let trow = &t[i * r..(i + 1) * r];
+        let yrow = &mut y[i * stride + off..i * stride + off + m];
+        yrow[..r].copy_from_slice(trow);
+        for (j, o) in yrow[r..].iter_mut().enumerate() {
+            *o = dot_f32(trow, &u_hat[j * r..(j + 1) * r]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+/// Reusable pool of f64 buffers: `take` hands out a zero-length-agnostic
+/// buffer resized to the request, `give` returns it for reuse.  After
+/// warmup, a fixed take/give pattern performs zero heap allocations.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: Vec<Vec<f64>>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena { free: Vec::new() }
+    }
+
+    /// Check out a buffer of exactly `len` elements (contents unspecified —
+    /// callers overwrite).  Reuses the most recently returned buffer, so a
+    /// fixed take/give cycle settles on stable allocations.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        let mut buf = match self.free.pop() {
+            Some(b) => b,
+            None => Vec::new(),
+        };
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool.
+    pub fn give(&mut self, buf: Vec<f64>) {
+        self.free.push(buf);
+    }
+
+    /// Buffers currently pooled (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::reference;
+    use crate::prop;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matmul_matches_reference_fixed() {
+        let mut rng = Rng::new(400);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (1, 7, 5), (5, 7, 1), (17, 33, 9), (64, 64, 64)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let got = matmul(&a, &b);
+            let want = reference::matmul(&a, &b);
+            assert!(got.close_to(&want, 1e-12), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn property_blocked_matmul_matches_reference() {
+        prop::forall(
+            401,
+            40,
+            |rng| {
+                // Mix random shapes with the degenerate edges (1×n, n×1,
+                // k spanning a KC boundary via the odd sizes).
+                let m = prop::gen::dim(rng, 1, 48);
+                let k = prop::gen::dim(rng, 1, 48);
+                let n = prop::gen::dim(rng, 1, 48);
+                (Mat::randn(m, k, rng), Mat::randn(k, n, rng))
+            },
+            |(a, b)| {
+                let got = matmul(a, b);
+                let want = reference::matmul(a, b);
+                if !got.close_to(&want, 1e-10) {
+                    return Err(format!(
+                        "matmul mismatch at ({}, {}, {})",
+                        a.rows, a.cols, b.cols
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_nt_tn_match_reference() {
+        prop::forall(
+            402,
+            30,
+            |rng| {
+                let m = prop::gen::dim(rng, 1, 24);
+                let k = prop::gen::dim(rng, 1, 24);
+                let n = prop::gen::dim(rng, 1, 24);
+                (Mat::randn(m, k, rng), Mat::randn(n, k, rng), Mat::randn(m, n, rng))
+            },
+            |(a, bt, c)| {
+                // NT: a (m,k) · btᵀ (k,n).
+                let got = matmul_nt(a, bt);
+                let want = reference::matmul(a, &reference::transpose(bt));
+                if !got.close_to(&want, 1e-10) {
+                    return Err("nt mismatch".into());
+                }
+                // TN: aᵀ (k,m) · c' — reuse a as the (k=rows) operand pair:
+                // aᵀ·c with a (m,k) viewed as (K=m rows, M=k cols), c (m,n).
+                let got = matmul_tn(a, c);
+                let want = reference::matmul(&reference::transpose(a), c);
+                if !got.close_to(&want, 1e-10) {
+                    return Err("tn mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matmul_crosses_panel_and_thread_boundaries() {
+        // k > KC exercises the k-panel loop seam; m·k·n ≥ PAR_MIN_OPS with
+        // m ≥ 2 exercises the scoped-thread row split (including a ragged
+        // last chunk via the odd m).  These shapes MUST stay above those
+        // thresholds or the riskiest indexing paths ship untested.
+        let mut rng = Rng::new(407);
+        let (m, k, n) = (37, KC + 45, 112); // 37·301·112 ≈ 1.25M ≥ 1<<20
+        assert!(k > KC && m * k * n >= PAR_MIN_OPS);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        assert!(matmul(&a, &b).close_to(&reference::matmul(&a, &b), 1e-10));
+        // Same thresholds for the packed Aᵀ·B kernel: A (k×m), B (k×n).
+        let at = Mat::randn(k, m, &mut rng);
+        let bb = Mat::randn(k, n, &mut rng);
+        let want = reference::matmul(&reference::transpose(&at), &bb);
+        assert!(matmul_tn(&at, &bb).close_to(&want, 1e-10));
+        // And the NT kernel at threaded size.
+        let bt = Mat::randn(n, k, &mut rng);
+        let want = reference::matmul(&a, &reference::transpose(&bt));
+        assert!(matmul_nt(&a, &bt).close_to(&want, 1e-10));
+    }
+
+    #[test]
+    fn gar_emit_crosses_thread_boundary() {
+        // rows·r·(mr+1) ≥ PAR_MIN_OPS forces the threaded emit path.
+        let mut rng = Rng::new(408);
+        let (rows, r, mr) = (257, 64, 80);
+        assert!(rows * r * (mr + 1) >= PAR_MIN_OPS);
+        let t = Mat::randn(rows, r, &mut rng);
+        let u_hat = Mat::randn(mr, r, &mut rng);
+        let mut y = Mat::zeros(rows, r + mr);
+        gar_emit(&t, &u_hat, &mut y);
+        // Reference: [t | t·ûᵀ].
+        let rest = reference::matmul(&t, &reference::transpose(&u_hat));
+        for i in 0..rows {
+            for j in 0..r {
+                assert!((y[(i, j)] - t[(i, j)]).abs() == 0.0);
+            }
+            for j in 0..mr {
+                assert!((y[(i, r + j)] - rest[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn tn_acc_accumulates() {
+        let mut rng = Rng::new(403);
+        let a = Mat::randn(10, 4, &mut rng);
+        let b = Mat::randn(10, 6, &mut rng);
+        let mut acc = Mat::randn(4, 6, &mut rng);
+        let base = acc.clone();
+        matmul_tn_acc(&a, &b, &mut acc);
+        let want = &base + &reference::matmul(&reference::transpose(&a), &b);
+        assert!(acc.close_to(&want, 1e-10));
+    }
+
+    #[test]
+    fn transpose_matches_reference() {
+        let mut rng = Rng::new(404);
+        for &(m, n) in &[(1usize, 1usize), (3, 70), (70, 3), (65, 65)] {
+            let a = Mat::randn(m, n, &mut rng);
+            assert!(transpose(&a).close_to(&reference::transpose(&a), 0.0));
+        }
+    }
+
+    #[test]
+    fn matvec_matches_reference() {
+        let mut rng = Rng::new(405);
+        let a = Mat::randn(13, 29, &mut rng);
+        let x: Vec<f64> = (0..29).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 13];
+        matvec_into(&a, &x, &mut y);
+        let want = reference::matvec(&a, &x);
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn f32_matmul_matches_f64_downcast() {
+        let mut rng = Rng::new(406);
+        let (m, k, n) = (19, 37, 11);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let a32 = a.to_f32();
+        let b32 = b.to_f32();
+        let mut out = vec![0f32; m * n];
+        matmul_f32(&a32, &b32, m, k, n, &mut out);
+        let want = reference::matmul(&a, &b);
+        for (g, w) in out.iter().zip(&want.data) {
+            let scale = 1.0 + w.abs();
+            assert!(((*g as f64) - w).abs() < 1e-4 * scale, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn arena_reuses_buffers() {
+        let mut arena = Arena::new();
+        let b1 = arena.take(64);
+        let p1 = b1.as_ptr() as usize;
+        arena.give(b1);
+        let b2 = arena.take(64);
+        assert_eq!(b2.as_ptr() as usize, p1, "arena must hand back the same buffer");
+        assert_eq!(b2.len(), 64);
+        arena.give(b2);
+        assert_eq!(arena.pooled(), 1);
+    }
+}

@@ -95,13 +95,7 @@ impl Mat {
     }
 
     pub fn t(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out[(j, i)] = self[(i, j)];
-            }
-        }
-        out
+        super::kernels::transpose(self)
     }
 
     /// Columns [lo, lo+k).
@@ -165,16 +159,9 @@ impl Mat {
 
     /// Matrix-vector product.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
-        (0..self.rows)
-            .map(|i| {
-                self.row(i)
-                    .iter()
-                    .zip(x)
-                    .map(|(a, b)| a * b)
-                    .sum::<f64>()
-            })
-            .collect()
+        let mut y = vec![0.0; self.rows];
+        super::kernels::matvec_into(self, x, &mut y);
+        y
     }
 
     /// `self * diag(d)` (column scaling).
@@ -226,24 +213,10 @@ impl IndexMut<(usize, usize)> for Mat {
 impl Mul for &Mat {
     type Output = Mat;
 
-    /// ikj-ordered matmul (cache-friendly; sizes here are ≤ ~1024).
+    /// Blocked parallel matmul (see [`super::kernels`]; naive ikj loop lives
+    /// in [`super::reference`]).
     fn mul(self, rhs: &Mat) -> Mat {
-        assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
-        let mut out = Mat::zeros(self.rows, rhs.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
-                }
-                let rrow = rhs.row(k);
-                let orow = out.row_mut(i);
-                for (o, r) in orow.iter_mut().zip(rrow) {
-                    *o += a * r;
-                }
-            }
-        }
-        out
+        super::kernels::matmul(self, rhs)
     }
 }
 

@@ -1,17 +1,22 @@
 //! Dense linear-algebra substrate (f64, row-major).
 //!
 //! Everything FlexRank's offline stages need, implemented from scratch:
-//! blocked matmul, Householder QR, one-sided Jacobi SVD, cyclic-Jacobi
-//! symmetric eigendecomposition, LU solve/inverse, and PSD square roots
-//! (for the whitening step of DataSVD, App. C.1).
+//! Householder QR, one-sided Jacobi SVD, cyclic-Jacobi symmetric
+//! eigendecomposition, LU solve/inverse, and PSD square roots (for the
+//! whitening step of DataSVD, App. C.1).  Matmul/transpose/matvec route
+//! through [`kernels`] — cache-blocked, panel-packed, multi-threaded f64/f32
+//! micro-kernels — with the seed's naive loops preserved in [`reference`]
+//! as the property-test oracle.
 //!
 //! Sizes in this repo are ≤ ~1024, where Jacobi methods are accurate and
 //! fast enough; precision is f64 internally even though model weights are
 //! f32 (decomposition quality dominates the error budget).
 
 mod eig;
+pub mod kernels;
 mod mat;
 mod qr;
+pub mod reference;
 mod solve;
 mod svd;
 

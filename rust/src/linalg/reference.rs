@@ -1,0 +1,64 @@
+//! Naive reference implementations — the seed's scalar loops, preserved
+//! verbatim as the correctness oracle for [`super::kernels`].
+//!
+//! Property tests assert `kernels ≡ reference` to 1e-10 over random and
+//! degenerate shapes; benches report kernel speedup relative to these.
+//! Nothing on a hot path should call into this module.
+
+use crate::linalg::Mat;
+
+/// ikj-ordered scalar matmul (the seed `Mul` impl, zero-skip included).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a[(i, k)];
+            if av == 0.0 {
+                continue;
+            }
+            let rrow = b.row(k);
+            let orow = out.row_mut(i);
+            for (o, r) in orow.iter_mut().zip(rrow) {
+                *o += av * r;
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise double-loop transpose (the seed `Mat::t`).
+pub fn transpose(a: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.cols, a.rows);
+    for i in 0..a.rows {
+        for j in 0..a.cols {
+            out[(j, i)] = a[(i, j)];
+        }
+    }
+    out
+}
+
+/// Row-wise scalar matvec (the seed `Mat::matvec`).
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), a.cols);
+    (0..a.rows)
+        .map(|i| a.row(i).iter().zip(x).map(|(p, q)| p * q).sum::<f64>())
+        .collect()
+}
+
+/// The seed GAR forward: two full matmuls (`t = x·Ṽ`, `rest = t·ûᵀ`) plus a
+/// row-copy loop assembling `[t, rest]` — three intermediate allocations.
+pub fn gar_forward(u_hat: &Mat, v_tilde: &Mat, rank: usize, x: &Mat) -> Mat {
+    let t = matmul(x, v_tilde); // (B, r)
+    if u_hat.rows == 0 {
+        return t;
+    }
+    let rest = matmul(&t, &transpose(u_hat)); // (B, m - r)
+    let m = rank + u_hat.rows;
+    let mut y = Mat::zeros(x.rows, m);
+    for i in 0..x.rows {
+        y.row_mut(i)[..rank].copy_from_slice(t.row(i));
+        y.row_mut(i)[rank..].copy_from_slice(rest.row(i));
+    }
+    y
+}

@@ -1,9 +1,12 @@
 //! `repro` — FlexRank leader binary.
 //!
 //! Subcommands (see README):
-//!   smoke                 — load + execute one artifact, sanity-check numbers
+//!   smoke                 — exercise the native kernel backend end to end
+//!                           (with `--features pjrt`: the PJRT artifact chain)
 //!   pipeline              — full FlexRank run: pretrain → DataSVD → DP → KD
+//!                           (requires `--features pjrt` + `make artifacts`)
 //!   serve                 — elastic serving demo over a synthetic trace
+//!                           (native backend, runs offline)
 //!   figure <figN>         — regenerate a paper figure's series into results/
 //!   table  <tabN>         — regenerate a paper table
 //!   profiles              — write artifacts/profiles.json from DP selection
@@ -15,11 +18,17 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("smoke") => cmd_smoke(&args),
+        #[cfg(feature = "pjrt")]
         Some("pipeline") => flexrank::training::pipeline::run_cli(&args),
+        #[cfg(feature = "pjrt")]
+        Some("profiles") => flexrank::training::pipeline::write_profiles_cli(&args),
+        #[cfg(not(feature = "pjrt"))]
+        Some("pipeline") | Some("profiles") => {
+            anyhow::bail!("this subcommand drives the AOT artifacts; rebuild with --features pjrt")
+        }
         Some("serve") => flexrank::coordinator::run_cli(&args),
         Some("figure") => flexrank::eval::figures::run_cli(&args),
         Some("table") => flexrank::eval::figures::run_table_cli(&args),
-        Some("profiles") => flexrank::training::pipeline::write_profiles_cli(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand: {o}");
@@ -33,8 +42,41 @@ fn main() -> Result<()> {
     }
 }
 
+/// Native smoke: random teacher → DataSVD student → GAR submodel → forward
+/// through the kernel backend; proves the offline serving chain end to end.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_smoke(args: &Args) -> Result<()> {
+    use flexrank::config::load_model_config;
+    use flexrank::runtime::native::{uniform_budget_profile, GarSubmodel, Scratch};
+    use flexrank::training::params::{decompose_teacher, random_teacher, student_from_factors};
+
+    let cfg = load_model_config(args.get_or("config", "tiny"))?;
+    println!("backend: native kernels");
+    println!("model: {} (d={}, blocks={})", cfg.name, cfg.d_model, cfg.n_blocks);
+
+    let teacher = random_teacher(&cfg, args.u64_or("seed", 0)?);
+    let factors = decompose_teacher(&cfg, &teacher, None)?;
+    let student = student_from_factors(&cfg, &teacher, &factors)?;
+    let sub = GarSubmodel::from_student(&cfg, &student, &uniform_budget_profile(&cfg, 0.5))?;
+
+    let batch = cfg.batch_eval;
+    let mut scratch = Scratch::new(batch * cfg.seq_len, cfg.d_model, cfg.seq_len, cfg.vocab);
+    let tokens = vec![0i32; batch * cfg.seq_len];
+    sub.forward(&tokens, batch, &mut scratch)?;
+    let vals = scratch.logits(batch * cfg.seq_len, cfg.vocab);
+    anyhow::ensure!(vals.iter().all(|x| x.is_finite()), "non-finite logits");
+    println!(
+        "smoke OK ({} tiers possible, submodel params {:.2}M, |logits| mean = {:.4})",
+        cfg.serve_tiers.len(),
+        sub.n_params as f64 / 1e6,
+        vals.iter().map(|x| x.abs()).sum::<f32>() / vals.len() as f32
+    );
+    Ok(())
+}
+
 /// Minimal artifact round-trip: run teacher_fwd on zero tokens and check the
 /// output shape; proves the python→HLO→rust→PJRT chain end to end.
+#[cfg(feature = "pjrt")]
 fn cmd_smoke(_args: &Args) -> Result<()> {
     use flexrank::runtime::{Engine, Tensor};
 

@@ -1,6 +1,6 @@
 //! Layers: dense / factorized linear with rank masks, activations.
 
-use crate::linalg::Mat;
+use crate::linalg::{kernels, Mat};
 use crate::rng::Rng;
 
 /// Elementwise nonlinearity between layers.
@@ -75,14 +75,14 @@ impl FactLinear {
 
     /// Effective dense weight at a mask: `W = V diag(mask) Uᵀ` (n×m).
     pub fn effective_weight(&self, mask: &[f64]) -> Mat {
-        &self.v.mul_diag(mask) * &self.u.t()
+        kernels::matmul_nt(&self.v.mul_diag(mask), &self.u)
     }
 
     /// Forward: returns (y, t) where t = x V (cached for backprop).
     pub fn forward(&self, x: &Mat, mask: &[f64]) -> (Mat, Mat) {
         let t = x * &self.v; // (B, r)
         let tm = t.mul_diag(mask);
-        let mut y = &tm * &self.u.t(); // (B, m)
+        let mut y = kernels::matmul_nt(&tm, &self.u); // (B, m), Uᵀ never materialized
         for i in 0..y.rows {
             for (yj, bj) in y.row_mut(i).iter_mut().zip(&self.b) {
                 *yj += bj;
@@ -92,13 +92,14 @@ impl FactLinear {
     }
 
     /// Backward: given upstream grad g (B×m), cached t = xV, input x.
-    /// Returns (dx, du, dv, db).
+    /// Returns (dx, du, dv, db).  All transposed products run through the
+    /// NT/TN kernels, so no operand transpose is ever materialized.
     pub fn backward(&self, x: &Mat, t: &Mat, mask: &[f64], g: &Mat) -> (Mat, Mat, Mat, Vec<f64>) {
         let gu = g * &self.u; // (B, r)
         let dt = gu.mul_diag(mask); // (B, r)
-        let dx = &dt * &self.v.t(); // (B, n)
-        let du = &g.t() * &t.mul_diag(mask); // (m, r)
-        let dv = &x.t() * &dt; // (n, r)
+        let dx = kernels::matmul_nt(&dt, &self.v); // (B, n) = dt·Vᵀ
+        let du = kernels::matmul_tn(g, &t.mul_diag(mask)); // (m, r) = gᵀ·(t⊙mask)
+        let dv = kernels::matmul_tn(x, &dt); // (n, r) = xᵀ·dt
         let mut db = vec![0.0; self.b.len()];
         for i in 0..g.rows {
             for (dbj, gj) in db.iter_mut().zip(g.row(i)) {

@@ -1,6 +1,6 @@
 //! Sequential network with per-layer rank masks + manual backprop.
 
-use crate::linalg::Mat;
+use crate::linalg::{kernels, Mat};
 
 use super::layers::{Layer, LayerKind};
 
@@ -126,14 +126,14 @@ impl Net {
             let x = &cache.xs[idx];
             match (&l.kind, &masks[idx]) {
                 (LayerKind::Dense { w, b }, _) => {
-                    let dw = &x.t() * &g;
+                    let dw = kernels::matmul_tn(x, &g); // xᵀ·g, no transpose temp
                     let mut db = vec![0.0; b.len()];
                     for i in 0..g.rows {
                         for (dbj, gj) in db.iter_mut().zip(g.row(i)) {
                             *dbj += gj;
                         }
                     }
-                    let dx = &g * &w.t();
+                    let dx = kernels::matmul_nt(&g, w); // g·wᵀ
                     grads.push((dw, None, db));
                     g = dx;
                 }

@@ -1,15 +1,21 @@
-//! Runtime — load and execute the AOT artifacts via the PJRT CPU client.
+//! Runtime — execution backends for the serving/training stack.
 //!
-//! `make artifacts` (python, build-time) lowers every L2 entry point to HLO
-//! text; this module is the only place that touches XLA at runtime.  The hot
-//! path keeps parameters device-resident (`execute_b` over [`xla::PjRtBuffer`])
-//! so train steps / serving requests never round-trip weights through host
-//! memory (see DESIGN.md §Perf).
+//! * [`native`] (default) — the pure-rust backend: GAR submodel forwards
+//!   through `linalg::kernels` with a preallocated scratch arena.  This is
+//!   what the coordinator, benches, and tests run on an offline machine.
+//! * `engine` (feature `pjrt`) — the PJRT CPU client over the AOT artifacts
+//!   (`make artifacts`, python build-time).  The hot path keeps parameters
+//!   device-resident (`execute_b` over `xla::PjRtBuffer`) so train steps
+//!   never round-trip weights through host memory (see DESIGN.md §Perf).
+//!   Enabling `pjrt` requires the `xla` crate (see rust/Cargo.toml).
 
+#[cfg(feature = "pjrt")]
 mod engine;
 pub mod manifest;
+pub mod native;
 mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{DeviceTensor, Engine, Executable};
 pub use manifest::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};
 pub use tensor::{DType, Tensor};

@@ -1,0 +1,468 @@
+//! Native execution backend: the GAR serving forward (python
+//! `model.gar_fwd`, Sec. 3.5) implemented directly over
+//! [`crate::linalg::kernels`] f32 paths — no PJRT, no artifacts.
+//!
+//! Semantics mirror the AOT graph exactly: token + position embeddings,
+//! pre-LN blocks with causal multi-head attention (scale `1/√hd`), fused
+//! GAR linears `y = [t, t·Ûᵀ] + b`, tanh-GELU MLP, final LN, tied logits
+//! head `x · tok_embᵀ`.
+//!
+//! **Hot-path allocation discipline:** every activation intermediate lives
+//! in a [`Scratch`] sized once at load time — [`GarSubmodel::forward`]
+//! allocates no buffer memory per request (tests pin the buffer addresses
+//! across calls), and the serving coordinator reuses one `Scratch` across
+//! all batches and tiers.  The only allocations left on the path are the
+//! kernel layer's scoped-thread spawns on large problems (see the worker
+//! pool item in ROADMAP "Open items").
+
+use anyhow::{ensure, Context, Result};
+
+use crate::flexrank::gar::gar_solve;
+use crate::linalg::kernels;
+use crate::runtime::manifest::ModelConfig;
+use crate::training::params::{ParamSet, LAYER_KINDS};
+
+/// One GAR-form factorized linear in f32: `y = [t, t·Ûᵀ] + b`, `t = x·Ṽ`.
+#[derive(Debug, Clone)]
+pub struct GarLayerF32 {
+    pub n: usize,
+    pub m: usize,
+    pub r: usize,
+    /// (m − r, r); empty when r == m (square full-rank layer, Ũ = I).
+    pub u_hat: Vec<f32>,
+    /// (n, r)
+    pub v_tilde: Vec<f32>,
+    /// (m)
+    pub bias: Vec<f32>,
+}
+
+impl GarLayerF32 {
+    /// Inference parameter count of this layer.
+    pub fn n_params(&self) -> usize {
+        self.u_hat.len() + self.v_tilde.len() + self.bias.len()
+    }
+
+    /// Fused forward over `rows` input rows of width `n` (contiguous),
+    /// writing `m` outputs per row at `y[row·stride + off ..]`.
+    /// `t` is scratch for the `(rows × r)` intermediate.
+    fn forward_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        t: &mut [f32],
+        y: &mut [f32],
+        stride: usize,
+        off: usize,
+    ) {
+        let t = &mut t[..rows * self.r];
+        kernels::matmul_f32(&x[..rows * self.n], &self.v_tilde, rows, self.n, self.r, t);
+        kernels::gar_emit_f32(t, rows, self.r, &self.u_hat, self.m - self.r, y, stride, off);
+        for i in 0..rows {
+            let yrow = &mut y[i * stride + off..i * stride + off + self.m];
+            for (o, &b) in yrow.iter_mut().zip(&self.bias) {
+                *o += b;
+            }
+        }
+    }
+}
+
+/// One transformer block's GAR parameters.
+#[derive(Debug, Clone)]
+pub struct NativeBlock {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub qkv: GarLayerF32,
+    pub proj: GarLayerF32,
+    pub fc: GarLayerF32,
+    pub fcp: GarLayerF32,
+}
+
+/// A deployable GAR submodel at one rank profile.
+#[derive(Debug, Clone)]
+pub struct GarSubmodel {
+    pub profile: Vec<usize>,
+    pub n_params: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    tok_emb: Vec<f32>,
+    pos_emb: Vec<f32>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    blocks: Vec<NativeBlock>,
+}
+
+/// Preallocated activation workspace for up to `max_rows = batch·seq` token
+/// rows.  All buffers are written before being read on every forward — no
+/// zeroing between requests, no growth after construction.
+#[derive(Debug)]
+pub struct Scratch {
+    pub max_rows: usize,
+    x: Vec<f32>,      // (rows, d)   residual stream
+    a: Vec<f32>,      // (rows, d)   LN output / layer output staging
+    t: Vec<f32>,      // (rows, r≤d) factor intermediate
+    qkv: Vec<f32>,    // (rows, 3d)
+    att: Vec<f32>,    // (rows, d)   merged attention heads
+    ff: Vec<f32>,     // (rows, 4d)
+    scores: Vec<f32>, // (seq)       one attention row at a time
+    logits: Vec<f32>, // (rows, vocab)
+}
+
+impl Scratch {
+    pub fn new(max_rows: usize, d: usize, seq: usize, vocab: usize) -> Scratch {
+        Scratch {
+            max_rows,
+            x: vec![0.0; max_rows * d],
+            a: vec![0.0; max_rows * d],
+            t: vec![0.0; max_rows * d],
+            qkv: vec![0.0; max_rows * 3 * d],
+            att: vec![0.0; max_rows * d],
+            ff: vec![0.0; max_rows * 4 * d],
+            scores: vec![0.0; seq],
+            logits: vec![0.0; max_rows * vocab],
+        }
+    }
+
+    /// Logits of the last forward: `(rows, vocab)` row-major.
+    pub fn logits(&self, rows: usize, vocab: usize) -> &[f32] {
+        &self.logits[..rows * vocab]
+    }
+
+    /// Buffer base pointers — lets tests assert that repeated forwards
+    /// never reallocate (the zero-per-request-allocation invariant).
+    pub fn fingerprint(&self) -> Vec<usize> {
+        vec![
+            self.x.as_ptr() as usize,
+            self.a.as_ptr() as usize,
+            self.t.as_ptr() as usize,
+            self.qkv.as_ptr() as usize,
+            self.att.as_ptr() as usize,
+            self.ff.as_ptr() as usize,
+            self.scores.as_ptr() as usize,
+            self.logits.as_ptr() as usize,
+        ]
+    }
+}
+
+fn layer_norm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
+    for i in 0..rows {
+        let xr = &x[i * d..(i + 1) * d];
+        let or = &mut out[i * d..(i + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for ((o, &xv), (&gv, &bv)) in or.iter_mut().zip(xr).zip(g.iter().zip(b)) {
+            *o = (xv - mu) * inv * gv + bv;
+        }
+    }
+}
+
+fn gelu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        let z = *v;
+        *v = 0.5 * z * (1.0 + (0.7978845608028654 * (z + 0.044715 * z * z * z)).tanh());
+    }
+}
+
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+impl GarSubmodel {
+    /// Re-gauge a consolidated student's factors at `profile` (one rank per
+    /// factorized layer, canonical block-major order).
+    pub fn from_student(cfg: &ModelConfig, student: &ParamSet, profile: &[usize]) -> Result<GarSubmodel> {
+        ensure!(
+            profile.len() == cfg.n_fact_layers(),
+            "profile has {} entries, model has {} factorized layers",
+            profile.len(),
+            cfg.n_fact_layers()
+        );
+        ensure!(
+            cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        let vec1 = |name: &str| -> Result<Vec<f32>> { Ok(student.get(name)?.as_f32()?.to_vec()) };
+
+        let dims = cfg.layer_dims();
+        let mut blocks = Vec::with_capacity(cfg.n_blocks);
+        for b in 0..cfg.n_blocks {
+            let lay = |kind: &str, ki: usize| -> Result<GarLayerF32> {
+                let (_, n, m) = dims[ki];
+                let r = profile[b * 4 + ki].clamp(1, cfg.rank_full().min(m).min(n.min(m)));
+                let u = student.mat(&format!("blocks.{b}.{kind}_u"))?;
+                let v = student.mat(&format!("blocks.{b}.{kind}_v"))?;
+                let gar = gar_solve(&u, &v, r)
+                    .with_context(|| format!("GAR re-gauge blocks.{b}.{kind} at r={r}"))?;
+                Ok(GarLayerF32 {
+                    n,
+                    m,
+                    r,
+                    u_hat: gar.u_hat.to_f32(),
+                    v_tilde: gar.v_tilde.to_f32(),
+                    bias: vec1(&format!("blocks.{b}.{kind}_b"))?,
+                })
+            };
+            let mut layers = Vec::with_capacity(4);
+            for (ki, kind) in LAYER_KINDS.iter().enumerate() {
+                layers.push(lay(kind, ki)?);
+            }
+            let fcp = layers.pop().unwrap();
+            let fc = layers.pop().unwrap();
+            let proj = layers.pop().unwrap();
+            let qkv = layers.pop().unwrap();
+            blocks.push(NativeBlock {
+                ln1_g: vec1(&format!("blocks.{b}.ln1_g"))?,
+                ln1_b: vec1(&format!("blocks.{b}.ln1_b"))?,
+                ln2_g: vec1(&format!("blocks.{b}.ln2_g"))?,
+                ln2_b: vec1(&format!("blocks.{b}.ln2_b"))?,
+                qkv,
+                proj,
+                fc,
+                fcp,
+            });
+        }
+
+        let tok_emb = vec1("tok_emb")?;
+        let pos_emb = vec1("pos_emb")?;
+        let lnf_g = vec1("lnf_g")?;
+        let lnf_b = vec1("lnf_b")?;
+        let n_params = tok_emb.len()
+            + pos_emb.len()
+            + lnf_g.len()
+            + lnf_b.len()
+            + blocks
+                .iter()
+                .map(|blk| {
+                    blk.ln1_g.len()
+                        + blk.ln1_b.len()
+                        + blk.ln2_g.len()
+                        + blk.ln2_b.len()
+                        + blk.qkv.n_params()
+                        + blk.proj.n_params()
+                        + blk.fc.n_params()
+                        + blk.fcp.n_params()
+                })
+                .sum::<usize>();
+        Ok(GarSubmodel {
+            profile: profile.to_vec(),
+            n_params,
+            d: cfg.d_model,
+            heads: cfg.n_heads,
+            seq: cfg.seq_len,
+            vocab: cfg.vocab,
+            tok_emb,
+            pos_emb,
+            lnf_g,
+            lnf_b,
+            blocks,
+        })
+    }
+
+    /// Forward `batch` sequences of `seq` tokens; logits land in
+    /// `scratch.logits`.  Allocation-free: every buffer is preallocated in
+    /// `scratch` and fully overwritten.
+    pub fn forward(&self, tokens: &[i32], batch: usize, s: &mut Scratch) -> Result<()> {
+        let t_len = self.seq;
+        let rows = batch * t_len;
+        let d = self.d;
+        ensure!(tokens.len() == rows, "expected {} tokens, got {}", rows, tokens.len());
+        ensure!(rows <= s.max_rows, "scratch sized for {} rows, need {rows}", s.max_rows);
+
+        // Embeddings: x = tok_emb[token] + pos_emb[position].  Reject
+        // out-of-range ids loudly instead of aliasing them to a wrong row.
+        for (i, &tok) in tokens.iter().enumerate() {
+            ensure!(
+                tok >= 0 && (tok as usize) < self.vocab,
+                "token {tok} at position {i} outside vocab {}",
+                self.vocab
+            );
+            let pos = i % t_len;
+            let tv = &self.tok_emb[tok as usize * d..tok as usize * d + d];
+            let pv = &self.pos_emb[pos * d..pos * d + d];
+            let xr = &mut s.x[i * d..(i + 1) * d];
+            for ((o, &a), &b) in xr.iter_mut().zip(tv).zip(pv) {
+                *o = a + b;
+            }
+        }
+
+        for blk in &self.blocks {
+            // Attention half: x += proj(attn(qkv(ln1(x)))).
+            layer_norm(&s.x, rows, d, &blk.ln1_g, &blk.ln1_b, &mut s.a);
+            blk.qkv.forward_into(&s.a, rows, &mut s.t, &mut s.qkv, 3 * d, 0);
+            self.attention(batch, &s.qkv, &mut s.scores, &mut s.att);
+            blk.proj.forward_into(&s.att, rows, &mut s.t, &mut s.a, d, 0);
+            add_assign(&mut s.x[..rows * d], &s.a[..rows * d]);
+
+            // MLP half: x += fcp(gelu(fc(ln2(x)))).
+            layer_norm(&s.x, rows, d, &blk.ln2_g, &blk.ln2_b, &mut s.a);
+            blk.fc.forward_into(&s.a, rows, &mut s.t, &mut s.ff, 4 * d, 0);
+            gelu(&mut s.ff[..rows * 4 * d]);
+            blk.fcp.forward_into(&s.ff, rows, &mut s.t, &mut s.a, d, 0);
+            add_assign(&mut s.x[..rows * d], &s.a[..rows * d]);
+        }
+
+        // Final LN + tied head: logits = ln_f(x) · tok_embᵀ.
+        layer_norm(&s.x, rows, d, &self.lnf_g, &self.lnf_b, &mut s.a);
+        kernels::matmul_nt_f32(
+            &s.a[..rows * d],
+            &self.tok_emb,
+            rows,
+            d,
+            self.vocab,
+            &mut s.logits[..rows * self.vocab],
+        );
+        Ok(())
+    }
+
+    /// Causal multi-head attention over the packed qkv buffer
+    /// (`(rows, 3d)`: q | k | v, heads interleaved within each third).
+    fn attention(&self, batch: usize, qkv: &[f32], scores: &mut [f32], att: &mut [f32]) {
+        let t_len = self.seq;
+        let d = self.d;
+        let hd = d / self.heads;
+        let w3 = 3 * d;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for b in 0..batch {
+            let base = b * t_len;
+            for head in 0..self.heads {
+                let qo = head * hd;
+                let ko = d + head * hd;
+                let vo = 2 * d + head * hd;
+                for t1 in 0..t_len {
+                    let q = &qkv[(base + t1) * w3 + qo..(base + t1) * w3 + qo + hd];
+                    let mut mx = f32::NEG_INFINITY;
+                    for t2 in 0..=t1 {
+                        let k = &qkv[(base + t2) * w3 + ko..(base + t2) * w3 + ko + hd];
+                        let sc = kernels::dot_f32(q, k) * scale;
+                        scores[t2] = sc;
+                        if sc > mx {
+                            mx = sc;
+                        }
+                    }
+                    let mut sum = 0.0f32;
+                    for sc in scores[..=t1].iter_mut() {
+                        *sc = (*sc - mx).exp();
+                        sum += *sc;
+                    }
+                    let inv = 1.0 / sum;
+                    let orow = &mut att[(base + t1) * d + head * hd..(base + t1) * d + head * hd + hd];
+                    for o in orow.iter_mut() {
+                        *o = 0.0;
+                    }
+                    for t2 in 0..=t1 {
+                        let w = scores[t2] * inv;
+                        let v = &qkv[(base + t2) * w3 + vo..(base + t2) * w3 + vo + hd];
+                        for (o, &vv) in orow.iter_mut().zip(v) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Uniform rank profile for a budget fraction: every factorized layer at
+/// `round(budget · rank_full)`, floored at 1 (the serving default until a
+/// DP-selected profile is plugged in).
+pub fn uniform_budget_profile(cfg: &ModelConfig, budget: f64) -> Vec<usize> {
+    let r = ((budget * cfg.rank_full() as f64).round() as usize).clamp(1, cfg.rank_full());
+    vec![r; cfg.n_fact_layers()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flexrank::gar::Gar;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+    use crate::training::params::{decompose_teacher, random_teacher, student_from_factors};
+
+    fn tiny_cfg() -> ModelConfig {
+        crate::config::load_model_config("tiny").expect("configs/model_tiny.json")
+    }
+
+    #[test]
+    fn gar_layer_matches_f64_gar() {
+        let mut rng = Rng::new(500);
+        let (n, m, r) = (6, 9, 4);
+        let gar = Gar {
+            u_hat: Mat::randn(m - r, r, &mut rng),
+            v_tilde: Mat::randn(n, r, &mut rng),
+            rank: r,
+        };
+        let layer = GarLayerF32 {
+            n,
+            m,
+            r,
+            u_hat: gar.u_hat.to_f32(),
+            v_tilde: gar.v_tilde.to_f32(),
+            bias: vec![0.0; m],
+        };
+        let x = Mat::randn(5, n, &mut rng);
+        let want = gar.forward(&x);
+        let x32 = x.to_f32();
+        let mut t = vec![0f32; 5 * r];
+        let mut y = vec![0f32; 5 * m];
+        layer.forward_into(&x32, 5, &mut t, &mut y, m, 0);
+        for (g, w) in y.iter().zip(&want.data) {
+            assert!(((*g as f64) - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn native_forward_finite_and_allocation_free() {
+        let cfg = tiny_cfg();
+        let teacher = random_teacher(&cfg, 7);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let profile = uniform_budget_profile(&cfg, 0.5);
+        let sub = GarSubmodel::from_student(&cfg, &student, &profile).unwrap();
+
+        let batch = 2;
+        let mut scratch = Scratch::new(batch * cfg.seq_len, cfg.d_model, cfg.seq_len, cfg.vocab);
+        let tokens: Vec<i32> = (0..batch * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+
+        sub.forward(&tokens, batch, &mut scratch).unwrap();
+        let fp = scratch.fingerprint();
+        let l1: Vec<f32> = scratch.logits(batch * cfg.seq_len, cfg.vocab).to_vec();
+        assert!(l1.iter().all(|x| x.is_finite()), "non-finite logits");
+
+        // Second forward: same buffers (zero per-request allocations) and,
+        // on identical input, identical output.
+        sub.forward(&tokens, batch, &mut scratch).unwrap();
+        assert_eq!(scratch.fingerprint(), fp, "scratch must not reallocate");
+        assert_eq!(scratch.logits(batch * cfg.seq_len, cfg.vocab), &l1[..]);
+    }
+
+    #[test]
+    fn full_profile_beats_truncated_on_reconstruction() {
+        // The full-rank GAR submodel reproduces the factorized student
+        // exactly, so its logits differ from a heavily truncated tier's.
+        let cfg = tiny_cfg();
+        let teacher = random_teacher(&cfg, 11);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let full = GarSubmodel::from_student(&cfg, &student, &uniform_budget_profile(&cfg, 1.0)).unwrap();
+        let cut = GarSubmodel::from_student(&cfg, &student, &uniform_budget_profile(&cfg, 0.25)).unwrap();
+        assert!(cut.n_params < full.n_params);
+
+        let batch = 1;
+        let mut s = Scratch::new(cfg.seq_len, cfg.d_model, cfg.seq_len, cfg.vocab);
+        let tokens: Vec<i32> = (0..cfg.seq_len).map(|i| (i * 7 % cfg.vocab) as i32).collect();
+        full.forward(&tokens, batch, &mut s).unwrap();
+        let lf = s.logits(cfg.seq_len, cfg.vocab).to_vec();
+        cut.forward(&tokens, batch, &mut s).unwrap();
+        let lc = s.logits(cfg.seq_len, cfg.vocab).to_vec();
+        let diff: f32 = lf.iter().zip(&lc).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "truncation should change logits (diff {diff})");
+    }
+}

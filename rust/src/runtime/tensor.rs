@@ -93,6 +93,7 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal of matching shape/dtype.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -103,6 +104,7 @@ impl Tensor {
     }
 
     /// Build from an XLA literal.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -118,6 +120,7 @@ impl Tensor {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
@@ -127,6 +130,7 @@ mod tests {
         assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = Tensor::i32(vec![4], vec![7, -1, 0, 3]);

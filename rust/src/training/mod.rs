@@ -3,10 +3,20 @@
 //! and the end-to-end pipeline orchestration.
 
 pub mod ckpt;
+#[cfg(feature = "pjrt")]
 pub mod driver;
+#[cfg(feature = "pjrt")]
 pub mod lora;
 pub mod params;
+#[cfg(feature = "pjrt")]
 pub mod pipeline;
+
+/// Stage-output directory shared by the pipeline and the serving CLI
+/// (checkpoints land here so `repro serve` can reuse a consolidated student
+/// regardless of which backend produced it).
+pub fn stage_dir() -> std::path::PathBuf {
+    crate::results_dir().join("pipeline")
+}
 
 /// Corpus size used by the pipeline + figures (bytes).
 pub const CORPUS_BYTES: usize = 400_000;

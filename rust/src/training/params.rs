@@ -127,6 +127,45 @@ impl ParamSet {
 /// python's `LAYER_KINDS`).
 pub const LAYER_KINDS: [&str; 4] = ["qkv", "proj", "fc", "fcp"];
 
+/// Randomly initialized dense teacher — the rust mirror of python's
+/// `init_teacher` (GPT-2-style N(0, 0.02), residual projections scaled by
+/// `1/√(2L)`).  Lets the native serving/bench stack bootstrap without AOT
+/// artifacts or checkpoints.
+pub fn random_teacher(cfg: &ModelConfig, seed: u64) -> ParamSet {
+    let mut rng = crate::rng::Rng::new(seed);
+    let d = cfg.d_model;
+    let f = 4 * d;
+    let std = 0.02f32;
+    let resid_std = std / ((2 * cfg.n_blocks) as f32).sqrt();
+    let mut p = ParamSet::default();
+    let nrm = |rng: &mut crate::rng::Rng, shape: Vec<usize>, s: f32| {
+        let n: usize = shape.iter().product();
+        Tensor::f32(shape, rng.normal_vec(n, s))
+    };
+    p.insert("tok_emb", nrm(&mut rng, vec![cfg.vocab, d], std));
+    p.insert("pos_emb", nrm(&mut rng, vec![cfg.seq_len, d], std));
+    p.insert("lnf_g", Tensor::f32(vec![d], vec![1.0; d]));
+    p.insert("lnf_b", Tensor::f32(vec![d], vec![0.0; d]));
+    for b in 0..cfg.n_blocks {
+        for g in ["ln1_g", "ln2_g"] {
+            p.insert(&format!("blocks.{b}.{g}"), Tensor::f32(vec![d], vec![1.0; d]));
+        }
+        for g in ["ln1_b", "ln2_b"] {
+            p.insert(&format!("blocks.{b}.{g}"), Tensor::f32(vec![d], vec![0.0; d]));
+        }
+        for (kind, n_in, m_out, s) in [
+            ("qkv", d, 3 * d, std),
+            ("proj", d, d, resid_std),
+            ("fc", d, f, std),
+            ("fcp", f, d, resid_std),
+        ] {
+            p.insert(&format!("blocks.{b}.{kind}_w"), nrm(&mut rng, vec![n_in, m_out], s));
+            p.insert(&format!("blocks.{b}.{kind}_b"), Tensor::f32(vec![m_out], vec![0.0; m_out]));
+        }
+    }
+    p
+}
+
 /// Canonical factorized-layer list: (block, kind, n_in, m_out).
 pub fn fact_layers(cfg: &ModelConfig) -> Vec<(usize, &'static str, usize, usize)> {
     let dims = cfg.layer_dims();

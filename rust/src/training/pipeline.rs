@@ -35,9 +35,9 @@ pub struct PipelineOut {
     pub kd_losses: Vec<f32>,
 }
 
-/// Stage outputs directory.
+/// Stage outputs directory (shared with the serving CLI).
 pub fn stage_dir() -> PathBuf {
-    crate::results_dir().join("pipeline")
+    crate::training::stage_dir()
 }
 
 /// Run (or resume) the full pipeline.

@@ -1,3 +1,5 @@
+#![cfg(feature = "pjrt")]
+
 //! Integration: the full FlexRank pipeline in smoke mode (few steps each
 //! stage) — proves all stages compose: pretrain → calibrate → DataSVD →
 //! probe → DP → consolidate → eval.  Requires `make artifacts`.

@@ -1,3 +1,5 @@
+#![cfg(feature = "pjrt")]
+
 //! Cross-layer integration tests: rust ⇄ AOT artifacts ⇄ PJRT.
 //!
 //! Require `make artifacts` (base config) to have run — the Makefile's

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# One-stop verification: the tier-1 gate plus a kernel-bench smoke.
+#
+#   scripts/verify.sh            # build + tests + quick kernel bench
+#   SKIP_BENCH=1 scripts/verify.sh   # tier-1 only
+#
+# Runs fully offline with default features (no xla/PJRT required).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [ "${SKIP_BENCH:-0}" != "1" ]; then
+  echo "== kernel bench smoke (BENCH_QUICK=1) =="
+  BENCH_QUICK=1 cargo bench -p flexrank --bench kernels
+  echo "wrote results/BENCH_kernels.json"
+fi
+
+echo "verify OK"
