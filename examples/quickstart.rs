@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         .zip(&dims)
         .map(|(&r, &(n, m))| ((n + m - r) * r) as u64)
         .sum();
-    let dp = dp_rank_selection(&candidates, full_cost, 1);
+    let dp = dp_rank_selection(&candidates, full_cost, 1)?;
     println!("DP: {} Pareto states, nested chain of {}", dp.pareto.len(), dp.chain.profiles.len());
 
     // 4. Nested consolidation on budget-selected profiles (Alg. 1, 14-17).

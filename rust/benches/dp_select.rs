@@ -28,10 +28,10 @@ fn main() {
         let full: u64 = cands.iter().flat_map(|c| c.iter().map(|x| x.saving)).sum::<u64>() + 1000;
         // Exact (quant=1) and bucketed (quant=64) variants.
         bench.run(&format!("dp L={l} K={k} exact"), Some((l * k) as f64), || {
-            std::hint::black_box(dp_rank_selection(&cands, full, 1));
+            std::hint::black_box(dp_rank_selection(&cands, full, 1).unwrap());
         });
         bench.run(&format!("dp L={l} K={k} quant64"), Some((l * k) as f64), || {
-            std::hint::black_box(dp_rank_selection(&cands, full, 64));
+            std::hint::black_box(dp_rank_selection(&cands, full, 64).unwrap());
         });
     }
     bench

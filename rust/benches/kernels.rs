@@ -24,6 +24,14 @@ fn main() {
 
     // --- matmul: square sweep + the model's layer shapes -------------------
     let shapes: &[(usize, usize, usize)] = &[
+        // Pool-dispatch-sensitive sizes: (64³, 96³) sat below the old
+        // scoped-thread 1M-MAC floor and ran serial; (128,64,128) sat just
+        // above it and paid a thread spawn+join per call.  With the
+        // persistent pool all three go parallel for ~µs of dispatch —
+        // these rows are where BENCH_kernels.json records the win.
+        (64, 64, 64),
+        (96, 96, 96),
+        (128, 64, 128),
         (128, 128, 128),
         (256, 256, 256),
         (512, 512, 512),

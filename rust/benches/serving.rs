@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let corpus = Corpus::generate(100_000, 5);
     let n = if quick { 80 } else { 400 };
 
-    println!("policy    rate(req/s)  achieved(req/s)  p50(ms)  p95(ms)  occupancy");
+    println!("policy    rate(req/s)  achieved(req/s)  p50(ms)  p95(ms)  exec_p50(ms)  occupancy");
     for policy in [PolicyKind::Static, PolicyKind::Adaptive] {
         for rate in [100.0, 400.0, 1600.0] {
             let trace = TraceGen::new(
@@ -36,18 +36,23 @@ fn main() -> anyhow::Result<()> {
                 trace,
                 &ServeCfg { policy, max_wait_ms: 4.0, replay_speed: 1.0 },
             )?;
-            // Aggregate across tiers.
+            // Aggregate across tiers (exec_p50 is the kernel-path number
+            // the pooled kernels + blocked attention move at batch ≥ 4).
             let mut all: Vec<f64> = Vec::new();
+            let mut exec: Vec<f64> = Vec::new();
             for t in 0..report.tier_budgets.len() {
                 all.extend(report.metrics.latency_ms[t].iter());
+                exec.extend(report.metrics.exec_ms[t].iter());
             }
             let stats = flexrank::coordinator::LatencyStats::from_samples(&all);
+            let estats = flexrank::coordinator::LatencyStats::from_samples(&exec);
             println!(
-                "{:>8}  {rate:>11.0}  {:>15.1}  {:>7.1}  {:>7.1}  {:>8.2}",
+                "{:>8}  {rate:>11.0}  {:>15.1}  {:>7.1}  {:>7.1}  {:>12.2}  {:>8.2}",
                 format!("{policy:?}"),
                 report.throughput_rps(),
                 stats.p50_ms,
                 stats.p95_ms,
+                estats.p50_ms,
                 report.metrics.mean_occupancy(),
             );
         }

@@ -19,8 +19,15 @@ impl LatencyStats {
             return LatencyStats::default();
         }
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)];
+        s.sort_by(|a, b| a.total_cmp(b));
+        // Nearest-rank percentile: the ⌈count·p⌉-th smallest sample,
+        // 1-indexed.  The old `(count·p) as usize` truncation indexed one
+        // rank too high (p50 of 1..=100 reported 51) and saturated small
+        // tier sample counts straight to the max.
+        let pct = |p: f64| {
+            let rank = ((s.len() as f64 * p).ceil() as usize).max(1);
+            s[rank.min(s.len()) - 1]
+        };
         LatencyStats {
             count: s.len(),
             mean_ms: s.iter().sum::<f64>() / s.len() as f64,
@@ -99,9 +106,28 @@ mod tests {
         let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         let s = LatencyStats::from_samples(&samples);
         assert_eq!(s.count, 100);
-        assert!((s.p50_ms - 51.0).abs() <= 1.0);
-        assert!((s.p95_ms - 96.0).abs() <= 1.0);
+        assert_eq!(s.p50_ms, 50.0);
+        assert_eq!(s.p95_ms, 95.0);
+        assert_eq!(s.p99_ms, 99.0);
         assert_eq!(s.max_ms, 100.0);
+    }
+
+    #[test]
+    fn small_sample_percentiles_use_nearest_rank() {
+        // 10 samples: p50 = ⌈5.0⌉ = 5th smallest, p99 = ⌈9.9⌉ = 10th.
+        let samples: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let s = LatencyStats::from_samples(&samples);
+        assert_eq!(s.p50_ms, 5.0);
+        assert_eq!(s.p95_ms, 10.0);
+        assert_eq!(s.p99_ms, 10.0);
+        // Two samples: the median must be the 1st, not degenerate to max.
+        let s = LatencyStats::from_samples(&[3.0, 9.0]);
+        assert_eq!(s.p50_ms, 3.0);
+        assert_eq!(s.p99_ms, 9.0);
+        // One sample: every percentile is that sample.
+        let s = LatencyStats::from_samples(&[7.0]);
+        assert_eq!(s.p50_ms, 7.0);
+        assert_eq!(s.p99_ms, 7.0);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::runtime::native::{uniform_budget_profile, GarSubmodel, Scratch};
+use crate::runtime::native::{uniform_budget_rank, GarSubmodel, Scratch};
 use crate::runtime::ModelConfig;
 use crate::training::params::ParamSet;
 
@@ -43,6 +43,14 @@ impl SubmodelRegistry {
         profiles: Option<&[Vec<usize>]>,
     ) -> Result<SubmodelRegistry> {
         ensure!(!cfg.serve_tiers.is_empty(), "no serving tiers configured");
+        // The rank-collision bump below (and every consumer of tier order)
+        // assumes budgets ascend; reject a shuffled config instead of
+        // assigning ranks unrelated to their budgets.
+        ensure!(
+            cfg.serve_tiers.windows(2).all(|w| w[0] < w[1]),
+            "serve_tiers must be strictly ascending, got {:?}",
+            cfg.serve_tiers
+        );
         if let Some(ps) = profiles {
             ensure!(
                 ps.len() == cfg.serve_tiers.len(),
@@ -52,17 +60,45 @@ impl SubmodelRegistry {
             );
         }
         let mut tiers = Vec::with_capacity(cfg.serve_tiers.len());
+        let mut prev_rank: Option<usize> = None;
         for (i, &budget) in cfg.serve_tiers.iter().enumerate() {
             let profile = match profiles {
                 Some(ps) => ps[i].clone(),
-                None => uniform_budget_profile(cfg, budget),
+                None => {
+                    // Nearby budgets can round to the same uniform rank (and
+                    // with it identical submodels), silently collapsing two
+                    // tiers and breaking the strictly-ascending-params
+                    // invariant — bump past the previous tier's rank.
+                    let mut r = uniform_budget_rank(cfg, budget);
+                    if let Some(p) = prev_rank {
+                        if r <= p {
+                            r = p + 1;
+                        }
+                    }
+                    ensure!(
+                        r <= cfg.rank_full(),
+                        "serve tier {i} (budget {budget}): no rank above the previous \
+                         tier's within rank_full {} — too many tiers for this model",
+                        cfg.rank_full()
+                    );
+                    prev_rank = Some(r);
+                    vec![r; cfg.n_fact_layers()]
+                }
             };
             let model = GarSubmodel::from_student(cfg, student, &profile)?;
             tiers.push(Tier { idx: i, budget, profile, params: model.n_params, model });
         }
+        // Covers the explicit-profiles path too: duplicate or shrinking
+        // tiers are a selection bug, never something to serve silently.
+        ensure!(
+            tiers.windows(2).all(|w| w[0].params < w[1].params),
+            "tier params must be strictly ascending, got {:?}",
+            tiers.iter().map(|t| t.params).collect::<Vec<_>>()
+        );
         let scratch = Scratch::new(
             cfg.batch_serve * cfg.seq_len,
             cfg.d_model,
+            cfg.n_heads,
             cfg.seq_len,
             cfg.vocab,
         );
@@ -194,5 +230,35 @@ mod tests {
         }
         // The shared scratch never reallocated across tiers/requests.
         assert_eq!(reg.scratch_fingerprint(), fp);
+    }
+
+    #[test]
+    fn close_budget_tiers_do_not_collapse() {
+        let mut cfg = crate::config::load_model_config("tiny").unwrap();
+        // 0.50 and 0.51 both round to rank 16 of rank_full 32; load_native
+        // must bump the middle tier so params stay strictly ascending.
+        cfg.serve_tiers = vec![0.50, 0.51, 1.0];
+        let teacher = random_teacher(&cfg, 5);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+        assert_eq!(reg.n_tiers(), 3);
+        for w in reg.tiers.windows(2) {
+            assert!(w[0].params < w[1].params, "tier params must ascend");
+        }
+        assert_eq!(reg.tiers[0].profile[0], 16);
+        assert_eq!(reg.tiers[1].profile[0], 17, "colliding tier must bump its rank");
+
+        // And when no distinct rank is available the load fails loudly
+        // instead of serving duplicate tiers (0.99 and 1.0 both round to
+        // rank_full, and there is nothing above to bump to).
+        cfg.serve_tiers = vec![0.99, 1.0];
+        let err = SubmodelRegistry::load_native(&cfg, &student, None).unwrap_err();
+        assert!(err.to_string().contains("too many tiers"), "{err}");
+
+        // Out-of-order budgets are a config error, not a silent re-rank.
+        cfg.serve_tiers = vec![0.9, 0.1];
+        let err = SubmodelRegistry::load_native(&cfg, &student, None).unwrap_err();
+        assert!(err.to_string().contains("ascending"), "{err}");
     }
 }

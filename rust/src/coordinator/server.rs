@@ -4,7 +4,7 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::data::trace::Request;
 use crate::json::{self, Value};
@@ -115,6 +115,16 @@ fn run_batch(
     let (cap, seq) = (registry.batch, registry.seq_len);
     tokens.clear();
     for p in batch {
+        // A request with a wrong-length token window would shift every
+        // later request's rows in the packed batch and silently corrupt
+        // whose logits are whose — reject it loudly instead.
+        ensure!(
+            p.req.tokens.len() == seq,
+            "request {} carries {} tokens but the serving seq_len is {seq}; \
+             refusing to pack a misaligned batch",
+            p.req.id,
+            p.req.tokens.len()
+        );
         tokens.extend_from_slice(&p.req.tokens);
     }
     tokens.resize(cap * seq, 0);
@@ -216,4 +226,42 @@ pub fn serve_trace(
         tier_requests,
         wall_s,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::trace::{Request, Slo};
+    use crate::training::params::{decompose_teacher, random_teacher, student_from_factors};
+
+    #[test]
+    fn malformed_request_length_fails_loudly() {
+        let cfg = crate::config::load_model_config("tiny").unwrap();
+        let teacher = random_teacher(&cfg, 9);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let mut registry = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+        let good = |id: u64| Request {
+            id,
+            arrival_s: 0.0,
+            slo: Slo::Standard,
+            tokens: vec![1; cfg.seq_len],
+            budget: None,
+        };
+        // Request 2 carries a truncated token window: without the length
+        // check its rows silently shift request 3's logits in the packed
+        // batch; with it the run must abort naming the offender.
+        let mut bad = good(2);
+        bad.tokens.truncate(cfg.seq_len - 3);
+        let trace = vec![good(1), bad, good(3)];
+        let err = serve_trace(
+            &mut registry,
+            trace,
+            &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 },
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("request 2"), "error must name the request: {msg}");
+        assert!(msg.contains("seq_len"), "error must explain the mismatch: {msg}");
+    }
 }

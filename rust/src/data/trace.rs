@@ -88,7 +88,7 @@ impl TraceGen {
         // Exponential inter-arrival.
         let u = self.rng.f64().max(1e-12);
         self.t += -u.ln() / self.cfg.rate;
-        let slo = Slo::ALL[self.rng.weighted(&self.cfg.slo_mix.map(|x| x))];
+        let slo = Slo::ALL[self.rng.weighted(&self.cfg.slo_mix)];
         let start = self.rng.below(self.source.len().saturating_sub(self.cfg.seq_len).max(1));
         let tokens: Vec<i32> = (0..self.cfg.seq_len)
             .map(|i| {

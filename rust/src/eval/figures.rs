@@ -627,7 +627,7 @@ fn fig9(args: &Args) -> Result<()> {
         c.sort_by_key(|x| x.saving);
         candidates.push(c);
     }
-    let dp = dp_rank_selection(&candidates, full_cost, 1);
+    let dp = dp_rank_selection(&candidates, full_cost, 1)?;
 
     let budgets: Vec<f64> = (1..=50).map(|i| 0.3 + 0.7 * i as f64 / 50.0).collect();
     let mut hits = 0usize;

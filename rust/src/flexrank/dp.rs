@@ -10,6 +10,8 @@
 //! Savings can be grouped into buckets (`quant > 1`) to bound the state
 //! count on large models; `quant = 1` is exact.
 
+use anyhow::{ensure, Result};
+
 use super::masks::{is_nested, NestedChain, RankProfile};
 
 /// One rank-drop option for a layer: truncating to `rank` saves `saving`
@@ -43,11 +45,26 @@ struct State {
 /// * `full_cost` — parameter cost of the full model (profile costs are
 ///   `full_cost − saving`).
 /// * `quant` — saving bucket width for state grouping (1 = exact).
+///
+/// Rejects NaN probe errors up front: a NaN candidate would otherwise
+/// poison every comparison in the frontier sorts and the Pareto scans
+/// (comparisons use `total_cmp`, so they no longer panic — but a NaN
+/// state is meaningless and must not silently win or lose a sort).
 pub fn dp_rank_selection(
     candidates: &[Vec<Candidate>],
     full_cost: u64,
     quant: u64,
-) -> DpResult {
+) -> Result<DpResult> {
+    for (l, cands) in candidates.iter().enumerate() {
+        for c in cands {
+            ensure!(
+                !c.err.is_nan(),
+                "layer {l}: candidate at rank {} has a NaN probe error — \
+                 rejecting before rank selection",
+                c.rank
+            );
+        }
+    }
     let quant = quant.max(1);
     let l_total = candidates.len();
 
@@ -72,7 +89,7 @@ pub fn dp_rank_selection(
         expanded.sort_by(|a, b| {
             (a.0.saving / quant)
                 .cmp(&(b.0.saving / quant))
-                .then(a.0.err.partial_cmp(&b.0.err).unwrap())
+                .then(a.0.err.total_cmp(&b.0.err))
         });
         let mut grouped: Vec<(State, usize, usize)> = Vec::new();
         let mut last_bucket = u64::MAX;
@@ -159,10 +176,10 @@ pub fn dp_rank_selection(
         .map(|&s| (full_cost - s) as usize)
         .collect();
 
-    DpResult {
+    Ok(DpResult {
         chain: NestedChain { profiles: chain_profiles, costs, errors: chain_errors },
         pareto: filtered,
-    }
+    })
 }
 
 /// Brute-force reference (exponential): enumerate all combinations, return
@@ -180,7 +197,7 @@ pub fn brute_force_pareto(candidates: &[Vec<Candidate>]) -> Vec<(u64, f64, RankP
         }
         all = next;
     }
-    all.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap()));
+    all.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
     let mut out: Vec<(u64, f64, RankProfile)> = Vec::new();
     let mut e_best = f64::INFINITY;
     for p in all.iter().rev() {
@@ -232,7 +249,7 @@ mod tests {
             },
             |cands| {
                 let full: u64 = 10_000;
-                let dp = dp_rank_selection(cands, full, 1);
+                let dp = dp_rank_selection(cands, full, 1).unwrap();
                 let bf = brute_force_pareto(cands);
                 if dp.pareto.len() != bf.len() {
                     return Err(format!("front sizes {} vs {}", dp.pareto.len(), bf.len()));
@@ -252,7 +269,7 @@ mod tests {
         let mut rng = crate::rng::Rng::new(72);
         let cands: Vec<Vec<Candidate>> =
             (0..4).map(|_| layer_cands(&mut rng, 5, 7)).collect();
-        let dp = dp_rank_selection(&cands, 1_000, 1);
+        let dp = dp_rank_selection(&cands, 1_000, 1).unwrap();
         assert!(dp.chain.validate(), "chain must be nested + cost-ascending");
         assert!(!dp.chain.profiles.is_empty());
         // Chain endpoints: full model present (saving 0 => cost == full).
@@ -265,8 +282,8 @@ mod tests {
         let mut rng = crate::rng::Rng::new(73);
         let cands: Vec<Vec<Candidate>> =
             (0..5).map(|_| layer_cands(&mut rng, 6, 11)).collect();
-        let exact = dp_rank_selection(&cands, 10_000, 1);
-        let quant = dp_rank_selection(&cands, 10_000, 8);
+        let exact = dp_rank_selection(&cands, 10_000, 1).unwrap();
+        let quant = dp_rank_selection(&cands, 10_000, 8).unwrap();
         // For every exact front point there is a quantized point within one
         // bucket of saving whose error is no worse than the bucket-mate's.
         for (s, e, _) in &exact.pareto {
@@ -283,9 +300,28 @@ mod tests {
         let mut rng = crate::rng::Rng::new(74);
         let cands: Vec<Vec<Candidate>> =
             (0..3).map(|_| layer_cands(&mut rng, 4, 9)).collect();
-        let dp = dp_rank_selection(&cands, 500, 1);
+        let dp = dp_rank_selection(&cands, 500, 1).unwrap();
         for w in dp.chain.errors.windows(2) {
             assert!(w[0] >= w[1] - 1e-12, "errors must fall as cost rises");
         }
+    }
+
+    #[test]
+    fn nan_probe_error_rejected_at_boundary() {
+        // A NaN probe error (degenerate calibration batch, 0/0 in the
+        // probe) used to panic inside the frontier sort; now the DP must
+        // reject the candidate set up front with a pointed error.
+        let cands = vec![
+            vec![Candidate { saving: 0, err: 0.0, rank: 3 }],
+            vec![
+                Candidate { saving: 0, err: 0.0, rank: 3 },
+                Candidate { saving: 5, err: f64::NAN, rank: 1 },
+            ],
+        ];
+        let err = dp_rank_selection(&cands, 100, 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("NaN"), "{msg}");
+        assert!(msg.contains("layer 1"), "must name the layer: {msg}");
+        assert!(msg.contains("rank 1"), "must name the rank: {msg}");
     }
 }

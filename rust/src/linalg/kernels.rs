@@ -16,33 +16,39 @@
 //!   B rows per pass over the output row (4× less write traffic, enough
 //!   independent streams for the FP pipelines to auto-vectorize), and dot
 //!   products carry four accumulators.
-//! * **`std::thread::scope` outer loops** — output row blocks fan out over
-//!   hardware threads above [`PAR_MIN_OPS`] MACs; below that the spawn cost
-//!   dominates and the kernels stay serial.
+//! * **persistent-pool outer loops** — output row blocks are dispatched to
+//!   the process-wide worker [`pool`](super::pool) (parked workers, atomic
+//!   chunk claiming — no per-call thread spawn) above [`PAR_MIN_OPS`] MACs;
+//!   below that even the ~µs pool dispatch dominates and the kernels stay
+//!   serial.
 //!
 //! The pre-existing naive loops live on in [`super::reference`]; property
 //! tests assert the two agree to 1e-10 across random and degenerate shapes.
 
+use crate::linalg::pool;
 use crate::linalg::Mat;
 
 /// Depth of one k-panel (B panel of `KC × n` stays cache-resident).
 pub const KC: usize = 256;
 
-/// MAC count below which kernels stay single-threaded (spawn cost floor).
-pub const PAR_MIN_OPS: usize = 1 << 20;
+/// MAC count below which kernels stay single-threaded.  With the persistent
+/// pool this is the dispatch floor (~µs of wake/claim latency), an order of
+/// magnitude below the old scoped-thread spawn floor of `1 << 20`.
+pub const PAR_MIN_OPS: usize = 1 << 17;
 
-/// Upper bound on worker threads per kernel call.
-pub const MAX_THREADS: usize = 16;
-
-/// Worker-thread count for a kernel of `ops` MACs.
-fn threads_for(ops: usize) -> usize {
-    if ops < PAR_MIN_OPS {
-        return 1;
+/// Rows per pooled chunk for a kernel over `m` output rows and `ops` MACs;
+/// `None` keeps the call single-threaded (below the dispatch floor, tiny
+/// outputs, or no hardware parallelism).  `packed` kernels get one chunk
+/// per pool thread (each chunk invocation packs a private panel buffer);
+/// streaming kernels get ~4× finer chunks so the pool's atomic claim loop
+/// load-balances ragged shapes.
+fn chunk_rows(m: usize, ops: usize, packed: bool) -> Option<usize> {
+    let threads = pool::size();
+    if ops < PAR_MIN_OPS || threads <= 1 || m <= 1 {
+        return None;
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .clamp(1, MAX_THREADS)
+    let chunks = if packed { threads } else { 4 * threads }.min(m);
+    Some(m.div_ceil(chunks))
 }
 
 // ---------------------------------------------------------------------------
@@ -122,17 +128,12 @@ macro_rules! kernels_for {
             if m == 0 || n == 0 || k == 0 {
                 return;
             }
-            let nthreads = threads_for(m * k * n).min(m);
-            if nthreads <= 1 {
+            let Some(rows_per) = chunk_rows(m, m * k * n, false) else {
                 $mm_rows(a, b, k, n, 0, out);
                 return;
-            }
-            let rows_per = (m + nthreads - 1) / nthreads;
-            std::thread::scope(|s| {
-                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-                    let i0 = ci * rows_per;
-                    s.spawn(move || $mm_rows(a, b, k, n, i0, chunk));
-                }
+            };
+            pool::parallel_for_rows(out, m, n, rows_per, &|i0, chunk| {
+                $mm_rows(a, b, k, n, i0, chunk)
             });
         }
 
@@ -167,17 +168,12 @@ macro_rules! kernels_for {
                 }
                 return;
             }
-            let nthreads = threads_for(m * k * n).min(m);
-            if nthreads <= 1 {
+            let Some(rows_per) = chunk_rows(m, m * k * n, false) else {
                 $nt_rows(a, b, k, n, 0, out);
                 return;
-            }
-            let rows_per = (m + nthreads - 1) / nthreads;
-            std::thread::scope(|s| {
-                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-                    let i0 = ci * rows_per;
-                    s.spawn(move || $nt_rows(a, b, k, n, i0, chunk));
-                }
+            };
+            pool::parallel_for_rows(out, m, n, rows_per, &|i0, chunk| {
+                $nt_rows(a, b, k, n, i0, chunk)
             });
         }
 
@@ -202,8 +198,6 @@ macro_rules! kernels_for {
             if m == 0 || n == 0 || k == 0 {
                 return;
             }
-            let nthreads = threads_for(m * k * n).min(m);
-            let rows_per = (m + nthreads - 1) / nthreads;
             let worker = |i0: usize, chunk: &mut [$ty]| {
                 let rows = chunk.len() / n;
                 let mut pack = vec![0.0; KC.min(k) * rows];
@@ -228,17 +222,13 @@ macro_rules! kernels_for {
                     kb += KC;
                 }
             };
-            if nthreads <= 1 {
+            // One chunk per pool thread: every chunk invocation packs its
+            // own A-panel buffer, so finer chunking would just re-pack.
+            let Some(rows_per) = chunk_rows(m, m * k * n, true) else {
                 worker(0, out);
                 return;
-            }
-            let worker = &worker;
-            std::thread::scope(|s| {
-                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-                    let i0 = ci * rows_per;
-                    s.spawn(move || worker(i0, chunk));
-                }
-            });
+            };
+            pool::parallel_for_rows(out, m, n, rows_per, &worker);
         }
     };
 }
@@ -332,7 +322,6 @@ pub fn gar_emit(t: &Mat, u_hat: &Mat, y: &mut Mat) {
     if t.rows == 0 || m == 0 {
         return;
     }
-    let nthreads = threads_for(t.rows * r * (mr + 1)).min(t.rows);
     let worker = |i0: usize, chunk: &mut [f64]| {
         let rows = chunk.len() / m;
         for i in 0..rows {
@@ -344,23 +333,18 @@ pub fn gar_emit(t: &Mat, u_hat: &Mat, y: &mut Mat) {
             }
         }
     };
-    if nthreads <= 1 {
+    let Some(rows_per) = chunk_rows(t.rows, t.rows * r * (mr + 1), false) else {
         worker(0, &mut y.data);
         return;
-    }
-    let rows_per = (t.rows + nthreads - 1) / nthreads;
-    let worker = &worker;
-    std::thread::scope(|s| {
-        for (ci, chunk) in y.data.chunks_mut(rows_per * m).enumerate() {
-            let i0 = ci * rows_per;
-            s.spawn(move || worker(i0, chunk));
-        }
-    });
+    };
+    pool::parallel_for_rows(&mut y.data, t.rows, m, rows_per, &worker);
 }
 
 /// f32 fused GAR emit with an output column offset and stride: writes
 /// `[t, t·ûᵀ]` into `y[row*stride + off ..]` — lets the native serving
 /// backend stream layer outputs straight into a wider activation buffer.
+/// Fans out over the worker pool above [`PAR_MIN_OPS`] MACs like the
+/// matmul kernels.
 #[allow(clippy::too_many_arguments)]
 pub fn gar_emit_f32(
     t: &[f32],
@@ -377,14 +361,25 @@ pub fn gar_emit_f32(
     assert_eq!(u_hat.len(), mr * r, "gar_emit_f32: û size");
     assert!(off + m <= stride || (rows == 0), "gar_emit_f32: stride too small");
     assert!(y.len() >= rows * stride, "gar_emit_f32: out size");
-    for i in 0..rows {
-        let trow = &t[i * r..(i + 1) * r];
-        let yrow = &mut y[i * stride + off..i * stride + off + m];
-        yrow[..r].copy_from_slice(trow);
-        for (j, o) in yrow[r..].iter_mut().enumerate() {
-            *o = dot_f32(trow, &u_hat[j * r..(j + 1) * r]);
-        }
+    if rows == 0 || m == 0 {
+        return;
     }
+    // `chunk` starts at absolute row `i0` and holds whole strided rows.
+    let worker = |i0: usize, chunk: &mut [f32]| {
+        for i in 0..chunk.len() / stride {
+            let trow = &t[(i0 + i) * r..(i0 + i + 1) * r];
+            let yrow = &mut chunk[i * stride + off..i * stride + off + m];
+            yrow[..r].copy_from_slice(trow);
+            for (j, o) in yrow[r..].iter_mut().enumerate() {
+                *o = dot_f32(trow, &u_hat[j * r..(j + 1) * r]);
+            }
+        }
+    };
+    let Some(rows_per) = chunk_rows(rows, rows * r * (mr + 1), false) else {
+        worker(0, &mut y[..rows * stride]);
+        return;
+    };
+    pool::parallel_for_rows(y, rows, stride, rows_per, &worker);
 }
 
 // ---------------------------------------------------------------------------
@@ -506,8 +501,8 @@ mod tests {
     #[test]
     fn matmul_crosses_panel_and_thread_boundaries() {
         // k > KC exercises the k-panel loop seam; m·k·n ≥ PAR_MIN_OPS with
-        // m ≥ 2 exercises the scoped-thread row split (including a ragged
-        // last chunk via the odd m).  These shapes MUST stay above those
+        // m ≥ 2 exercises the pooled row split (including a ragged last
+        // chunk via the odd m).  These shapes MUST stay above those
         // thresholds or the riskiest indexing paths ship untested.
         let mut rng = Rng::new(407);
         let (m, k, n) = (37, KC + 45, 112); // 37·301·112 ≈ 1.25M ≥ 1<<20
@@ -527,8 +522,35 @@ mod tests {
     }
 
     #[test]
+    fn gar_emit_f32_strided_crosses_pool_boundary() {
+        // rows·r·(mr+1) ≥ PAR_MIN_OPS forces the pooled path of the strided
+        // f32 emit; every row of the strided output must match the serial
+        // per-row formula exactly (same dot kernel, same order).
+        let mut rng = Rng::new(409);
+        let (rows, r, mr) = (128usize, 32usize, 32usize);
+        assert!(rows * r * (mr + 1) >= PAR_MIN_OPS);
+        let m = r + mr;
+        let (stride, off) = (m + 9, 4);
+        let t: Vec<f32> = (0..rows * r).map(|_| rng.normal() as f32).collect();
+        let u_hat: Vec<f32> = (0..mr * r).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0f32; rows * stride];
+        gar_emit_f32(&t, rows, r, &u_hat, mr, &mut y, stride, off);
+        for i in 0..rows {
+            let trow = &t[i * r..(i + 1) * r];
+            let yrow = &y[i * stride + off..i * stride + off + m];
+            for j in 0..r {
+                assert_eq!(yrow[j], trow[j], "copied factor row {i}");
+            }
+            for j in 0..mr {
+                let want = dot_f32(trow, &u_hat[j * r..(j + 1) * r]);
+                assert_eq!(yrow[r + j], want, "emitted row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
     fn gar_emit_crosses_thread_boundary() {
-        // rows·r·(mr+1) ≥ PAR_MIN_OPS forces the threaded emit path.
+        // rows·r·(mr+1) ≥ PAR_MIN_OPS forces the pooled emit path.
         let mut rng = Rng::new(408);
         let (rows, r, mr) = (257, 64, 80);
         assert!(rows * r * (mr + 1) >= PAR_MIN_OPS);

@@ -4,9 +4,9 @@
 //! Householder QR, one-sided Jacobi SVD, cyclic-Jacobi symmetric
 //! eigendecomposition, LU solve/inverse, and PSD square roots (for the
 //! whitening step of DataSVD, App. C.1).  Matmul/transpose/matvec route
-//! through [`kernels`] — cache-blocked, panel-packed, multi-threaded f64/f32
-//! micro-kernels — with the seed's naive loops preserved in [`reference`]
-//! as the property-test oracle.
+//! through [`kernels`] — cache-blocked, panel-packed f64/f32 micro-kernels
+//! fanned out over the persistent worker [`pool`] — with the seed's naive
+//! loops preserved in [`reference`] as the property-test oracle.
 //!
 //! Sizes in this repo are ≤ ~1024, where Jacobi methods are accurate and
 //! fast enough; precision is f64 internally even though model weights are
@@ -15,6 +15,7 @@
 mod eig;
 pub mod kernels;
 mod mat;
+pub mod pool;
 mod qr;
 pub mod reference;
 mod solve;

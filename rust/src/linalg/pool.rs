@@ -1,0 +1,344 @@
+//! Process-wide persistent worker pool for the compute kernels.
+//!
+//! [`parallel_for`] replaces the per-call `std::thread::scope` fan-out the
+//! kernels used to pay (~tens of µs of spawn/join per matmul — pure
+//! overhead on exactly the small/medium shapes low-budget serving tiers
+//! produce): workers are spawned once, lazily, on first pooled dispatch,
+//! and park on a condvar between jobs.  Dispatching a job costs one mutex
+//! lock plus a `notify_all`, and chunk assignment is an atomic counter
+//! every participant claims from (`fetch_add`), so uneven chunks
+//! load-balance for free and the submitting thread works alongside the
+//! pool instead of idling.
+//!
+//! One job runs at a time.  A `parallel_for` issued while another thread's
+//! job is in flight runs its chunks on the calling thread instead of
+//! queueing — concurrent submitters are already the unit of parallelism in
+//! that case, and the inline fallback keeps the pool deadlock-free by
+//! construction (nested `parallel_for` from inside a chunk degrades to the
+//! same serial path).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Once, OnceLock};
+
+/// Upper bound on pool parallelism (submitter + parked workers).
+pub const MAX_THREADS: usize = 16;
+
+/// One dispatched job: a type-erased chunk closure plus its claim/finish
+/// counters.
+///
+/// Safety: the raw closure pointer is dereferenced only for successfully
+/// claimed chunk indices (`next.fetch_add() < n_chunks`), and such a claim
+/// can only happen while the submitting `parallel_for` is still blocked
+/// waiting for `done == n_chunks` — so the borrowed closure (and everything
+/// it borrows from the submitter's stack) outlives every dereference.
+/// Late-waking workers holding a retired job's `Arc` find `next` already
+/// exhausted and never touch the pointer.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    n_chunks: usize,
+    /// Next unclaimed chunk index.
+    next: AtomicUsize,
+    /// Chunks that finished executing (panicked chunks count too, so the
+    /// submitter's completion wait can never hang).
+    done: AtomicUsize,
+    /// First chunk panic, re-raised on the submitting thread — the same
+    /// propagation the old `std::thread::scope` fan-out gave at join.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct State {
+    /// Monotone job counter; workers wake when it moves past what they saw.
+    epoch: u64,
+    job: Option<Arc<Job>>,
+}
+
+/// The pool singleton: parked workers plus the current-job slot.
+struct Pool {
+    state: Mutex<State>,
+    bell: Condvar,
+    /// Serializes submitters; held for the full duration of one job.
+    dispatch: Mutex<()>,
+    /// Completion signal: the worker that finishes a job's last chunk
+    /// rings this so the submitter parks instead of spinning.
+    done_lock: Mutex<()>,
+    done_bell: Condvar,
+    /// Worker threads ever spawned (tests assert this stops moving).
+    spawned: AtomicUsize,
+    /// Worker-thread target: `size() − 1`, the submitter participates.
+    workers: usize,
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, MAX_THREADS)
+}
+
+/// Maximum useful parallelism (hardware threads, capped at
+/// [`MAX_THREADS`]).  Cheap; does not start the pool.
+pub fn size() -> usize {
+    static SIZE: OnceLock<usize> = OnceLock::new();
+    *SIZE.get_or_init(hardware_threads)
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    static SPAWN: Once = Once::new();
+    let p = POOL.get_or_init(|| Pool {
+        state: Mutex::new(State { epoch: 0, job: None }),
+        bell: Condvar::new(),
+        dispatch: Mutex::new(()),
+        done_lock: Mutex::new(()),
+        done_bell: Condvar::new(),
+        spawned: AtomicUsize::new(0),
+        workers: size() - 1,
+    });
+    SPAWN.call_once(|| {
+        for i in 0..p.workers {
+            p.spawned.fetch_add(1, Ordering::Relaxed);
+            std::thread::Builder::new()
+                .name(format!("flexrank-pool-{i}"))
+                .spawn(move || worker_loop(p))
+                .expect("spawn pool worker");
+        }
+    });
+    p
+}
+
+/// Worker threads ever created by the pool (diagnostics/tests).  Starts the
+/// pool if it is not running yet.
+pub fn threads_spawned() -> usize {
+    pool().spawned.load(Ordering::Relaxed)
+}
+
+fn worker_loop(pool: &'static Pool) {
+    let mut seen = 0u64;
+    loop {
+        // Park until a job newer than the last one we saw is published.
+        let job = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(job) = st.job.clone() {
+                        break job;
+                    }
+                }
+                st = pool.bell.wait(st).unwrap();
+            }
+        };
+        run_chunks(pool, &job);
+    }
+}
+
+/// Claim and execute chunks until the job's claim counter is exhausted.
+/// A panicking chunk is caught (keeping the worker alive and the `done`
+/// counter advancing); its payload is stashed for the submitter to re-raise.
+/// Whoever completes the last chunk rings the pool's done bell.
+fn run_chunks(pool: &Pool, job: &Job) {
+    loop {
+        let ci = job.next.fetch_add(1, Ordering::AcqRel);
+        if ci >= job.n_chunks {
+            break;
+        }
+        // Safety: deref only after a successful claim — the claim proves
+        // this chunk has not run, so the submitter is still blocked on
+        // `done < n_chunks` and the borrowed closure is alive.  A retired
+        // job's counter is exhausted, so its (dangling) pointer is never
+        // even reconstituted into a reference.
+        let task = unsafe { &*job.task };
+        if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(ci))) {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.n_chunks {
+            // Taking the lock before notifying closes the race with a
+            // submitter that checked `done` and is about to wait.
+            let _g = pool.done_lock.lock().unwrap();
+            pool.done_bell.notify_all();
+        }
+    }
+}
+
+/// Raw pointer wrapper so chunk closures can carry a mutable output base
+/// across threads; disjointness is enforced by the row-range math in
+/// [`parallel_for_rows`].
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Row-blocked fan-out: split `out` (≥ `rows · row_len` elements) into
+/// chunks of `rows_per` rows and run `body(first_row, chunk)` for each
+/// through [`parallel_for`].  This is the single place that turns disjoint
+/// chunk indices into disjoint `&mut` sub-slices — every pooled kernel
+/// routes its output through here instead of carrying its own unsafe
+/// pointer arithmetic.
+pub fn parallel_for_rows<T: Send + Sync>(
+    out: &mut [T],
+    rows: usize,
+    row_len: usize,
+    rows_per: usize,
+    body: &(dyn Fn(usize, &mut [T]) + Sync),
+) {
+    assert!(out.len() >= rows * row_len, "parallel_for_rows: out too small");
+    assert!(rows_per > 0, "parallel_for_rows: empty chunks");
+    let base = SendPtr(out.as_mut_ptr());
+    parallel_for(rows.div_ceil(rows_per), &|ci| {
+        let i0 = ci * rows_per;
+        let rows_c = rows_per.min(rows - i0);
+        // Safety: chunk `ci` covers elements [i0·row_len, (i0+rows_c)·row_len)
+        // — in-bounds by the assert above, disjoint across chunk indices.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(i0 * row_len), rows_c * row_len)
+        };
+        body(i0, chunk);
+    });
+}
+
+/// Run `task(ci)` for every chunk index in `0..n_chunks` and return once all
+/// of them have executed.  Uses the persistent pool when it is free, the
+/// calling thread alone otherwise (single-core machines, one-chunk jobs,
+/// or a pool already busy with another submitter's job).
+///
+/// A panic inside a chunk does not kill a worker or hang the submitter:
+/// it is caught on the executing thread and re-raised here after the job
+/// drains, matching the join-time propagation of the `std::thread::scope`
+/// fan-out this pool replaced.
+pub fn parallel_for(n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+    if n_chunks == 0 {
+        return;
+    }
+    let run_serial = || {
+        for ci in 0..n_chunks {
+            task(ci);
+        }
+    };
+    if n_chunks == 1 || size() <= 1 {
+        run_serial();
+        return;
+    }
+    let p = pool();
+    let Ok(guard) = p.dispatch.try_lock() else {
+        run_serial();
+        return;
+    };
+    let job = Arc::new(Job {
+        task: task as *const (dyn Fn(usize) + Sync),
+        n_chunks,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+    });
+    {
+        let mut st = p.state.lock().unwrap();
+        st.epoch += 1;
+        st.job = Some(job.clone());
+        p.bell.notify_all();
+    }
+    // The submitter claims chunks like any worker.
+    run_chunks(p, &job);
+    // Stragglers may still be inside their last claimed chunk; park on the
+    // done bell instead of spinning (`done` advances even for panicked
+    // chunks, so this cannot hang).
+    {
+        let mut g = p.done_lock.lock().unwrap();
+        while job.done.load(Ordering::Acquire) < n_chunks {
+            g = p.done_bell.wait(g).unwrap();
+        }
+    }
+    // Retire the job so late-waking workers see an empty slot, release the
+    // dispatch slot, then surface any chunk panic on this thread.
+    p.state.lock().unwrap().job = None;
+    drop(guard);
+    if let Some(payload) = job.panic.lock().unwrap().take() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{kernels, reference, Mat};
+    use crate::rng::Rng;
+
+    #[test]
+    fn parallel_for_covers_every_chunk_exactly_once() {
+        let counts: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(97, &|ci| {
+            counts[ci].fetch_add(1, Ordering::Relaxed);
+        });
+        for (ci, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "chunk {ci} run count");
+        }
+    }
+
+    #[test]
+    fn pool_spawns_no_workers_after_warmup() {
+        // Warm up with a matmul big enough to force pooled dispatch.
+        let mut rng = Rng::new(900);
+        let (m, k, n) = (64, 128, 64); // 512K MACs ≥ PAR_MIN_OPS
+        assert!(m * k * n >= kernels::PAR_MIN_OPS);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let _ = kernels::matmul(&a, &b);
+        let spawned = threads_spawned();
+        assert_eq!(spawned, size() - 1, "pool spawns hardware−1 workers, once");
+        for _ in 0..32 {
+            let _ = kernels::matmul(&a, &b);
+        }
+        assert_eq!(threads_spawned(), spawned, "steady state must reuse workers");
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let boom = std::panic::catch_unwind(|| {
+            parallel_for(8, &|ci| {
+                if ci == 3 {
+                    panic!("chunk 3 exploded");
+                }
+            });
+        });
+        assert!(boom.is_err(), "chunk panic must re-raise on the submitter");
+        // All workers survived and the counters reset: later jobs complete.
+        let counts: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(16, &|ci| {
+            counts[ci].fetch_add(1, Ordering::Relaxed);
+        });
+        for c in &counts {
+            assert_eq!(c.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_matmuls_through_shared_pool_match_reference() {
+        // Two threads hammer the one shared pool with above-threshold
+        // problems; whichever loses the dispatch race runs inline.  Every
+        // result must still match the serial reference exactly.
+        let work = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            for _ in 0..6 {
+                let (m, k, n) = (48, 160, 52); // ~400K MACs ≥ PAR_MIN_OPS
+                let a = Mat::randn(m, k, &mut rng);
+                let b = Mat::randn(k, n, &mut rng);
+                let got = kernels::matmul(&a, &b);
+                let want = reference::matmul(&a, &b);
+                assert!(got.close_to(&want, 1e-10), "pooled matmul diverged");
+                let bt = Mat::randn(n, k, &mut rng);
+                let got = kernels::matmul_nt(&a, &bt);
+                let want = reference::matmul(&a, &reference::transpose(&bt));
+                assert!(got.close_to(&want, 1e-10), "pooled matmul_nt diverged");
+            }
+        };
+        std::thread::scope(|s| {
+            s.spawn(|| work(901));
+            s.spawn(|| work(902));
+        });
+    }
+}

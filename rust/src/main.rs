@@ -60,7 +60,8 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     let sub = GarSubmodel::from_student(&cfg, &student, &uniform_budget_profile(&cfg, 0.5))?;
 
     let batch = cfg.batch_eval;
-    let mut scratch = Scratch::new(batch * cfg.seq_len, cfg.d_model, cfg.seq_len, cfg.vocab);
+    let mut scratch =
+        Scratch::new(batch * cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.vocab);
     let tokens = vec![0i32; batch * cfg.seq_len];
     sub.forward(&tokens, batch, &mut scratch)?;
     let vals = scratch.logits(batch * cfg.seq_len, cfg.vocab);

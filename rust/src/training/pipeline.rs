@@ -124,7 +124,7 @@ pub fn run(engine: &Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> 
         probe_model.evals, sens.full_loss
     );
     let quant = (sens.full_cost / 4096).max(1);
-    let dp = dp_rank_selection(&sens.candidates, sens.full_cost, quant);
+    let dp = dp_rank_selection(&sens.candidates, sens.full_cost, quant)?;
     eprintln!(
         "[pipeline] DP: {} pareto states, chain of {}",
         dp.pareto.len(),
