@@ -1,19 +1,21 @@
-//! End-to-end driver over the full three-layer stack (DESIGN.md §validation):
-//! pretrains the byte-GPT teacher through the PJRT `teacher_train_step`
-//! artifact (L2+L1 compute lowered from jax/Pallas), runs DataSVD, DP
-//! selection, nested KD consolidation, and evaluates every budget — logging
-//! the loss curves that EXPERIMENTS.md records.
+//! End-to-end driver over the full stack (DESIGN.md §validation): pretrains
+//! the byte-GPT teacher on the native kernel backend, runs calibration +
+//! DataSVD, DP rank selection, nested KD consolidation, and evaluates every
+//! budget — logging the loss curves that EXPERIMENTS.md records.  Runs
+//! fully offline (no artifacts, no PJRT); stages checkpoint under
+//! `results/pipeline/` and the DP tier profiles land in
+//! `results/pipeline/profiles.json` for `repro serve`.
 //!
-//! Run (after `make artifacts && cargo build --release`):
-//!   cargo run --release --example e2e_flexrank            # full run
-//!   cargo run --release --example e2e_flexrank -- --smoke # 3-step smoke
+//! Run:
+//!   cargo run --release --example e2e_flexrank            # full run (base)
+//!   cargo run --release --example e2e_flexrank -- --smoke # few-step smoke
 //!
-//! Flags: --pretrain-steps N --consolidate-steps N --seed S --fresh
+//! Flags: --config base|tiny --pretrain-steps N --consolidate-steps N
+//!        --seed S --fresh
 
 use anyhow::Result;
 use flexrank::cli::Args;
 use flexrank::config::RunConfig;
-use flexrank::runtime::Engine;
 use flexrank::training::pipeline;
 
 fn main() -> Result<()> {
@@ -24,15 +26,15 @@ fn main() -> Result<()> {
         RunConfig::default().with_args(&args)?
     };
 
-    let engine = Engine::new(flexrank::artifacts_dir())?;
+    let cfg = flexrank::config::load_model_config(args.get_or("config", "base"))?;
     println!(
-        "engine: platform={} model={} ({} factorized layers)",
-        engine.platform(),
-        engine.manifest.config.name,
-        engine.manifest.config.n_fact_layers()
+        "backend: native kernels — model {} (d={}, {} factorized layers)",
+        cfg.name,
+        cfg.d_model,
+        cfg.n_fact_layers()
     );
 
-    let out = pipeline::run(&engine, &rc, args.flag("fresh"))?;
+    let out = pipeline::run_native(&cfg, &rc, args.flag("fresh"))?;
 
     println!("\n== pretraining loss curve (first/last 5) ==");
     let pl = &out.pretrain_losses;
@@ -58,6 +60,11 @@ fn main() -> Result<()> {
         );
     }
     println!("\nfull model inference cost: {} params (GAR form)", out.full_cost);
+    println!(
+        "serving tiers ({}): DP profiles in {}",
+        out.tier_profiles.len(),
+        pipeline::profiles_path().display()
+    );
     println!("e2e_flexrank OK");
     Ok(())
 }

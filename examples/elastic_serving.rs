@@ -10,7 +10,9 @@
 
 use anyhow::Result;
 use flexrank::cli::Args;
-use flexrank::coordinator::{serve_trace, serving_student, PolicyKind, ServeCfg, SubmodelRegistry};
+use flexrank::coordinator::{
+    load_tier_profiles, serve_trace, serving_student, PolicyKind, ServeCfg, SubmodelRegistry,
+};
 use flexrank::data::{Corpus, TraceCfg, TraceGen};
 
 fn main() -> Result<()> {
@@ -18,9 +20,12 @@ fn main() -> Result<()> {
     let cfg = flexrank::config::load_model_config(args.get_or("config", "base"))?;
 
     // Consolidated student checkpoint when available, else a freshly
-    // decomposed random teacher (serving mechanics are identical).
+    // decomposed random teacher (serving mechanics are identical).  Tier
+    // profiles come from the pipeline's DP selection when profiles.json is
+    // present, uniform budget ranks otherwise.
     let student = serving_student(&cfg, args.u64_or("seed", 7)?)?;
-    let mut registry = SubmodelRegistry::load_native(&cfg, &student, None)?;
+    let profiles = load_tier_profiles(&cfg)?;
+    let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_deref())?;
 
     let corpus = Corpus::generate(200_000, 5);
     let trace = TraceGen::new(

@@ -25,7 +25,7 @@ pub use metrics::{LatencyStats, Metrics};
 pub use policy::{Policy, PolicyKind};
 #[cfg(feature = "pjrt")]
 pub use registry::PjrtRegistry;
-pub use registry::{SubmodelRegistry, Tier};
+pub use registry::{load_tier_profiles, SubmodelRegistry, Tier};
 pub use server::{serve_trace, ServeCfg, ServeReport};
 
 use anyhow::{Context, Result};
@@ -41,8 +41,20 @@ use crate::training::params::{
 pub fn serving_student(cfg: &crate::runtime::ModelConfig, seed: u64) -> Result<ParamSet> {
     let stem = crate::training::stage_dir().join("student_kd");
     if crate::training::ckpt::exists(&stem) {
-        eprintln!("[serve] using consolidated student checkpoint");
-        return crate::training::ckpt::load(&stem);
+        let s = crate::training::ckpt::load(&stem)?;
+        // A checkpoint from a different config would slice in-bounds but
+        // serve garbage — treat it as stale, like a mismatched profiles.json.
+        let shape_ok = s.get("tok_emb").map(|t| t.shape() == [cfg.vocab, cfg.d_model])
+            .unwrap_or(false)
+            && s.get("pos_emb").map(|t| t.shape() == [cfg.seq_len, cfg.d_model]).unwrap_or(false);
+        if shape_ok {
+            eprintln!("[serve] using consolidated student checkpoint");
+            return Ok(s);
+        }
+        eprintln!(
+            "[serve] student_kd checkpoint was written for a different config than '{}' — ignoring it",
+            cfg.name
+        );
     }
     eprintln!("[serve] no checkpoint; decomposing a fresh random teacher (mechanics demo)");
     let teacher = random_teacher(cfg, seed);
@@ -57,8 +69,15 @@ pub fn run_cli(args: &Args) -> Result<()> {
         .context("model config")?;
     let seed = args.u64_or("seed", 77)?;
     let student = serving_student(&cfg, seed ^ 0x5eed)?;
-    let mut registry =
-        SubmodelRegistry::load_native(&cfg, &student, None).context("registry load")?;
+    // DP-selected per-tier profiles when the pipeline has produced them;
+    // uniform budget profiles otherwise.
+    let profiles = load_tier_profiles(&cfg)?;
+    match &profiles {
+        Some(p) => eprintln!("[serve] using {} DP-selected tier profiles from profiles.json", p.len()),
+        None => eprintln!("[serve] no DP profiles; serving uniform budget ranks"),
+    }
+    let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_deref())
+        .context("registry load")?;
 
     let corpus = crate::data::Corpus::generate(crate::training::CORPUS_BYTES, 5);
     let trace_cfg = TraceCfg {

@@ -6,11 +6,87 @@
 //! ([`PjrtRegistry`]) survives behind the `pjrt` feature for machines with
 //! the XLA toolchain.
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
+use crate::json;
 use crate::runtime::native::{uniform_budget_rank, GarSubmodel, Scratch};
 use crate::runtime::ModelConfig;
 use crate::training::params::ParamSet;
+
+/// Load the DP-selected per-tier profiles the native pipeline persisted as
+/// `training::stage_dir()/profiles.json` (see the schema in ROADMAP.md).
+///
+/// Returns `Ok(None)` when no file exists, or when it was written for a
+/// different model config / tier set (a stale artifact — serving falls back
+/// to uniform budget profiles with a warning).  A file that *claims* to
+/// match this config but is malformed is a hard error: serving silently
+/// wrong submodels is never acceptable.
+pub fn load_tier_profiles(cfg: &ModelConfig) -> Result<Option<Vec<Vec<usize>>>> {
+    let path = crate::training::stage_dir().join("profiles.json");
+    if !path.exists() {
+        return Ok(None);
+    }
+    let doc = json::parse_file(&path)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let name = doc.req("config")?.as_str()?;
+    if name != cfg.name {
+        eprintln!(
+            "[serve] {} was written for config '{name}', serving '{}' — \
+             falling back to uniform profiles",
+            path.display(),
+            cfg.name
+        );
+        return Ok(None);
+    }
+    let tiers = doc.req("tiers")?.as_arr()?;
+    if tiers.len() != cfg.serve_tiers.len() {
+        eprintln!(
+            "[serve] {} has {} tiers but the config serves {} — \
+             falling back to uniform profiles (rerun `repro profiles`)",
+            path.display(),
+            tiers.len(),
+            cfg.serve_tiers.len()
+        );
+        return Ok(None);
+    }
+    let mut out = Vec::with_capacity(tiers.len());
+    for (i, t) in tiers.iter().enumerate() {
+        let budget = t.req("budget")?.as_f64()?;
+        if (budget - cfg.serve_tiers[i]).abs() > 1e-9 {
+            // Same staleness class as a changed tier count: the config's
+            // budgets moved since the pipeline ran.
+            eprintln!(
+                "[serve] {}: tier {i} budget {budget} != config budget {} — \
+                 falling back to uniform profiles (rerun `repro profiles`)",
+                path.display(),
+                cfg.serve_tiers[i]
+            );
+            return Ok(None);
+        }
+        let profile = t.req("profile")?.as_usize_vec()?;
+        ensure!(
+            profile.len() == cfg.n_fact_layers(),
+            "{}: tier {i} profile has {} ranks but the model has {} \
+             factorized layers",
+            path.display(),
+            profile.len(),
+            cfg.n_fact_layers()
+        );
+        // Out-of-range ranks would be silently clamped downstream by
+        // GarSubmodel::from_student — serve nothing rather than the wrong
+        // submodel.
+        for (l, &r) in profile.iter().enumerate() {
+            ensure!(
+                (1..=cfg.rank_full()).contains(&r),
+                "{}: tier {i} layer {l} rank {r} outside [1, {}]",
+                path.display(),
+                cfg.rank_full()
+            );
+        }
+        out.push(profile);
+    }
+    Ok(Some(out))
+}
 
 /// One deployable tier.
 pub struct Tier {

@@ -306,6 +306,61 @@ mod tests {
         }
     }
 
+    /// Randomized candidate sets: every DP chain (exact *and* quantized)
+    /// must be componentwise nested, and bucketing the savings (`quant = 8`)
+    /// must never produce a front point the exact DP can't match or beat —
+    /// quantization trades state count for resolution, never correctness.
+    #[test]
+    fn property_chains_nested_and_quantized_never_beats_exact() {
+        prop::forall(
+            75,
+            25,
+            |rng| {
+                let l = 2 + rng.below(3);
+                (0..l)
+                    .map(|_| {
+                        let fr = 2 + rng.below(4);
+                        let ds = 2 + rng.below(9) as u64;
+                        layer_cands(rng, fr, ds)
+                    })
+                    .collect::<Vec<Vec<Candidate>>>()
+            },
+            |cands| {
+                let full: u64 = 100_000;
+                let exact = dp_rank_selection(cands, full, 1).map_err(|e| e.to_string())?;
+                let quant = dp_rank_selection(cands, full, 8).map_err(|e| e.to_string())?;
+                for dp in [&exact, &quant] {
+                    if !dp.chain.validate() {
+                        return Err(format!("chain invariant broken: {:?}", dp.chain.profiles));
+                    }
+                    for w in dp.chain.profiles.windows(2) {
+                        if !is_nested(&w[0], &w[1]) {
+                            return Err(format!(
+                                "chain not componentwise nested: {:?} vs {:?}",
+                                w[0], w[1]
+                            ));
+                        }
+                    }
+                }
+                // Every quantized front point is a real achievable profile,
+                // so the exact (true) front must dominate it: same-or-more
+                // saving at same-or-less total error.
+                for (qs, qe, _) in &quant.pareto {
+                    let matched = exact
+                        .pareto
+                        .iter()
+                        .any(|(es, ee, _)| es >= qs && *ee <= qe + 1e-12);
+                    if !matched {
+                        return Err(format!(
+                            "quantized point (saving {qs}, err {qe}) beats the exact front"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn nan_probe_error_rejected_at_boundary() {
         // A NaN probe error (degenerate calibration batch, 0/0 in the

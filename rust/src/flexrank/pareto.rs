@@ -1,5 +1,7 @@
 //! Pareto-front utilities over (cost, error) points.
 
+use anyhow::{ensure, Result};
+
 /// A point in the (cost, error) objective space, tagged with its index into
 /// the originating collection.
 #[derive(Debug, Clone, PartialEq)]
@@ -11,14 +13,25 @@ pub struct ParetoPoint {
 
 /// Non-dominated subset (minimize both cost and error), sorted by cost
 /// ascending / error descending.  Ties in cost keep the lower error.
-pub fn pareto_front(points: &[(f64, f64)]) -> Vec<ParetoPoint> {
+///
+/// NaN coordinates are rejected up front (same policy as
+/// `dp_rank_selection`): comparisons use `total_cmp`, so a NaN no longer
+/// panics the sort — but a NaN point is meaningless and must not silently
+/// win or lose a frontier scan.
+pub fn pareto_front(points: &[(f64, f64)]) -> Result<Vec<ParetoPoint>> {
+    for (i, &(c, e)) in points.iter().enumerate() {
+        ensure!(
+            !c.is_nan() && !e.is_nan(),
+            "pareto_front: point {i} has a NaN coordinate (cost {c}, error {e}) — \
+             rejecting before the frontier sort"
+        );
+    }
     let mut idxs: Vec<usize> = (0..points.len()).collect();
     idxs.sort_by(|&a, &b| {
         points[a]
             .0
-            .partial_cmp(&points[b].0)
-            .unwrap()
-            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+            .total_cmp(&points[b].0)
+            .then(points[a].1.total_cmp(&points[b].1))
     });
     let mut out: Vec<ParetoPoint> = Vec::new();
     let mut best_err = f64::INFINITY;
@@ -29,7 +42,7 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<ParetoPoint> {
             out.push(ParetoPoint { cost: c, error: e, idx: i });
         }
     }
-    out
+    Ok(out)
 }
 
 /// Is point (cost, error) dominated by any point in `points`?
@@ -47,7 +60,7 @@ mod tests {
     #[test]
     fn front_of_staircase() {
         let pts = vec![(1.0, 3.0), (2.0, 2.0), (3.0, 1.0), (2.5, 2.5), (1.0, 4.0)];
-        let f = pareto_front(&pts);
+        let f = pareto_front(&pts).unwrap();
         let got: Vec<usize> = f.iter().map(|p| p.idx).collect();
         assert_eq!(got, vec![0, 1, 2]);
     }
@@ -55,9 +68,24 @@ mod tests {
     #[test]
     fn front_drops_duplicate_costs() {
         let pts = vec![(1.0, 3.0), (1.0, 2.0)];
-        let f = pareto_front(&pts);
+        let f = pareto_front(&pts).unwrap();
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].idx, 1);
+    }
+
+    #[test]
+    fn nan_point_rejected_not_panicking() {
+        // A NaN error point (e.g. a 0/0 probe on a degenerate eval batch)
+        // used to panic inside partial_cmp().unwrap(); now it must come back
+        // as a pointed error naming the offender.
+        let pts = vec![(1.0, 3.0), (2.0, f64::NAN), (3.0, 1.0)];
+        let err = pareto_front(&pts).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("NaN"), "{msg}");
+        assert!(msg.contains("point 1"), "must name the point: {msg}");
+
+        let pts = vec![(f64::NAN, 0.5)];
+        assert!(pareto_front(&pts).is_err(), "NaN cost must be rejected too");
     }
 
     #[test]
@@ -72,7 +100,7 @@ mod tests {
                     .collect::<Vec<_>>()
             },
             |pts| {
-                let front = pareto_front(pts);
+                let front = pareto_front(pts).map_err(|e| e.to_string())?;
                 // every front point is non-dominated
                 for p in &front {
                     if is_dominated(p.cost, p.error, pts) {

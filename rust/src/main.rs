@@ -3,13 +3,15 @@
 //! Subcommands (see README):
 //!   smoke                 — exercise the native kernel backend end to end
 //!                           (with `--features pjrt`: the PJRT artifact chain)
-//!   pipeline              — full FlexRank run: pretrain → DataSVD → DP → KD
-//!                           (requires `--features pjrt` + `make artifacts`)
-//!   serve                 — elastic serving demo over a synthetic trace
-//!                           (native backend, runs offline)
+//!   pipeline              — full FlexRank run: pretrain → DataSVD → DP → KD,
+//!                           native backend by default (fully offline);
+//!                           `--backend pjrt` drives the AOT artifacts
+//!   serve                 — elastic serving demo over a synthetic trace;
+//!                           picks up DP tier profiles from the pipeline's
+//!                           profiles.json when present
 //!   figure <figN>         — regenerate a paper figure's series into results/
 //!   table  <tabN>         — regenerate a paper table
-//!   profiles              — write artifacts/profiles.json from DP selection
+//!   profiles              — write stage_dir()/profiles.json from DP selection
 
 use anyhow::Result;
 use flexrank::cli::Args;
@@ -18,14 +20,8 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("smoke") => cmd_smoke(&args),
-        #[cfg(feature = "pjrt")]
         Some("pipeline") => flexrank::training::pipeline::run_cli(&args),
-        #[cfg(feature = "pjrt")]
         Some("profiles") => flexrank::training::pipeline::write_profiles_cli(&args),
-        #[cfg(not(feature = "pjrt"))]
-        Some("pipeline") | Some("profiles") => {
-            anyhow::bail!("this subcommand drives the AOT artifacts; rebuild with --features pjrt")
-        }
         Some("serve") => flexrank::coordinator::run_cli(&args),
         Some("figure") => flexrank::eval::figures::run_cli(&args),
         Some("table") => flexrank::eval::figures::run_table_cli(&args),

@@ -60,6 +60,14 @@ pub struct ModelConfig {
     pub batch_eval: usize,
     pub batch_calib: usize,
     pub batch_serve: usize,
+    /// KD temperature τ of Eq. 5 (python `tau_kd`).
+    pub tau_kd: f64,
+    /// AdamW hyperparameters, shared with python's `adamw_update`.
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub adam_eps: f64,
     pub serve_tiers: Vec<f64>,
     pub bench_ranks: Vec<usize>,
     pub bench_dim: usize,
@@ -80,6 +88,12 @@ impl ModelConfig {
             batch_eval: v.req("batch_eval")?.as_usize()?,
             batch_calib: v.req("batch_calib")?.as_usize()?,
             batch_serve: v.req("batch_serve")?.as_usize()?,
+            tau_kd: v.req("tau_kd")?.as_f64()?,
+            lr: v.req("lr")?.as_f64()?,
+            weight_decay: v.req("weight_decay")?.as_f64()?,
+            beta1: v.req("beta1")?.as_f64()?,
+            beta2: v.req("beta2")?.as_f64()?,
+            adam_eps: v.req("adam_eps")?.as_f64()?,
             serve_tiers: v.req("serve_tiers")?.as_f64_vec()?,
             bench_ranks: v.req("bench_ranks")?.as_usize_vec()?,
             bench_dim: v.req("bench_dim")?.as_usize()?,

@@ -102,4 +102,73 @@ mod tests {
     fn missing_file_errors() {
         assert!(load("/nonexistent/path/ck").is_err());
     }
+
+    fn mixed_set() -> ParamSet {
+        let mut ps = ParamSet::default();
+        ps.insert("w.f", Tensor::f32(vec![3, 2], vec![0.5, -1.25, f32::MIN_POSITIVE, 3e8, -0.0, 7.75]));
+        ps.insert("idx", Tensor::i32(vec![4], vec![i32::MIN, -1, 0, i32::MAX]));
+        ps.insert("b", Tensor::f32(vec![2], vec![1.0, 2.0]));
+        ps
+    }
+
+    fn temp_stem(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("flexrank_ckpt_{}_{tag}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join("ck")
+    }
+
+    /// save → load → save must be *byte*-exact on both the blob and the
+    /// sidecar — the checkpoint format is the contract between pipeline
+    /// stages and the serving CLI, so any drift is corruption.
+    #[test]
+    fn save_load_save_is_byte_exact() {
+        let ps = mixed_set();
+        let stem = temp_stem("exact");
+        save(&ps, &stem).unwrap();
+        let blob1 = std::fs::read(stem.with_extension("bin")).unwrap();
+        let meta1 = std::fs::read(stem.with_extension("json")).unwrap();
+        let back = load(&stem).unwrap();
+        let stem2 = temp_stem("exact2");
+        save(&back, &stem2).unwrap();
+        assert_eq!(blob1, std::fs::read(stem2.with_extension("bin")).unwrap());
+        assert_eq!(meta1, std::fs::read(stem2.with_extension("json")).unwrap());
+        // And the i32 payload survived without being f32-mangled.
+        assert_eq!(back.get("idx").unwrap().as_i32().unwrap(), &[i32::MIN, -1, 0, i32::MAX]);
+    }
+
+    #[test]
+    fn truncated_blob_fails_loudly() {
+        let ps = mixed_set();
+        let stem = temp_stem("trunc");
+        save(&ps, &stem).unwrap();
+        let bin = stem.with_extension("bin");
+        let mut blob = std::fs::read(&bin).unwrap();
+        blob.truncate(blob.len() - 3);
+        std::fs::write(&bin, blob).unwrap();
+        let err = load(&stem).unwrap_err();
+        assert!(err.to_string().contains("too short"), "{err}");
+    }
+
+    #[test]
+    fn garbled_dtype_fails_loudly() {
+        let ps = mixed_set();
+        let stem = temp_stem("dtype");
+        save(&ps, &stem).unwrap();
+        let meta_path = stem.with_extension("json");
+        let meta = std::fs::read_to_string(&meta_path).unwrap();
+        std::fs::write(&meta_path, meta.replace("float32", "float99")).unwrap();
+        let err = load(&stem).unwrap_err();
+        assert!(err.to_string().contains("bad dtype"), "{err}");
+    }
+
+    #[test]
+    fn missing_dtype_key_fails_loudly() {
+        let ps = mixed_set();
+        let stem = temp_stem("nodtype");
+        save(&ps, &stem).unwrap();
+        let meta_path = stem.with_extension("json");
+        let meta = std::fs::read_to_string(&meta_path).unwrap();
+        std::fs::write(&meta_path, meta.replace("\"dtype\"", "\"dtypo\"")).unwrap();
+        assert!(load(&stem).is_err(), "a checkpoint without dtypes must not deserialize");
+    }
 }

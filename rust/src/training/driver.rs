@@ -19,12 +19,7 @@ use crate::rng::Rng;
 use crate::runtime::{Engine, Tensor};
 
 use super::params::ParamSet;
-
-/// Result of a training run: final params + loss curve.
-pub struct TrainRun {
-    pub params: ParamSet,
-    pub losses: Vec<f32>,
-}
+pub use super::TrainRun;
 
 /// Pretrain the dense teacher (builds the "pretrained base model").
 pub fn pretrain_teacher(

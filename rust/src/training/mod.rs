@@ -1,15 +1,25 @@
-//! Training drivers over the PJRT artifacts: teacher pretraining,
-//! calibration, knowledge consolidation, checkpointing, LoRA adaptation,
-//! and the end-to-end pipeline orchestration.
+//! Training drivers: teacher pretraining, calibration, knowledge
+//! consolidation, checkpointing, and the end-to-end pipeline orchestration.
+//!
+//! Two backends share the same stage semantics: [`native`] (default — pure
+//! rust over `linalg::kernels`, fully offline) and [`driver`] (PJRT over the
+//! AOT artifacts, behind the `pjrt` feature).
 
 pub mod ckpt;
 #[cfg(feature = "pjrt")]
 pub mod driver;
 #[cfg(feature = "pjrt")]
 pub mod lora;
+pub mod native;
 pub mod params;
-#[cfg(feature = "pjrt")]
 pub mod pipeline;
+
+/// Result of a training run: final params + loss curve (shared by the
+/// native and PJRT drivers).
+pub struct TrainRun {
+    pub params: params::ParamSet,
+    pub losses: Vec<f32>,
+}
 
 /// Stage-output directory shared by the pipeline and the serving CLI
 /// (checkpoints land here so `repro serve` can reuse a consolidated student

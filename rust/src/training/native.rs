@@ -1,0 +1,1323 @@
+//! Native training backend: the full Algorithm-1 stage set — teacher
+//! pretraining, calibration, masked-student evaluation, sensitivity probing,
+//! and nested KD consolidation — implemented directly over
+//! [`crate::linalg::kernels`] f32 paths with manual backprop.  No PJRT, no
+//! artifacts: this is what makes `repro pipeline` run on an offline machine.
+//!
+//! Semantics mirror `python/compile/model.py` exactly:
+//!
+//! * **teacher** — dense byte-GPT (`teacher_fwd`): token + position
+//!   embeddings, pre-LN blocks with causal multi-head attention
+//!   (scale `1/√hd`), tanh-GELU MLP, final LN, tied logits head.
+//! * **student** — every linear factorized as `y = (x·V ⊙ mask)·Uᵀ + b`
+//!   with per-layer prefix rank masks (`student_fwd`), so one parameter set
+//!   serves every budget profile.
+//! * **losses** — mean next-token CE (`ce_loss`) and the temperature-scaled
+//!   KD loss of Eq. 5: `τ²·mean_rows KL(p_t‖p_s)` with
+//!   `∂L/∂s = τ·(p_s − p_t)/rows` (`kd_loss_grad`, matching the custom VJP
+//!   in `kernels/kd_loss.py`).
+//! * **AdamW** — `p ← p − lr·(m̂/(√v̂+ε) + wd·p)` over every parameter
+//!   (python `adamw_update` applies weight decay to the whole tree).
+//!
+//! The backward pass is hand-derived per layer (LN, factorized/dense linear,
+//! causal softmax attention, GELU, tied embeddings); finite-difference tests
+//! below pin every gradient path.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::data::TokenBatcher;
+use crate::flexrank::decompose::CovAccum;
+use crate::flexrank::masks::RankProfile;
+use crate::flexrank::sensitivity::ProbeModel;
+use crate::linalg::{kernels, Mat};
+use crate::rng::Rng;
+use crate::runtime::{ModelConfig, Tensor};
+
+use super::params::{fact_layers, ParamSet};
+use super::TrainRun;
+
+// ---------------------------------------------------------------------------
+// Small helpers
+// ---------------------------------------------------------------------------
+
+fn add_bias(y: &mut [f32], rows: usize, m: usize, b: &[f32]) {
+    for row in y.chunks_exact_mut(m).take(rows) {
+        for (o, &bv) in row.iter_mut().zip(b) {
+            *o += bv;
+        }
+    }
+}
+
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Mutable f32 view of a grad tensor by name.
+fn gmut<'a>(grads: &'a mut ParamSet, name: &str) -> Result<&'a mut [f32]> {
+    grads
+        .map
+        .get_mut(name)
+        .ok_or_else(|| anyhow!("grad '{name}' missing"))?
+        .as_f32_mut()
+        .map(|v| v.as_mut_slice())
+}
+
+// ---------------------------------------------------------------------------
+// Layer norm
+// ---------------------------------------------------------------------------
+
+struct LnCache {
+    /// Normalized activations `(x − μ)·inv`, (rows, d).
+    xhat: Vec<f32>,
+    /// Per-row `1/√(var + ε)`.
+    inv: Vec<f32>,
+}
+
+fn ln_forward(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32]) -> (Vec<f32>, LnCache) {
+    let mut y = vec![0f32; rows * d];
+    let mut xhat = vec![0f32; rows * d];
+    let mut inv = vec![0f32; rows];
+    for i in 0..rows {
+        let xr = &x[i * d..(i + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let iv = 1.0 / (var + 1e-5).sqrt();
+        inv[i] = iv;
+        let xh = &mut xhat[i * d..(i + 1) * d];
+        let yr = &mut y[i * d..(i + 1) * d];
+        for j in 0..d {
+            let h = (xr[j] - mu) * iv;
+            xh[j] = h;
+            yr[j] = h * g[j] + b[j];
+        }
+    }
+    (y, LnCache { xhat, inv })
+}
+
+/// Backward through LN; accumulates `dg`/`db`, returns `dx`.
+fn ln_backward(
+    cache: &LnCache,
+    rows: usize,
+    d: usize,
+    g: &[f32],
+    dy: &[f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0f32; rows * d];
+    for i in 0..rows {
+        let xh = &cache.xhat[i * d..(i + 1) * d];
+        let dyr = &dy[i * d..(i + 1) * d];
+        let mut s_dxh = 0f32;
+        let mut s_dxh_xh = 0f32;
+        for j in 0..d {
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+            let dxh = dyr[j] * g[j];
+            s_dxh += dxh;
+            s_dxh_xh += dxh * xh[j];
+        }
+        let m1 = s_dxh / d as f32;
+        let m2 = s_dxh_xh / d as f32;
+        let iv = cache.inv[i];
+        let dxr = &mut dx[i * d..(i + 1) * d];
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dxr[j] = iv * (dxh - m1 - xh[j] * m2);
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation, matching python `_gelu`)
+// ---------------------------------------------------------------------------
+
+const GELU_C: f32 = 0.797_884_56;
+const GELU_A: f32 = 0.044_715;
+
+fn gelu_forward(h: &[f32]) -> Vec<f32> {
+    h.iter()
+        .map(|&z| 0.5 * z * (1.0 + (GELU_C * (z + GELU_A * z * z * z)).tanh()))
+        .collect()
+}
+
+fn gelu_backward(h: &[f32], df: &[f32]) -> Vec<f32> {
+    h.iter()
+        .zip(df)
+        .map(|(&z, &g)| {
+            let t = (GELU_C * (z + GELU_A * z * z * z)).tanh();
+            let dz = 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * z * z);
+            g * dz
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Linear layers (dense teacher / masked factorized student)
+// ---------------------------------------------------------------------------
+
+/// Forward one linear.  Teacher (`fact = None`): `y = x·W + b`.
+/// Student (`fact = Some(r)`): `t = x·V`, prefix mask to `r`, `y = t·Uᵀ + b`.
+/// Returns `(y, t_cache)`; the cached `t` is already masked.
+#[allow(clippy::too_many_arguments)]
+fn lin_forward(
+    params: &ParamSet,
+    prefix: &str,
+    fact: Option<usize>,
+    r_full: usize,
+    x: &[f32],
+    rows: usize,
+    n: usize,
+    m: usize,
+) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+    let mut y = vec![0f32; rows * m];
+    let t_cache = match fact {
+        None => {
+            let w = params.get(&format!("{prefix}_w"))?.as_f32()?;
+            kernels::matmul_f32(&x[..rows * n], w, rows, n, m, &mut y);
+            None
+        }
+        Some(r) => {
+            let u = params.get(&format!("{prefix}_u"))?.as_f32()?;
+            let v = params.get(&format!("{prefix}_v"))?.as_f32()?;
+            let mut t = vec![0f32; rows * r_full];
+            kernels::matmul_f32(&x[..rows * n], v, rows, n, r_full, &mut t);
+            if r < r_full {
+                for row in t.chunks_exact_mut(r_full) {
+                    for tv in &mut row[r..] {
+                        *tv = 0.0;
+                    }
+                }
+            }
+            kernels::matmul_nt_f32(&t, u, rows, r_full, m, &mut y);
+            Some(t)
+        }
+    };
+    let b = params.get(&format!("{prefix}_b"))?.as_f32()?;
+    add_bias(&mut y, rows, m, b);
+    Ok((y, t_cache))
+}
+
+/// Backward one linear; accumulates param grads into `grads`, returns `dx`.
+#[allow(clippy::too_many_arguments)]
+fn lin_backward(
+    params: &ParamSet,
+    grads: &mut ParamSet,
+    prefix: &str,
+    fact: Option<usize>,
+    r_full: usize,
+    x: &[f32],
+    t: Option<&Vec<f32>>,
+    dy: &[f32],
+    rows: usize,
+    n: usize,
+    m: usize,
+) -> Result<Vec<f32>> {
+    {
+        let db = gmut(grads, &format!("{prefix}_b"))?;
+        for row in dy.chunks_exact(m).take(rows) {
+            for (dbj, &dyj) in db.iter_mut().zip(row) {
+                *dbj += dyj;
+            }
+        }
+    }
+    let mut dx = vec![0f32; rows * n];
+    match fact {
+        None => {
+            let w = params.get(&format!("{prefix}_w"))?.as_f32()?;
+            {
+                let dw = gmut(grads, &format!("{prefix}_w"))?;
+                kernels::matmul_tn_acc_f32(&x[..rows * n], dy, rows, n, m, dw);
+            }
+            kernels::matmul_nt_f32(dy, w, rows, m, n, &mut dx);
+        }
+        Some(r) => {
+            let t = t.ok_or_else(|| anyhow!("{prefix}: factorized cache missing"))?;
+            let u = params.get(&format!("{prefix}_u"))?.as_f32()?;
+            let v = params.get(&format!("{prefix}_v"))?.as_f32()?;
+            {
+                // dU += dyᵀ·t — masked columns of t are zero, so masked
+                // components get zero gradient automatically.
+                let du = gmut(grads, &format!("{prefix}_u"))?;
+                kernels::matmul_tn_acc_f32(dy, t, rows, m, r_full, du);
+            }
+            let mut dt = vec![0f32; rows * r_full];
+            kernels::matmul_f32(dy, u, rows, m, r_full, &mut dt);
+            if r < r_full {
+                for row in dt.chunks_exact_mut(r_full) {
+                    for dv in &mut row[r..] {
+                        *dv = 0.0;
+                    }
+                }
+            }
+            {
+                let dv = gmut(grads, &format!("{prefix}_v"))?;
+                kernels::matmul_tn_acc_f32(&x[..rows * n], &dt, rows, n, r_full, dv);
+            }
+            kernels::matmul_nt_f32(&dt, v, rows, r_full, n, &mut dx);
+        }
+    }
+    Ok(dx)
+}
+
+// ---------------------------------------------------------------------------
+// Causal multi-head attention (forward caches softmax probs for backward)
+// ---------------------------------------------------------------------------
+
+/// Returns `(att, probs)`: merged heads (rows, d) and the causal softmax
+/// weights, one (t_len, t_len) matrix per (batch, head) pair.
+fn attention_forward(
+    qkv: &[f32],
+    batch: usize,
+    t_len: usize,
+    d: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let hd = d / heads;
+    let w3 = 3 * d;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att = vec![0f32; batch * t_len * d];
+    let mut probs = vec![0f32; batch * heads * t_len * t_len];
+    let mut qh = vec![0f32; t_len * hd];
+    let mut kh = vec![0f32; t_len * hd];
+    let mut vh = vec![0f32; t_len * hd];
+    let mut oh = vec![0f32; t_len * hd];
+    for b in 0..batch {
+        let base = b * t_len;
+        for head in 0..heads {
+            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+            for t1 in 0..t_len {
+                let row = (base + t1) * w3;
+                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
+                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
+                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
+            }
+            let sc = &mut probs[(b * heads + head) * t_len * t_len
+                ..(b * heads + head + 1) * t_len * t_len];
+            kernels::matmul_nt_f32(&qh, &kh, t_len, hd, t_len, sc);
+            for t1 in 0..t_len {
+                let srow = &mut sc[t1 * t_len..t1 * t_len + t1 + 1];
+                let mut mx = f32::NEG_INFINITY;
+                for s in srow.iter_mut() {
+                    *s *= scale;
+                    if *s > mx {
+                        mx = *s;
+                    }
+                }
+                let mut sum = 0f32;
+                for s in srow.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                let inv = 1.0 / sum;
+                for s in srow.iter_mut() {
+                    *s *= inv;
+                }
+                for s in sc[t1 * t_len + t1 + 1..(t1 + 1) * t_len].iter_mut() {
+                    *s = 0.0;
+                }
+            }
+            kernels::matmul_f32(sc, &vh, t_len, t_len, hd, &mut oh);
+            for t1 in 0..t_len {
+                let dst = (base + t1) * d + head * hd;
+                att[dst..dst + hd].copy_from_slice(&oh[t1 * hd..(t1 + 1) * hd]);
+            }
+        }
+    }
+    (att, probs)
+}
+
+/// Backward through the attention: `datt` (rows, d) → `dqkv` (rows, 3d).
+fn attention_backward(
+    qkv: &[f32],
+    probs: &[f32],
+    datt: &[f32],
+    batch: usize,
+    t_len: usize,
+    d: usize,
+    heads: usize,
+) -> Vec<f32> {
+    let hd = d / heads;
+    let w3 = 3 * d;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dqkv = vec![0f32; batch * t_len * w3];
+    let mut qh = vec![0f32; t_len * hd];
+    let mut kh = vec![0f32; t_len * hd];
+    let mut vh = vec![0f32; t_len * hd];
+    let mut doh = vec![0f32; t_len * hd];
+    let mut dqh = vec![0f32; t_len * hd];
+    let mut dkh = vec![0f32; t_len * hd];
+    let mut dvh = vec![0f32; t_len * hd];
+    let mut ds = vec![0f32; t_len * t_len];
+    for b in 0..batch {
+        let base = b * t_len;
+        for head in 0..heads {
+            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+            for t1 in 0..t_len {
+                let row = (base + t1) * w3;
+                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
+                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
+                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
+                let adst = (base + t1) * d + head * hd;
+                doh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&datt[adst..adst + hd]);
+            }
+            let p = &probs[(b * heads + head) * t_len * t_len
+                ..(b * heads + head + 1) * t_len * t_len];
+            // dV = Pᵀ·dO
+            for x in dvh.iter_mut() {
+                *x = 0.0;
+            }
+            kernels::matmul_tn_acc_f32(p, &doh, t_len, t_len, hd, &mut dvh);
+            // dP = dO·Vᵀ
+            kernels::matmul_nt_f32(&doh, &vh, t_len, hd, t_len, &mut ds);
+            // dS = P ⊙ (dP − Σ_j dP⊙P) · scale  (upper triangle stays 0)
+            for t1 in 0..t_len {
+                let prow = &p[t1 * t_len..(t1 + 1) * t_len];
+                let dsrow = &mut ds[t1 * t_len..(t1 + 1) * t_len];
+                let mut dot = 0f32;
+                for j in 0..=t1 {
+                    dot += dsrow[j] * prow[j];
+                }
+                for j in 0..t_len {
+                    dsrow[j] = if j <= t1 { prow[j] * (dsrow[j] - dot) * scale } else { 0.0 };
+                }
+            }
+            // dQ = dS·K ; dK = dSᵀ·Q
+            kernels::matmul_f32(&ds, &kh, t_len, t_len, hd, &mut dqh);
+            for x in dkh.iter_mut() {
+                *x = 0.0;
+            }
+            kernels::matmul_tn_acc_f32(&ds, &qh, t_len, t_len, hd, &mut dkh);
+            for t1 in 0..t_len {
+                let row = (base + t1) * w3;
+                dqkv[row + qo..row + qo + hd].copy_from_slice(&dqh[t1 * hd..(t1 + 1) * hd]);
+                dqkv[row + ko..row + ko + hd].copy_from_slice(&dkh[t1 * hd..(t1 + 1) * hd]);
+                dqkv[row + vo..row + vo + hd].copy_from_slice(&dvh[t1 * hd..(t1 + 1) * hd]);
+            }
+        }
+    }
+    dqkv
+}
+
+// ---------------------------------------------------------------------------
+// Full model forward/backward
+// ---------------------------------------------------------------------------
+
+struct BlockCache {
+    ln1: LnCache,
+    a1: Vec<f32>,
+    t_qkv: Option<Vec<f32>>,
+    qkv: Vec<f32>,
+    probs: Vec<f32>,
+    att: Vec<f32>,
+    t_proj: Option<Vec<f32>>,
+    ln2: LnCache,
+    a2: Vec<f32>,
+    t_fc: Option<Vec<f32>>,
+    h_fc: Vec<f32>,
+    f: Vec<f32>,
+    t_fcp: Option<Vec<f32>>,
+}
+
+/// Forward cache: all intermediates needed by [`backward`], plus logits.
+pub struct Cache {
+    batch: usize,
+    t_len: usize,
+    tokens: Vec<i32>,
+    blocks: Vec<BlockCache>,
+    lnf: LnCache,
+    xf: Vec<f32>,
+    /// (batch·t_len, vocab) row-major.
+    pub logits: Vec<f32>,
+}
+
+/// Run the model forward.  `profile = None` → dense teacher (`{kind}_w`),
+/// `profile = Some(ranks)` → masked factorized student (`{kind}_u/_v`).
+/// `tokens` is `batch` sequences of `tokens.len()/batch` ids (≤ seq_len).
+pub fn forward(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    profile: Option<&RankProfile>,
+    tokens: &[i32],
+    batch: usize,
+) -> Result<Cache> {
+    ensure!(batch > 0 && !tokens.is_empty(), "empty forward batch");
+    ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
+    let t_len = tokens.len() / batch;
+    ensure!(
+        t_len <= cfg.seq_len,
+        "sequence length {t_len} exceeds model seq_len {}",
+        cfg.seq_len
+    );
+    ensure!(
+        cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
+        "d_model {} not divisible by n_heads {}",
+        cfg.d_model,
+        cfg.n_heads
+    );
+    if let Some(p) = profile {
+        ensure!(
+            p.len() == cfg.n_fact_layers(),
+            "profile has {} entries, model has {} factorized layers",
+            p.len(),
+            cfg.n_fact_layers()
+        );
+    }
+    let d = cfg.d_model;
+    let rows = batch * t_len;
+    let rf = cfg.rank_full();
+    let dims = cfg.layer_dims();
+
+    // Embeddings.
+    let tok_emb = params.get("tok_emb")?.as_f32()?;
+    let pos_emb = params.get("pos_emb")?.as_f32()?;
+    let mut x = vec![0f32; rows * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        ensure!(
+            tok >= 0 && (tok as usize) < cfg.vocab,
+            "token {tok} at position {i} outside vocab {}",
+            cfg.vocab
+        );
+        let pos = i % t_len;
+        let tv = &tok_emb[tok as usize * d..tok as usize * d + d];
+        let pv = &pos_emb[pos * d..pos * d + d];
+        let xr = &mut x[i * d..(i + 1) * d];
+        for ((o, &a), &b) in xr.iter_mut().zip(tv).zip(pv) {
+            *o = a + b;
+        }
+    }
+
+    let rank_of = |li: usize| -> Option<usize> {
+        profile.map(|p| p[li].min(rf))
+    };
+
+    let mut blocks = Vec::with_capacity(cfg.n_blocks);
+    for b in 0..cfg.n_blocks {
+        let g1 = params.get(&format!("blocks.{b}.ln1_g"))?.as_f32()?;
+        let b1 = params.get(&format!("blocks.{b}.ln1_b"))?.as_f32()?;
+        let (a1, ln1) = ln_forward(&x, rows, d, g1, b1);
+        let (_, n_qkv, m_qkv) = dims[0];
+        let (qkv, t_qkv) = lin_forward(
+            params,
+            &format!("blocks.{b}.qkv"),
+            rank_of(b * 4),
+            rf,
+            &a1,
+            rows,
+            n_qkv,
+            m_qkv,
+        )?;
+        let (att, probs) = attention_forward(&qkv, batch, t_len, d, cfg.n_heads);
+        let (_, n_proj, m_proj) = dims[1];
+        let (o, t_proj) = lin_forward(
+            params,
+            &format!("blocks.{b}.proj"),
+            rank_of(b * 4 + 1),
+            rf,
+            &att,
+            rows,
+            n_proj,
+            m_proj,
+        )?;
+        add_assign(&mut x, &o);
+
+        let g2 = params.get(&format!("blocks.{b}.ln2_g"))?.as_f32()?;
+        let b2 = params.get(&format!("blocks.{b}.ln2_b"))?.as_f32()?;
+        let (a2, ln2) = ln_forward(&x, rows, d, g2, b2);
+        let (_, n_fc, m_fc) = dims[2];
+        let (h_fc, t_fc) = lin_forward(
+            params,
+            &format!("blocks.{b}.fc"),
+            rank_of(b * 4 + 2),
+            rf,
+            &a2,
+            rows,
+            n_fc,
+            m_fc,
+        )?;
+        let f = gelu_forward(&h_fc);
+        let (_, n_fcp, m_fcp) = dims[3];
+        let (o2, t_fcp) = lin_forward(
+            params,
+            &format!("blocks.{b}.fcp"),
+            rank_of(b * 4 + 3),
+            rf,
+            &f,
+            rows,
+            n_fcp,
+            m_fcp,
+        )?;
+        add_assign(&mut x, &o2);
+
+        blocks.push(BlockCache {
+            ln1,
+            a1,
+            t_qkv,
+            qkv,
+            probs,
+            att,
+            t_proj,
+            ln2,
+            a2,
+            t_fc,
+            h_fc,
+            f,
+            t_fcp,
+        });
+    }
+
+    let gf = params.get("lnf_g")?.as_f32()?;
+    let bf = params.get("lnf_b")?.as_f32()?;
+    let (xf, lnf) = ln_forward(&x, rows, d, gf, bf);
+    let mut logits = vec![0f32; rows * cfg.vocab];
+    kernels::matmul_nt_f32(&xf, tok_emb, rows, d, cfg.vocab, &mut logits);
+
+    Ok(Cache {
+        batch,
+        t_len,
+        tokens: tokens.to_vec(),
+        blocks,
+        lnf,
+        xf,
+        logits,
+    })
+}
+
+/// Backward from `dlogits` (batch·t_len, vocab); returns parameter grads
+/// keyed exactly like `params` (missing gradients are zero tensors).
+pub fn backward(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    profile: Option<&RankProfile>,
+    cache: &Cache,
+    dlogits: &[f32],
+) -> Result<ParamSet> {
+    let d = cfg.d_model;
+    let rows = cache.batch * cache.t_len;
+    let rf = cfg.rank_full();
+    let dims = cfg.layer_dims();
+    ensure!(dlogits.len() == rows * cfg.vocab, "dlogits size mismatch");
+    let mut grads = params.zeros_like();
+
+    // Tied head: logits = xf·tok_embᵀ.
+    let tok_emb = params.get("tok_emb")?.as_f32()?;
+    {
+        let dte = gmut(&mut grads, "tok_emb")?;
+        kernels::matmul_tn_acc_f32(dlogits, &cache.xf, rows, cfg.vocab, d, dte);
+    }
+    let mut dxf = vec![0f32; rows * d];
+    kernels::matmul_f32(dlogits, tok_emb, rows, cfg.vocab, d, &mut dxf);
+
+    // Final LN.
+    let gf = params.get("lnf_g")?.as_f32()?;
+    let mut dx = {
+        let mut dg = vec![0f32; d];
+        let mut db = vec![0f32; d];
+        let dx = ln_backward(&cache.lnf, rows, d, gf, &dxf, &mut dg, &mut db);
+        add_assign(gmut(&mut grads, "lnf_g")?, &dg);
+        add_assign(gmut(&mut grads, "lnf_b")?, &db);
+        dx
+    };
+
+    let rank_of = |li: usize| -> Option<usize> { profile.map(|p| p[li].min(rf)) };
+
+    for b in (0..cfg.n_blocks).rev() {
+        let blk = &cache.blocks[b];
+
+        // MLP half: x_out = x_mid + fcp(gelu(fc(ln2(x_mid)))).
+        let (_, n_fcp, m_fcp) = dims[3];
+        let df = lin_backward(
+            params,
+            &mut grads,
+            &format!("blocks.{b}.fcp"),
+            rank_of(b * 4 + 3),
+            rf,
+            &blk.f,
+            blk.t_fcp.as_ref(),
+            &dx,
+            rows,
+            n_fcp,
+            m_fcp,
+        )?;
+        let dh = gelu_backward(&blk.h_fc, &df);
+        let (_, n_fc, m_fc) = dims[2];
+        let da2 = lin_backward(
+            params,
+            &mut grads,
+            &format!("blocks.{b}.fc"),
+            rank_of(b * 4 + 2),
+            rf,
+            &blk.a2,
+            blk.t_fc.as_ref(),
+            &dh,
+            rows,
+            n_fc,
+            m_fc,
+        )?;
+        {
+            let g2 = params.get(&format!("blocks.{b}.ln2_g"))?.as_f32()?;
+            let mut dg = vec![0f32; d];
+            let mut db = vec![0f32; d];
+            let dx_mid = ln_backward(&blk.ln2, rows, d, g2, &da2, &mut dg, &mut db);
+            add_assign(gmut(&mut grads, &format!("blocks.{b}.ln2_g"))?, &dg);
+            add_assign(gmut(&mut grads, &format!("blocks.{b}.ln2_b"))?, &db);
+            add_assign(&mut dx, &dx_mid);
+        }
+
+        // Attention half: x_mid = x_in + proj(attn(qkv(ln1(x_in)))).
+        let (_, n_proj, m_proj) = dims[1];
+        let datt = lin_backward(
+            params,
+            &mut grads,
+            &format!("blocks.{b}.proj"),
+            rank_of(b * 4 + 1),
+            rf,
+            &blk.att,
+            blk.t_proj.as_ref(),
+            &dx,
+            rows,
+            n_proj,
+            m_proj,
+        )?;
+        let dqkv =
+            attention_backward(&blk.qkv, &blk.probs, &datt, cache.batch, cache.t_len, d, cfg.n_heads);
+        let (_, n_qkv, m_qkv) = dims[0];
+        let da1 = lin_backward(
+            params,
+            &mut grads,
+            &format!("blocks.{b}.qkv"),
+            rank_of(b * 4),
+            rf,
+            &blk.a1,
+            blk.t_qkv.as_ref(),
+            &dqkv,
+            rows,
+            n_qkv,
+            m_qkv,
+        )?;
+        {
+            let g1 = params.get(&format!("blocks.{b}.ln1_g"))?.as_f32()?;
+            let mut dg = vec![0f32; d];
+            let mut db = vec![0f32; d];
+            let dx_in = ln_backward(&blk.ln1, rows, d, g1, &da1, &mut dg, &mut db);
+            add_assign(gmut(&mut grads, &format!("blocks.{b}.ln1_g"))?, &dg);
+            add_assign(gmut(&mut grads, &format!("blocks.{b}.ln1_b"))?, &db);
+            add_assign(&mut dx, &dx_in);
+        }
+    }
+
+    // Embedding gathers.
+    {
+        let dte = gmut(&mut grads, "tok_emb")?;
+        for (i, &tok) in cache.tokens.iter().enumerate() {
+            let dst = &mut dte[tok as usize * d..tok as usize * d + d];
+            add_assign(dst, &dx[i * d..(i + 1) * d]);
+        }
+    }
+    {
+        let dpe = gmut(&mut grads, "pos_emb")?;
+        for i in 0..rows {
+            let pos = i % cache.t_len;
+            let dst = &mut dpe[pos * d..pos * d + d];
+            add_assign(dst, &dx[i * d..(i + 1) * d]);
+        }
+    }
+    Ok(grads)
+}
+
+// ---------------------------------------------------------------------------
+// Losses
+// ---------------------------------------------------------------------------
+
+/// Mean next-token cross entropy over all rows.
+pub fn ce_loss(logits: &[f32], targets: &[i32], vocab: usize) -> f32 {
+    let rows = targets.len();
+    let mut loss = 0f64;
+    for (row, &y) in logits.chunks_exact(vocab).zip(targets).take(rows) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+        let logz = z.ln() + mx;
+        loss += (logz - row[y as usize]) as f64;
+    }
+    (loss / rows.max(1) as f64) as f32
+}
+
+/// CE loss + gradient w.r.t. logits (`(softmax − onehot)/rows`).
+pub fn ce_loss_grad(logits: &[f32], targets: &[i32], vocab: usize) -> (f32, Vec<f32>) {
+    let rows = targets.len();
+    let mut grad = vec![0f32; rows * vocab];
+    let mut loss = 0f64;
+    for i in 0..rows {
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+        let logz = z.ln() + mx;
+        let y = targets[i] as usize;
+        loss += (logz - row[y]) as f64;
+        let g = &mut grad[i * vocab..(i + 1) * vocab];
+        for j in 0..vocab {
+            let p = (row[j] - logz).exp();
+            g[j] = (p - if j == y { 1.0 } else { 0.0 }) / rows as f32;
+        }
+    }
+    ((loss / rows.max(1) as f64) as f32, grad)
+}
+
+/// Temperature-scaled KD loss of Eq. 5: `τ²·mean_rows KL(p_t‖p_s)` with
+/// both distributions at temperature τ.  Returns (loss, dL/ds_logits);
+/// the teacher side is frozen (no gradient), matching the python VJP.
+pub fn kd_loss_grad(s_logits: &[f32], t_logits: &[f32], vocab: usize, tau: f32) -> (f32, Vec<f32>) {
+    assert_eq!(s_logits.len(), t_logits.len());
+    let rows = s_logits.len() / vocab;
+    let mut grad = vec![0f32; rows * vocab];
+    let mut ps = vec![0f32; vocab];
+    let mut pt = vec![0f32; vocab];
+    let mut loss = 0f64;
+    for i in 0..rows {
+        let srow = &s_logits[i * vocab..(i + 1) * vocab];
+        let trow = &t_logits[i * vocab..(i + 1) * vocab];
+        let softmax = |row: &[f32], out: &mut [f32]| -> f32 {
+            let mx = row.iter().map(|&v| v / tau).fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o = (v / tau - mx).exp();
+                z += *o;
+            }
+            for o in out.iter_mut() {
+                *o /= z;
+            }
+            z.ln() + mx // log-partition at temperature tau
+        };
+        let s_lse = softmax(srow, &mut ps);
+        let t_lse = softmax(trow, &mut pt);
+        let mut kl = 0f64;
+        for j in 0..vocab {
+            if pt[j] > 0.0 {
+                let log_pt = trow[j] / tau - t_lse;
+                let log_ps = srow[j] / tau - s_lse;
+                kl += pt[j] as f64 * (log_pt - log_ps) as f64;
+            }
+        }
+        loss += kl;
+        let g = &mut grad[i * vocab..(i + 1) * vocab];
+        for j in 0..vocab {
+            g[j] = tau * (ps[j] - pt[j]) / rows as f32;
+        }
+    }
+    (((loss / rows.max(1) as f64) * (tau as f64) * (tau as f64)) as f32, grad)
+}
+
+// ---------------------------------------------------------------------------
+// AdamW (mirrors python `adamw_update`: decay applied to every parameter)
+// ---------------------------------------------------------------------------
+
+pub struct AdamW {
+    pub lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    t: u64,
+    m: ParamSet,
+    v: ParamSet,
+}
+
+impl AdamW {
+    pub fn new(cfg: &ModelConfig, params: &ParamSet) -> AdamW {
+        AdamW {
+            lr: cfg.lr as f32,
+            beta1: cfg.beta1 as f32,
+            beta2: cfg.beta2 as f32,
+            eps: cfg.adam_eps as f32,
+            wd: cfg.weight_decay as f32,
+            t: 0,
+            m: params.zeros_like(),
+            v: params.zeros_like(),
+        }
+    }
+
+    pub fn step(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
+        self.t += 1;
+        let (b1, b2, eps, lr, wd) = (self.beta1, self.beta2, self.eps, self.lr, self.wd);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for (name, p) in params.map.iter_mut() {
+            let pd = match p {
+                Tensor::F32 { data, .. } => data,
+                Tensor::I32 { .. } => continue,
+            };
+            let g = match grads.map.get(name) {
+                Some(Tensor::F32 { data, .. }) => data,
+                _ => bail!("adamw: missing f32 grad for '{name}'"),
+            };
+            ensure!(g.len() == pd.len(), "adamw: grad '{name}' size mismatch");
+            let m = self
+                .m
+                .map
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("adamw: missing m state '{name}'"))?
+                .as_f32_mut()?;
+            let v = self
+                .v
+                .map
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("adamw: missing v state '{name}'"))?
+                .as_f32_mut()?;
+            for i in 0..pd.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                pd[i] -= lr * (mh / (vh.sqrt() + eps) + wd * pd[i]);
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage drivers (native mirrors of `training::driver`)
+// ---------------------------------------------------------------------------
+
+/// Split `(batch, t+1)` token windows into flat inputs `[.., :t]` and
+/// next-token targets `[.., 1:]`.
+pub fn split_windows(window: &[i32], t: usize) -> (Vec<i32>, Vec<i32>) {
+    let rows = window.len() / (t + 1);
+    let mut x = Vec::with_capacity(rows * t);
+    let mut y = Vec::with_capacity(rows * t);
+    for w in window.chunks_exact(t + 1) {
+        x.extend_from_slice(&w[..t]);
+        y.extend_from_slice(&w[1..]);
+    }
+    (x, y)
+}
+
+/// Pretrain the dense teacher with AdamW on next-token CE.
+pub fn pretrain_teacher(
+    cfg: &ModelConfig,
+    init: ParamSet,
+    batcher: &mut TokenBatcher,
+    steps: usize,
+    log_every: usize,
+) -> Result<TrainRun> {
+    let mut p = init;
+    let mut opt = AdamW::new(cfg, &p);
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let window = batcher.next_batch();
+        let (x, y) = split_windows(&window, cfg.seq_len);
+        let cache = forward(cfg, &p, None, &x, batcher.batch)?;
+        let (loss, dlogits) = ce_loss_grad(&cache.logits, &y, cfg.vocab);
+        let grads = backward(cfg, &p, None, &cache, &dlogits)?;
+        opt.step(&mut p, &grads)?;
+        losses.push(loss);
+        if log_every > 0 && step % log_every == 0 {
+            eprintln!("pretrain step {step}: loss {loss:.4}");
+        }
+    }
+    Ok(TrainRun { params: p, losses })
+}
+
+/// Accumulate per-factorized-layer input covariances over `batches`
+/// calibration batches (App. C.1 stage 1).  The covariance inputs are the
+/// same four per block as python's `teacher_fwd_acts`: ln1 output (qkv),
+/// merged attention (proj), ln2 output (fc), GELU output (fcp).
+pub fn calibrate(
+    cfg: &ModelConfig,
+    teacher: &ParamSet,
+    batcher: &mut TokenBatcher,
+    batches: usize,
+) -> Result<Vec<CovAccum>> {
+    let d = cfg.d_model;
+    let dims = cfg.layer_dims();
+    let mut covs: Vec<CovAccum> = (0..cfg.n_blocks)
+        .flat_map(|_| dims.iter().map(|&(_, n, _)| CovAccum::new(n)))
+        .collect();
+    for _ in 0..batches {
+        let window = batcher.next_batch();
+        // Windows may be (t) or (t+1) wide; calibration only needs inputs.
+        let t = cfg.seq_len.min(batcher.window);
+        let x: Vec<i32> = window
+            .chunks_exact(batcher.window)
+            .flat_map(|w| w[..t].to_vec())
+            .collect();
+        let cache = forward(cfg, teacher, None, &x, batcher.batch)?;
+        let rows = batcher.batch * t;
+        for (bi, blk) in cache.blocks.iter().enumerate() {
+            let inputs: [(&[f32], usize); 4] =
+                [(&blk.a1, d), (&blk.att, d), (&blk.a2, d), (&blk.f, 4 * d)];
+            for (ki, (buf, width)) in inputs.iter().enumerate() {
+                covs[bi * 4 + ki].add_batch(&Mat::from_f32(rows, *width, buf));
+            }
+        }
+    }
+    Ok(covs)
+}
+
+/// Masked-student CE loss at a profile, averaged over deterministic
+/// held-out `(batch, t+1)` windows.
+pub fn eval_student(
+    cfg: &ModelConfig,
+    student: &ParamSet,
+    profile: &RankProfile,
+    eval_batches: &[Vec<i32>],
+) -> Result<f64> {
+    let mut total = 0f64;
+    for batch in eval_batches {
+        let b = batch.len() / (cfg.seq_len + 1);
+        let (x, y) = split_windows(batch, cfg.seq_len);
+        let cache = forward(cfg, student, Some(profile), &x, b)?;
+        total += ce_loss(&cache.logits, &y, cfg.vocab) as f64;
+    }
+    Ok(total / eval_batches.len().max(1) as f64)
+}
+
+/// ProbeModel over the native student — powers DP sensitivity probing
+/// without PJRT.
+pub struct NativeProbe<'a> {
+    pub cfg: &'a ModelConfig,
+    pub student: &'a ParamSet,
+    pub eval_batches: &'a [Vec<i32>],
+    pub evals: usize,
+}
+
+impl ProbeModel for NativeProbe<'_> {
+    fn full_ranks(&self) -> Vec<usize> {
+        vec![self.cfg.rank_full(); self.cfg.n_fact_layers()]
+    }
+
+    fn layer_dims(&self) -> Vec<(usize, usize)> {
+        fact_layers(self.cfg).into_iter().map(|(_, _, n, m)| (n, m)).collect()
+    }
+
+    fn eval(&mut self, profile: &RankProfile) -> f64 {
+        self.evals += 1;
+        eval_student(self.cfg, self.student, profile, self.eval_batches)
+            .expect("native probe eval failed")
+    }
+}
+
+/// Nested KD consolidation (Alg. 1 lines 14–17): sample a budget profile
+/// `∝ alphas` each step, distill the masked student against the frozen
+/// teacher's logits at temperature `cfg.tau_kd`.
+#[allow(clippy::too_many_arguments)]
+pub fn consolidate(
+    cfg: &ModelConfig,
+    student: ParamSet,
+    teacher: &ParamSet,
+    profiles: &[RankProfile],
+    alphas: &[f64],
+    batcher: &mut TokenBatcher,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+) -> Result<TrainRun> {
+    ensure!(profiles.len() == alphas.len() && !profiles.is_empty(), "bad profiles/alphas");
+    let mut rng = Rng::new(seed);
+    let mut p = student;
+    let mut opt = AdamW::new(cfg, &p);
+    let tau = cfg.tau_kd as f32;
+    let mut losses = Vec::with_capacity(steps);
+    let t_loop = std::time::Instant::now();
+    for step in 0..steps {
+        let pi = rng.weighted(alphas);
+        let window = batcher.next_batch();
+        let (x, _) = split_windows(&window, cfg.seq_len);
+        let t_cache = forward(cfg, teacher, None, &x, batcher.batch)?;
+        let s_cache = forward(cfg, &p, Some(&profiles[pi]), &x, batcher.batch)?;
+        let (loss, dlogits) = kd_loss_grad(&s_cache.logits, &t_cache.logits, cfg.vocab, tau);
+        let grads = backward(cfg, &p, Some(&profiles[pi]), &s_cache, &dlogits)?;
+        opt.step(&mut p, &grads)?;
+        losses.push(loss);
+        if log_every > 0 && step % log_every == 0 {
+            eprintln!("consolidate step {step}: profile {pi} kd-loss {loss:.5}");
+        }
+    }
+    if steps > 0 {
+        eprintln!(
+            "[consolidate] {:.2} steps/s ({} steps, native)",
+            steps as f64 / t_loop.elapsed().as_secs_f64(),
+            steps
+        );
+    }
+    Ok(TrainRun { params: p, losses })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+    use crate::runtime::native::{uniform_budget_profile, GarSubmodel, Scratch};
+    use crate::training::params::{decompose_teacher, random_teacher, student_from_factors};
+
+    fn test_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "nat-test".into(),
+            vocab: 13,
+            d_model: 8,
+            n_blocks: 2,
+            n_heads: 2,
+            seq_len: 6,
+            batch_train: 2,
+            batch_eval: 2,
+            batch_calib: 2,
+            batch_serve: 2,
+            tau_kd: 2.0,
+            lr: 0.01,
+            weight_decay: 0.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            serve_tiers: vec![0.5, 1.0],
+            bench_ranks: vec![4],
+            bench_dim: 8,
+            bench_batch: 4,
+            lora_rank: 2,
+        }
+    }
+
+    fn rand_tokens(cfg: &ModelConfig, rng: &mut Rng, batch: usize) -> Vec<i32> {
+        (0..batch * cfg.seq_len).map(|_| rng.below(cfg.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn teacher_ce_at_init_near_uniform() {
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 21);
+        let mut rng = Rng::new(22);
+        let x = rand_tokens(&cfg, &mut rng, 2);
+        let y: Vec<i32> = (0..x.len()).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let cache = forward(&cfg, &teacher, None, &x, 2).unwrap();
+        let l = ce_loss(&cache.logits, &y, cfg.vocab);
+        let uniform = (cfg.vocab as f32).ln();
+        assert!((l - uniform).abs() < 0.2, "init CE {l} vs ln V {uniform}");
+        assert!(cache.logits.iter().all(|v| v.is_finite()));
+    }
+
+    /// Central-difference check of dL/dθ for a handful of teacher params
+    /// spanning every gradient path: embeddings, dense linears, LN, biases.
+    #[test]
+    fn teacher_grad_matches_finite_difference() {
+        let cfg = test_cfg();
+        let mut teacher = random_teacher(&cfg, 31);
+        let mut rng = Rng::new(32);
+        let x = rand_tokens(&cfg, &mut rng, 2);
+        let y: Vec<i32> = (0..x.len()).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+        let loss_at = |p: &ParamSet| -> f32 {
+            let cache = forward(&cfg, p, None, &x, 2).unwrap();
+            ce_loss(&cache.logits, &y, cfg.vocab)
+        };
+        let cache = forward(&cfg, &teacher, None, &x, 2).unwrap();
+        let (_, dlogits) = ce_loss_grad(&cache.logits, &y, cfg.vocab);
+        let grads = backward(&cfg, &teacher, None, &cache, &dlogits).unwrap();
+
+        let eps = 1e-2f32;
+        for (name, idx) in [
+            ("tok_emb", 3usize),
+            ("pos_emb", 9),
+            ("lnf_g", 2),
+            ("blocks.0.qkv_w", 17),
+            ("blocks.0.proj_w", 5),
+            ("blocks.1.fc_w", 40),
+            ("blocks.1.fcp_w", 33),
+            ("blocks.0.ln1_g", 1),
+            ("blocks.1.ln2_b", 4),
+            ("blocks.0.fc_b", 7),
+        ] {
+            let ana = grads.get(name).unwrap().as_f32().unwrap()[idx];
+            {
+                let p = teacher.map.get_mut(name).unwrap().as_f32_mut().unwrap();
+                p[idx] += eps;
+            }
+            let lp = loss_at(&teacher);
+            {
+                let p = teacher.map.get_mut(name).unwrap().as_f32_mut().unwrap();
+                p[idx] -= 2.0 * eps;
+            }
+            let lm = loss_at(&teacher);
+            {
+                let p = teacher.map.get_mut(name).unwrap().as_f32_mut().unwrap();
+                p[idx] += eps;
+            }
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
+                "{name}[{idx}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    /// Same check through the masked factorized path, including that masked
+    /// components receive exactly zero gradient.
+    #[test]
+    fn student_grad_matches_finite_difference_masked() {
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 41);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let mut student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let rf = cfg.rank_full();
+        // Mixed ranks across the 8 layers.
+        let profile: Vec<usize> = vec![5, 8, 3, 6, 4, 8, 5, 7];
+        let mut rng = Rng::new(42);
+        let x = rand_tokens(&cfg, &mut rng, 2);
+        let y: Vec<i32> = (0..x.len()).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+        let loss_at = |p: &ParamSet| -> f32 {
+            let cache = forward(&cfg, p, Some(&profile), &x, 2).unwrap();
+            ce_loss(&cache.logits, &y, cfg.vocab)
+        };
+        let cache = forward(&cfg, &student, Some(&profile), &x, 2).unwrap();
+        let (_, dlogits) = ce_loss_grad(&cache.logits, &y, cfg.vocab);
+        let grads = backward(&cfg, &student, Some(&profile), &cache, &dlogits).unwrap();
+
+        // Masked components (columns ≥ r) get zero gradient.  Layer 0 is
+        // blocks.0.qkv at r = 5: check a column ≥ 5 of u and v.
+        let du = grads.get("blocks.0.qkv_u").unwrap().as_f32().unwrap();
+        let dv = grads.get("blocks.0.qkv_v").unwrap().as_f32().unwrap();
+        for row in 0..4 {
+            assert_eq!(du[row * rf + 6], 0.0, "masked u column must get zero grad");
+            assert_eq!(dv[row * rf + 7], 0.0, "masked v column must get zero grad");
+        }
+
+        let eps = 1e-2f32;
+        for (name, idx) in [
+            // active columns (col = idx % rf < r for that layer)
+            ("blocks.0.qkv_u", 2usize),  // col 2 < 5
+            ("blocks.0.qkv_v", 11),      // col 3 < 5
+            ("blocks.1.fc_u", 12),       // col 4 < 5 (layer 6, r=5)
+            ("blocks.1.fcp_v", 21),      // col 5 < 7 (layer 7, r=7)
+            ("blocks.0.proj_b", 3),
+        ] {
+            let ana = grads.get(name).unwrap().as_f32().unwrap()[idx];
+            {
+                let p = student.map.get_mut(name).unwrap().as_f32_mut().unwrap();
+                p[idx] += eps;
+            }
+            let lp = loss_at(&student);
+            {
+                let p = student.map.get_mut(name).unwrap().as_f32_mut().unwrap();
+                p[idx] -= 2.0 * eps;
+            }
+            let lm = loss_at(&student);
+            {
+                let p = student.map.get_mut(name).unwrap().as_f32_mut().unwrap();
+                p[idx] += eps;
+            }
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
+                "{name}[{idx}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn student_full_rank_matches_teacher_logits() {
+        // Plain SVD at full rank reconstructs the teacher weights exactly,
+        // so the masked student at the full profile is the teacher.
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 51);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let full: Vec<usize> = vec![cfg.rank_full(); cfg.n_fact_layers()];
+        let mut rng = Rng::new(52);
+        let x = rand_tokens(&cfg, &mut rng, 2);
+        let tc = forward(&cfg, &teacher, None, &x, 2).unwrap();
+        let sc = forward(&cfg, &student, Some(&full), &x, 2).unwrap();
+        for (a, b) in tc.logits.iter().zip(&sc.logits) {
+            assert!((a - b).abs() < 5e-3, "teacher {a} vs full-rank student {b}");
+        }
+    }
+
+    #[test]
+    fn native_training_forward_matches_serving_gar() {
+        // The serving GAR re-gauge at a profile must compute the same
+        // function the training path evaluated — pins that DP probe losses
+        // describe what the coordinator actually serves.
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 61);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let profile = uniform_budget_profile(&cfg, 0.5);
+        let batch = 2;
+        let tokens: Vec<i32> =
+            (0..batch * cfg.seq_len).map(|i| (i * 5 % cfg.vocab) as i32).collect();
+
+        let cache = forward(&cfg, &student, Some(&profile), &tokens, batch).unwrap();
+        let sub = GarSubmodel::from_student(&cfg, &student, &profile).unwrap();
+        let mut scratch =
+            Scratch::new(batch * cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.vocab);
+        sub.forward(&tokens, batch, &mut scratch).unwrap();
+        let serve = scratch.logits(batch * cfg.seq_len, cfg.vocab);
+        for (a, b) in cache.logits.iter().zip(serve) {
+            assert!((a - b).abs() < 5e-3, "training {a} vs serving {b}");
+        }
+    }
+
+    #[test]
+    fn kd_loss_zero_when_equal_and_grad_checks() {
+        let vocab = 7;
+        let mut rng = Rng::new(71);
+        let t: Vec<f32> = (0..2 * vocab).map(|_| rng.normal() as f32).collect();
+        let (l0, g0) = kd_loss_grad(&t, &t, vocab, 2.0);
+        assert!(l0.abs() < 1e-6, "KD(s=t) = {l0}");
+        assert!(g0.iter().all(|g| g.abs() < 1e-6));
+
+        let s: Vec<f32> = (0..2 * vocab).map(|_| rng.normal() as f32).collect();
+        let (_, g) = kd_loss_grad(&s, &t, vocab, 2.0);
+        let eps = 1e-2f32;
+        for idx in [0usize, 5, 9] {
+            let mut sp = s.clone();
+            sp[idx] += eps;
+            let (lp, _) = kd_loss_grad(&sp, &t, vocab, 2.0);
+            sp[idx] -= 2.0 * eps;
+            let (lm, _) = kd_loss_grad(&sp, &t, vocab, 2.0);
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - g[idx]).abs() < 1e-3 + 0.05 * g[idx].abs(),
+                "kd grad[{idx}]: numeric {num} vs analytic {}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn adamw_pretrain_reduces_loss() {
+        let cfg = test_cfg();
+        let corpus = Corpus::generate(20_000, 9);
+        let mut batcher =
+            TokenBatcher::new(&corpus.train, cfg.batch_train, cfg.seq_len + 1, cfg.vocab, 10);
+        let init = random_teacher(&cfg, 11);
+        let run = pretrain_teacher(&cfg, init, &mut batcher, 40, 0).unwrap();
+        assert_eq!(run.losses.len(), 40);
+        assert!(run.losses.iter().all(|l| l.is_finite()));
+        let first: f32 = run.losses[..5].iter().sum::<f32>() / 5.0;
+        let last: f32 = run.losses[35..].iter().sum::<f32>() / 5.0;
+        assert!(last < first, "pretraining must reduce CE: {first} -> {last}");
+    }
+
+    #[test]
+    fn calibrate_accumulates_psd_covariances() {
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 81);
+        let corpus = Corpus::generate(20_000, 12);
+        let mut batcher =
+            TokenBatcher::new(&corpus.train, cfg.batch_calib, cfg.seq_len + 1, cfg.vocab, 13);
+        let covs = calibrate(&cfg, &teacher, &mut batcher, 2).unwrap();
+        assert_eq!(covs.len(), cfg.n_fact_layers());
+        let d = cfg.d_model;
+        for (li, cov) in covs.iter().enumerate() {
+            let want = if li % 4 == 3 { 4 * d } else { d };
+            assert_eq!(cov.sigma.rows, want, "layer {li} cov dim");
+            assert_eq!(cov.count, 2 * cfg.batch_calib * cfg.seq_len);
+            // Diagonal of XᵀX is non-negative.
+            for i in 0..cov.sigma.rows {
+                assert!(cov.sigma[(i, i)] >= 0.0);
+            }
+        }
+    }
+}

@@ -2,25 +2,36 @@
 //!
 //!   pretrain teacher → calibrate (covariances) → DataSVD decomposition →
 //!   sensitivity probe → DP rank selection → nested KD consolidation →
-//!   evaluation across budgets → profiles.json for the serving AOT phase.
+//!   evaluation across budgets → profiles.json for the serving tiers.
 //!
-//! Stages checkpoint under `results/` so figure harnesses can reuse them.
+//! The default backend is [`crate::training::native`] — every stage runs on
+//! `nn`-style manual backprop over `linalg::kernels`, fully offline.  The
+//! PJRT-artifact variant ([`run`]) survives behind the `pjrt` feature
+//! (`repro pipeline --backend pjrt`).
+//!
+//! Stages checkpoint under [`stage_dir`] (`teacher`, `student_init`,
+//! `student_kd` — `ckpt` JSON+blob pairs) so reruns resume and the serving
+//! CLI can pick up the consolidated student.  The DP output is persisted as
+//! `stage_dir()/profiles.json`: one rank profile per serving tier, which
+//! `SubmodelRegistry::load_native` consumes via
+//! `coordinator::load_tier_profiles` (uniform fallback when absent).
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Result};
 
 use crate::cli::Args;
 use crate::config::RunConfig;
 use crate::data::{Corpus, TokenBatcher};
 use crate::flexrank::dp::dp_rank_selection;
-use crate::flexrank::masks::NestedChain;
+use crate::flexrank::masks::{NestedChain, RankProfile};
 use crate::flexrank::sensitivity::{probe, uniform_grid};
 use crate::json::{self, Value};
-use crate::runtime::Engine;
-use crate::training::driver;
-use crate::training::params::{decompose_teacher, student_from_factors, ParamSet};
-use crate::training::{ckpt, CORPUS_BYTES};
+use crate::runtime::ModelConfig;
+use crate::training::params::{
+    decompose_teacher, random_teacher, student_from_factors, ParamSet,
+};
+use crate::training::{ckpt, native, CORPUS_BYTES};
 
 /// Everything a pipeline run produces.
 pub struct PipelineOut {
@@ -33,6 +44,9 @@ pub struct PipelineOut {
     pub budget_rows: Vec<(f64, Vec<usize>, f64, f64)>,
     pub pretrain_losses: Vec<f32>,
     pub kd_losses: Vec<f32>,
+    /// DP-selected rank profile per serving tier (ascending budgets),
+    /// exactly what `profiles.json` records.
+    pub tier_profiles: Vec<RankProfile>,
 }
 
 /// Stage outputs directory (shared with the serving CLI).
@@ -40,8 +54,352 @@ pub fn stage_dir() -> PathBuf {
     crate::training::stage_dir()
 }
 
-/// Run (or resume) the full pipeline.
-pub fn run(engine: &Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> {
+/// Persisted DP tier profiles (consumed by `repro serve`).
+pub fn profiles_path() -> PathBuf {
+    stage_dir().join("profiles.json")
+}
+
+/// Stage checkpoints live in one shared dir un-keyed by config; a resumed
+/// parameter set from a *different* config would slice in-bounds but
+/// compute garbage (or panic opaquely), so validate the embedding shapes
+/// against the active config before trusting a checkpoint.
+fn ensure_ckpt_matches(cfg: &ModelConfig, ps: &ParamSet, what: &str) -> Result<()> {
+    for (name, want) in [
+        ("tok_emb", [cfg.vocab, cfg.d_model]),
+        ("pos_emb", [cfg.seq_len, cfg.d_model]),
+    ] {
+        let got = ps.get(name)?.shape().to_vec();
+        ensure!(
+            got == want,
+            "{what} checkpoint under {} has {name} shape {got:?} but config '{}' \
+             needs {want:?} — it was written for a different config; rerun with --fresh",
+            stage_dir().display(),
+            cfg.name
+        );
+    }
+    Ok(())
+}
+
+/// Run (or resume) the full pipeline on the native backend.
+pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> {
+    let dir = stage_dir();
+    std::fs::create_dir_all(&dir)?;
+
+    let corpus = Corpus::generate(CORPUS_BYTES, rc.seed);
+    let mut train_b = TokenBatcher::new(
+        &corpus.train,
+        cfg.batch_train,
+        cfg.seq_len + 1,
+        cfg.vocab,
+        rc.seed ^ 0xA5,
+    );
+    let eval_b = TokenBatcher::new(
+        &corpus.heldout,
+        cfg.batch_eval,
+        cfg.seq_len + 1,
+        cfg.vocab,
+        rc.seed ^ 0x5A,
+    );
+    let eval_batches = eval_b.eval_batches(rc.eval_batches);
+
+    // --- Stage 1: teacher pretraining --------------------------------------
+    let teacher_stem = dir.join("teacher");
+    let (teacher, pretrain_losses) = if !fresh && ckpt::exists(&teacher_stem) {
+        eprintln!("[pipeline] reusing teacher checkpoint");
+        let t = ckpt::load(&teacher_stem)?;
+        ensure_ckpt_matches(cfg, &t, "teacher")?;
+        (t, Vec::new())
+    } else {
+        eprintln!(
+            "[pipeline] pretraining teacher for {} steps (native)",
+            rc.pretrain_steps
+        );
+        let init = random_teacher(cfg, rc.seed);
+        let run = native::pretrain_teacher(cfg, init, &mut train_b, rc.pretrain_steps, rc.log_every)?;
+        ckpt::save(&run.params, &teacher_stem)?;
+        (run.params, run.losses)
+    };
+
+    // --- Stage 2: calibration + DataSVD decomposition ----------------------
+    let student_stem = dir.join("student_init");
+    let student0 = if !fresh && ckpt::exists(&student_stem) {
+        eprintln!("[pipeline] reusing DataSVD student init");
+        let s = ckpt::load(&student_stem)?;
+        ensure_ckpt_matches(cfg, &s, "student_init")?;
+        s
+    } else {
+        eprintln!("[pipeline] calibrating covariances ({} batches)", rc.calib_batches);
+        let mut calib_b = TokenBatcher::new(
+            &corpus.train,
+            cfg.batch_calib,
+            cfg.seq_len + 1,
+            cfg.vocab,
+            rc.seed ^ 0x33,
+        );
+        let covs = native::calibrate(cfg, &teacher, &mut calib_b, rc.calib_batches)?;
+        eprintln!("[pipeline] DataSVD decomposition of {} layers", cfg.n_fact_layers());
+        let factors = decompose_teacher(cfg, &teacher, Some(&covs))?;
+        let s = student_from_factors(cfg, &teacher, &factors)?;
+        ckpt::save(&s, &student_stem)?;
+        s
+    };
+
+    // --- Stage 3: sensitivity probe + DP selection -------------------------
+    eprintln!("[pipeline] probing layer sensitivities (native)");
+    let mut probe_model = native::NativeProbe {
+        cfg,
+        student: &student0,
+        eval_batches: &eval_batches,
+        evals: 0,
+    };
+    let grids: Vec<Vec<usize>> = (0..cfg.n_fact_layers())
+        .map(|_| uniform_grid(cfg.rank_full(), rc.probe_levels))
+        .collect();
+    let sens = probe(&mut probe_model, &grids);
+    eprintln!(
+        "[pipeline] probe done ({} evals, full loss {:.4})",
+        probe_model.evals, sens.full_loss
+    );
+    let quant = (sens.full_cost / 4096).max(1);
+    let dp = dp_rank_selection(&sens.candidates, sens.full_cost, quant)?;
+    eprintln!(
+        "[pipeline] DP: {} pareto states, chain of {}",
+        dp.pareto.len(),
+        dp.chain.profiles.len()
+    );
+
+    // --- Stage 4: consolidation over budget profiles -----------------------
+    let budget_profiles = dp.chain.select(&rc.budgets, sens.full_cost as usize);
+    let consolidated_stem = dir.join("student_kd");
+    let (student, kd_losses) = if !fresh && ckpt::exists(&consolidated_stem) {
+        eprintln!("[pipeline] reusing consolidated student");
+        let s = ckpt::load(&consolidated_stem)?;
+        ensure_ckpt_matches(cfg, &s, "student_kd")?;
+        (s, Vec::new())
+    } else {
+        eprintln!("[pipeline] consolidating for {} steps (native)", rc.consolidate_steps);
+        let run = native::consolidate(
+            cfg,
+            student0.clone(),
+            &teacher,
+            &budget_profiles,
+            &rc.alphas,
+            &mut train_b,
+            rc.consolidate_steps,
+            rc.seed ^ 0x77,
+            rc.log_every,
+        )?;
+        ckpt::save(&run.params, &consolidated_stem)?;
+        (run.params, run.losses)
+    };
+
+    // --- Stage 5: evaluation across budgets ---------------------------------
+    eprintln!("[pipeline] evaluating across {} budgets", rc.budgets.len());
+    let mut budget_rows = Vec::new();
+    for (beta, profile) in rc.budgets.iter().zip(&budget_profiles) {
+        let before = native::eval_student(cfg, &student0, profile, &eval_batches)?;
+        let after = native::eval_student(cfg, &student, profile, &eval_batches)?;
+        eprintln!(
+            "  budget {beta:.2}: ranks {:?}.. loss {before:.4} -> {after:.4}",
+            &profile[..4.min(profile.len())]
+        );
+        budget_rows.push((*beta, profile.clone(), before, after));
+    }
+
+    // --- Stage 6: per-tier DP profiles for serving --------------------------
+    let (ppath, tier_profiles) = write_profiles_json(cfg, &dp.chain, sens.full_cost)?;
+    eprintln!("[pipeline] wrote {} ({} tiers)", ppath.display(), tier_profiles.len());
+
+    Ok(PipelineOut {
+        teacher,
+        student,
+        student_init: student0,
+        chain: dp.chain,
+        full_cost: sens.full_cost,
+        budget_rows,
+        pretrain_losses,
+        kd_losses,
+        tier_profiles,
+    })
+}
+
+/// Pick one chain index per serving tier: the largest-cost profile fitting
+/// the tier's budget, then bumped so indices ascend strictly (two close
+/// tiers must never serve the same submodel — `load_native` rejects
+/// duplicate tiers).
+fn select_tier_indices(chain: &NestedChain, tiers: &[f64], full_cost: usize) -> Result<Vec<usize>> {
+    let n = chain.profiles.len();
+    ensure!(n > 0, "empty DP chain");
+    ensure!(
+        n >= tiers.len(),
+        "DP chain has {n} profiles for {} serving tiers — rerun the probe \
+         with more levels (--probe-levels)",
+        tiers.len()
+    );
+    let mut idxs: Vec<usize> = tiers
+        .iter()
+        .map(|&beta| {
+            let cap = (beta * full_cost as f64).round() as usize;
+            let mut best = 0usize;
+            for (i, &c) in chain.costs.iter().enumerate() {
+                if c <= cap {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect();
+    // Cap from the top so every later tier still has headroom, then bump
+    // forward so indices ascend strictly.
+    let len = idxs.len();
+    for (i, idx) in idxs.iter_mut().enumerate() {
+        let cap = n - len + i;
+        if *idx > cap {
+            *idx = cap;
+        }
+    }
+    for i in 1..len {
+        if idxs[i] <= idxs[i - 1] {
+            idxs[i] = idxs[i - 1] + 1;
+        }
+    }
+    Ok(idxs)
+}
+
+/// Persist the DP-selected per-tier profiles as `stage_dir()/profiles.json`.
+///
+/// Schema (documented in ROADMAP.md):
+/// ```json
+/// {
+///   "config": "tiny",            // model config the profiles were DP'd for
+///   "full_cost": 24576,          // full-model GAR parameter cost
+///   "tiers": [                   // one entry per cfg.serve_tiers, ascending
+///     {"budget": 0.5, "cost": 117, "error": 0.012, "profile": [11, 21, ...]},
+///     ...
+///   ]
+/// }
+/// ```
+pub fn write_profiles_json(
+    cfg: &ModelConfig,
+    chain: &NestedChain,
+    full_cost: u64,
+) -> Result<(PathBuf, Vec<RankProfile>)> {
+    let idxs = select_tier_indices(chain, &cfg.serve_tiers, full_cost as usize)?;
+    let tiers: Vec<Value> = idxs
+        .iter()
+        .zip(&cfg.serve_tiers)
+        .map(|(&ci, &budget)| {
+            json::obj(vec![
+                ("budget", Value::Num(budget)),
+                ("cost", Value::Num(chain.costs[ci] as f64)),
+                ("error", Value::Num(chain.errors[ci])),
+                ("profile", json::arr_usize(&chain.profiles[ci])),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("config", Value::Str(cfg.name.clone())),
+        ("full_cost", Value::Num(full_cost as f64)),
+        ("tiers", Value::Arr(tiers)),
+    ]);
+    let path = profiles_path();
+    std::fs::create_dir_all(stage_dir())?;
+    std::fs::write(&path, json::to_string(&doc))?;
+    Ok((path, idxs.into_iter().map(|i| chain.profiles[i].clone()).collect()))
+}
+
+fn parse_run_config(args: &Args) -> Result<RunConfig> {
+    if args.flag("smoke") {
+        RunConfig::smoke().with_args(args)
+    } else {
+        RunConfig::default().with_args(args)
+    }
+}
+
+/// `repro pipeline [--config base|tiny] [--smoke] [--fresh]
+/// [--pretrain-steps N] ...` — native backend by default; `--backend pjrt`
+/// drives the AOT artifacts when compiled with the feature.
+pub fn run_cli(args: &Args) -> Result<()> {
+    #[cfg(feature = "pjrt")]
+    if args.get_or("backend", "native") == "pjrt" {
+        return run_cli_pjrt(args);
+    }
+    ensure!(
+        args.get_or("backend", "native") == "native",
+        "unknown --backend (this build supports: native{})",
+        if cfg!(feature = "pjrt") { ", pjrt" } else { "" }
+    );
+    let rc = parse_run_config(args)?;
+    let cfg = crate::config::load_model_config(args.get_or("config", "base"))?;
+    let out = run_native(&cfg, &rc, args.flag("fresh"))?;
+    write_summary(&out)
+}
+
+/// Persist the budget table for figures/EXPERIMENTS.md.
+fn write_summary(out: &PipelineOut) -> Result<()> {
+    let rows: Vec<Value> = out
+        .budget_rows
+        .iter()
+        .map(|(b, prof, before, after)| {
+            json::obj(vec![
+                ("budget", Value::Num(*b)),
+                ("profile", json::arr_usize(prof)),
+                ("loss_datasvd_init", Value::Num(*before)),
+                ("loss_flexrank", Value::Num(*after)),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("full_cost", Value::Num(out.full_cost as f64)),
+        (
+            "pretrain_losses",
+            json::arr_f64(&out.pretrain_losses.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        ),
+        (
+            "kd_losses",
+            json::arr_f64(&out.kd_losses.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        ),
+        ("budgets", Value::Arr(rows)),
+    ]);
+    let path = crate::results_dir().join("pipeline_summary.json");
+    std::fs::write(&path, json::to_string(&doc))?;
+    println!("pipeline complete -> {}", path.display());
+    Ok(())
+}
+
+/// `repro profiles` — run (or resume) stages 1–3 and refresh
+/// `stage_dir()/profiles.json` with one DP rank profile per serving tier.
+pub fn write_profiles_cli(args: &Args) -> Result<()> {
+    #[cfg(feature = "pjrt")]
+    if args.get_or("backend", "native") == "pjrt" {
+        return write_profiles_cli_pjrt(args);
+    }
+    ensure!(
+        args.get_or("backend", "native") == "native",
+        "unknown --backend (this build supports: native{})",
+        if cfg!(feature = "pjrt") { ", pjrt" } else { "" }
+    );
+    let rc = parse_run_config(args)?;
+    let cfg = crate::config::load_model_config(args.get_or("config", "base"))?;
+    let out = run_native(&cfg, &rc, args.flag("fresh"))?;
+    println!(
+        "wrote {} ({} tiers; `repro serve --config {}` now uses DP profiles)",
+        profiles_path().display(),
+        out.tier_profiles.len(),
+        cfg.name
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-artifact variant (feature `pjrt`; used by the figure harnesses)
+// ---------------------------------------------------------------------------
+
+/// Run (or resume) the full pipeline over the PJRT artifacts.
+#[cfg(feature = "pjrt")]
+pub fn run(engine: &crate::runtime::Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> {
+    use crate::training::driver;
+
     let cfg = engine.manifest.config.clone();
     let dir = stage_dir();
     std::fs::create_dir_all(&dir)?;
@@ -115,9 +473,8 @@ pub fn run(engine: &Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> 
         eval_batches: eval_batches.clone(),
         evals: 0,
     };
-    let k_levels = rc.probe_levels;
     let grids: Vec<Vec<usize>> =
-        (0..cfg.n_fact_layers()).map(|_| uniform_grid(cfg.rank_full(), k_levels)).collect();
+        (0..cfg.n_fact_layers()).map(|_| uniform_grid(cfg.rank_full(), rc.probe_levels)).collect();
     let sens = probe(&mut probe_model, &grids);
     eprintln!(
         "[pipeline] probe done ({} evals, full loss {:.4})",
@@ -167,6 +524,8 @@ pub fn run(engine: &Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> 
         budget_rows.push((*beta, profile.clone(), before, after));
     }
 
+    let (_, tier_profiles) = write_profiles_json(&cfg, &dp.chain, sens.full_cost)?;
+
     Ok(PipelineOut {
         teacher,
         student,
@@ -176,65 +535,29 @@ pub fn run(engine: &Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> 
         budget_rows,
         pretrain_losses,
         kd_losses,
+        tier_profiles,
     })
 }
 
-/// `repro pipeline [--smoke] [--fresh] [--pretrain-steps N] ...`
-pub fn run_cli(args: &Args) -> Result<()> {
-    let rc = if args.flag("smoke") {
-        RunConfig::smoke().with_args(args)?
-    } else {
-        RunConfig::default().with_args(args)?
-    };
-    let engine = Engine::new(crate::artifacts_dir()).context("engine init")?;
+#[cfg(feature = "pjrt")]
+fn run_cli_pjrt(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    let rc = parse_run_config(args)?;
+    let engine = crate::runtime::Engine::new(crate::artifacts_dir()).context("engine init")?;
     let out = run(&engine, &rc, args.flag("fresh"))?;
-
-    // Persist the budget table for figures/EXPERIMENTS.md.
-    let rows: Vec<Value> = out
-        .budget_rows
-        .iter()
-        .map(|(b, prof, before, after)| {
-            json::obj(vec![
-                ("budget", Value::Num(*b)),
-                ("profile", json::arr_usize(prof)),
-                ("loss_datasvd_init", Value::Num(*before)),
-                ("loss_flexrank", Value::Num(*after)),
-            ])
-        })
-        .collect();
-    let doc = json::obj(vec![
-        ("full_cost", Value::Num(out.full_cost as f64)),
-        (
-            "pretrain_losses",
-            json::arr_f64(&out.pretrain_losses.iter().map(|&x| x as f64).collect::<Vec<_>>()),
-        ),
-        (
-            "kd_losses",
-            json::arr_f64(&out.kd_losses.iter().map(|&x| x as f64).collect::<Vec<_>>()),
-        ),
-        ("budgets", Value::Arr(rows)),
-    ]);
-    let path = crate::results_dir().join("pipeline_summary.json");
-    std::fs::write(&path, json::to_string(&doc))?;
-    println!("pipeline complete -> {}", path.display());
-    Ok(())
+    write_summary(&out)
 }
 
-/// `repro profiles` — run stages 1–3 and write artifacts/profiles.json with
-/// the DP profiles for the serving tiers (phase-2 AOT input).
-pub fn write_profiles_cli(args: &Args) -> Result<()> {
-    let rc = if args.flag("smoke") {
-        RunConfig::smoke().with_args(args)?
-    } else {
-        RunConfig::default().with_args(args)?
-    };
-    let engine = Engine::new(crate::artifacts_dir())?;
-    let cfg = engine.manifest.config.clone();
+/// PJRT `repro profiles --backend pjrt` — additionally mirrors the tier
+/// profiles into artifacts/profiles.json (the phase-2 AOT input).
+#[cfg(feature = "pjrt")]
+fn write_profiles_cli_pjrt(args: &Args) -> Result<()> {
+    let rc = parse_run_config(args)?;
+    let engine = crate::runtime::Engine::new(crate::artifacts_dir())?;
     let out = run(&engine, &rc, args.flag("fresh"))?;
-    let tier_profiles = out.chain.select(&cfg.serve_tiers, out.full_cost as usize);
     let doc = json::obj(vec![(
         "tiers",
-        Value::Arr(tier_profiles.iter().map(|p| json::arr_usize(p)).collect()),
+        Value::Arr(out.tier_profiles.iter().map(|p| json::arr_usize(p)).collect()),
     )]);
     let path = crate::artifacts_dir().join("profiles.json");
     std::fs::write(&path, json::to_string(&doc))?;
@@ -243,4 +566,46 @@ pub fn write_profiles_cli(args: &Args) -> Result<()> {
         path.display()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(costs: Vec<usize>) -> NestedChain {
+        // Strictly nested profiles with the given costs (test scaffolding:
+        // profile content is irrelevant to index selection).
+        let profiles = (0..costs.len()).map(|i| vec![i + 1]).collect();
+        let errors = costs.iter().rev().map(|&c| c as f64).collect();
+        NestedChain { profiles, costs, errors }
+    }
+
+    #[test]
+    fn tier_indices_ascend_strictly_and_fit_budgets() {
+        let c = chain(vec![10, 20, 30, 40]);
+        let idx = select_tier_indices(&c, &[0.25, 0.5, 1.0], 40).unwrap();
+        assert_eq!(idx, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn close_tiers_bump_instead_of_collapsing() {
+        let c = chain(vec![10, 20, 30, 40]);
+        // Both budgets select cost 20 (index 1); the second must bump to 2.
+        let idx = select_tier_indices(&c, &[0.5, 0.55], 40).unwrap();
+        assert_eq!(idx, vec![1, 2]);
+    }
+
+    #[test]
+    fn top_heavy_tiers_cap_from_the_top() {
+        let c = chain(vec![10, 20, 30]);
+        // All three select the last profile; capping must spread them.
+        let idx = select_tier_indices(&c, &[0.9, 0.95, 1.0], 30).unwrap();
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn too_many_tiers_for_chain_is_an_error() {
+        let c = chain(vec![10]);
+        assert!(select_tier_indices(&c, &[0.5, 1.0], 10).is_err());
+    }
 }

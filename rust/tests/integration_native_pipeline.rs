@@ -1,0 +1,169 @@
+//! Integration: the tiny-config **native** pipeline end to end — pretrain →
+//! calibrate → DataSVD → sensitivity probe → DP rank selection → nested KD
+//! consolidation → `profiles.json` → `load_native(Some(profiles))` →
+//! `serve_trace` — fully offline, no feature flags, no artifacts.
+//!
+//! This pins the paper's train-once/deploy-everywhere loop: the DP
+//! selection output actually drives deployment (at least one tier profile
+//! differs from the uniform fallback) and bigger serving tiers are never
+//! worse (per-tier eval loss monotone non-increasing in budget).
+//!
+//! Single #[test]: the run isolates its stage checkpoints via
+//! `FLEXRANK_RESULTS`, which is process-global state.
+
+use flexrank::config::RunConfig;
+use flexrank::coordinator::{
+    load_tier_profiles, serve_trace, PolicyKind, ServeCfg, SubmodelRegistry,
+};
+use flexrank::data::{Corpus, TokenBatcher, TraceCfg, TraceGen};
+use flexrank::flexrank::masks::is_nested;
+use flexrank::runtime::native::uniform_budget_profile;
+use flexrank::training::{native, pipeline, CORPUS_BYTES};
+
+#[test]
+fn native_pipeline_to_dp_profile_serving_round_trip() {
+    let dir = std::env::temp_dir().join(format!("flexrank_native_e2e_{}", std::process::id()));
+    std::env::set_var("FLEXRANK_RESULTS", &dir);
+    let _ = std::fs::create_dir_all(&dir);
+
+    let cfg = flexrank::config::load_model_config("tiny").expect("configs/model_tiny.json");
+    let mut rc = RunConfig::smoke();
+    rc.pretrain_steps = 10;
+    rc.consolidate_steps = 24;
+    rc.calib_batches = 2;
+    rc.eval_batches = 2;
+    rc.probe_levels = 3;
+    rc.budgets = vec![0.5, 1.0];
+    rc.alphas = vec![0.5, 0.5];
+    rc.seed = 1234;
+    rc.log_every = 0;
+
+    // --- pipeline ----------------------------------------------------------
+    let out = pipeline::run_native(&cfg, &rc, true).expect("native pipeline failed");
+
+    assert!(out.chain.validate(), "DP chain must be nested + cost-ascending");
+    assert!(!out.chain.profiles.is_empty());
+    assert!(out.full_cost > 0);
+    assert_eq!(out.pretrain_losses.len(), rc.pretrain_steps);
+    assert_eq!(out.kd_losses.len(), rc.consolidate_steps);
+    assert!(out.pretrain_losses.iter().all(|l| l.is_finite()));
+    assert!(out.kd_losses.iter().all(|l| l.is_finite()));
+    assert_eq!(out.budget_rows.len(), 2);
+    for (_, prof, before, after) in &out.budget_rows {
+        assert_eq!(prof.len(), cfg.n_fact_layers());
+        assert!(before.is_finite() && after.is_finite());
+    }
+
+    // --- profiles.json round trip ------------------------------------------
+    assert!(pipeline::profiles_path().exists(), "pipeline must persist profiles.json");
+    let profiles = load_tier_profiles(&cfg)
+        .expect("profiles.json must parse")
+        .expect("profiles.json must be picked up for the matching config");
+    assert_eq!(profiles, out.tier_profiles);
+    assert_eq!(profiles.len(), cfg.serve_tiers.len());
+    for w in profiles.windows(2) {
+        assert!(is_nested(&w[0], &w[1]), "tier profiles must be nested: {profiles:?}");
+    }
+
+    // The DP output must actually differ from what uniform fallback would
+    // serve — otherwise selection never drove deployment.
+    let uniform: Vec<Vec<usize>> =
+        cfg.serve_tiers.iter().map(|&b| uniform_budget_profile(&cfg, b)).collect();
+    assert!(
+        profiles.iter().zip(&uniform).any(|(p, u)| p != u),
+        "at least one DP profile must differ from the uniform fallback: {profiles:?}"
+    );
+
+    // --- per-tier quality is monotone in budget ----------------------------
+    let corpus = Corpus::generate(CORPUS_BYTES, rc.seed);
+    let eval_b = TokenBatcher::new(
+        &corpus.heldout,
+        cfg.batch_eval,
+        cfg.seq_len + 1,
+        cfg.vocab,
+        rc.seed ^ 0x5A,
+    );
+    let eval_batches = eval_b.eval_batches(rc.eval_batches);
+    let tier_losses: Vec<f64> = profiles
+        .iter()
+        .map(|p| native::eval_student(&cfg, &out.student, p, &eval_batches).unwrap())
+        .collect();
+    assert!(tier_losses.iter().all(|l| l.is_finite()));
+    for w in tier_losses.windows(2) {
+        assert!(
+            w[1] <= w[0] + 1e-9,
+            "eval loss must be monotone non-increasing as tier budget ascends: {tier_losses:?}"
+        );
+    }
+
+    // --- serve the DP-selected submodels offline ---------------------------
+    let mut registry = SubmodelRegistry::load_native(&cfg, &out.student, Some(profiles.as_slice()))
+        .expect("registry must load DP profiles");
+    assert_eq!(registry.n_tiers(), cfg.serve_tiers.len());
+    for (tier, p) in registry.tiers.iter().zip(&profiles) {
+        assert_eq!(&tier.profile, p, "registry must serve the DP profile verbatim");
+    }
+    let trace = TraceGen::new(
+        TraceCfg {
+            n_requests: 24,
+            rate: 500.0,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            seed: 5,
+            ..Default::default()
+        },
+        &corpus.heldout,
+    )
+    .generate();
+    let report = serve_trace(
+        &mut registry,
+        trace,
+        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 },
+    )
+    .expect("serving over DP profiles failed");
+    assert_eq!(report.metrics.requests_done, 24);
+    assert_eq!(report.tier_requests.iter().sum::<usize>(), 24);
+    for w in report.tier_params.windows(2) {
+        assert!(w[0] < w[1], "tier params must ascend: {:?}", report.tier_params);
+    }
+
+    // --- resume: a second run reuses every stage checkpoint ----------------
+    let out2 = pipeline::run_native(&cfg, &rc, false).expect("checkpoint resume failed");
+    assert!(out2.pretrain_losses.is_empty(), "teacher checkpoint must be reused");
+    assert!(out2.kd_losses.is_empty(), "consolidated checkpoint must be reused");
+    assert_eq!(out2.tier_profiles, profiles, "resumed DP selection must reproduce the profiles");
+
+    // --- stale / malformed profiles.json handling --------------------------
+    // A profiles.json written for a different config is stale, not fatal:
+    // serving falls back to uniform profiles.
+    let base_cfg = flexrank::config::load_model_config("base").expect("configs/model_base.json");
+    assert!(
+        load_tier_profiles(&base_cfg).expect("stale profiles must not error").is_none(),
+        "profiles written for 'tiny' must not be served for 'base'"
+    );
+    // A file that claims to match this config but is malformed (wrong
+    // profile length) is a hard error — never serve silently wrong ranks.
+    let ppath = pipeline::profiles_path();
+    let good = std::fs::read_to_string(&ppath).unwrap();
+    std::fs::write(
+        &ppath,
+        format!(
+            "{{\"config\":\"{}\",\"full_cost\":1,\"tiers\":[{}]}}",
+            cfg.name,
+            cfg.serve_tiers
+                .iter()
+                .map(|b| format!("{{\"budget\":{b},\"cost\":1,\"error\":0,\"profile\":[3,3]}}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        ),
+    )
+    .unwrap();
+    assert!(
+        load_tier_profiles(&cfg).is_err(),
+        "a malformed profiles.json claiming to match the config must fail loudly"
+    );
+    std::fs::write(&ppath, good).unwrap();
+
+    std::env::remove_var("FLEXRANK_RESULTS");
+    let _ = std::fs::remove_dir_all(&dir);
+}

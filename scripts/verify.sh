@@ -11,6 +11,9 @@ cd "$(dirname "$0")/.."
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+echo "== examples build (quickstart, pareto_recovery, elastic_serving, e2e_flexrank) =="
+cargo build --release --examples
+
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
