@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     // profiles come from the pipeline's DP selection when profiles.json is
     // present, uniform budget ranks otherwise.
     let student = serving_student(&cfg, args.u64_or("seed", 7)?)?;
-    let profiles = load_tier_profiles(&cfg)?;
+    let profiles = load_tier_profiles(&cfg, &student)?;
     let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_deref())?;
 
     let corpus = Corpus::generate(200_000, 5);

@@ -16,6 +16,7 @@ use flexrank::bench_harness::{self, write_kernel_json, KernelRecord};
 use flexrank::flexrank::gar::Gar;
 use flexrank::linalg::{kernels, reference, Mat};
 use flexrank::rng::Rng;
+use flexrank::runtime::attention::{causal_attention, AttnWorkspace};
 
 fn main() {
     let mut bench = bench_harness::from_env();
@@ -106,6 +107,36 @@ fn main() {
         records.push(KernelRecord::from_stats(&fused_a, &refstats, &shape, flops));
     }
 
+    // --- blocked causal attention: pooled head-parallel vs sequential ------
+    // The serving-shaped problem (per-head panel sizes from model_base):
+    // one full batch of the shared attention, reference = the same blocked
+    // kernel restricted to one workspace slot (sequential (batch × head)
+    // loop — what the pre-dedup implementations did above the pooled
+    // matmuls), kernel = the slot-strided head-parallel dispatch.
+    {
+        let cfg = flexrank::config::load_model_config("base").expect("configs/model_base.json");
+        let (d, heads, seq, batch) = (cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.batch_serve);
+        let hd = d / heads;
+        let rows = batch * seq;
+        let qkv: Vec<f32> = (0..rows * 3 * d).map(|_| rng.normal() as f32).collect();
+        let mut att = vec![0f32; rows * d];
+        let mut ws_seq = AttnWorkspace::new(seq, hd, 1);
+        let mut ws_par = AttnWorkspace::new(seq, hd, AttnWorkspace::auto_slots(batch * heads));
+        let shape = format!("B={batch} H={heads} T={seq} hd={hd}");
+        // Per (batch, head) pair: QKᵀ + S·V, 2 flops per MAC each.
+        let flops = (batch * heads * 4 * seq * seq * hd) as f64;
+
+        let refstats = bench.run(&format!("attention_seq_heads {shape}"), Some(flops), || {
+            causal_attention(&qkv, batch, seq, d, heads, &mut ws_seq, &mut att, None);
+            std::hint::black_box(att[0]);
+        });
+        let par = bench.run(&format!("attention_par_heads {shape}"), Some(flops), || {
+            causal_attention(&qkv, batch, seq, d, heads, &mut ws_par, &mut att, None);
+            std::hint::black_box(att[0]);
+        });
+        records.push(KernelRecord::from_stats(&par, &refstats, &shape, flops));
+    }
+
     // --- covariance gram accumulation (DataSVD stage 1) --------------------
     {
         let x = Mat::randn(512, 128, &mut rng);
@@ -136,6 +167,15 @@ fn main() {
         if rec.kernel.starts_with("matmul_f64 512x512x512") {
             println!(
                 "matmul 512³ speedup vs reference: {:.2}x ({:.2} GFLOP/s)",
+                rec.speedup_vs_reference, rec.gflops
+            );
+        }
+    }
+    for rec in &records {
+        if rec.kernel.starts_with("attention_par_heads") {
+            let verdict = if rec.speedup_vs_reference >= 1.0 { "OK" } else { "WARNING: slower" };
+            println!(
+                "attention head-parallel vs sequential-head: {:.2}x ({:.2} GFLOP/s) — {verdict}",
                 rec.speedup_vs_reference, rec.gflops
             );
         }

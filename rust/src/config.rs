@@ -121,4 +121,22 @@ mod tests {
         assert_eq!(mc.n_fact_layers(), 8);
         assert_eq!(mc.layer_dims().len(), 4);
     }
+
+    #[test]
+    fn bad_head_split_fails_at_parse_time() {
+        // d_model % n_heads != 0 must be rejected when the config is
+        // loaded, not at the first forward (the check used to live,
+        // duplicated, at both forward entry points).
+        let good = std::fs::read_to_string(
+            crate::repo_root().join("configs").join("model_tiny.json"),
+        )
+        .unwrap();
+        let bad = good.replace("\"n_heads\": 2", "\"n_heads\": 5");
+        assert!(bad.contains("\"n_heads\": 5"), "fixture edit failed");
+        let err = ModelConfig::from_json(&json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("not divisible"), "{err}");
+
+        let zero = good.replace("\"n_heads\": 2", "\"n_heads\": 0");
+        assert!(ModelConfig::from_json(&json::parse(&zero).unwrap()).is_err());
+    }
 }

@@ -46,33 +46,43 @@ impl DynamicBatcher {
         self.queues[tier].len()
     }
 
+    /// The one fairness rule: among the queues `keep` admits (empty queues
+    /// never qualify), the tier whose front request has waited longest.
+    /// Every selection path — full-batch, expired-deadline, shutdown drain
+    /// — routes through here so they can't diverge.
+    fn oldest_head_among(&self, keep: impl Fn(&VecDeque<Pending>) -> bool) -> Option<usize> {
+        self.queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| !q.is_empty() && keep(q))
+            .min_by_key(|(_, q)| q.front().map(|p| p.enqueued))
+            .map(|(i, _)| i)
+    }
+
     /// Is any tier ready to flush at `now`?  Ready = full batch available OR
     /// oldest entry has exceeded the deadline.
     pub fn ready_tier(&self, now: Instant) -> Option<usize> {
         // Full batches first (throughput), then expired deadlines (latency).
         // Among multiple full queues, prefer the one with the oldest head —
         // the lowest-index scan this replaced starved higher tiers whenever
-        // a low tier refilled faster than it drained.  Matches the fairness
-        // rule of the deadline path below.
-        let full = self
-            .queues
-            .iter()
-            .enumerate()
-            .filter(|(_, q)| q.len() >= self.max_batch)
-            .min_by_key(|(_, q)| q.front().map(|p| p.enqueued));
-        if let Some((i, _)) = full {
+        // a low tier refilled faster than it drained.
+        if let Some(i) = self.oldest_head_among(|q| q.len() >= self.max_batch) {
             return Some(i);
         }
-        self.queues
-            .iter()
-            .enumerate()
-            .filter(|(_, q)| {
-                q.front()
-                    .map(|p| now.duration_since(p.enqueued) >= self.max_wait)
-                    .unwrap_or(false)
-            })
-            .min_by_key(|(_, q)| q.front().map(|p| p.enqueued).unwrap())
-            .map(|(i, _)| i)
+        self.oldest_head_among(|q| {
+            q.front()
+                .map(|p| now.duration_since(p.enqueued) >= self.max_wait)
+                .unwrap_or(false)
+        })
+    }
+
+    /// Tier whose queue head has waited longest (None if all queues are
+    /// empty) — the same fairness rule `ready_tier` applies among
+    /// full/expired queues, exposed for the shutdown drain so forced
+    /// flushes pop the longest-waiting requests first instead of the
+    /// deepest queue.
+    pub fn oldest_head_tier(&self) -> Option<usize> {
+        self.oldest_head_among(|_| true)
     }
 
     /// Time until the next deadline expiry (None if all queues empty).
@@ -132,6 +142,24 @@ mod tests {
         // After draining tier 2, tier 0 is next.
         b.take_batch(2);
         assert_eq!(b.ready_tier(now + Duration::from_millis(7)), Some(0));
+    }
+
+    #[test]
+    fn drain_picks_oldest_head_not_deepest_queue() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(3, 8, Duration::from_millis(100));
+        // Tier 2 holds the single oldest request; tier 0 holds the deepest
+        // queue.  The shutdown drain used to pick tier 0 (deepest), leaving
+        // the longest-waiting request for last.
+        b.push(2, req(1), now);
+        for i in 2..6 {
+            b.push(0, req(i), now + Duration::from_millis(i));
+        }
+        assert_eq!(b.oldest_head_tier(), Some(2));
+        b.take_batch(2);
+        assert_eq!(b.oldest_head_tier(), Some(0));
+        b.take_batch(0);
+        assert_eq!(b.oldest_head_tier(), None);
     }
 
     #[test]

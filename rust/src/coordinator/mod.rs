@@ -9,10 +9,11 @@
 //! registry survives behind the `pjrt` feature.
 //!
 //! Threading: an ingest thread replays the trace through an mpsc channel
-//! (only `Request`s cross threads); the main loop owns the registry and its
+//! (only `Request`s cross threads); the main loop owns the backend and its
 //! scratch arena, pulls requests, and drives the batcher — the same
 //! ownership layout a single-device vLLM-style worker uses.  The kernels
-//! themselves fan out over `std::thread::scope` inside each forward.
+//! and the blocked attention fan out over the persistent worker pool
+//! (`linalg::pool`) inside each forward.
 
 mod batcher;
 mod metrics;
@@ -24,14 +25,15 @@ pub use batcher::{DynamicBatcher, Pending};
 pub use metrics::{LatencyStats, Metrics};
 pub use policy::{Policy, PolicyKind};
 #[cfg(feature = "pjrt")]
-pub use registry::PjrtRegistry;
+pub use registry::{PjrtRegistry, PjrtServing};
 pub use registry::{load_tier_profiles, SubmodelRegistry, Tier};
 pub use server::{serve_trace, ServeCfg, ServeReport};
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::cli::Args;
 use crate::data::{TraceCfg, TraceGen};
+use crate::runtime::{ModelConfig, ServingBackend};
 use crate::training::params::{
     decompose_teacher, random_teacher, student_from_factors, ParamSet,
 };
@@ -63,22 +65,51 @@ pub fn serving_student(cfg: &crate::runtime::ModelConfig, seed: u64) -> Result<P
 }
 
 /// `repro serve [--requests N] [--rate R] [--policy static|adaptive]
-/// [--config base|tiny]`
+/// [--config base|tiny] [--backend native|pjrt]`
+///
+/// Builds the requested [`ServingBackend`] and drives it through the
+/// backend-agnostic serving stack — native kernels by default, the PJRT
+/// registry when compiled with the `pjrt` feature.
 pub fn run_cli(args: &Args) -> Result<()> {
     let cfg = crate::config::load_model_config(args.get_or("config", "base"))
         .context("model config")?;
     let seed = args.u64_or("seed", 77)?;
+    let backend_name = args.get_or("backend", "native");
+
+    #[cfg(feature = "pjrt")]
+    if backend_name == "pjrt" {
+        let engine = crate::runtime::Engine::new(crate::artifacts_dir()).context("engine init")?;
+        let student = serving_student(&cfg, seed ^ 0x5eed)?;
+        let registry = PjrtRegistry::load(&engine, &student).context("pjrt registry load")?;
+        let mut backend = PjrtServing::new(engine, registry);
+        return serve_cli_on(&mut backend, &cfg, args, seed);
+    }
+    ensure!(
+        backend_name == "native",
+        "unknown --backend '{backend_name}' (this build supports: native{})",
+        if cfg!(feature = "pjrt") { ", pjrt" } else { "" }
+    );
+
     let student = serving_student(&cfg, seed ^ 0x5eed)?;
-    // DP-selected per-tier profiles when the pipeline has produced them;
-    // uniform budget profiles otherwise.
-    let profiles = load_tier_profiles(&cfg)?;
+    // DP-selected per-tier profiles when the pipeline has produced them
+    // for this config *and* this student; uniform budget profiles otherwise.
+    let profiles = load_tier_profiles(&cfg, &student)?;
     match &profiles {
         Some(p) => eprintln!("[serve] using {} DP-selected tier profiles from profiles.json", p.len()),
         None => eprintln!("[serve] no DP profiles; serving uniform budget ranks"),
     }
     let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_deref())
         .context("registry load")?;
+    serve_cli_on(&mut registry, &cfg, args, seed)
+}
 
+/// Trace generation + serve + report over any loaded backend.
+fn serve_cli_on<B: ServingBackend>(
+    backend: &mut B,
+    cfg: &ModelConfig,
+    args: &Args,
+    seed: u64,
+) -> Result<()> {
     let corpus = crate::data::Corpus::generate(crate::training::CORPUS_BYTES, 5);
     let trace_cfg = TraceCfg {
         n_requests: args.usize_or("requests", 200)?,
@@ -99,7 +130,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         policy,
         ..Default::default()
     };
-    let report = serve_trace(&mut registry, trace, &serve_cfg)?;
+    let report = serve_trace(backend, trace, &serve_cfg)?;
     report.print();
 
     let path = crate::results_dir().join("serving_report.json");

@@ -3,9 +3,13 @@
 //!
 //! * **Static** — fixed SLO→tier map (quality→largest, interactive→smallest).
 //! * **Adaptive** — starts from the static map, then downgrades under queue
-//!   pressure and upgrades when idle: the budget-conditioned inference the
-//!   paper's elasticity enables (Sec. 7 "budget-conditioned or
-//!   input-adaptive inference").
+//!   pressure: the budget-conditioned inference the paper's elasticity
+//!   enables (Sec. 7 "budget-conditioned or input-adaptive inference").
+//!
+//! The pressure thresholds are **stateless**: every request is classified
+//! independently from the queue depth observed at its arrival.  There is no
+//! hysteresis — nothing remembers whether the policy was recently shedding,
+//! so a depth oscillating around a threshold flips the decision per request.
 
 use crate::data::trace::{Request, Slo};
 
@@ -21,9 +25,13 @@ pub enum PolicyKind {
 pub struct Policy {
     pub kind: PolicyKind,
     pub n_tiers: usize,
-    /// Queue depth (requests) above which adaptive policy downgrades a step.
+    /// Queue depth (requests) at or above which the adaptive policy
+    /// downgrades every request a step, quality included (stateless
+    /// threshold, re-evaluated per request).  In the intermediate band
+    /// `pressure_lo..pressure_hi` only non-quality requests are demoted.
     pub pressure_hi: usize,
-    /// Queue depth below which adaptive policy restores the SLO tier.
+    /// Queue depth at or below which the adaptive policy serves the plain
+    /// SLO tier (stateless threshold, re-evaluated per request).
     pub pressure_lo: usize,
 }
 
@@ -42,6 +50,11 @@ impl Policy {
     }
 
     /// Tier for a request given current total queue depth.
+    ///
+    /// An explicit `req.budget` must satisfy the (0, 1] contract — the
+    /// serving loop rejects violations at trace ingest before routing
+    /// (`serve_trace`), because the ceil/clamp arithmetic below would
+    /// silently map NaN or out-of-range values into a valid tier.
     pub fn select(&self, req: &Request, queue_depth: usize) -> usize {
         if let Some(b) = req.budget {
             // Explicit budget override: smallest tier index covering it.

@@ -8,20 +8,49 @@
 
 use anyhow::{ensure, Context, Result};
 
+use crate::flexrank::masks::gar_layer_params;
 use crate::json;
 use crate::runtime::native::{uniform_budget_rank, GarSubmodel, Scratch};
-use crate::runtime::ModelConfig;
-use crate::training::params::ParamSet;
+use crate::runtime::{ModelConfig, ServingBackend};
+use crate::training::params::{ParamSet, LAYER_KINDS};
+
+/// Full-model GAR parameter cost of a student's factor set (what the
+/// pipeline records as `full_cost` in profiles.json): Σ per factorized
+/// layer `gar_layer_params(n, m, r_full)` with dims read off the stored
+/// `_u (m, r_full)` / `_v (n, r_full)` tensors.
+fn student_full_cost(cfg: &ModelConfig, student: &ParamSet) -> Result<u64> {
+    let mut cost = 0u64;
+    for b in 0..cfg.n_blocks {
+        for kind in LAYER_KINDS {
+            let u = student.get(&format!("blocks.{b}.{kind}_u"))?.shape().to_vec();
+            let v = student.get(&format!("blocks.{b}.{kind}_v"))?.shape().to_vec();
+            ensure!(
+                u.len() == 2 && v.len() == 2 && u[1] == v[1],
+                "student factor blocks.{b}.{kind} has shapes {u:?}/{v:?}"
+            );
+            cost += gar_layer_params(v[0], u[0], u[1]) as u64;
+        }
+    }
+    Ok(cost)
+}
 
 /// Load the DP-selected per-tier profiles the native pipeline persisted as
 /// `training::stage_dir()/profiles.json` (see the schema in ROADMAP.md).
 ///
 /// Returns `Ok(None)` when no file exists, or when it was written for a
-/// different model config / tier set (a stale artifact — serving falls back
-/// to uniform budget profiles with a warning).  A file that *claims* to
-/// match this config but is malformed is a hard error: serving silently
-/// wrong submodels is never acceptable.
-pub fn load_tier_profiles(cfg: &ModelConfig) -> Result<Option<Vec<Vec<usize>>>> {
+/// different model config / tier set / student (a stale artifact — serving
+/// falls back to uniform budget profiles with a warning).  Staleness checks
+/// cover the config name, tier count, tier budgets, and the recorded
+/// `full_cost` against the *loaded* student's GAR parameter count — the
+/// last catches a profiles.json written by an older run of a same-named
+/// config whose checkpoint/student has since changed **shape** (e.g. the
+/// config file was edited in place, or a checkpoint from the older dims is
+/// still being served).  It is a dimensional check: a re-trained student
+/// with identical shapes produces the same cost and is not detected — a
+/// content fingerprint in the schema would be needed for that (ROADMAP).
+/// A file that claims to match but is malformed is a hard error: serving
+/// silently wrong submodels is never acceptable.
+pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Option<Vec<Vec<usize>>>> {
     let path = crate::training::stage_dir().join("profiles.json");
     if !path.exists() {
         return Ok(None);
@@ -35,6 +64,18 @@ pub fn load_tier_profiles(cfg: &ModelConfig) -> Result<Option<Vec<Vec<usize>>>> 
              falling back to uniform profiles",
             path.display(),
             cfg.name
+        );
+        return Ok(None);
+    }
+    let stored_cost = doc.req("full_cost")?.as_f64()? as u64;
+    let expect_cost = student_full_cost(cfg, student)?;
+    if stored_cost != expect_cost {
+        eprintln!(
+            "[serve] {}: recorded full_cost {stored_cost} but the loaded student \
+             costs {expect_cost} — profiles were DP'd for a different \
+             checkpoint/student; falling back to uniform profiles \
+             (rerun `repro profiles`)",
+            path.display()
         );
         return Ok(None);
     }
@@ -209,6 +250,27 @@ impl SubmodelRegistry {
     }
 }
 
+impl ServingBackend for SubmodelRegistry {
+    fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn tier_budget(&self, tier: usize) -> f64 {
+        self.tiers[tier].budget
+    }
+    fn tier_params(&self, tier: usize) -> usize {
+        self.tiers[tier].params
+    }
+    fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]> {
+        SubmodelRegistry::infer(self, tier, tokens)
+    }
+}
+
 /// PJRT-backed registry: one compiled GAR executable + device-resident
 /// weights per tier (requires `make artifacts` and the `xla` crate).
 #[cfg(feature = "pjrt")]
@@ -277,6 +339,49 @@ impl PjrtRegistry {
         refs.push(tok.buffer());
         let out = t.exe.run_b(&refs)?;
         Tensor::from_literal(&out[0])
+    }
+}
+
+/// PJRT registry + engine bundled behind the one serving seam, so the
+/// coordinator/bench/CLI stack drives the XLA executables through the same
+/// [`ServingBackend`] calls as the native kernels.
+#[cfg(feature = "pjrt")]
+pub struct PjrtServing {
+    pub engine: crate::runtime::Engine,
+    pub registry: PjrtRegistry,
+    /// Host copy of the last batch's logits (`infer` returns a borrow).
+    logits: Vec<f32>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtServing {
+    pub fn new(engine: crate::runtime::Engine, registry: PjrtRegistry) -> PjrtServing {
+        PjrtServing { engine, registry, logits: Vec::new() }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl ServingBackend for PjrtServing {
+    fn n_tiers(&self) -> usize {
+        self.registry.tiers.len()
+    }
+    fn batch(&self) -> usize {
+        self.registry.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.registry.seq_len
+    }
+    fn tier_budget(&self, tier: usize) -> f64 {
+        self.registry.tiers[tier].budget
+    }
+    fn tier_params(&self, tier: usize) -> usize {
+        self.registry.tiers[tier].params
+    }
+    fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]> {
+        let out = self.registry.infer(&self.engine, tier, tokens.to_vec())?;
+        self.logits.clear();
+        self.logits.extend_from_slice(out.as_f32()?);
+        Ok(&self.logits)
     }
 }
 

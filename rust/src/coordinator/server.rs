@@ -1,5 +1,6 @@
 //! The serving loop: ingest thread replays the trace; the main loop routes,
-//! batches, executes on the native backend, and records metrics.
+//! batches, executes on whatever [`ServingBackend`] is loaded (native
+//! kernels by default, PJRT behind its feature), and records metrics.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -8,11 +9,11 @@ use anyhow::{ensure, Result};
 
 use crate::data::trace::Request;
 use crate::json::{self, Value};
+use crate::runtime::ServingBackend;
 
 use super::batcher::{DynamicBatcher, Pending};
 use super::metrics::Metrics;
 use super::policy::{Policy, PolicyKind};
-use super::registry::SubmodelRegistry;
 
 /// Serving-run configuration.
 #[derive(Debug, Clone)]
@@ -101,10 +102,10 @@ impl ServeReport {
 }
 
 /// Execute one batch on a tier: pad tokens into the reusable buffer, run
-/// the native forward, record metrics.  Shared by the steady-state and
+/// the backend forward, record metrics.  Shared by the steady-state and
 /// drain paths (they were previously copy-pasted).
-fn run_batch(
-    registry: &mut SubmodelRegistry,
+fn run_batch<B: ServingBackend + ?Sized>(
+    backend: &mut B,
     metrics: &mut Metrics,
     tokens: &mut Vec<i32>,
     lats: &mut Vec<Duration>,
@@ -112,7 +113,7 @@ fn run_batch(
     batch: &[Pending],
 ) -> Result<()> {
     let fill = batch.len();
-    let (cap, seq) = (registry.batch, registry.seq_len);
+    let (cap, seq) = (backend.batch(), backend.seq_len());
     tokens.clear();
     for p in batch {
         // A request with a wrong-length token window would shift every
@@ -129,7 +130,7 @@ fn run_batch(
     }
     tokens.resize(cap * seq, 0);
     let exec_t0 = Instant::now();
-    let _logits = registry.infer(tier, tokens)?;
+    let _logits = backend.infer(tier, tokens)?;
     let exec = exec_t0.elapsed();
     let done = Instant::now();
     lats.clear();
@@ -138,24 +139,41 @@ fn run_batch(
     Ok(())
 }
 
-/// Serve a trace to completion over a loaded registry.
-pub fn serve_trace(
-    registry: &mut SubmodelRegistry,
+/// Serve a trace to completion over a loaded serving backend (native
+/// registry, PJRT registry, …) — the coordinator stack is backend-agnostic
+/// above the [`ServingBackend`] seam.
+pub fn serve_trace<B: ServingBackend + ?Sized>(
+    backend: &mut B,
     trace: Vec<Request>,
     cfg: &ServeCfg,
 ) -> Result<ServeReport> {
-    let n_tiers = registry.n_tiers();
+    let n_tiers = backend.n_tiers();
     let policy = Policy::new(cfg.policy, n_tiers);
     let mut batcher = DynamicBatcher::new(
         n_tiers,
-        registry.batch,
+        backend.batch(),
         Duration::from_secs_f64(cfg.max_wait_ms / 1e3),
     );
     let mut metrics = Metrics::new(n_tiers);
     let mut tier_requests = vec![0usize; n_tiers];
     // Reused across batches so the hot path stays allocation-free.
-    let mut tokens: Vec<i32> = Vec::with_capacity(registry.batch * registry.seq_len);
-    let mut lats: Vec<Duration> = Vec::with_capacity(registry.batch);
+    let mut tokens: Vec<i32> = Vec::with_capacity(backend.batch() * backend.seq_len());
+    let mut lats: Vec<Duration> = Vec::with_capacity(backend.batch());
+
+    // Budget-override contract: finite, in (0, 1].  A NaN or out-of-range
+    // budget used to be silently mapped into some tier by the select
+    // arithmetic — reject it loudly, and do it up front, before the ingest
+    // thread spawns, so the abort leaves no detached replay thread behind.
+    for req in &trace {
+        if let Some(b) = req.budget {
+            ensure!(
+                b.is_finite() && b > 0.0 && b <= 1.0,
+                "request {} carries budget {b} outside the (0, 1] \
+                 contract; refusing to route it",
+                req.id
+            );
+        }
+    }
 
     // Ingest thread: replays arrivals on the trace's timeline.
     let (tx, rx) = mpsc::channel::<Request>();
@@ -198,7 +216,7 @@ pub fn serve_trace(
         let now = Instant::now();
         if let Some(tier) = batcher.ready_tier(now) {
             let batch = batcher.take_batch(tier);
-            run_batch(registry, &mut metrics, &mut tokens, &mut lats, tier, &batch)?;
+            run_batch(backend, &mut metrics, &mut tokens, &mut lats, tier, &batch)?;
         } else if open {
             // Idle: wait for the next deadline or a short poll tick.
             let wait = batcher
@@ -207,13 +225,14 @@ pub fn serve_trace(
                 .min(Duration::from_millis(2));
             std::thread::sleep(wait.max(Duration::from_micros(100)));
         } else if batcher.depth() > 0 {
-            // Channel closed; force-flush what remains, deepest queue first.
-            let tier = (0..n_tiers).max_by_key(|&t| batcher.tier_depth(t)).unwrap();
-            if batcher.tier_depth(tier) == 0 {
-                break;
-            }
+            // Channel closed; force-flush what remains.  Drain oldest head
+            // first — the same fairness rule `ready_tier` applies in steady
+            // state — so shutdown tail-latency accounting is consistent
+            // (the old deepest-queue-first pick left the longest-waiting
+            // requests for last).
+            let Some(tier) = batcher.oldest_head_tier() else { break };
             let batch = batcher.take_batch(tier);
-            run_batch(registry, &mut metrics, &mut tokens, &mut lats, tier, &batch)?;
+            run_batch(backend, &mut metrics, &mut tokens, &mut lats, tier, &batch)?;
         }
     }
     let wall_s = start.elapsed().as_secs_f64();
@@ -221,8 +240,8 @@ pub fn serve_trace(
 
     Ok(ServeReport {
         metrics,
-        tier_budgets: registry.tiers.iter().map(|t| t.budget).collect(),
-        tier_params: registry.tiers.iter().map(|t| t.params).collect(),
+        tier_budgets: (0..n_tiers).map(|t| backend.tier_budget(t)).collect(),
+        tier_params: (0..n_tiers).map(|t| backend.tier_params(t)).collect(),
         tier_requests,
         wall_s,
     })
@@ -231,16 +250,52 @@ pub fn serve_trace(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::registry::SubmodelRegistry;
     use crate::data::trace::{Request, Slo};
     use crate::training::params::{decompose_teacher, random_teacher, student_from_factors};
 
-    #[test]
-    fn malformed_request_length_fails_loudly() {
+    fn tiny_registry(seed: u64) -> (crate::runtime::ModelConfig, SubmodelRegistry) {
         let cfg = crate::config::load_model_config("tiny").unwrap();
-        let teacher = random_teacher(&cfg, 9);
+        let teacher = random_teacher(&cfg, seed);
         let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
         let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
-        let mut registry = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+        let registry = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+        (cfg, registry)
+    }
+
+    #[test]
+    fn invalid_budget_override_fails_loudly() {
+        // The select arithmetic used to map NaN to tier 0 and budgets > 1
+        // to the top tier silently; ingest must reject anything outside the
+        // documented (0, 1] contract, naming the offending request.
+        let (cfg, mut registry) = tiny_registry(19);
+        let req = |id: u64, budget: Option<f64>| Request {
+            id,
+            arrival_s: 0.0,
+            slo: Slo::Standard,
+            tokens: vec![1; cfg.seq_len],
+            budget,
+        };
+        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        for bad in [f64::NAN, 0.0, -0.5, 1.5, f64::INFINITY] {
+            let err = serve_trace(&mut registry, vec![req(7, Some(bad))], &scfg).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("request 7"), "must name the request ({bad}): {msg}");
+            assert!(msg.contains("(0, 1]"), "must state the contract ({bad}): {msg}");
+        }
+        // In-contract budgets still serve.
+        let report = serve_trace(
+            &mut registry,
+            vec![req(1, Some(0.3)), req(2, Some(1.0)), req(3, None)],
+            &scfg,
+        )
+        .unwrap();
+        assert_eq!(report.metrics.requests_done, 3);
+    }
+
+    #[test]
+    fn malformed_request_length_fails_loudly() {
+        let (cfg, mut registry) = tiny_registry(9);
         let good = |id: u64| Request {
             id,
             arrival_s: 0.0,

@@ -30,7 +30,9 @@ pub struct Request {
     pub slo: Slo,
     /// Token window (model seq_len), values in [0, vocab).
     pub tokens: Vec<i32>,
-    /// Optional explicit budget override in (0, 1].
+    /// Optional explicit budget override.  Contract: finite and in (0, 1]
+    /// — `serve_trace` rejects anything else at ingest rather than letting
+    /// the tier arithmetic silently absorb NaN or out-of-range values.
     pub budget: Option<f64>,
 }
 

@@ -167,10 +167,13 @@ fn run_chunks(pool: &Pool, job: &Job) {
 }
 
 /// Raw pointer wrapper so chunk closures can carry a mutable output base
-/// across threads; disjointness is enforced by the row-range math in
-/// [`parallel_for_rows`].
+/// across threads.  Safety contract for every user: a `SendPtr` may only
+/// be dereferenced for regions that are disjoint across chunk indices —
+/// here that is enforced by the row-range math in [`parallel_for_rows`];
+/// `runtime::attention` reuses it with per-slot / per-(batch, head)
+/// disjointness arguments documented at each dereference.
 #[derive(Clone, Copy)]
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 

@@ -1,0 +1,513 @@
+//! The one blocked causal multi-head attention — shared by the serving
+//! forward ([`crate::runtime::native`]) and the training forward/backward
+//! ([`crate::training::native`]), which were previously byte-duplicated
+//! copies that a consistency test pinned together.
+//!
+//! Formulation (per (sequence, head) pair): the strided head columns of the
+//! packed `(rows, 3d)` qkv activation are gathered into contiguous
+//! `(t_len × hd)` Q/K/V panels held in a caller-supplied [`AttnWorkspace`],
+//! scores `S = Q·Kᵀ` come from one `matmul_nt_f32` call, the causal softmax
+//! runs row-wise in place (masked strict upper triangle zeroed so it never
+//! contributes), the weighted values `O = S·V` come from one `matmul_f32`
+//! call, and the output panel is scattered back into the `(rows × d)`
+//! activation buffer.
+//!
+//! The two callers differ in exactly one way, so it is a parameter: serving
+//! discards the softmax probs (`probs = None`, scores live in workspace
+//! scratch), training retains them for the backward pass (`probs =
+//! Some(buf)`, scores are computed directly in the retained buffer — one
+//! `(t_len, t_len)` matrix per (batch, head) pair).
+//!
+//! **Parallelism:** the `(batch × head)` panel loop fans out over the
+//! persistent worker pool ([`crate::linalg::pool`]).  The workspace holds
+//! `slots` independent panel sets; chunk `ci` of the pooled dispatch owns
+//! slot `ci` and processes pairs `ci, ci+slots, ci+2·slots, …`, so panel
+//! buffers are never shared between concurrent chunks and the whole pass
+//! stays allocation-free.  Matmuls issued from inside a chunk find the pool
+//! busy and run inline — the pool's deadlock-free nesting rule.
+
+use crate::linalg::kernels;
+use crate::linalg::pool::{self, SendPtr};
+
+/// Preallocated panel workspace for the blocked attention: `slots`
+/// independent sets of Q/K/V/O `(seq × hd)` panels plus one `(seq × seq)`
+/// score matrix each.  Sized once; [`causal_attention`] never allocates.
+#[derive(Debug)]
+pub struct AttnWorkspace {
+    seq: usize,
+    hd: usize,
+    slots: usize,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    o: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl AttnWorkspace {
+    /// Workspace for sequences up to `seq` tokens at head width `hd`, with
+    /// `slots` concurrent panel sets (1 = sequential head loop).
+    pub fn new(seq: usize, hd: usize, slots: usize) -> AttnWorkspace {
+        let slots = slots.max(1);
+        AttnWorkspace {
+            seq,
+            hd,
+            slots,
+            q: vec![0.0; slots * seq * hd],
+            k: vec![0.0; slots * seq * hd],
+            v: vec![0.0; slots * seq * hd],
+            o: vec![0.0; slots * seq * hd],
+            scores: vec![0.0; slots * seq * seq],
+        }
+    }
+
+    /// Slot count that saturates the worker pool for a panel loop over
+    /// `max_pairs = batch × heads` (batch, head) pairs: more slots than
+    /// pool threads only waste memory, more than pairs never run.
+    pub fn auto_slots(max_pairs: usize) -> usize {
+        pool::size().min(max_pairs).max(1)
+    }
+
+    /// Buffer base pointers — lets tests assert repeated attention calls
+    /// never reallocate (the zero-per-request-allocation invariant).
+    pub fn fingerprint(&self) -> Vec<usize> {
+        vec![
+            self.q.as_ptr() as usize,
+            self.k.as_ptr() as usize,
+            self.v.as_ptr() as usize,
+            self.o.as_ptr() as usize,
+            self.scores.as_ptr() as usize,
+        ]
+    }
+}
+
+/// Backward-pass panel workspace: per slot, seven `(seq × hd)` panels
+/// (Q/K/V gathers, dO, dQ, dK, dV) plus one `(seq × seq)` dS matrix.
+#[derive(Debug)]
+pub struct AttnGradWorkspace {
+    seq: usize,
+    hd: usize,
+    slots: usize,
+    panels: Vec<f32>,
+}
+
+impl AttnGradWorkspace {
+    pub fn new(seq: usize, hd: usize, slots: usize) -> AttnGradWorkspace {
+        let slots = slots.max(1);
+        AttnGradWorkspace {
+            seq,
+            hd,
+            slots,
+            panels: vec![0.0; slots * (7 * seq * hd + seq * seq)],
+        }
+    }
+
+    pub fn fingerprint(&self) -> Vec<usize> {
+        vec![self.panels.as_ptr() as usize]
+    }
+}
+
+/// Scale + causal softmax over the first `t_len` rows of `sc` in place:
+/// row `t` normalizes entries `0..=t` and zeroes the strict upper triangle
+/// (masked keys must contribute exactly nothing to `S·V`).
+fn masked_softmax_rows(sc: &mut [f32], t_len: usize, scale: f32) {
+    for t1 in 0..t_len {
+        let srow = &mut sc[t1 * t_len..t1 * t_len + t1 + 1];
+        let mut mx = f32::NEG_INFINITY;
+        for s in srow.iter_mut() {
+            *s *= scale;
+            if *s > mx {
+                mx = *s;
+            }
+        }
+        let mut sum = 0.0f32;
+        for s in srow.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        for s in srow.iter_mut() {
+            *s *= inv;
+        }
+        for s in sc[t1 * t_len + t1 + 1..(t1 + 1) * t_len].iter_mut() {
+            *s = 0.0;
+        }
+    }
+}
+
+/// Blocked causal multi-head attention over the packed qkv buffer
+/// (`(batch·t_len, 3d)`: q | k | v, heads interleaved within each third),
+/// merged heads written to `att` (`(batch·t_len, d)`).
+///
+/// `probs = Some(buf)` retains the causal softmax weights — `buf` must hold
+/// `batch · heads · t_len²` floats, one `(t_len, t_len)` matrix per
+/// (batch, head) pair — for a training backward pass
+/// ([`causal_attention_backward`]); `None` discards them (serving).
+///
+/// Allocation-free: all intermediates live in `ws`; the `(batch × head)`
+/// pair loop fans out over the worker pool, one workspace slot per chunk.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention(
+    qkv: &[f32],
+    batch: usize,
+    t_len: usize,
+    d: usize,
+    heads: usize,
+    ws: &mut AttnWorkspace,
+    att: &mut [f32],
+    probs: Option<&mut [f32]>,
+) {
+    assert!(heads > 0 && d % heads == 0, "d {d} not divisible by heads {heads}");
+    let hd = d / heads;
+    assert_eq!(hd, ws.hd, "workspace head width mismatch");
+    assert!(t_len <= ws.seq, "workspace sized for seq {}, got {t_len}", ws.seq);
+    let rows = batch * t_len;
+    let w3 = 3 * d;
+    assert!(qkv.len() >= rows * w3, "qkv buffer too small");
+    assert!(att.len() >= rows * d, "att buffer too small");
+    let n_pairs = batch * heads;
+    if n_pairs == 0 || t_len == 0 {
+        return;
+    }
+    let scale = 1.0 / (hd as f32).sqrt();
+    let slots = ws.slots.min(n_pairs);
+
+    let probs_ptr = probs.map(|p| {
+        assert_eq!(p.len(), n_pairs * t_len * t_len, "probs buffer size");
+        SendPtr(p.as_mut_ptr())
+    });
+    let att_ptr = SendPtr(att.as_mut_ptr());
+    let (qp, kp, vp, op, sp) = (
+        SendPtr(ws.q.as_mut_ptr()),
+        SendPtr(ws.k.as_mut_ptr()),
+        SendPtr(ws.v.as_mut_ptr()),
+        SendPtr(ws.o.as_mut_ptr()),
+        SendPtr(ws.scores.as_mut_ptr()),
+    );
+    let panel = ws.seq * ws.hd;
+    let smat = ws.seq * ws.seq;
+
+    pool::parallel_for(slots, &|ci| {
+        // Safety: slot regions `[ci·panel, ci·panel + t_len·hd)` are
+        // disjoint across chunk indices (ci < slots), and `ws` is borrowed
+        // mutably for the whole dispatch, so nothing else touches them.
+        let (qh, kh, vh, oh, slot_sc) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(qp.0.add(ci * panel), t_len * hd),
+                std::slice::from_raw_parts_mut(kp.0.add(ci * panel), t_len * hd),
+                std::slice::from_raw_parts_mut(vp.0.add(ci * panel), t_len * hd),
+                std::slice::from_raw_parts_mut(op.0.add(ci * panel), t_len * hd),
+                std::slice::from_raw_parts_mut(sp.0.add(ci * smat), t_len * t_len),
+            )
+        };
+        for pair in (ci..n_pairs).step_by(slots) {
+            let b = pair / heads;
+            let head = pair % heads;
+            let base = b * t_len;
+            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+            for t1 in 0..t_len {
+                let row = (base + t1) * w3;
+                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
+                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
+                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
+            }
+            // Scores land directly in the retained probs matrix when the
+            // caller keeps them, in the slot scratch otherwise.
+            // Safety (Some): pair regions `[pair·t_len², (pair+1)·t_len²)`
+            // are disjoint across pairs, and each pair is processed exactly
+            // once (strided partition over ci).
+            let sc: &mut [f32] = match probs_ptr {
+                Some(p) => unsafe {
+                    std::slice::from_raw_parts_mut(p.0.add(pair * t_len * t_len), t_len * t_len)
+                },
+                None => &mut slot_sc[..],
+            };
+            kernels::matmul_nt_f32(qh, kh, t_len, hd, t_len, sc);
+            masked_softmax_rows(sc, t_len, scale);
+            kernels::matmul_f32(sc, vh, t_len, t_len, hd, oh);
+            for t1 in 0..t_len {
+                let dst = (base + t1) * d + head * hd;
+                // Safety: pair (b, head) owns columns [head·hd, (head+1)·hd)
+                // of rows [base, base + t_len) — disjoint across pairs.
+                let out = unsafe { std::slice::from_raw_parts_mut(att_ptr.0.add(dst), hd) };
+                out.copy_from_slice(&oh[t1 * hd..(t1 + 1) * hd]);
+            }
+        }
+    });
+}
+
+/// Backward through the causal attention: `datt` (rows, d) and the retained
+/// `probs` from [`causal_attention`] → `dqkv` (rows, 3d).  Same slot-strided
+/// pooled pair loop as the forward; allocation-free given `ws`.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_backward(
+    qkv: &[f32],
+    probs: &[f32],
+    datt: &[f32],
+    batch: usize,
+    t_len: usize,
+    d: usize,
+    heads: usize,
+    ws: &mut AttnGradWorkspace,
+    dqkv: &mut [f32],
+) {
+    assert!(heads > 0 && d % heads == 0, "d {d} not divisible by heads {heads}");
+    let hd = d / heads;
+    assert_eq!(hd, ws.hd, "grad workspace head width mismatch");
+    assert!(t_len <= ws.seq, "grad workspace sized for seq {}, got {t_len}", ws.seq);
+    let rows = batch * t_len;
+    let w3 = 3 * d;
+    let n_pairs = batch * heads;
+    assert!(qkv.len() >= rows * w3 && datt.len() >= rows * d && dqkv.len() >= rows * w3);
+    assert!(probs.len() >= n_pairs * t_len * t_len, "probs buffer too small");
+    if n_pairs == 0 || t_len == 0 {
+        return;
+    }
+    let scale = 1.0 / (hd as f32).sqrt();
+    let slots = ws.slots.min(n_pairs);
+
+    let dqkv_ptr = SendPtr(dqkv.as_mut_ptr());
+    let panels_ptr = SendPtr(ws.panels.as_mut_ptr());
+    let panel = ws.seq * ws.hd;
+    let slot_stride = 7 * panel + ws.seq * ws.seq;
+
+    pool::parallel_for(slots, &|ci| {
+        // Safety: slot `ci` owns panels `[ci·slot_stride, (ci+1)·slot_stride)`
+        // — disjoint across chunk indices; `ws` is mutably borrowed for the
+        // whole dispatch.
+        let slot = unsafe {
+            std::slice::from_raw_parts_mut(panels_ptr.0.add(ci * slot_stride), slot_stride)
+        };
+        let (qh, rest) = slot.split_at_mut(panel);
+        let (kh, rest) = rest.split_at_mut(panel);
+        let (vh, rest) = rest.split_at_mut(panel);
+        let (doh, rest) = rest.split_at_mut(panel);
+        let (dqh, rest) = rest.split_at_mut(panel);
+        let (dkh, rest) = rest.split_at_mut(panel);
+        let (dvh, ds) = rest.split_at_mut(panel);
+        let (qh, kh, vh) = (&mut qh[..t_len * hd], &mut kh[..t_len * hd], &mut vh[..t_len * hd]);
+        let (doh, dqh) = (&mut doh[..t_len * hd], &mut dqh[..t_len * hd]);
+        let (dkh, dvh) = (&mut dkh[..t_len * hd], &mut dvh[..t_len * hd]);
+        let ds = &mut ds[..t_len * t_len];
+        for pair in (ci..n_pairs).step_by(slots) {
+            let b = pair / heads;
+            let head = pair % heads;
+            let base = b * t_len;
+            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+            for t1 in 0..t_len {
+                let row = (base + t1) * w3;
+                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
+                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
+                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
+                let adst = (base + t1) * d + head * hd;
+                doh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&datt[adst..adst + hd]);
+            }
+            let p = &probs[pair * t_len * t_len..(pair + 1) * t_len * t_len];
+            // dV = Pᵀ·dO
+            for x in dvh.iter_mut() {
+                *x = 0.0;
+            }
+            kernels::matmul_tn_acc_f32(p, doh, t_len, t_len, hd, dvh);
+            // dP = dO·Vᵀ
+            kernels::matmul_nt_f32(doh, vh, t_len, hd, t_len, ds);
+            // dS = P ⊙ (dP − Σ_j dP⊙P) · scale  (strict upper triangle stays 0)
+            for t1 in 0..t_len {
+                let prow = &p[t1 * t_len..(t1 + 1) * t_len];
+                let dsrow = &mut ds[t1 * t_len..(t1 + 1) * t_len];
+                let mut dot = 0f32;
+                for j in 0..=t1 {
+                    dot += dsrow[j] * prow[j];
+                }
+                for j in 0..t_len {
+                    dsrow[j] = if j <= t1 { prow[j] * (dsrow[j] - dot) * scale } else { 0.0 };
+                }
+            }
+            // dQ = dS·K ; dK = dSᵀ·Q
+            kernels::matmul_f32(ds, kh, t_len, t_len, hd, dqh);
+            for x in dkh.iter_mut() {
+                *x = 0.0;
+            }
+            kernels::matmul_tn_acc_f32(ds, qh, t_len, t_len, hd, dkh);
+            for t1 in 0..t_len {
+                let row = (base + t1) * w3;
+                // Safety: pair (b, head) owns the q/k/v column ranges of its
+                // head within rows [base, base + t_len) — disjoint across
+                // pairs (every pair is processed exactly once).
+                let (dq, dk, dv) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(dqkv_ptr.0.add(row + qo), hd),
+                        std::slice::from_raw_parts_mut(dqkv_ptr.0.add(row + ko), hd),
+                        std::slice::from_raw_parts_mut(dqkv_ptr.0.add(row + vo), hd),
+                    )
+                };
+                dq.copy_from_slice(&dqh[t1 * hd..(t1 + 1) * hd]);
+                dk.copy_from_slice(&dkh[t1 * hd..(t1 + 1) * hd]);
+                dv.copy_from_slice(&dvh[t1 * hd..(t1 + 1) * hd]);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Plain scalar causal softmax-attention recurrence — the oracle the
+    /// blocked formulation must reproduce (f32 tolerance: the kernels
+    /// re-associate the dot/axpy sums).
+    fn scalar_reference(qkv: &[f32], batch: usize, t_len: usize, d: usize, heads: usize) -> Vec<f32> {
+        let hd = d / heads;
+        let w3 = 3 * d;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut att = vec![0f32; batch * t_len * d];
+        for b in 0..batch {
+            let base = b * t_len;
+            for head in 0..heads {
+                let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+                for t1 in 0..t_len {
+                    let q = &qkv[(base + t1) * w3 + qo..(base + t1) * w3 + qo + hd];
+                    let mut sc = vec![0f32; t1 + 1];
+                    let mut mx = f32::NEG_INFINITY;
+                    for t2 in 0..=t1 {
+                        let k = &qkv[(base + t2) * w3 + ko..(base + t2) * w3 + ko + hd];
+                        sc[t2] = q.iter().zip(k).map(|(a, b)| a * b).sum::<f32>() * scale;
+                        mx = mx.max(sc[t2]);
+                    }
+                    let mut sum = 0f32;
+                    for v in sc.iter_mut() {
+                        *v = (*v - mx).exp();
+                        sum += *v;
+                    }
+                    for j in 0..hd {
+                        let mut o = 0f32;
+                        for (t2, w) in sc.iter().enumerate() {
+                            o += w / sum * qkv[(base + t2) * w3 + vo + j];
+                        }
+                        att[(base + t1) * d + head * hd + j] = o;
+                    }
+                }
+            }
+        }
+        att
+    }
+
+    #[test]
+    fn property_blocked_attention_matches_scalar_reference() {
+        // Randomized (batch, heads, head width, seq, slot count): the pooled
+        // head-parallel path and the probs-retaining path must both agree
+        // with the scalar recurrence, and retained probs rows must be causal
+        // distributions.
+        crate::prop::forall(
+            610,
+            40,
+            |rng| {
+                let batch = 1 + rng.below(3);
+                let heads = 1 + rng.below(4);
+                let hd = 1 + rng.below(6);
+                let t_len = 1 + rng.below(12);
+                let slots = 1 + rng.below(8);
+                let d = heads * hd;
+                let qkv: Vec<f32> =
+                    (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+                (batch, heads, t_len, slots, qkv)
+            },
+            |(batch, heads, t_len, slots, qkv)| {
+                let (batch, heads, t_len) = (*batch, *heads, *t_len);
+                let d = qkv.len() / (batch * t_len * 3);
+                let hd = d / heads;
+                let want = scalar_reference(qkv, batch, t_len, d, heads);
+
+                let mut ws = AttnWorkspace::new(t_len, hd, *slots);
+                let mut att = vec![0f32; batch * t_len * d];
+                causal_attention(qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
+                for (i, (g, w)) in att.iter().zip(&want).enumerate() {
+                    if (g - w).abs() > 1e-4 {
+                        return Err(format!("discard-probs att[{i}]: {g} vs {w}"));
+                    }
+                }
+
+                let mut probs = vec![0f32; batch * heads * t_len * t_len];
+                let mut att2 = vec![0f32; batch * t_len * d];
+                causal_attention(qkv, batch, t_len, d, heads, &mut ws, &mut att2, Some(&mut probs));
+                if att != att2 {
+                    return Err("probs-retaining path changed the output".into());
+                }
+                for (pair, mat) in probs.chunks_exact(t_len * t_len).enumerate() {
+                    for t1 in 0..t_len {
+                        let row = &mat[t1 * t_len..(t1 + 1) * t_len];
+                        let s: f32 = row[..=t1].iter().sum();
+                        if (s - 1.0).abs() > 1e-4 {
+                            return Err(format!("pair {pair} row {t1} sums to {s}"));
+                        }
+                        if row[t1 + 1..].iter().any(|&x| x != 0.0) {
+                            return Err(format!("pair {pair} row {t1} leaks future keys"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn backward_matches_finite_difference_through_forward() {
+        // Central-difference check of dL/dqkv for L = Σ c·att through the
+        // shared forward/backward pair, across several slot counts.
+        let (batch, heads, hd, t_len) = (2usize, 3usize, 4usize, 5usize);
+        let d = heads * hd;
+        let mut rng = Rng::new(611);
+        let mut qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+        let coef: Vec<f32> = (0..batch * t_len * d).map(|_| rng.normal() as f32).collect();
+
+        let loss = |qkv: &[f32], ws: &mut AttnWorkspace| -> f32 {
+            let mut att = vec![0f32; batch * t_len * d];
+            causal_attention(qkv, batch, t_len, d, heads, ws, &mut att, None);
+            att.iter().zip(&coef).map(|(a, c)| a * c).sum()
+        };
+
+        for slots in [1usize, 3, 8] {
+            let mut ws = AttnWorkspace::new(t_len, hd, slots);
+            let mut gws = AttnGradWorkspace::new(t_len, hd, slots);
+            let mut att = vec![0f32; batch * t_len * d];
+            let mut probs = vec![0f32; batch * heads * t_len * t_len];
+            causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, Some(&mut probs));
+            let mut dqkv = vec![0f32; batch * t_len * 3 * d];
+            causal_attention_backward(
+                &qkv, &probs, &coef, batch, t_len, d, heads, &mut gws, &mut dqkv,
+            );
+
+            let eps = 1e-2f32;
+            for idx in [0usize, 7, 3 * d - 1, batch * t_len * 3 * d - 5] {
+                let orig = qkv[idx];
+                qkv[idx] = orig + eps;
+                let lp = loss(&qkv, &mut ws);
+                qkv[idx] = orig - eps;
+                let lm = loss(&qkv, &mut ws);
+                qkv[idx] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - dqkv[idx]).abs() < 2e-2 + 0.05 * dqkv[idx].abs(),
+                    "slots {slots} dqkv[{idx}]: numeric {num} vs analytic {}",
+                    dqkv[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_never_reallocates_across_calls() {
+        let (batch, heads, hd, t_len) = (2usize, 4usize, 8usize, 16usize);
+        let d = heads * hd;
+        let mut rng = Rng::new(612);
+        let qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+        let mut ws = AttnWorkspace::new(t_len, hd, AttnWorkspace::auto_slots(batch * heads));
+        let mut att = vec![0f32; batch * t_len * d];
+        causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
+        let fp = ws.fingerprint();
+        for _ in 0..4 {
+            causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
+        }
+        assert_eq!(ws.fingerprint(), fp, "attention workspace must not reallocate");
+    }
+}

@@ -1,0 +1,31 @@
+//! The serving backend seam: one trait between the elastic coordinator and
+//! whatever executes a tier's forward pass.
+//!
+//! [`crate::coordinator::serve_trace`], the serving bench, and the
+//! `repro serve` CLI all dispatch through [`ServingBackend`], so adding a
+//! backend (native kernels today, the PJRT registry behind the `pjrt`
+//! feature, a GPU runtime later) means implementing one trait — the
+//! routing/batching/metrics stack above it is backend-agnostic.
+
+use anyhow::Result;
+
+/// A loaded set of serving tiers that can execute batches.
+///
+/// Tiers are indexed `0..n_tiers()` in ascending budget order; `infer` runs
+/// one padded `(batch() × seq_len())` token batch on a tier and returns the
+/// logits `(batch·seq_len, vocab)`, valid until the next `infer` call
+/// (backends reuse one scratch/output buffer across requests).
+pub trait ServingBackend {
+    fn n_tiers(&self) -> usize;
+    /// Fixed serving batch size (requests per `infer` call).
+    fn batch(&self) -> usize;
+    /// Token window length of every request.
+    fn seq_len(&self) -> usize;
+    /// Budget fraction in (0, 1] of a tier.
+    fn tier_budget(&self, tier: usize) -> f64;
+    /// Inference parameter count of a tier's submodel.
+    fn tier_params(&self, tier: usize) -> usize;
+    /// Execute one batch (row-major `(batch, seq_len)` tokens, padded to the
+    /// fixed serving batch) on a tier.
+    fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]>;
+}

@@ -77,7 +77,7 @@ pub struct ModelConfig {
 
 impl ModelConfig {
     pub fn from_json(v: &Value) -> Result<Self> {
-        Ok(ModelConfig {
+        let cfg = ModelConfig {
             name: v.req("name")?.as_str()?.to_string(),
             vocab: v.req("vocab")?.as_usize()?,
             d_model: v.req("d_model")?.as_usize()?,
@@ -99,7 +99,29 @@ impl ModelConfig {
             bench_dim: v.req("bench_dim")?.as_usize()?,
             bench_batch: v.req("bench_batch")?.as_usize()?,
             lora_rank: v.req("lora_rank")?.as_usize()?,
-        })
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural invariants every forward path assumes, checked once at
+    /// load time so a bad config fails at parse, not at first forward
+    /// (this check used to be duplicated at both the serving and training
+    /// forward entry points).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.vocab > 0 && self.d_model > 0 && self.n_blocks > 0 && self.seq_len > 0,
+            "config '{}': vocab/d_model/n_blocks/seq_len must all be positive",
+            self.name
+        );
+        anyhow::ensure!(
+            self.n_heads > 0 && self.d_model % self.n_heads == 0,
+            "config '{}': d_model {} not divisible by n_heads {}",
+            self.name,
+            self.d_model,
+            self.n_heads
+        );
+        Ok(())
     }
 
     /// The four factorization surfaces per block: (kind, n_in, m_out).

@@ -1,5 +1,10 @@
 //! Runtime — execution backends for the serving/training stack.
 //!
+//! * [`attention`] — the single blocked causal attention implementation,
+//!   shared by the serving and training forwards (probs retained or
+//!   discarded), head-parallel over the worker pool.
+//! * [`backend`] — the [`ServingBackend`] trait the coordinator, serving
+//!   bench, and CLI dispatch through.
 //! * [`native`] (default) — the pure-rust backend: GAR submodel forwards
 //!   through `linalg::kernels` with a preallocated scratch arena.  This is
 //!   what the coordinator, benches, and tests run on an offline machine.
@@ -9,12 +14,15 @@
 //!   never round-trip weights through host memory (see DESIGN.md §Perf).
 //!   Enabling `pjrt` requires the `xla` crate (see rust/Cargo.toml).
 
+pub mod attention;
+pub mod backend;
 #[cfg(feature = "pjrt")]
 mod engine;
 pub mod manifest;
 pub mod native;
 mod tensor;
 
+pub use backend::ServingBackend;
 #[cfg(feature = "pjrt")]
 pub use engine::{DeviceTensor, Engine, Executable};
 pub use manifest::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};

@@ -15,18 +15,18 @@
 //! worker pool (`linalg::pool`), so no threads are spawned on the path
 //! either.
 //!
-//! **Attention layout:** the causal multi-head attention is blocked, not
-//! scalar — per (sequence, head) pair the strided Q/K/V columns of the
-//! packed qkv activation are gathered into contiguous `(seq × hd)` panels
-//! in `Scratch`, scores `S = Q·Kᵀ` come from `matmul_nt_f32`, the causal
-//! softmax runs row-wise in place (masked upper triangle zeroed), and the
-//! weighted values `O = S·V` come from `matmul_f32` before being scattered
-//! back into the `(rows × d)` activation buffer.
+//! **Attention:** the causal multi-head attention is the shared blocked
+//! implementation in [`crate::runtime::attention`] (panels gathered into an
+//! [`AttnWorkspace`] held by `Scratch`, pooled `Q·Kᵀ`/`S·V`, in-place
+//! masked row softmax, head-parallel over the worker pool) with softmax
+//! probs discarded — the training forward calls the same kernel with probs
+//! retained for its backward pass.
 
 use anyhow::{ensure, Context, Result};
 
 use crate::flexrank::gar::gar_solve;
 use crate::linalg::kernels;
+use crate::runtime::attention::{causal_attention, AttnWorkspace};
 use crate::runtime::manifest::ModelConfig;
 use crate::training::params::{ParamSet, LAYER_KINDS};
 
@@ -109,23 +109,20 @@ pub struct GarSubmodel {
 #[derive(Debug)]
 pub struct Scratch {
     pub max_rows: usize,
-    x: Vec<f32>,      // (rows, d)   residual stream
-    a: Vec<f32>,      // (rows, d)   LN output / layer output staging
-    t: Vec<f32>,      // (rows, r≤d) factor intermediate
-    qkv: Vec<f32>,    // (rows, 3d)
-    att: Vec<f32>,    // (rows, d)   merged attention heads
-    ff: Vec<f32>,     // (rows, 4d)
-    q_head: Vec<f32>, // (seq, hd)   packed Q panel for one (seq, head) pair
-    k_head: Vec<f32>, // (seq, hd)   packed K panel
-    v_head: Vec<f32>, // (seq, hd)   packed V panel
-    o_head: Vec<f32>, // (seq, hd)   blocked S·V output panel
-    scores: Vec<f32>, // (seq, seq)  QKᵀ scores / causal softmax weights
-    logits: Vec<f32>, // (rows, vocab)
+    x: Vec<f32>,        // (rows, d)   residual stream
+    a: Vec<f32>,        // (rows, d)   LN output / layer output staging
+    t: Vec<f32>,        // (rows, r≤d) factor intermediate
+    qkv: Vec<f32>,      // (rows, 3d)
+    att: Vec<f32>,      // (rows, d)   merged attention heads
+    ff: Vec<f32>,       // (rows, 4d)
+    attn: AttnWorkspace, // shared blocked-attention panels (per pool slot)
+    logits: Vec<f32>,   // (rows, vocab)
 }
 
 impl Scratch {
     pub fn new(max_rows: usize, d: usize, heads: usize, seq: usize, vocab: usize) -> Scratch {
         let hd = d / heads.max(1);
+        let max_batch = if seq > 0 { (max_rows / seq).max(1) } else { 1 };
         Scratch {
             max_rows,
             x: vec![0.0; max_rows * d],
@@ -134,11 +131,7 @@ impl Scratch {
             qkv: vec![0.0; max_rows * 3 * d],
             att: vec![0.0; max_rows * d],
             ff: vec![0.0; max_rows * 4 * d],
-            q_head: vec![0.0; seq * hd],
-            k_head: vec![0.0; seq * hd],
-            v_head: vec![0.0; seq * hd],
-            o_head: vec![0.0; seq * hd],
-            scores: vec![0.0; seq * seq],
+            attn: AttnWorkspace::new(seq, hd, AttnWorkspace::auto_slots(max_batch * heads.max(1))),
             logits: vec![0.0; max_rows * vocab],
         }
     }
@@ -151,20 +144,17 @@ impl Scratch {
     /// Buffer base pointers — lets tests assert that repeated forwards
     /// never reallocate (the zero-per-request-allocation invariant).
     pub fn fingerprint(&self) -> Vec<usize> {
-        vec![
+        let mut fp = vec![
             self.x.as_ptr() as usize,
             self.a.as_ptr() as usize,
             self.t.as_ptr() as usize,
             self.qkv.as_ptr() as usize,
             self.att.as_ptr() as usize,
             self.ff.as_ptr() as usize,
-            self.q_head.as_ptr() as usize,
-            self.k_head.as_ptr() as usize,
-            self.v_head.as_ptr() as usize,
-            self.o_head.as_ptr() as usize,
-            self.scores.as_ptr() as usize,
             self.logits.as_ptr() as usize,
-        ]
+        ];
+        fp.extend(self.attn.fingerprint());
+        fp
     }
 }
 
@@ -204,12 +194,8 @@ impl GarSubmodel {
             profile.len(),
             cfg.n_fact_layers()
         );
-        ensure!(
-            cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
-            "d_model {} not divisible by n_heads {}",
-            cfg.d_model,
-            cfg.n_heads
-        );
+        // d_model/n_heads divisibility is validated once at ModelConfig
+        // load time (a bad config fails at parse, not first forward).
         let vec1 = |name: &str| -> Result<Vec<f32>> { Ok(student.get(name)?.as_f32()?.to_vec()) };
 
         let dims = cfg.layer_dims();
@@ -318,15 +304,15 @@ impl GarSubmodel {
             // Attention half: x += proj(attn(qkv(ln1(x)))).
             layer_norm(&s.x, rows, d, &blk.ln1_g, &blk.ln1_b, &mut s.a);
             blk.qkv.forward_into(&s.a, rows, &mut s.t, &mut s.qkv, 3 * d, 0);
-            self.attention(
-                batch,
+            causal_attention(
                 &s.qkv,
-                &mut s.q_head,
-                &mut s.k_head,
-                &mut s.v_head,
-                &mut s.scores,
-                &mut s.o_head,
-                &mut s.att,
+                batch,
+                t_len,
+                d,
+                self.heads,
+                &mut s.attn,
+                &mut s.att[..rows * d],
+                None,
             );
             blk.proj.forward_into(&s.att, rows, &mut s.t, &mut s.a, d, 0);
             add_assign(&mut s.x[..rows * d], &s.a[..rows * d]);
@@ -352,80 +338,6 @@ impl GarSubmodel {
         Ok(())
     }
 
-    /// Causal multi-head attention over the packed qkv buffer
-    /// (`(rows, 3d)`: q | k | v, heads interleaved within each third).
-    ///
-    /// Blocked formulation: per (sequence, head) pair the strided head
-    /// columns are gathered into contiguous `(t_len × hd)` panels, scores
-    /// come from one `Q·Kᵀ` kernel call, the causal softmax runs row-wise
-    /// in place (masked upper triangle zeroed so it never contributes),
-    /// and the output panel comes from one `S·V` kernel call — replacing
-    /// the O(t²·hd) scalar dot/axpy loops with the pooled matmuls.
-    #[allow(clippy::too_many_arguments)]
-    fn attention(
-        &self,
-        batch: usize,
-        qkv: &[f32],
-        q_head: &mut [f32],
-        k_head: &mut [f32],
-        v_head: &mut [f32],
-        scores: &mut [f32],
-        o_head: &mut [f32],
-        att: &mut [f32],
-    ) {
-        let t_len = self.seq;
-        let d = self.d;
-        let hd = d / self.heads;
-        let w3 = 3 * d;
-        let scale = 1.0 / (hd as f32).sqrt();
-        let qh = &mut q_head[..t_len * hd];
-        let kh = &mut k_head[..t_len * hd];
-        let vh = &mut v_head[..t_len * hd];
-        let oh = &mut o_head[..t_len * hd];
-        let sc = &mut scores[..t_len * t_len];
-        for b in 0..batch {
-            let base = b * t_len;
-            for head in 0..self.heads {
-                let qo = head * hd;
-                let ko = d + head * hd;
-                let vo = 2 * d + head * hd;
-                for t1 in 0..t_len {
-                    let row = (base + t1) * w3;
-                    qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
-                    kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
-                    vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
-                }
-                kernels::matmul_nt_f32(qh, kh, t_len, hd, t_len, sc);
-                for t1 in 0..t_len {
-                    let srow = &mut sc[t1 * t_len..t1 * t_len + t1 + 1];
-                    let mut mx = f32::NEG_INFINITY;
-                    for s in srow.iter_mut() {
-                        *s *= scale;
-                        if *s > mx {
-                            mx = *s;
-                        }
-                    }
-                    let mut sum = 0.0f32;
-                    for s in srow.iter_mut() {
-                        *s = (*s - mx).exp();
-                        sum += *s;
-                    }
-                    let inv = 1.0 / sum;
-                    for s in srow.iter_mut() {
-                        *s *= inv;
-                    }
-                    for s in sc[t1 * t_len + t1 + 1..(t1 + 1) * t_len].iter_mut() {
-                        *s = 0.0;
-                    }
-                }
-                kernels::matmul_f32(sc, vh, t_len, t_len, hd, oh);
-                for t1 in 0..t_len {
-                    let dst = (base + t1) * d + head * hd;
-                    att[dst..dst + hd].copy_from_slice(&oh[t1 * hd..(t1 + 1) * hd]);
-                }
-            }
-        }
-    }
 }
 
 /// Uniform rank for a budget fraction: `round(budget · rank_full)`,
@@ -482,76 +394,9 @@ mod tests {
         }
     }
 
-    #[test]
-    fn blocked_attention_matches_scalar_reference() {
-        // The blocked QKᵀ/AV formulation must agree with the plain causal
-        // softmax-attention recurrence it replaced (f32 tolerance: the
-        // kernels re-associate the dot/axpy sums).
-        let (d, heads, seq, batch) = (12usize, 3usize, 7usize, 2usize);
-        let hd = d / heads;
-        let sub = GarSubmodel {
-            profile: vec![],
-            n_params: 0,
-            d,
-            heads,
-            seq,
-            vocab: 1,
-            tok_emb: vec![0.0; d],
-            pos_emb: vec![0.0; seq * d],
-            lnf_g: vec![1.0; d],
-            lnf_b: vec![0.0; d],
-            blocks: Vec::new(),
-        };
-        let mut rng = Rng::new(510);
-        let rows = batch * seq;
-        let w3 = 3 * d;
-        let qkv: Vec<f32> = (0..rows * w3).map(|_| rng.normal() as f32).collect();
-        let mut s = Scratch::new(rows, d, heads, seq, 1);
-        let mut att = vec![0f32; rows * d];
-        sub.attention(
-            batch,
-            &qkv,
-            &mut s.q_head,
-            &mut s.k_head,
-            &mut s.v_head,
-            &mut s.scores,
-            &mut s.o_head,
-            &mut att,
-        );
-        let scale = 1.0 / (hd as f32).sqrt();
-        for b in 0..batch {
-            let base = b * seq;
-            for head in 0..heads {
-                let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
-                for t1 in 0..seq {
-                    let q = &qkv[(base + t1) * w3 + qo..(base + t1) * w3 + qo + hd];
-                    let mut sc = vec![0f32; t1 + 1];
-                    let mut mx = f32::NEG_INFINITY;
-                    for t2 in 0..=t1 {
-                        let k = &qkv[(base + t2) * w3 + ko..(base + t2) * w3 + ko + hd];
-                        sc[t2] = q.iter().zip(k).map(|(a, b)| a * b).sum::<f32>() * scale;
-                        mx = mx.max(sc[t2]);
-                    }
-                    let mut sum = 0f32;
-                    for v in sc.iter_mut() {
-                        *v = (*v - mx).exp();
-                        sum += *v;
-                    }
-                    for j in 0..hd {
-                        let mut want = 0f32;
-                        for (t2, w) in sc.iter().enumerate() {
-                            want += w / sum * qkv[(base + t2) * w3 + vo + j];
-                        }
-                        let got = att[(base + t1) * d + head * hd + j];
-                        assert!(
-                            (got - want).abs() < 1e-4,
-                            "b{b} h{head} t{t1} j{j}: {got} vs {want}"
-                        );
-                    }
-                }
-            }
-        }
-    }
+    // The blocked-attention ≡ scalar-reference pin lives with the single
+    // shared implementation now: see the property test in
+    // `crate::runtime::attention` (randomized batch/heads/seq/slots).
 
     #[test]
     fn native_forward_finite_and_allocation_free() {

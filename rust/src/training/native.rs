@@ -29,8 +29,11 @@ use crate::data::TokenBatcher;
 use crate::flexrank::decompose::CovAccum;
 use crate::flexrank::masks::RankProfile;
 use crate::flexrank::sensitivity::ProbeModel;
-use crate::linalg::{kernels, Mat};
+use crate::linalg::{kernels, pool, Mat};
 use crate::rng::Rng;
+use crate::runtime::attention::{
+    causal_attention, causal_attention_backward, AttnGradWorkspace, AttnWorkspace,
+};
 use crate::runtime::{ModelConfig, Tensor};
 
 use super::params::{fact_layers, ParamSet};
@@ -264,73 +267,77 @@ fn lin_backward(
 }
 
 // ---------------------------------------------------------------------------
-// Causal multi-head attention (forward caches softmax probs for backward)
+// Persistent training workspace + attention (shared blocked implementation)
 // ---------------------------------------------------------------------------
 
-/// Returns `(att, probs)`: merged heads (rows, d) and the causal softmax
-/// weights, one (t_len, t_len) matrix per (batch, head) pair.
+/// Persistent per-trainer workspace: the shared blocked-attention panel
+/// sets for forward and backward ([`crate::runtime::attention`]), sized
+/// once from the config and reused across layers and steps — the previous
+/// `attention_forward` heap-allocated its panel buffers per layer per
+/// step, which throttled the native KD loop.
+#[derive(Debug)]
+pub struct Workspace {
+    seq: usize,
+    hd: usize,
+    slots: usize,
+    attn: AttnWorkspace,
+    /// Backward panels, sized lazily on the first backward pass — the
+    /// forward-only users (probe, eval, calibration) never pay for them.
+    grad: Option<AttnGradWorkspace>,
+}
+
+impl Workspace {
+    pub fn new(cfg: &ModelConfig) -> Workspace {
+        let hd = cfg.d_model / cfg.n_heads.max(1);
+        // Enough slots to saturate the pool at any batch size ≥ 1.
+        let slots = pool::size();
+        Workspace {
+            seq: cfg.seq_len,
+            hd,
+            slots,
+            attn: AttnWorkspace::new(cfg.seq_len, hd, slots),
+            grad: None,
+        }
+    }
+
+    fn grad_ws(&mut self) -> &mut AttnGradWorkspace {
+        if self.grad.is_none() {
+            self.grad = Some(AttnGradWorkspace::new(self.seq, self.hd, self.slots));
+        }
+        self.grad.as_mut().unwrap()
+    }
+
+    /// Buffer base pointers — tests pin that repeated training steps never
+    /// reallocate the workspace (call after a warm-up step so the lazy
+    /// backward panels exist).
+    pub fn fingerprint(&self) -> Vec<usize> {
+        let mut fp = self.attn.fingerprint();
+        if let Some(g) = &self.grad {
+            fp.extend(g.fingerprint());
+        }
+        fp
+    }
+}
+
+/// Returns `(att, probs)`: merged heads (rows, d) and the retained causal
+/// softmax weights, one (t_len, t_len) matrix per (batch, head) pair —
+/// the shared blocked attention with probs kept for [`attention_backward`].
 fn attention_forward(
     qkv: &[f32],
     batch: usize,
     t_len: usize,
     d: usize,
     heads: usize,
+    ws: &mut Workspace,
 ) -> (Vec<f32>, Vec<f32>) {
-    let hd = d / heads;
-    let w3 = 3 * d;
-    let scale = 1.0 / (hd as f32).sqrt();
     let mut att = vec![0f32; batch * t_len * d];
     let mut probs = vec![0f32; batch * heads * t_len * t_len];
-    let mut qh = vec![0f32; t_len * hd];
-    let mut kh = vec![0f32; t_len * hd];
-    let mut vh = vec![0f32; t_len * hd];
-    let mut oh = vec![0f32; t_len * hd];
-    for b in 0..batch {
-        let base = b * t_len;
-        for head in 0..heads {
-            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
-            for t1 in 0..t_len {
-                let row = (base + t1) * w3;
-                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
-                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
-                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
-            }
-            let sc = &mut probs[(b * heads + head) * t_len * t_len
-                ..(b * heads + head + 1) * t_len * t_len];
-            kernels::matmul_nt_f32(&qh, &kh, t_len, hd, t_len, sc);
-            for t1 in 0..t_len {
-                let srow = &mut sc[t1 * t_len..t1 * t_len + t1 + 1];
-                let mut mx = f32::NEG_INFINITY;
-                for s in srow.iter_mut() {
-                    *s *= scale;
-                    if *s > mx {
-                        mx = *s;
-                    }
-                }
-                let mut sum = 0f32;
-                for s in srow.iter_mut() {
-                    *s = (*s - mx).exp();
-                    sum += *s;
-                }
-                let inv = 1.0 / sum;
-                for s in srow.iter_mut() {
-                    *s *= inv;
-                }
-                for s in sc[t1 * t_len + t1 + 1..(t1 + 1) * t_len].iter_mut() {
-                    *s = 0.0;
-                }
-            }
-            kernels::matmul_f32(sc, &vh, t_len, t_len, hd, &mut oh);
-            for t1 in 0..t_len {
-                let dst = (base + t1) * d + head * hd;
-                att[dst..dst + hd].copy_from_slice(&oh[t1 * hd..(t1 + 1) * hd]);
-            }
-        }
-    }
+    causal_attention(qkv, batch, t_len, d, heads, &mut ws.attn, &mut att, Some(&mut probs));
     (att, probs)
 }
 
 /// Backward through the attention: `datt` (rows, d) → `dqkv` (rows, 3d).
+#[allow(clippy::too_many_arguments)]
 fn attention_backward(
     qkv: &[f32],
     probs: &[f32],
@@ -339,66 +346,10 @@ fn attention_backward(
     t_len: usize,
     d: usize,
     heads: usize,
+    ws: &mut Workspace,
 ) -> Vec<f32> {
-    let hd = d / heads;
-    let w3 = 3 * d;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut dqkv = vec![0f32; batch * t_len * w3];
-    let mut qh = vec![0f32; t_len * hd];
-    let mut kh = vec![0f32; t_len * hd];
-    let mut vh = vec![0f32; t_len * hd];
-    let mut doh = vec![0f32; t_len * hd];
-    let mut dqh = vec![0f32; t_len * hd];
-    let mut dkh = vec![0f32; t_len * hd];
-    let mut dvh = vec![0f32; t_len * hd];
-    let mut ds = vec![0f32; t_len * t_len];
-    for b in 0..batch {
-        let base = b * t_len;
-        for head in 0..heads {
-            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
-            for t1 in 0..t_len {
-                let row = (base + t1) * w3;
-                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
-                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
-                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
-                let adst = (base + t1) * d + head * hd;
-                doh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&datt[adst..adst + hd]);
-            }
-            let p = &probs[(b * heads + head) * t_len * t_len
-                ..(b * heads + head + 1) * t_len * t_len];
-            // dV = Pᵀ·dO
-            for x in dvh.iter_mut() {
-                *x = 0.0;
-            }
-            kernels::matmul_tn_acc_f32(p, &doh, t_len, t_len, hd, &mut dvh);
-            // dP = dO·Vᵀ
-            kernels::matmul_nt_f32(&doh, &vh, t_len, hd, t_len, &mut ds);
-            // dS = P ⊙ (dP − Σ_j dP⊙P) · scale  (upper triangle stays 0)
-            for t1 in 0..t_len {
-                let prow = &p[t1 * t_len..(t1 + 1) * t_len];
-                let dsrow = &mut ds[t1 * t_len..(t1 + 1) * t_len];
-                let mut dot = 0f32;
-                for j in 0..=t1 {
-                    dot += dsrow[j] * prow[j];
-                }
-                for j in 0..t_len {
-                    dsrow[j] = if j <= t1 { prow[j] * (dsrow[j] - dot) * scale } else { 0.0 };
-                }
-            }
-            // dQ = dS·K ; dK = dSᵀ·Q
-            kernels::matmul_f32(&ds, &kh, t_len, t_len, hd, &mut dqh);
-            for x in dkh.iter_mut() {
-                *x = 0.0;
-            }
-            kernels::matmul_tn_acc_f32(&ds, &qh, t_len, t_len, hd, &mut dkh);
-            for t1 in 0..t_len {
-                let row = (base + t1) * w3;
-                dqkv[row + qo..row + qo + hd].copy_from_slice(&dqh[t1 * hd..(t1 + 1) * hd]);
-                dqkv[row + ko..row + ko + hd].copy_from_slice(&dkh[t1 * hd..(t1 + 1) * hd]);
-                dqkv[row + vo..row + vo + hd].copy_from_slice(&dvh[t1 * hd..(t1 + 1) * hd]);
-            }
-        }
-    }
+    let mut dqkv = vec![0f32; batch * t_len * 3 * d];
+    causal_attention_backward(qkv, probs, datt, batch, t_len, d, heads, ws.grad_ws(), &mut dqkv);
     dqkv
 }
 
@@ -437,12 +388,27 @@ pub struct Cache {
 /// Run the model forward.  `profile = None` → dense teacher (`{kind}_w`),
 /// `profile = Some(ranks)` → masked factorized student (`{kind}_u/_v`).
 /// `tokens` is `batch` sequences of `tokens.len()/batch` ids (≤ seq_len).
+///
+/// Convenience wrapper that sizes a one-shot [`Workspace`]; step loops
+/// (pretrain/consolidate/probe) use [`forward_ws`] with a persistent one.
 pub fn forward(
     cfg: &ModelConfig,
     params: &ParamSet,
     profile: Option<&RankProfile>,
     tokens: &[i32],
     batch: usize,
+) -> Result<Cache> {
+    forward_ws(cfg, params, profile, tokens, batch, &mut Workspace::new(cfg))
+}
+
+/// [`forward`] over a caller-supplied persistent workspace.
+pub fn forward_ws(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    profile: Option<&RankProfile>,
+    tokens: &[i32],
+    batch: usize,
+    ws: &mut Workspace,
 ) -> Result<Cache> {
     ensure!(batch > 0 && !tokens.is_empty(), "empty forward batch");
     ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
@@ -452,12 +418,7 @@ pub fn forward(
         "sequence length {t_len} exceeds model seq_len {}",
         cfg.seq_len
     );
-    ensure!(
-        cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
-        "d_model {} not divisible by n_heads {}",
-        cfg.d_model,
-        cfg.n_heads
-    );
+    // d_model/n_heads divisibility is validated at ModelConfig load time.
     if let Some(p) = profile {
         ensure!(
             p.len() == cfg.n_fact_layers(),
@@ -510,7 +471,7 @@ pub fn forward(
             n_qkv,
             m_qkv,
         )?;
-        let (att, probs) = attention_forward(&qkv, batch, t_len, d, cfg.n_heads);
+        let (att, probs) = attention_forward(&qkv, batch, t_len, d, cfg.n_heads, ws);
         let (_, n_proj, m_proj) = dims[1];
         let (o, t_proj) = lin_forward(
             params,
@@ -588,12 +549,26 @@ pub fn forward(
 
 /// Backward from `dlogits` (batch·t_len, vocab); returns parameter grads
 /// keyed exactly like `params` (missing gradients are zero tensors).
+///
+/// Convenience wrapper; step loops use [`backward_ws`].
 pub fn backward(
     cfg: &ModelConfig,
     params: &ParamSet,
     profile: Option<&RankProfile>,
     cache: &Cache,
     dlogits: &[f32],
+) -> Result<ParamSet> {
+    backward_ws(cfg, params, profile, cache, dlogits, &mut Workspace::new(cfg))
+}
+
+/// [`backward`] over a caller-supplied persistent workspace.
+pub fn backward_ws(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    profile: Option<&RankProfile>,
+    cache: &Cache,
+    dlogits: &[f32],
+    ws: &mut Workspace,
 ) -> Result<ParamSet> {
     let d = cfg.d_model;
     let rows = cache.batch * cache.t_len;
@@ -682,8 +657,9 @@ pub fn backward(
             n_proj,
             m_proj,
         )?;
-        let dqkv =
-            attention_backward(&blk.qkv, &blk.probs, &datt, cache.batch, cache.t_len, d, cfg.n_heads);
+        let dqkv = attention_backward(
+            &blk.qkv, &blk.probs, &datt, cache.batch, cache.t_len, d, cfg.n_heads, ws,
+        );
         let (_, n_qkv, m_qkv) = dims[0];
         let da1 = lin_backward(
             params,
@@ -905,13 +881,14 @@ pub fn pretrain_teacher(
 ) -> Result<TrainRun> {
     let mut p = init;
     let mut opt = AdamW::new(cfg, &p);
+    let mut ws = Workspace::new(cfg);
     let mut losses = Vec::with_capacity(steps);
     for step in 0..steps {
         let window = batcher.next_batch();
         let (x, y) = split_windows(&window, cfg.seq_len);
-        let cache = forward(cfg, &p, None, &x, batcher.batch)?;
+        let cache = forward_ws(cfg, &p, None, &x, batcher.batch, &mut ws)?;
         let (loss, dlogits) = ce_loss_grad(&cache.logits, &y, cfg.vocab);
-        let grads = backward(cfg, &p, None, &cache, &dlogits)?;
+        let grads = backward_ws(cfg, &p, None, &cache, &dlogits, &mut ws)?;
         opt.step(&mut p, &grads)?;
         losses.push(loss);
         if log_every > 0 && step % log_every == 0 {
@@ -936,6 +913,7 @@ pub fn calibrate(
     let mut covs: Vec<CovAccum> = (0..cfg.n_blocks)
         .flat_map(|_| dims.iter().map(|&(_, n, _)| CovAccum::new(n)))
         .collect();
+    let mut ws = Workspace::new(cfg);
     for _ in 0..batches {
         let window = batcher.next_batch();
         // Windows may be (t) or (t+1) wide; calibration only needs inputs.
@@ -944,7 +922,7 @@ pub fn calibrate(
             .chunks_exact(batcher.window)
             .flat_map(|w| w[..t].to_vec())
             .collect();
-        let cache = forward(cfg, teacher, None, &x, batcher.batch)?;
+        let cache = forward_ws(cfg, teacher, None, &x, batcher.batch, &mut ws)?;
         let rows = batcher.batch * t;
         for (bi, blk) in cache.blocks.iter().enumerate() {
             let inputs: [(&[f32], usize); 4] =
@@ -965,23 +943,37 @@ pub fn eval_student(
     profile: &RankProfile,
     eval_batches: &[Vec<i32>],
 ) -> Result<f64> {
+    eval_student_ws(cfg, student, profile, eval_batches, &mut Workspace::new(cfg))
+}
+
+/// [`eval_student`] over a caller-supplied persistent workspace (the DP
+/// probe runs hundreds of evals back to back).
+pub fn eval_student_ws(
+    cfg: &ModelConfig,
+    student: &ParamSet,
+    profile: &RankProfile,
+    eval_batches: &[Vec<i32>],
+    ws: &mut Workspace,
+) -> Result<f64> {
     let mut total = 0f64;
     for batch in eval_batches {
         let b = batch.len() / (cfg.seq_len + 1);
         let (x, y) = split_windows(batch, cfg.seq_len);
-        let cache = forward(cfg, student, Some(profile), &x, b)?;
+        let cache = forward_ws(cfg, student, Some(profile), &x, b, ws)?;
         total += ce_loss(&cache.logits, &y, cfg.vocab) as f64;
     }
     Ok(total / eval_batches.len().max(1) as f64)
 }
 
 /// ProbeModel over the native student — powers DP sensitivity probing
-/// without PJRT.
+/// without PJRT.  Borrows the caller's persistent [`Workspace`] so the
+/// probe's hundreds of evals reuse one panel set.
 pub struct NativeProbe<'a> {
     pub cfg: &'a ModelConfig,
     pub student: &'a ParamSet,
     pub eval_batches: &'a [Vec<i32>],
     pub evals: usize,
+    pub ws: &'a mut Workspace,
 }
 
 impl ProbeModel for NativeProbe<'_> {
@@ -995,7 +987,7 @@ impl ProbeModel for NativeProbe<'_> {
 
     fn eval(&mut self, profile: &RankProfile) -> f64 {
         self.evals += 1;
-        eval_student(self.cfg, self.student, profile, self.eval_batches)
+        eval_student_ws(self.cfg, self.student, profile, self.eval_batches, self.ws)
             .expect("native probe eval failed")
     }
 }
@@ -1019,6 +1011,7 @@ pub fn consolidate(
     let mut rng = Rng::new(seed);
     let mut p = student;
     let mut opt = AdamW::new(cfg, &p);
+    let mut ws = Workspace::new(cfg);
     let tau = cfg.tau_kd as f32;
     let mut losses = Vec::with_capacity(steps);
     let t_loop = std::time::Instant::now();
@@ -1026,10 +1019,10 @@ pub fn consolidate(
         let pi = rng.weighted(alphas);
         let window = batcher.next_batch();
         let (x, _) = split_windows(&window, cfg.seq_len);
-        let t_cache = forward(cfg, teacher, None, &x, batcher.batch)?;
-        let s_cache = forward(cfg, &p, Some(&profiles[pi]), &x, batcher.batch)?;
+        let t_cache = forward_ws(cfg, teacher, None, &x, batcher.batch, &mut ws)?;
+        let s_cache = forward_ws(cfg, &p, Some(&profiles[pi]), &x, batcher.batch, &mut ws)?;
         let (loss, dlogits) = kd_loss_grad(&s_cache.logits, &t_cache.logits, cfg.vocab, tau);
-        let grads = backward(cfg, &p, Some(&profiles[pi]), &s_cache, &dlogits)?;
+        let grads = backward_ws(cfg, &p, Some(&profiles[pi]), &s_cache, &dlogits, &mut ws)?;
         opt.step(&mut p, &grads)?;
         losses.push(loss);
         if log_every > 0 && step % log_every == 0 {
@@ -1234,10 +1227,43 @@ mod tests {
     }
 
     #[test]
+    fn training_workspace_never_reallocates_across_steps() {
+        // A KD-style loop (teacher forward + student forward + backward +
+        // optimizer step) over one persistent Workspace must never grow it
+        // — the per-layer attention allocations it replaced were the native
+        // KD loop's throttle.
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 91);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let mut student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let profile: Vec<usize> = vec![5; cfg.n_fact_layers()];
+        let mut rng = Rng::new(92);
+        let mut ws = Workspace::new(&cfg);
+        let mut opt = AdamW::new(&cfg, &student);
+        let mut step = |p: &mut ParamSet, opt: &mut AdamW, ws: &mut Workspace, rng: &mut Rng| {
+            let x = rand_tokens(&cfg, rng, 2);
+            let t_cache = forward_ws(&cfg, &teacher, None, &x, 2, ws).unwrap();
+            let s_cache = forward_ws(&cfg, p, Some(&profile), &x, 2, ws).unwrap();
+            let (_, dlogits) =
+                kd_loss_grad(&s_cache.logits, &t_cache.logits, cfg.vocab, cfg.tau_kd as f32);
+            let grads = backward_ws(&cfg, p, Some(&profile), &s_cache, &dlogits, ws).unwrap();
+            opt.step(p, &grads).unwrap();
+        };
+        step(&mut student, &mut opt, &mut ws, &mut rng);
+        let fp = ws.fingerprint();
+        for _ in 0..3 {
+            step(&mut student, &mut opt, &mut ws, &mut rng);
+        }
+        assert_eq!(ws.fingerprint(), fp, "training workspace must not reallocate");
+    }
+
+    #[test]
     fn native_training_forward_matches_serving_gar() {
         // The serving GAR re-gauge at a profile must compute the same
         // function the training path evaluated — pins that DP probe losses
-        // describe what the coordinator actually serves.
+        // describe what the coordinator actually serves.  Both sides now
+        // run the one shared attention in `runtime::attention`, so this is
+        // a whole-forward consistency check, not an attention one.
         let cfg = test_cfg();
         let teacher = random_teacher(&cfg, 61);
         let factors = decompose_teacher(&cfg, &teacher, None).unwrap();

@@ -4,10 +4,12 @@
 //!   sensitivity probe → DP rank selection → nested KD consolidation →
 //!   evaluation across budgets → profiles.json for the serving tiers.
 //!
-//! The default backend is [`crate::training::native`] — every stage runs on
-//! `nn`-style manual backprop over `linalg::kernels`, fully offline.  The
-//! PJRT-artifact variant ([`run`]) survives behind the `pjrt` feature
-//! (`repro pipeline --backend pjrt`).
+//! The stage orchestration lives **once**, in `run_stages`, behind the
+//! `StageBackend` trait: the native backend ([`crate::training::native`] —
+//! manual backprop over `linalg::kernels`, fully offline) is the default,
+//! and the PJRT-artifact drivers implement the same trait behind the
+//! `pjrt` feature (`repro pipeline --backend pjrt`).  Both used to carry a
+//! byte-duplicated copy of the skeleton.
 //!
 //! Stages checkpoint under [`stage_dir`] (`teacher`, `student_init`,
 //! `student_kd` — `ckpt` JSON+blob pairs) so reruns resume and the serving
@@ -23,15 +25,16 @@ use anyhow::{ensure, Result};
 use crate::cli::Args;
 use crate::config::RunConfig;
 use crate::data::{Corpus, TokenBatcher};
+use crate::flexrank::decompose::CovAccum;
 use crate::flexrank::dp::dp_rank_selection;
 use crate::flexrank::masks::{NestedChain, RankProfile};
-use crate::flexrank::sensitivity::{probe, uniform_grid};
+use crate::flexrank::sensitivity::{probe, uniform_grid, Sensitivity};
 use crate::json::{self, Value};
 use crate::runtime::ModelConfig;
 use crate::training::params::{
     decompose_teacher, random_teacher, student_from_factors, ParamSet,
 };
-use crate::training::{ckpt, native, CORPUS_BYTES};
+use crate::training::{ckpt, native, TrainRun, CORPUS_BYTES};
 
 /// Everything a pipeline run produces.
 pub struct PipelineOut {
@@ -80,8 +83,80 @@ fn ensure_ckpt_matches(cfg: &ModelConfig, ps: &ParamSet, what: &str) -> Result<(
     Ok(())
 }
 
-/// Run (or resume) the full pipeline on the native backend.
-pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> {
+// ---------------------------------------------------------------------------
+// The stage skeleton, shared across training backends
+// ---------------------------------------------------------------------------
+
+/// One training backend behind the pipeline seam.  The pretrain →
+/// calibrate → DataSVD → probe → DP → KD → eval orchestration (checkpoint
+/// reuse, stage ordering, profile persistence) lives once in
+/// [`run_stages`]; a backend only supplies the per-stage compute — native
+/// manual backprop by default, the PJRT artifact drivers behind `pjrt`.
+trait StageBackend {
+    /// Short tag for stage log lines ("native", "pjrt").
+    fn label(&self) -> &'static str;
+
+    /// Teacher parameters to pretrain from.
+    fn teacher_init(&mut self, cfg: &ModelConfig, seed: u64) -> Result<ParamSet>;
+
+    fn pretrain(
+        &mut self,
+        cfg: &ModelConfig,
+        init: ParamSet,
+        batcher: &mut TokenBatcher,
+        steps: usize,
+        log_every: usize,
+    ) -> Result<TrainRun>;
+
+    fn calibrate(
+        &mut self,
+        cfg: &ModelConfig,
+        teacher: &ParamSet,
+        batcher: &mut TokenBatcher,
+        batches: usize,
+    ) -> Result<Vec<CovAccum>>;
+
+    /// Sensitivity probe over `grids` (App. C.2); implementations print
+    /// their own eval count.
+    fn sensitivity(
+        &mut self,
+        cfg: &ModelConfig,
+        student: &ParamSet,
+        eval_batches: &[Vec<i32>],
+        grids: &[Vec<usize>],
+    ) -> Result<Sensitivity>;
+
+    #[allow(clippy::too_many_arguments)]
+    fn consolidate(
+        &mut self,
+        cfg: &ModelConfig,
+        student: ParamSet,
+        teacher: &ParamSet,
+        profiles: &[RankProfile],
+        alphas: &[f64],
+        batcher: &mut TokenBatcher,
+        steps: usize,
+        seed: u64,
+        log_every: usize,
+    ) -> Result<TrainRun>;
+
+    fn eval_student(
+        &mut self,
+        cfg: &ModelConfig,
+        student: &ParamSet,
+        profile: &RankProfile,
+        eval_batches: &[Vec<i32>],
+    ) -> Result<f64>;
+}
+
+/// Run (or resume) the full Algorithm-1 pipeline over any stage backend.
+fn run_stages(
+    backend: &mut dyn StageBackend,
+    cfg: &ModelConfig,
+    rc: &RunConfig,
+    fresh: bool,
+) -> Result<PipelineOut> {
+    let label = backend.label();
     let dir = stage_dir();
     std::fs::create_dir_all(&dir)?;
 
@@ -111,11 +186,11 @@ pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<Pipe
         (t, Vec::new())
     } else {
         eprintln!(
-            "[pipeline] pretraining teacher for {} steps (native)",
+            "[pipeline] pretraining teacher for {} steps ({label})",
             rc.pretrain_steps
         );
-        let init = random_teacher(cfg, rc.seed);
-        let run = native::pretrain_teacher(cfg, init, &mut train_b, rc.pretrain_steps, rc.log_every)?;
+        let init = backend.teacher_init(cfg, rc.seed)?;
+        let run = backend.pretrain(cfg, init, &mut train_b, rc.pretrain_steps, rc.log_every)?;
         ckpt::save(&run.params, &teacher_stem)?;
         (run.params, run.losses)
     };
@@ -136,7 +211,7 @@ pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<Pipe
             cfg.vocab,
             rc.seed ^ 0x33,
         );
-        let covs = native::calibrate(cfg, &teacher, &mut calib_b, rc.calib_batches)?;
+        let covs = backend.calibrate(cfg, &teacher, &mut calib_b, rc.calib_batches)?;
         eprintln!("[pipeline] DataSVD decomposition of {} layers", cfg.n_fact_layers());
         let factors = decompose_teacher(cfg, &teacher, Some(&covs))?;
         let s = student_from_factors(cfg, &teacher, &factors)?;
@@ -145,21 +220,11 @@ pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<Pipe
     };
 
     // --- Stage 3: sensitivity probe + DP selection -------------------------
-    eprintln!("[pipeline] probing layer sensitivities (native)");
-    let mut probe_model = native::NativeProbe {
-        cfg,
-        student: &student0,
-        eval_batches: &eval_batches,
-        evals: 0,
-    };
+    eprintln!("[pipeline] probing layer sensitivities ({label})");
     let grids: Vec<Vec<usize>> = (0..cfg.n_fact_layers())
         .map(|_| uniform_grid(cfg.rank_full(), rc.probe_levels))
         .collect();
-    let sens = probe(&mut probe_model, &grids);
-    eprintln!(
-        "[pipeline] probe done ({} evals, full loss {:.4})",
-        probe_model.evals, sens.full_loss
-    );
+    let sens = backend.sensitivity(cfg, &student0, &eval_batches, &grids)?;
     let quant = (sens.full_cost / 4096).max(1);
     let dp = dp_rank_selection(&sens.candidates, sens.full_cost, quant)?;
     eprintln!(
@@ -177,8 +242,8 @@ pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<Pipe
         ensure_ckpt_matches(cfg, &s, "student_kd")?;
         (s, Vec::new())
     } else {
-        eprintln!("[pipeline] consolidating for {} steps (native)", rc.consolidate_steps);
-        let run = native::consolidate(
+        eprintln!("[pipeline] consolidating for {} steps ({label})", rc.consolidate_steps);
+        let run = backend.consolidate(
             cfg,
             student0.clone(),
             &teacher,
@@ -197,8 +262,8 @@ pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<Pipe
     eprintln!("[pipeline] evaluating across {} budgets", rc.budgets.len());
     let mut budget_rows = Vec::new();
     for (beta, profile) in rc.budgets.iter().zip(&budget_profiles) {
-        let before = native::eval_student(cfg, &student0, profile, &eval_batches)?;
-        let after = native::eval_student(cfg, &student, profile, &eval_batches)?;
+        let before = backend.eval_student(cfg, &student0, profile, &eval_batches)?;
+        let after = backend.eval_student(cfg, &student, profile, &eval_batches)?;
         eprintln!(
             "  budget {beta:.2}: ranks {:?}.. loss {before:.4} -> {after:.4}",
             &profile[..4.min(profile.len())]
@@ -221,6 +286,98 @@ pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<Pipe
         kd_losses,
         tier_profiles,
     })
+}
+
+/// The default backend: `training::native` manual backprop over the f32
+/// kernels, fully offline.  Holds one persistent [`native::Workspace`] so
+/// repeated stage-5 evals reuse the attention panels instead of
+/// re-allocating them per call (the probe and train loops carry their own).
+struct NativeStage {
+    ws: native::Workspace,
+}
+
+impl StageBackend for NativeStage {
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn teacher_init(&mut self, cfg: &ModelConfig, seed: u64) -> Result<ParamSet> {
+        Ok(random_teacher(cfg, seed))
+    }
+
+    fn pretrain(
+        &mut self,
+        cfg: &ModelConfig,
+        init: ParamSet,
+        batcher: &mut TokenBatcher,
+        steps: usize,
+        log_every: usize,
+    ) -> Result<TrainRun> {
+        native::pretrain_teacher(cfg, init, batcher, steps, log_every)
+    }
+
+    fn calibrate(
+        &mut self,
+        cfg: &ModelConfig,
+        teacher: &ParamSet,
+        batcher: &mut TokenBatcher,
+        batches: usize,
+    ) -> Result<Vec<CovAccum>> {
+        native::calibrate(cfg, teacher, batcher, batches)
+    }
+
+    fn sensitivity(
+        &mut self,
+        cfg: &ModelConfig,
+        student: &ParamSet,
+        eval_batches: &[Vec<i32>],
+        grids: &[Vec<usize>],
+    ) -> Result<Sensitivity> {
+        let mut probe_model = native::NativeProbe {
+            cfg,
+            student,
+            eval_batches,
+            evals: 0,
+            ws: &mut self.ws,
+        };
+        let sens = probe(&mut probe_model, grids);
+        eprintln!(
+            "[pipeline] probe done ({} evals, full loss {:.4})",
+            probe_model.evals, sens.full_loss
+        );
+        Ok(sens)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn consolidate(
+        &mut self,
+        cfg: &ModelConfig,
+        student: ParamSet,
+        teacher: &ParamSet,
+        profiles: &[RankProfile],
+        alphas: &[f64],
+        batcher: &mut TokenBatcher,
+        steps: usize,
+        seed: u64,
+        log_every: usize,
+    ) -> Result<TrainRun> {
+        native::consolidate(cfg, student, teacher, profiles, alphas, batcher, steps, seed, log_every)
+    }
+
+    fn eval_student(
+        &mut self,
+        cfg: &ModelConfig,
+        student: &ParamSet,
+        profile: &RankProfile,
+        eval_batches: &[Vec<i32>],
+    ) -> Result<f64> {
+        native::eval_student_ws(cfg, student, profile, eval_batches, &mut self.ws)
+    }
+}
+
+/// Run (or resume) the full pipeline on the native backend.
+pub fn run_native(cfg: &ModelConfig, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> {
+    run_stages(&mut NativeStage { ws: native::Workspace::new(cfg) }, cfg, rc, fresh)
 }
 
 /// Pick one chain index per serving tier: the largest-cost profile fitting
@@ -395,148 +552,104 @@ pub fn write_profiles_cli(args: &Args) -> Result<()> {
 // PJRT-artifact variant (feature `pjrt`; used by the figure harnesses)
 // ---------------------------------------------------------------------------
 
+/// The PJRT backend: every stage runs the AOT artifact drivers
+/// ([`crate::training::driver`]) on the engine; the orchestration is the
+/// same shared `run_stages` skeleton the native backend uses.
+#[cfg(feature = "pjrt")]
+struct PjrtStage<'e> {
+    engine: &'e crate::runtime::Engine,
+}
+
+#[cfg(feature = "pjrt")]
+impl StageBackend for PjrtStage<'_> {
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn teacher_init(&mut self, _cfg: &ModelConfig, _seed: u64) -> Result<ParamSet> {
+        // The AOT chain pins the init the artifacts were lowered with.
+        Ok(ParamSet::from_specs(
+            &self.engine.manifest.teacher_init,
+            self.engine.manifest.load_teacher_init()?,
+        ))
+    }
+
+    fn pretrain(
+        &mut self,
+        _cfg: &ModelConfig,
+        init: ParamSet,
+        batcher: &mut TokenBatcher,
+        steps: usize,
+        log_every: usize,
+    ) -> Result<TrainRun> {
+        crate::training::driver::pretrain_teacher(self.engine, init, batcher, steps, log_every)
+    }
+
+    fn calibrate(
+        &mut self,
+        _cfg: &ModelConfig,
+        teacher: &ParamSet,
+        batcher: &mut TokenBatcher,
+        batches: usize,
+    ) -> Result<Vec<CovAccum>> {
+        crate::training::driver::calibrate(self.engine, teacher, batcher, batches)
+    }
+
+    fn sensitivity(
+        &mut self,
+        _cfg: &ModelConfig,
+        student: &ParamSet,
+        eval_batches: &[Vec<i32>],
+        grids: &[Vec<usize>],
+    ) -> Result<Sensitivity> {
+        let mut probe_model = crate::training::driver::StudentProbe {
+            engine: self.engine,
+            student,
+            eval_batches: eval_batches.to_vec(),
+            evals: 0,
+        };
+        let sens = probe(&mut probe_model, grids);
+        eprintln!(
+            "[pipeline] probe done ({} evals, full loss {:.4})",
+            probe_model.evals, sens.full_loss
+        );
+        Ok(sens)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn consolidate(
+        &mut self,
+        _cfg: &ModelConfig,
+        student: ParamSet,
+        teacher: &ParamSet,
+        profiles: &[RankProfile],
+        alphas: &[f64],
+        batcher: &mut TokenBatcher,
+        steps: usize,
+        seed: u64,
+        log_every: usize,
+    ) -> Result<TrainRun> {
+        crate::training::driver::consolidate(
+            self.engine, student, teacher, profiles, alphas, batcher, steps, seed, log_every,
+        )
+    }
+
+    fn eval_student(
+        &mut self,
+        _cfg: &ModelConfig,
+        student: &ParamSet,
+        profile: &RankProfile,
+        eval_batches: &[Vec<i32>],
+    ) -> Result<f64> {
+        crate::training::driver::eval_student(self.engine, student, profile, eval_batches)
+    }
+}
+
 /// Run (or resume) the full pipeline over the PJRT artifacts.
 #[cfg(feature = "pjrt")]
 pub fn run(engine: &crate::runtime::Engine, rc: &RunConfig, fresh: bool) -> Result<PipelineOut> {
-    use crate::training::driver;
-
     let cfg = engine.manifest.config.clone();
-    let dir = stage_dir();
-    std::fs::create_dir_all(&dir)?;
-
-    let corpus = Corpus::generate(CORPUS_BYTES, rc.seed);
-    let mut train_b = TokenBatcher::new(
-        &corpus.train,
-        cfg.batch_train,
-        cfg.seq_len + 1,
-        cfg.vocab,
-        rc.seed ^ 0xA5,
-    );
-    let eval_b = TokenBatcher::new(
-        &corpus.heldout,
-        cfg.batch_eval,
-        cfg.seq_len + 1,
-        cfg.vocab,
-        rc.seed ^ 0x5A,
-    );
-    let eval_batches = eval_b.eval_batches(rc.eval_batches);
-
-    // --- Stage 1: teacher pretraining --------------------------------------
-    let teacher_stem = dir.join("teacher");
-    let (teacher, pretrain_losses) = if !fresh && ckpt::exists(&teacher_stem) {
-        eprintln!("[pipeline] reusing teacher checkpoint");
-        (ckpt::load(&teacher_stem)?, Vec::new())
-    } else {
-        eprintln!("[pipeline] pretraining teacher for {} steps", rc.pretrain_steps);
-        let init = ParamSet::from_specs(
-            &engine.manifest.teacher_init,
-            engine.manifest.load_teacher_init()?,
-        );
-        let run = driver::pretrain_teacher(
-            engine,
-            init,
-            &mut train_b,
-            rc.pretrain_steps,
-            rc.log_every,
-        )?;
-        ckpt::save(&run.params, &teacher_stem)?;
-        (run.params, run.losses)
-    };
-
-    // --- Stage 2: calibration + DataSVD decomposition ----------------------
-    let student_stem = dir.join("student_init");
-    let student0 = if !fresh && ckpt::exists(&student_stem) {
-        eprintln!("[pipeline] reusing DataSVD student init");
-        ckpt::load(&student_stem)?
-    } else {
-        eprintln!("[pipeline] calibrating covariances ({} batches)", rc.calib_batches);
-        let mut calib_b = TokenBatcher::new(
-            &corpus.train,
-            cfg.batch_train, // batcher batch; calibrate() slices what it needs
-            cfg.seq_len + 1,
-            cfg.vocab,
-            rc.seed ^ 0x33,
-        );
-        let covs = driver::calibrate(engine, &teacher, &mut calib_b, rc.calib_batches)?;
-        eprintln!("[pipeline] DataSVD decomposition of {} layers", cfg.n_fact_layers());
-        let factors = decompose_teacher(&cfg, &teacher, Some(&covs))?;
-        let s = student_from_factors(&cfg, &teacher, &factors)?;
-        ckpt::save(&s, &student_stem)?;
-        s
-    };
-
-    // --- Stage 3: sensitivity probe + DP selection -------------------------
-    eprintln!("[pipeline] probing layer sensitivities");
-    let mut probe_model = driver::StudentProbe {
-        engine,
-        student: &student0,
-        eval_batches: eval_batches.clone(),
-        evals: 0,
-    };
-    let grids: Vec<Vec<usize>> =
-        (0..cfg.n_fact_layers()).map(|_| uniform_grid(cfg.rank_full(), rc.probe_levels)).collect();
-    let sens = probe(&mut probe_model, &grids);
-    eprintln!(
-        "[pipeline] probe done ({} evals, full loss {:.4})",
-        probe_model.evals, sens.full_loss
-    );
-    let quant = (sens.full_cost / 4096).max(1);
-    let dp = dp_rank_selection(&sens.candidates, sens.full_cost, quant)?;
-    eprintln!(
-        "[pipeline] DP: {} pareto states, chain of {}",
-        dp.pareto.len(),
-        dp.chain.profiles.len()
-    );
-
-    // --- Stage 4: consolidation over budget profiles -----------------------
-    let budget_profiles = dp.chain.select(&rc.budgets, sens.full_cost as usize);
-    let consolidated_stem = dir.join("student_kd");
-    let (student, kd_losses) = if !fresh && ckpt::exists(&consolidated_stem) {
-        eprintln!("[pipeline] reusing consolidated student");
-        (ckpt::load(&consolidated_stem)?, Vec::new())
-    } else {
-        eprintln!("[pipeline] consolidating for {} steps", rc.consolidate_steps);
-        let run = driver::consolidate(
-            engine,
-            student0.clone(),
-            &teacher,
-            &budget_profiles,
-            &rc.alphas,
-            &mut train_b,
-            rc.consolidate_steps,
-            rc.seed ^ 0x77,
-            rc.log_every,
-        )?;
-        ckpt::save(&run.params, &consolidated_stem)?;
-        (run.params, run.losses)
-    };
-
-    // --- Stage 5: evaluation across budgets ---------------------------------
-    eprintln!("[pipeline] evaluating across {} budgets", rc.budgets.len());
-    let mut budget_rows = Vec::new();
-    for (beta, profile) in rc.budgets.iter().zip(&budget_profiles) {
-        let before = driver::eval_student(engine, &student0, profile, &eval_batches)?;
-        let after = driver::eval_student(engine, &student, profile, &eval_batches)?;
-        eprintln!(
-            "  budget {beta:.2}: ranks {:?}.. loss {before:.4} -> {after:.4}",
-            &profile[..4.min(profile.len())]
-        );
-        budget_rows.push((*beta, profile.clone(), before, after));
-    }
-
-    let (_, tier_profiles) = write_profiles_json(&cfg, &dp.chain, sens.full_cost)?;
-
-    Ok(PipelineOut {
-        teacher,
-        student,
-        student_init: student0,
-        chain: dp.chain,
-        full_cost: sens.full_cost,
-        budget_rows,
-        pretrain_losses,
-        kd_losses,
-        tier_profiles,
-    })
+    run_stages(&mut PjrtStage { engine }, &cfg, rc, fresh)
 }
 
 #[cfg(feature = "pjrt")]

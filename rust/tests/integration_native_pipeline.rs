@@ -56,7 +56,7 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
 
     // --- profiles.json round trip ------------------------------------------
     assert!(pipeline::profiles_path().exists(), "pipeline must persist profiles.json");
-    let profiles = load_tier_profiles(&cfg)
+    let profiles = load_tier_profiles(&cfg, &out.student)
         .expect("profiles.json must parse")
         .expect("profiles.json must be picked up for the matching config");
     assert_eq!(profiles, out.tier_profiles);
@@ -137,29 +137,66 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
     // A profiles.json written for a different config is stale, not fatal:
     // serving falls back to uniform profiles.
     let base_cfg = flexrank::config::load_model_config("base").expect("configs/model_base.json");
+    // (The config-name check fires before the student is consulted, so the
+    // tiny student stands in here.)
     assert!(
-        load_tier_profiles(&base_cfg).expect("stale profiles must not error").is_none(),
+        load_tier_profiles(&base_cfg, &out.student)
+            .expect("stale profiles must not error")
+            .is_none(),
         "profiles written for 'tiny' must not be served for 'base'"
     );
-    // A file that claims to match this config but is malformed (wrong
-    // profile length) is a hard error — never serve silently wrong ranks.
     let ppath = pipeline::profiles_path();
     let good = std::fs::read_to_string(&ppath).unwrap();
+    // A profiles.json whose recorded full_cost disagrees with the loaded
+    // student's GAR param count was written by an older run of this
+    // same-named config (different checkpoint/student) — stale, so serving
+    // must fall back to uniform instead of silently using wrong profiles.
+    let tiers_json = |plen_ok: bool| {
+        cfg.serve_tiers
+            .iter()
+            .zip(&profiles)
+            .map(|(b, p)| {
+                let ranks = if plen_ok {
+                    p.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",")
+                } else {
+                    "3,3".to_string()
+                };
+                format!("{{\"budget\":{b},\"cost\":1,\"error\":0,\"profile\":[{ranks}]}}")
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    };
     std::fs::write(
         &ppath,
         format!(
-            "{{\"config\":\"{}\",\"full_cost\":1,\"tiers\":[{}]}}",
+            "{{\"config\":\"{}\",\"full_cost\":{},\"tiers\":[{}]}}",
             cfg.name,
-            cfg.serve_tiers
-                .iter()
-                .map(|b| format!("{{\"budget\":{b},\"cost\":1,\"error\":0,\"profile\":[3,3]}}"))
-                .collect::<Vec<_>>()
-                .join(",")
+            out.full_cost + 1,
+            tiers_json(true)
         ),
     )
     .unwrap();
     assert!(
-        load_tier_profiles(&cfg).is_err(),
+        load_tier_profiles(&cfg, &out.student)
+            .expect("mismatched full_cost is stale, not an error")
+            .is_none(),
+        "profiles DP'd for a different student must not be served"
+    );
+    // A file that claims to match this config *and* student but is
+    // malformed (wrong profile length) is a hard error — never serve
+    // silently wrong ranks.
+    std::fs::write(
+        &ppath,
+        format!(
+            "{{\"config\":\"{}\",\"full_cost\":{},\"tiers\":[{}]}}",
+            cfg.name,
+            out.full_cost,
+            tiers_json(false)
+        ),
+    )
+    .unwrap();
+    assert!(
+        load_tier_profiles(&cfg, &out.student).is_err(),
         "a malformed profiles.json claiming to match the config must fail loudly"
     );
     std::fs::write(&ppath, good).unwrap();
