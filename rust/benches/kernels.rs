@@ -16,7 +16,7 @@ use flexrank::bench_harness::{self, write_kernel_json, KernelRecord};
 use flexrank::flexrank::gar::Gar;
 use flexrank::linalg::{kernels, reference, Mat};
 use flexrank::rng::Rng;
-use flexrank::runtime::attention::{causal_attention, AttnWorkspace};
+use flexrank::runtime::attention::{causal_attention, AttnWorkspace, DEFAULT_ATTN_TILE};
 
 fn main() {
     let mut bench = bench_harness::from_env();
@@ -107,34 +107,59 @@ fn main() {
         records.push(KernelRecord::from_stats(&fused_a, &refstats, &shape, flops));
     }
 
-    // --- blocked causal attention: pooled head-parallel vs sequential ------
-    // The serving-shaped problem (per-head panel sizes from model_base):
-    // one full batch of the shared attention, reference = the same blocked
-    // kernel restricted to one workspace slot (sequential (batch × head)
-    // loop — what the pre-dedup implementations did above the pooled
-    // matmuls), kernel = the slot-strided head-parallel dispatch.
+    // --- causal attention: streaming (flash) vs blocked vs sequential ------
+    // The serving-shaped problem at model_base head sizes, then the same
+    // problem at 4×/16×-longer sequences (batch scaled down to bound bench
+    // time) — the regime the streaming tile exists for: the blocked path's
+    // (t, t) score matrices fall out of cache while the streaming workspace
+    // stays linear in t and skips the masked upper triangle entirely.
+    //
+    // Three rows per shape on the BENCH_kernels.json trajectory:
+    //   attention_par_heads  — blocked head-parallel vs sequential-head
+    //                          (slots=1) baseline, as since PR 4;
+    //   attention_flash      — streaming vs the *blocked head-parallel*
+    //                          baseline (speedup > 1 = flash wins);
+    //   attention_flash_vs_seq — streaming vs the sequential-head baseline
+    //                          (the end-to-end win of both optimizations).
     {
         let cfg = flexrank::config::load_model_config("base").expect("configs/model_base.json");
-        let (d, heads, seq, batch) = (cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.batch_serve);
+        let (d, heads) = (cfg.d_model, cfg.n_heads);
         let hd = d / heads;
-        let rows = batch * seq;
-        let qkv: Vec<f32> = (0..rows * 3 * d).map(|_| rng.normal() as f32).collect();
-        let mut att = vec![0f32; rows * d];
-        let mut ws_seq = AttnWorkspace::new(seq, hd, 1);
-        let mut ws_par = AttnWorkspace::new(seq, hd, AttnWorkspace::auto_slots(batch * heads));
-        let shape = format!("B={batch} H={heads} T={seq} hd={hd}");
-        // Per (batch, head) pair: QKᵀ + S·V, 2 flops per MAC each.
-        let flops = (batch * heads * 4 * seq * seq * hd) as f64;
+        let tile = DEFAULT_ATTN_TILE;
+        for (mult, batch) in [(1usize, cfg.batch_serve), (4, 2), (16, 1)] {
+            let seq = cfg.seq_len * mult;
+            let rows = batch * seq;
+            let qkv: Vec<f32> = (0..rows * 3 * d).map(|_| rng.normal() as f32).collect();
+            let mut att = vec![0f32; rows * d];
+            let mut ws_seq = AttnWorkspace::new(seq, hd, 1);
+            let mut ws_par = AttnWorkspace::new(seq, hd, AttnWorkspace::auto_slots(batch * heads));
+            let mut ws_fla =
+                AttnWorkspace::new_streaming(seq, hd, AttnWorkspace::auto_slots(batch * heads), tile);
+            let shape = format!("B={batch} H={heads} T={seq} hd={hd}");
+            // Per (batch, head) pair: QKᵀ + S·V, 2 flops per MAC each (full
+            // (t, t) count, so GFLOP/s stays comparable across rows even
+            // though the streaming path skips the masked half).
+            let flops = (batch * heads * 4 * seq * seq * hd) as f64;
 
-        let refstats = bench.run(&format!("attention_seq_heads {shape}"), Some(flops), || {
-            causal_attention(&qkv, batch, seq, d, heads, &mut ws_seq, &mut att, None);
-            std::hint::black_box(att[0]);
-        });
-        let par = bench.run(&format!("attention_par_heads {shape}"), Some(flops), || {
-            causal_attention(&qkv, batch, seq, d, heads, &mut ws_par, &mut att, None);
-            std::hint::black_box(att[0]);
-        });
-        records.push(KernelRecord::from_stats(&par, &refstats, &shape, flops));
+            let refstats = bench.run(&format!("attention_seq_heads {shape}"), Some(flops), || {
+                causal_attention(&qkv, batch, seq, d, heads, &mut ws_seq, &mut att, None);
+                std::hint::black_box(att[0]);
+            });
+            let par = bench.run(&format!("attention_par_heads {shape}"), Some(flops), || {
+                causal_attention(&qkv, batch, seq, d, heads, &mut ws_par, &mut att, None);
+                std::hint::black_box(att[0]);
+            });
+            records.push(KernelRecord::from_stats(&par, &refstats, &shape, flops));
+            let fla = bench.run(&format!("attention_flash {shape}"), Some(flops), || {
+                causal_attention(&qkv, batch, seq, d, heads, &mut ws_fla, &mut att, None);
+                std::hint::black_box(att[0]);
+            });
+            records.push(KernelRecord::from_stats(&fla, &par, &shape, flops));
+            // Same measurement, re-based on the sequential-head baseline.
+            let mut vs_seq = KernelRecord::from_stats(&fla, &refstats, &shape, flops);
+            vs_seq.kernel = format!("attention_flash_vs_seq {shape}");
+            records.push(vs_seq);
+        }
     }
 
     // --- covariance gram accumulation (DataSVD stage 1) --------------------
@@ -175,8 +200,21 @@ fn main() {
         if rec.kernel.starts_with("attention_par_heads") {
             let verdict = if rec.speedup_vs_reference >= 1.0 { "OK" } else { "WARNING: slower" };
             println!(
-                "attention head-parallel vs sequential-head: {:.2}x ({:.2} GFLOP/s) — {verdict}",
-                rec.speedup_vs_reference, rec.gflops
+                "attention head-parallel vs sequential-head [{}]: {:.2}x ({:.2} GFLOP/s) — {verdict}",
+                rec.shape, rec.speedup_vs_reference, rec.gflops
+            );
+        }
+    }
+    for rec in &records {
+        if rec.kernel.starts_with("attention_flash ") {
+            let verdict = if rec.speedup_vs_reference >= 1.0 {
+                "OK"
+            } else {
+                "below blocked (memory win only at this shape)"
+            };
+            println!(
+                "attention flash vs blocked [{}]: {:.2}x ({:.2} GFLOP/s) — {verdict}",
+                rec.shape, rec.speedup_vs_reference, rec.gflops
             );
         }
     }

@@ -4,6 +4,7 @@
 
 use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg, SubmodelRegistry};
 use flexrank::data::{Corpus, TraceCfg, TraceGen};
+use flexrank::runtime::ServingBackend;
 use flexrank::training::params::{decompose_teacher, random_teacher, student_from_factors};
 
 fn main() -> anyhow::Result<()> {
@@ -13,6 +14,7 @@ fn main() -> anyhow::Result<()> {
     let factors = decompose_teacher(&cfg, &teacher, None)?;
     let student = student_from_factors(&cfg, &teacher, &factors)?;
     let mut registry = SubmodelRegistry::load_native(&cfg, &student, None)?;
+    println!("attention path: {} (seq_len {})", registry.attn_path_label(), cfg.seq_len);
     let corpus = Corpus::generate(100_000, 5);
     let n = if quick { 80 } else { 400 };
 

@@ -123,6 +123,38 @@ mod tests {
     }
 
     #[test]
+    fn attention_knobs_default_and_parse() {
+        use crate::runtime::attention::{DEFAULT_ATTN_TILE, DEFAULT_STREAMING_MIN_SEQ};
+        // Configs without the knobs get the built-in crossover defaults…
+        let mc = load_model_config("tiny").unwrap();
+        assert_eq!(mc.attn_tile, DEFAULT_ATTN_TILE);
+        assert_eq!(mc.attn_streaming_min_seq, DEFAULT_STREAMING_MIN_SEQ);
+        // …so the tiny config's short sequences resolve to the blocked path.
+        assert_eq!(mc.attn_path().resolve(mc.seq_len), None);
+
+        // Explicit knobs parse and drive the path resolution.
+        let good = std::fs::read_to_string(
+            crate::repo_root().join("configs").join("model_tiny.json"),
+        )
+        .unwrap();
+        let tuned = good.replace(
+            "\"seq_len\": 16,",
+            "\"seq_len\": 16,\n  \"attn_tile\": 8,\n  \"attn_streaming_min_seq\": 16,",
+        );
+        assert!(tuned.contains("attn_tile"), "fixture edit failed");
+        let mc = ModelConfig::from_json(&json::parse(&tuned).unwrap()).unwrap();
+        assert_eq!(mc.attn_tile, 8);
+        assert_eq!(mc.attn_streaming_min_seq, 16);
+        assert_eq!(mc.attn_path().resolve(mc.seq_len), Some(8));
+        assert_eq!(mc.attn_path().resolve(mc.seq_len - 1), None);
+
+        // A zero tile is a config error at parse time.
+        let broken = good.replace("\"seq_len\": 16,", "\"seq_len\": 16,\n  \"attn_tile\": 0,");
+        let err = ModelConfig::from_json(&json::parse(&broken).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("attn_tile"), "{err}");
+    }
+
+    #[test]
     fn bad_head_split_fails_at_parse_time() {
         // d_model % n_heads != 0 must be rejected when the config is
         // loaded, not at the first forward (the check used to live,

@@ -40,14 +40,16 @@ fn student_full_cost(cfg: &ModelConfig, student: &ParamSet) -> Result<u64> {
 /// Returns `Ok(None)` when no file exists, or when it was written for a
 /// different model config / tier set / student (a stale artifact — serving
 /// falls back to uniform budget profiles with a warning).  Staleness checks
-/// cover the config name, tier count, tier budgets, and the recorded
-/// `full_cost` against the *loaded* student's GAR parameter count — the
-/// last catches a profiles.json written by an older run of a same-named
-/// config whose checkpoint/student has since changed **shape** (e.g. the
-/// config file was edited in place, or a checkpoint from the older dims is
-/// still being served).  It is a dimensional check: a re-trained student
-/// with identical shapes produces the same cost and is not detected — a
-/// content fingerprint in the schema would be needed for that (ROADMAP).
+/// cover the config name, tier count, tier budgets, the recorded
+/// `full_cost` against the *loaded* student's GAR parameter count (catches
+/// a same-named config whose checkpoint/student changed **shape**), and
+/// the `params_fp` content fingerprint against
+/// [`ParamSet::content_fingerprint`] — which catches the case the
+/// dimensional check cannot: a **re-trained** student with identical
+/// shapes whose values changed (the DP probe errors, and with them the
+/// selected profiles, no longer describe what is being served).  A
+/// profiles.json without a `params_fp` predates the fingerprint schema and
+/// is treated as stale (rerun `repro profiles`).
 /// A file that claims to match but is malformed is a hard error: serving
 /// silently wrong submodels is never acceptable.
 pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Option<Vec<Vec<usize>>>> {
@@ -78,6 +80,29 @@ pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Optio
             path.display()
         );
         return Ok(None);
+    }
+    let expect_fp = format!("{:016x}", student.content_fingerprint());
+    match doc.get("params_fp").map(|v| v.as_str()).transpose()? {
+        Some(fp) if fp == expect_fp => {}
+        Some(fp) => {
+            eprintln!(
+                "[serve] {}: params fingerprint {fp} but the loaded student \
+                 fingerprints to {expect_fp} — profiles were DP'd for a \
+                 re-trained student (same shapes, different values); falling \
+                 back to uniform profiles (rerun `repro profiles`)",
+                path.display()
+            );
+            return Ok(None);
+        }
+        None => {
+            eprintln!(
+                "[serve] {}: no params_fp recorded (written by a pre-fingerprint \
+                 pipeline) — cannot verify the profiles match this student; \
+                 falling back to uniform profiles (rerun `repro profiles`)",
+                path.display()
+            );
+            return Ok(None);
+        }
     }
     let tiers = doc.req("tiers")?.as_arr()?;
     if tiers.len() != cfg.serve_tiers.len() {
@@ -212,13 +237,9 @@ impl SubmodelRegistry {
             "tier params must be strictly ascending, got {:?}",
             tiers.iter().map(|t| t.params).collect::<Vec<_>>()
         );
-        let scratch = Scratch::new(
-            cfg.batch_serve * cfg.seq_len,
-            cfg.d_model,
-            cfg.n_heads,
-            cfg.seq_len,
-            cfg.vocab,
-        );
+        // Attention path resolves from the config's crossover knobs:
+        // streaming (no (t, t) score matrix) at/above attn_streaming_min_seq.
+        let scratch = Scratch::for_config(cfg, cfg.batch_serve * cfg.seq_len);
         Ok(SubmodelRegistry {
             tiers,
             batch: cfg.batch_serve,
@@ -268,6 +289,9 @@ impl ServingBackend for SubmodelRegistry {
     }
     fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]> {
         SubmodelRegistry::infer(self, tier, tokens)
+    }
+    fn attn_path_label(&self) -> String {
+        self.scratch.attn_path_label()
     }
 }
 

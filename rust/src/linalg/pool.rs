@@ -85,6 +85,15 @@ pub fn size() -> usize {
     *SIZE.get_or_init(hardware_threads)
 }
 
+/// Workspace-slot count that saturates the pool for a slot-strided loop
+/// over `items` independent work items (the attention pair loops size their
+/// per-chunk panel sets with this): more slots than pool threads only waste
+/// memory, more slots than items never run.  Cheap; does not start the
+/// pool.
+pub fn saturating_slots(items: usize) -> usize {
+    size().min(items).max(1)
+}
+
 fn pool() -> &'static Pool {
     static POOL: OnceLock<Pool> = OnceLock::new();
     static SPAWN: Once = Once::new();

@@ -56,8 +56,9 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     let sub = GarSubmodel::from_student(&cfg, &student, &uniform_budget_profile(&cfg, 0.5))?;
 
     let batch = cfg.batch_eval;
-    let mut scratch =
-        Scratch::new(batch * cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.vocab);
+    // Honors the config's attention crossover knobs, like the serving
+    // registry — smoke exercises the path the config actually serves with.
+    let mut scratch = Scratch::for_config(&cfg, batch * cfg.seq_len);
     let tokens = vec![0i32; batch * cfg.seq_len];
     sub.forward(&tokens, batch, &mut scratch)?;
     let vals = scratch.logits(batch * cfg.seq_len, cfg.vocab);

@@ -1,22 +1,37 @@
-//! The one blocked causal multi-head attention — shared by the serving
-//! forward ([`crate::runtime::native`]) and the training forward/backward
+//! The one causal multi-head attention — shared by the serving forward
+//! ([`crate::runtime::native`]) and the training forward/backward
 //! ([`crate::training::native`]), which were previously byte-duplicated
 //! copies that a consistency test pinned together.
 //!
-//! Formulation (per (sequence, head) pair): the strided head columns of the
-//! packed `(rows, 3d)` qkv activation are gathered into contiguous
-//! `(t_len × hd)` Q/K/V panels held in a caller-supplied [`AttnWorkspace`],
-//! scores `S = Q·Kᵀ` come from one `matmul_nt_f32` call, the causal softmax
-//! runs row-wise in place (masked strict upper triangle zeroed so it never
-//! contributes), the weighted values `O = S·V` come from one `matmul_f32`
-//! call, and the output panel is scattered back into the `(rows × d)`
-//! activation buffer.
+//! Two formulations live behind the same entry points, selected by the
+//! workspace layout:
 //!
-//! The two callers differ in exactly one way, so it is a parameter: serving
-//! discards the softmax probs (`probs = None`, scores live in workspace
-//! scratch), training retains them for the backward pass (`probs =
-//! Some(buf)`, scores are computed directly in the retained buffer — one
-//! `(t_len, t_len)` matrix per (batch, head) pair).
+//! * **Blocked** (the original): per (sequence, head) pair the strided head
+//!   columns of the packed `(rows, 3d)` qkv activation are gathered into
+//!   contiguous `(t_len × hd)` Q/K/V panels held in a caller-supplied
+//!   [`AttnWorkspace`], scores `S = Q·Kᵀ` come from one `matmul_nt_f32`
+//!   call — a full `(t_len, t_len)` matrix per slot — the causal softmax
+//!   runs row-wise in place, the weighted values `O = S·V` come from one
+//!   `matmul_f32` call, and the output panel is scattered back.  Workspace
+//!   memory grows as `O(slots · t²)`.
+//! * **Streaming** (flash-style): K/V are tiled into `(Tc × hd)` panels and
+//!   each Q row keeps a running max `m`, denominator `l`, and output
+//!   accumulator (online softmax).  Per tile the `(active_rows × Tc)` score
+//!   panel is computed with `matmul_nt_f32`, exponentiated against the
+//!   updated running max, multiplied into the V tile with `matmul_f32`, and
+//!   folded into the accumulator with the `exp(m_old − m_new)` rescale —
+//!   the `(t, t)` score matrix is **never materialized**, so workspace
+//!   memory grows as `O(slots · (t·hd + t·Tc))`, linear in `t`.  Causal
+//!   structure additionally skips the rows above each tile's diagonal, so
+//!   the streaming path does ~half the MACs of the blocked one at long `t`.
+//!
+//! The two callers differ in exactly one more way, so it is a parameter:
+//! serving discards the softmax probs (`probs = None`), training on the
+//! blocked path retains them for the backward pass (`probs = Some(buf)`).
+//! The streaming backward ([`causal_attention_backward_streaming`]) instead
+//! **recomputes** the probs tile by tile from qkv (one extra streaming
+//! forward per pair for the `m`/`l` statistics and the `D = Σ dO⊙O` row
+//! sums), so streaming training never holds a `(t, t)` buffer either.
 //!
 //! **Parallelism:** the `(batch × head)` panel loop fans out over the
 //! persistent worker pool ([`crate::linalg::pool`]).  The workspace holds
@@ -29,35 +44,119 @@
 use crate::linalg::kernels;
 use crate::linalg::pool::{self, SendPtr};
 
-/// Preallocated panel workspace for the blocked attention: `slots`
-/// independent sets of Q/K/V/O `(seq × hd)` panels plus one `(seq × seq)`
-/// score matrix each.  Sized once; [`causal_attention`] never allocates.
+/// Default streaming K/V tile width Tc (keys gathered per panel).
+pub const DEFAULT_ATTN_TILE: usize = 64;
+
+/// Default sequence-length crossover: below this the blocked path's single
+/// big `Q·Kᵀ` beats the streaming path's tile loop; at/above it the
+/// `(t, t)` score matrix starts to dominate cache traffic and workspace
+/// memory and the streaming path wins.
+pub const DEFAULT_STREAMING_MIN_SEQ: usize = 256;
+
+/// Which attention formulation a workspace should be laid out for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnPath {
+    /// Pick by sequence length: streaming at/above `min_seq`, blocked below.
+    Auto { min_seq: usize, tile: usize },
+    /// Always the blocked `(t, t)`-score formulation.
+    Blocked,
+    /// Always the streaming formulation at the given K/V tile width.
+    Streaming { tile: usize },
+}
+
+impl AttnPath {
+    /// The built-in crossover/tile defaults.
+    pub fn auto_default() -> AttnPath {
+        AttnPath::Auto { min_seq: DEFAULT_STREAMING_MIN_SEQ, tile: DEFAULT_ATTN_TILE }
+    }
+
+    /// Resolve to a concrete layout for sequences up to `seq` tokens:
+    /// `Some(tile)` = streaming, `None` = blocked.
+    pub fn resolve(self, seq: usize) -> Option<usize> {
+        match self {
+            AttnPath::Auto { min_seq, tile } => (seq >= min_seq).then_some(tile),
+            AttnPath::Blocked => None,
+            AttnPath::Streaming { tile } => Some(tile),
+        }
+    }
+}
+
+/// Preallocated panel workspace for the shared attention: `slots`
+/// independent panel sets laid out for one [`AttnPath`].  Sized once;
+/// [`causal_attention`] never allocates.
+///
+/// Blocked layout per slot: Q/K/V/O `(seq × hd)` panels + one `(seq × seq)`
+/// score matrix.  Streaming layout per slot: Q/O-accumulator/O-tile
+/// `(seq × hd)` panels, K/V `(tile × hd)` tiles, one `(seq × tile)` score
+/// tile, and `3·seq` running stats (max, denominator, rescale) — no buffer
+/// is quadratic in `seq` as long as `tile < seq` (see
+/// [`AttnWorkspace::new_streaming`] for the degenerate case).
 #[derive(Debug)]
 pub struct AttnWorkspace {
     seq: usize,
     hd: usize,
     slots: usize,
+    /// `Some(tc)` = streaming layout at tile width `tc`; `None` = blocked.
+    tile: Option<usize>,
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
     o: Vec<f32>,
     scores: Vec<f32>,
+    otile: Vec<f32>,
+    stats: Vec<f32>,
 }
 
 impl AttnWorkspace {
-    /// Workspace for sequences up to `seq` tokens at head width `hd`, with
-    /// `slots` concurrent panel sets (1 = sequential head loop).
+    /// Blocked workspace for sequences up to `seq` tokens at head width
+    /// `hd`, with `slots` concurrent panel sets (1 = sequential head loop).
     pub fn new(seq: usize, hd: usize, slots: usize) -> AttnWorkspace {
         let slots = slots.max(1);
         AttnWorkspace {
             seq,
             hd,
             slots,
+            tile: None,
             q: vec![0.0; slots * seq * hd],
             k: vec![0.0; slots * seq * hd],
             v: vec![0.0; slots * seq * hd],
             o: vec![0.0; slots * seq * hd],
             scores: vec![0.0; slots * seq * seq],
+            otile: Vec::new(),
+            stats: Vec::new(),
+        }
+    }
+
+    /// Streaming workspace at K/V tile width `tile` (clamped to
+    /// `[1, seq]`).  The sub-quadratic memory contract assumes `tile < seq`
+    /// — the intended regime, and what the crossover defaults guarantee
+    /// (tile 64 ≪ min_seq 256).  A tile at/above `seq` degenerates to a
+    /// single panel whose `(seq × tile)` score buffer is the blocked
+    /// footprint again: still numerically correct (the equivalence suite
+    /// exercises it), but no memory win.
+    pub fn new_streaming(seq: usize, hd: usize, slots: usize, tile: usize) -> AttnWorkspace {
+        let slots = slots.max(1);
+        let tile = tile.clamp(1, seq.max(1));
+        AttnWorkspace {
+            seq,
+            hd,
+            slots,
+            tile: Some(tile),
+            q: vec![0.0; slots * seq * hd],
+            k: vec![0.0; slots * tile * hd],
+            v: vec![0.0; slots * tile * hd],
+            o: vec![0.0; slots * seq * hd],
+            scores: vec![0.0; slots * seq * tile],
+            otile: vec![0.0; slots * seq * hd],
+            stats: vec![0.0; slots * 3 * seq],
+        }
+    }
+
+    /// Workspace laid out per `path.resolve(seq)`.
+    pub fn with_path(seq: usize, hd: usize, slots: usize, path: AttnPath) -> AttnWorkspace {
+        match path.resolve(seq) {
+            Some(tile) => AttnWorkspace::new_streaming(seq, hd, slots, tile),
+            None => AttnWorkspace::new(seq, hd, slots),
         }
     }
 
@@ -65,7 +164,56 @@ impl AttnWorkspace {
     /// `max_pairs = batch × heads` (batch, head) pairs: more slots than
     /// pool threads only waste memory, more than pairs never run.
     pub fn auto_slots(max_pairs: usize) -> usize {
-        pool::size().min(max_pairs).max(1)
+        pool::saturating_slots(max_pairs)
+    }
+
+    /// `Some(tile)` when laid out for the streaming path.
+    pub fn tile(&self) -> Option<usize> {
+        self.tile
+    }
+
+    /// Whether this workspace drives the streaming (flash-style) path.
+    pub fn is_streaming(&self) -> bool {
+        self.tile.is_some()
+    }
+
+    /// Human-readable path tag for bench/log lines.
+    pub fn path_label(&self) -> String {
+        match self.tile {
+            Some(tc) => format!("streaming(tile={tc})"),
+            None => "blocked".to_string(),
+        }
+    }
+
+    /// Total f32 elements across every buffer — the workspace memory
+    /// footprint tests do size accounting against.
+    pub fn total_floats(&self) -> usize {
+        self.q.len()
+            + self.k.len()
+            + self.v.len()
+            + self.o.len()
+            + self.scores.len()
+            + self.otile.len()
+            + self.stats.len()
+    }
+
+    /// Largest single per-slot panel in f32 elements: `seq²` for the
+    /// blocked layout, `max(seq·hd, seq·tile)` for streaming — the quantity
+    /// the no-`(t, t)`-buffer contract bounds.
+    pub fn max_slot_panel_floats(&self) -> usize {
+        [
+            self.q.len(),
+            self.k.len(),
+            self.v.len(),
+            self.o.len(),
+            self.scores.len(),
+            self.otile.len(),
+            self.stats.len(),
+        ]
+        .into_iter()
+        .map(|len| len / self.slots)
+        .max()
+        .unwrap_or(0)
     }
 
     /// Buffer base pointers — lets tests assert repeated attention calls
@@ -77,29 +225,68 @@ impl AttnWorkspace {
             self.v.as_ptr() as usize,
             self.o.as_ptr() as usize,
             self.scores.as_ptr() as usize,
+            self.otile.as_ptr() as usize,
+            self.stats.as_ptr() as usize,
         ]
     }
 }
 
-/// Backward-pass panel workspace: per slot, seven `(seq × hd)` panels
-/// (Q/K/V gathers, dO, dQ, dK, dV) plus one `(seq × seq)` dS matrix.
+/// Backward-pass panel workspace.  Blocked layout per slot: seven
+/// `(seq × hd)` panels (Q/K/V gathers, dO, dQ, dK, dV) plus one
+/// `(seq × seq)` dS matrix.  Streaming layout per slot: five `(seq × hd)`
+/// panels (Q, dO, dQ, recomputed O, tile staging), four `(tile × hd)` K/V
+/// tiles (K, V, dK, dV), two `(seq × tile)` score tiles (P, dP), and
+/// `4·seq` stats (m, l, rescale, `D = Σ dO⊙O`) — nothing quadratic in
+/// `seq`.
 #[derive(Debug)]
 pub struct AttnGradWorkspace {
     seq: usize,
     hd: usize,
     slots: usize,
+    /// `Some(tc)` = streaming recompute layout; `None` = retained-probs.
+    tile: Option<usize>,
     panels: Vec<f32>,
 }
 
+/// Per-slot f32 stride of the streaming grad layout.
+fn stream_grad_stride(seq: usize, hd: usize, tile: usize) -> usize {
+    5 * seq * hd + 4 * tile * hd + 2 * seq * tile + 4 * seq
+}
+
 impl AttnGradWorkspace {
+    /// Retained-probs (blocked) backward workspace.
     pub fn new(seq: usize, hd: usize, slots: usize) -> AttnGradWorkspace {
         let slots = slots.max(1);
         AttnGradWorkspace {
             seq,
             hd,
             slots,
+            tile: None,
             panels: vec![0.0; slots * (7 * seq * hd + seq * seq)],
         }
+    }
+
+    /// Recompute-based (streaming) backward workspace at tile width `tile`.
+    pub fn new_streaming(seq: usize, hd: usize, slots: usize, tile: usize) -> AttnGradWorkspace {
+        let slots = slots.max(1);
+        let tile = tile.clamp(1, seq.max(1));
+        AttnGradWorkspace {
+            seq,
+            hd,
+            slots,
+            tile: Some(tile),
+            panels: vec![0.0; slots * stream_grad_stride(seq, hd, tile)],
+        }
+    }
+
+    /// `Some(tile)` when laid out for the streaming recompute backward.
+    pub fn tile(&self) -> Option<usize> {
+        self.tile
+    }
+
+    /// Total f32 elements (size-accounting tests).
+    pub fn total_floats(&self) -> usize {
+        self.panels.len()
     }
 
     pub fn fingerprint(&self) -> Vec<usize> {
@@ -135,14 +322,120 @@ fn masked_softmax_rows(sc: &mut [f32], t_len: usize, scale: f32) {
     }
 }
 
-/// Blocked causal multi-head attention over the packed qkv buffer
-/// (`(batch·t_len, 3d)`: q | k | v, heads interleaved within each third),
-/// merged heads written to `att` (`(batch·t_len, d)`).
+/// Gather one head's strided Q/K/V columns for rows `base..base + t_len`
+/// of the packed `(rows, 3d)` qkv buffer into contiguous panels.
+#[allow(clippy::too_many_arguments)]
+fn gather_rows(
+    qkv: &[f32],
+    base: usize,
+    w3: usize,
+    off: usize,
+    hd: usize,
+    rows: std::ops::Range<usize>,
+    dst: &mut [f32],
+) {
+    for (i, t) in rows.enumerate() {
+        let row = (base + t) * w3 + off;
+        dst[i * hd..(i + 1) * hd].copy_from_slice(&qkv[row..row + hd]);
+    }
+}
+
+/// One (batch, head) pair of the streaming forward over a slot's panels.
+/// Leaves the **unnormalized** output accumulator in `oh` and the final
+/// running max / denominator in `m` / `l` (callers divide by `l` — the
+/// forward scatters `oh/l`, the backward also needs `m`/`l` to recompute
+/// probs).  `ch` is per-row rescale staging.
+#[allow(clippy::too_many_arguments)]
+fn stream_pair_forward(
+    qkv: &[f32],
+    base: usize,
+    w3: usize,
+    ko: usize,
+    vo: usize,
+    t_len: usize,
+    hd: usize,
+    scale: f32,
+    tc: usize,
+    qh: &[f32],
+    kt: &mut [f32],
+    vt: &mut [f32],
+    oh: &mut [f32],
+    ot: &mut [f32],
+    pt: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    ch: &mut [f32],
+) {
+    let mut j0 = 0usize;
+    while j0 < t_len {
+        let jlen = tc.min(t_len - j0);
+        gather_rows(qkv, base, w3, ko, hd, j0..j0 + jlen, kt);
+        gather_rows(qkv, base, w3, vo, hd, j0..j0 + jlen, vt);
+        // Causal: rows above the tile's diagonal see none of its keys —
+        // only rows `j0..t_len` participate.
+        let ra = t_len - j0;
+        let p = &mut pt[..ra * jlen];
+        kernels::matmul_nt_f32(&qh[j0 * hd..t_len * hd], &kt[..jlen * hd], ra, hd, jlen, p);
+        let first = j0 == 0;
+        for i in 0..ra {
+            let t1 = j0 + i;
+            // Row t1 sees keys t2 ≤ t1 → local indices < t1 − j0 + 1.
+            let vis = jlen.min(i + 1);
+            let prow = &mut p[i * jlen..(i + 1) * jlen];
+            let mut tm = f32::NEG_INFINITY;
+            for s in prow[..vis].iter_mut() {
+                *s *= scale;
+                if *s > tm {
+                    tm = *s;
+                }
+            }
+            let m_new = if first { tm } else { m[t1].max(tm) };
+            let corr = if first { 0.0 } else { (m[t1] - m_new).exp() };
+            let mut tsum = 0.0f32;
+            for s in prow[..vis].iter_mut() {
+                *s = (*s - m_new).exp();
+                tsum += *s;
+            }
+            for s in prow[vis..].iter_mut() {
+                *s = 0.0;
+            }
+            l[t1] = if first { tsum } else { l[t1] * corr + tsum };
+            m[t1] = m_new;
+            ch[t1] = corr;
+        }
+        if first {
+            // Tile 0 covers every row: write the accumulator directly, no
+            // stale state from a previous pair survives.
+            kernels::matmul_f32(p, &vt[..jlen * hd], ra, jlen, hd, &mut oh[..ra * hd]);
+        } else {
+            kernels::matmul_f32(p, &vt[..jlen * hd], ra, jlen, hd, &mut ot[..ra * hd]);
+            for i in 0..ra {
+                let t1 = j0 + i;
+                let corr = ch[t1];
+                for (od, &os) in
+                    oh[t1 * hd..(t1 + 1) * hd].iter_mut().zip(&ot[i * hd..(i + 1) * hd])
+                {
+                    *od = *od * corr + os;
+                }
+            }
+        }
+        j0 += jlen;
+    }
+}
+
+/// Causal multi-head attention over the packed qkv buffer (`(batch·t_len,
+/// 3d)`: q | k | v, heads interleaved within each third), merged heads
+/// written to `att` (`(batch·t_len, d)`).  The workspace layout selects the
+/// formulation: blocked ([`AttnWorkspace::new`]) or streaming
+/// ([`AttnWorkspace::new_streaming`]) — both compute the same function to
+/// f32 rounding (the equivalence suite pins them against a scalar oracle).
 ///
 /// `probs = Some(buf)` retains the causal softmax weights — `buf` must hold
 /// `batch · heads · t_len²` floats, one `(t_len, t_len)` matrix per
-/// (batch, head) pair — for a training backward pass
-/// ([`causal_attention_backward`]); `None` discards them (serving).
+/// (batch, head) pair — for the retained-probs backward pass
+/// ([`causal_attention_backward`]); it requires a **blocked** workspace
+/// (the streaming path exists precisely to never build those matrices; its
+/// backward recomputes them tile by tile instead).  `None` discards.
 ///
 /// Allocation-free: all intermediates live in `ws`; the `(batch × head)`
 /// pair loop fans out over the worker pool, one workspace slot per chunk.
@@ -161,6 +454,10 @@ pub fn causal_attention(
     let hd = d / heads;
     assert_eq!(hd, ws.hd, "workspace head width mismatch");
     assert!(t_len <= ws.seq, "workspace sized for seq {}, got {t_len}", ws.seq);
+    assert!(
+        probs.is_none() || ws.tile.is_none(),
+        "probs retention requires a blocked workspace (streaming never materializes (t, t))"
+    );
     let rows = batch * t_len;
     let w3 = 3 * d;
     assert!(qkv.len() >= rows * w3, "qkv buffer too small");
@@ -184,61 +481,116 @@ pub fn causal_attention(
         SendPtr(ws.o.as_mut_ptr()),
         SendPtr(ws.scores.as_mut_ptr()),
     );
+    let (otp, stp) = (SendPtr(ws.otile.as_mut_ptr()), SendPtr(ws.stats.as_mut_ptr()));
     let panel = ws.seq * ws.hd;
-    let smat = ws.seq * ws.seq;
+    let ws_seq = ws.seq;
 
-    pool::parallel_for(slots, &|ci| {
-        // Safety: slot regions `[ci·panel, ci·panel + t_len·hd)` are
-        // disjoint across chunk indices (ci < slots), and `ws` is borrowed
-        // mutably for the whole dispatch, so nothing else touches them.
-        let (qh, kh, vh, oh, slot_sc) = unsafe {
-            (
-                std::slice::from_raw_parts_mut(qp.0.add(ci * panel), t_len * hd),
-                std::slice::from_raw_parts_mut(kp.0.add(ci * panel), t_len * hd),
-                std::slice::from_raw_parts_mut(vp.0.add(ci * panel), t_len * hd),
-                std::slice::from_raw_parts_mut(op.0.add(ci * panel), t_len * hd),
-                std::slice::from_raw_parts_mut(sp.0.add(ci * smat), t_len * t_len),
-            )
-        };
-        for pair in (ci..n_pairs).step_by(slots) {
-            let b = pair / heads;
-            let head = pair % heads;
-            let base = b * t_len;
-            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
-            for t1 in 0..t_len {
-                let row = (base + t1) * w3;
-                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
-                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
-                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
-            }
-            // Scores land directly in the retained probs matrix when the
-            // caller keeps them, in the slot scratch otherwise.
-            // Safety (Some): pair regions `[pair·t_len², (pair+1)·t_len²)`
-            // are disjoint across pairs, and each pair is processed exactly
-            // once (strided partition over ci).
-            let sc: &mut [f32] = match probs_ptr {
-                Some(p) => unsafe {
-                    std::slice::from_raw_parts_mut(p.0.add(pair * t_len * t_len), t_len * t_len)
-                },
-                None => &mut slot_sc[..],
-            };
-            kernels::matmul_nt_f32(qh, kh, t_len, hd, t_len, sc);
-            masked_softmax_rows(sc, t_len, scale);
-            kernels::matmul_f32(sc, vh, t_len, t_len, hd, oh);
-            for t1 in 0..t_len {
-                let dst = (base + t1) * d + head * hd;
-                // Safety: pair (b, head) owns columns [head·hd, (head+1)·hd)
-                // of rows [base, base + t_len) — disjoint across pairs.
-                let out = unsafe { std::slice::from_raw_parts_mut(att_ptr.0.add(dst), hd) };
-                out.copy_from_slice(&oh[t1 * hd..(t1 + 1) * hd]);
-            }
+    match ws.tile {
+        None => {
+            let smat = ws_seq * ws_seq;
+            pool::parallel_for(slots, &|ci| {
+                // Safety: slot regions `[ci·panel, ci·panel + t_len·hd)` are
+                // disjoint across chunk indices (ci < slots), and `ws` is
+                // borrowed mutably for the whole dispatch, so nothing else
+                // touches them.
+                let (qh, kh, vh, oh, slot_sc) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(qp.0.add(ci * panel), t_len * hd),
+                        std::slice::from_raw_parts_mut(kp.0.add(ci * panel), t_len * hd),
+                        std::slice::from_raw_parts_mut(vp.0.add(ci * panel), t_len * hd),
+                        std::slice::from_raw_parts_mut(op.0.add(ci * panel), t_len * hd),
+                        std::slice::from_raw_parts_mut(sp.0.add(ci * smat), t_len * t_len),
+                    )
+                };
+                for pair in (ci..n_pairs).step_by(slots) {
+                    let b = pair / heads;
+                    let head = pair % heads;
+                    let base = b * t_len;
+                    let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+                    gather_rows(qkv, base, w3, qo, hd, 0..t_len, qh);
+                    gather_rows(qkv, base, w3, ko, hd, 0..t_len, kh);
+                    gather_rows(qkv, base, w3, vo, hd, 0..t_len, vh);
+                    // Scores land directly in the retained probs matrix when
+                    // the caller keeps them, in the slot scratch otherwise.
+                    // Safety (Some): pair regions `[pair·t_len², (pair+1)·t_len²)`
+                    // are disjoint across pairs, and each pair is processed
+                    // exactly once (strided partition over ci).
+                    let sc: &mut [f32] = match probs_ptr {
+                        Some(p) => unsafe {
+                            std::slice::from_raw_parts_mut(
+                                p.0.add(pair * t_len * t_len),
+                                t_len * t_len,
+                            )
+                        },
+                        None => &mut slot_sc[..],
+                    };
+                    kernels::matmul_nt_f32(qh, kh, t_len, hd, t_len, sc);
+                    masked_softmax_rows(sc, t_len, scale);
+                    kernels::matmul_f32(sc, vh, t_len, t_len, hd, oh);
+                    for t1 in 0..t_len {
+                        let dst = (base + t1) * d + head * hd;
+                        // Safety: pair (b, head) owns columns
+                        // [head·hd, (head+1)·hd) of rows [base, base + t_len)
+                        // — disjoint across pairs.
+                        let out =
+                            unsafe { std::slice::from_raw_parts_mut(att_ptr.0.add(dst), hd) };
+                        out.copy_from_slice(&oh[t1 * hd..(t1 + 1) * hd]);
+                    }
+                }
+            });
         }
-    });
+        Some(tc) => {
+            let kpanel = tc * ws.hd;
+            let ptile = ws_seq * tc;
+            pool::parallel_for(slots, &|ci| {
+                // Safety: same per-slot disjointness as the blocked arm,
+                // with the streaming strides (kpanel, ptile, 3·seq stats).
+                let (qh, kt, vt, oh, ot, pt, st) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(qp.0.add(ci * panel), t_len * hd),
+                        std::slice::from_raw_parts_mut(kp.0.add(ci * kpanel), kpanel),
+                        std::slice::from_raw_parts_mut(vp.0.add(ci * kpanel), kpanel),
+                        std::slice::from_raw_parts_mut(op.0.add(ci * panel), t_len * hd),
+                        std::slice::from_raw_parts_mut(otp.0.add(ci * panel), t_len * hd),
+                        std::slice::from_raw_parts_mut(sp.0.add(ci * ptile), t_len * tc),
+                        std::slice::from_raw_parts_mut(stp.0.add(ci * 3 * ws_seq), 3 * t_len),
+                    )
+                };
+                let (m, rest) = st.split_at_mut(t_len);
+                let (l, ch) = rest.split_at_mut(t_len);
+                for pair in (ci..n_pairs).step_by(slots) {
+                    let b = pair / heads;
+                    let head = pair % heads;
+                    let base = b * t_len;
+                    let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+                    gather_rows(qkv, base, w3, qo, hd, 0..t_len, qh);
+                    stream_pair_forward(
+                        qkv, base, w3, ko, vo, t_len, hd, scale, tc, qh, kt, vt, oh, ot, pt, m,
+                        l, ch,
+                    );
+                    for t1 in 0..t_len {
+                        let inv = 1.0 / l[t1];
+                        let dst = (base + t1) * d + head * hd;
+                        // Safety: pair (b, head) owns columns
+                        // [head·hd, (head+1)·hd) of rows [base, base + t_len)
+                        // — disjoint across pairs.
+                        let out =
+                            unsafe { std::slice::from_raw_parts_mut(att_ptr.0.add(dst), hd) };
+                        for (o, &x) in out.iter_mut().zip(&oh[t1 * hd..(t1 + 1) * hd]) {
+                            *o = x * inv;
+                        }
+                    }
+                }
+            });
+        }
+    }
 }
 
 /// Backward through the causal attention: `datt` (rows, d) and the retained
 /// `probs` from [`causal_attention`] → `dqkv` (rows, 3d).  Same slot-strided
-/// pooled pair loop as the forward; allocation-free given `ws`.
+/// pooled pair loop as the forward; allocation-free given a **blocked**
+/// `ws` ([`AttnGradWorkspace::new`]).  The streaming counterpart that needs
+/// no retained probs is [`causal_attention_backward_streaming`].
 #[allow(clippy::too_many_arguments)]
 pub fn causal_attention_backward(
     qkv: &[f32],
@@ -255,6 +607,7 @@ pub fn causal_attention_backward(
     let hd = d / heads;
     assert_eq!(hd, ws.hd, "grad workspace head width mismatch");
     assert!(t_len <= ws.seq, "grad workspace sized for seq {}, got {t_len}", ws.seq);
+    assert!(ws.tile.is_none(), "retained-probs backward requires a blocked grad workspace");
     let rows = batch * t_len;
     let w3 = 3 * d;
     let n_pairs = batch * heads;
@@ -294,14 +647,10 @@ pub fn causal_attention_backward(
             let head = pair % heads;
             let base = b * t_len;
             let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
-            for t1 in 0..t_len {
-                let row = (base + t1) * w3;
-                qh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + qo..row + qo + hd]);
-                kh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + ko..row + ko + hd]);
-                vh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&qkv[row + vo..row + vo + hd]);
-                let adst = (base + t1) * d + head * hd;
-                doh[t1 * hd..(t1 + 1) * hd].copy_from_slice(&datt[adst..adst + hd]);
-            }
+            gather_rows(qkv, base, w3, qo, hd, 0..t_len, qh);
+            gather_rows(qkv, base, w3, ko, hd, 0..t_len, kh);
+            gather_rows(qkv, base, w3, vo, hd, 0..t_len, vh);
+            gather_rows(datt, base, d, head * hd, hd, 0..t_len, doh);
             let p = &probs[pair * t_len * t_len..(pair + 1) * t_len * t_len];
             // dV = Pᵀ·dO
             for x in dvh.iter_mut() {
@@ -343,6 +692,211 @@ pub fn causal_attention_backward(
                 dq.copy_from_slice(&dqh[t1 * hd..(t1 + 1) * hd]);
                 dk.copy_from_slice(&dkh[t1 * hd..(t1 + 1) * hd]);
                 dv.copy_from_slice(&dvh[t1 * hd..(t1 + 1) * hd]);
+            }
+        }
+    });
+}
+
+/// Recompute-based (flash-style) backward: `datt` (rows, d) → `dqkv`
+/// (rows, 3d) with **no retained probs** — per (batch, head) pair the
+/// streaming forward is replayed once to rebuild the per-row softmax
+/// statistics (`m`, `l`) and the unnormalized output (for `D = Σ dO⊙O`),
+/// then each K/V tile's probability panel is recomputed as
+/// `exp(scale·S − m)/l` and consumed immediately by the dV/dP/dS/dQ/dK
+/// products.  Nothing quadratic in `t_len` is ever held; allocation-free
+/// given a streaming `ws` ([`AttnGradWorkspace::new_streaming`]).
+///
+/// Same slot-strided pooled pair loop as the forward.  Matches
+/// [`causal_attention_backward`] to f32 rounding (the equivalence suite
+/// pins the two against each other and against finite differences).
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_backward_streaming(
+    qkv: &[f32],
+    datt: &[f32],
+    batch: usize,
+    t_len: usize,
+    d: usize,
+    heads: usize,
+    ws: &mut AttnGradWorkspace,
+    dqkv: &mut [f32],
+) {
+    assert!(heads > 0 && d % heads == 0, "d {d} not divisible by heads {heads}");
+    let hd = d / heads;
+    assert_eq!(hd, ws.hd, "grad workspace head width mismatch");
+    assert!(t_len <= ws.seq, "grad workspace sized for seq {}, got {t_len}", ws.seq);
+    let tc = ws.tile.expect("streaming backward requires a streaming grad workspace");
+    let rows = batch * t_len;
+    let w3 = 3 * d;
+    let n_pairs = batch * heads;
+    assert!(qkv.len() >= rows * w3 && datt.len() >= rows * d && dqkv.len() >= rows * w3);
+    if n_pairs == 0 || t_len == 0 {
+        return;
+    }
+    let scale = 1.0 / (hd as f32).sqrt();
+    let slots = ws.slots.min(n_pairs);
+
+    let dqkv_ptr = SendPtr(dqkv.as_mut_ptr());
+    let panels_ptr = SendPtr(ws.panels.as_mut_ptr());
+    let panel = ws.seq * ws.hd;
+    let kpanel = tc * ws.hd;
+    let ptile = ws.seq * tc;
+    let slot_stride = stream_grad_stride(ws.seq, ws.hd, tc);
+    let ws_seq = ws.seq;
+
+    pool::parallel_for(slots, &|ci| {
+        // Safety: slot `ci` owns panels `[ci·slot_stride, (ci+1)·slot_stride)`
+        // — disjoint across chunk indices; `ws` is mutably borrowed for the
+        // whole dispatch.
+        let slot = unsafe {
+            std::slice::from_raw_parts_mut(panels_ptr.0.add(ci * slot_stride), slot_stride)
+        };
+        let (qh, rest) = slot.split_at_mut(panel);
+        let (doh, rest) = rest.split_at_mut(panel);
+        let (dqh, rest) = rest.split_at_mut(panel);
+        let (oh, rest) = rest.split_at_mut(panel);
+        let (tmp, rest) = rest.split_at_mut(panel);
+        let (kt, rest) = rest.split_at_mut(kpanel);
+        let (vt, rest) = rest.split_at_mut(kpanel);
+        let (dkt, rest) = rest.split_at_mut(kpanel);
+        let (dvt, rest) = rest.split_at_mut(kpanel);
+        let (pt, rest) = rest.split_at_mut(ptile);
+        let (dpt, stats) = rest.split_at_mut(ptile);
+        let (qh, doh) = (&mut qh[..t_len * hd], &mut doh[..t_len * hd]);
+        let (dqh, oh) = (&mut dqh[..t_len * hd], &mut oh[..t_len * hd]);
+        let tmp = &mut tmp[..t_len * hd];
+        let (m, rest) = stats.split_at_mut(ws_seq);
+        let (l, rest) = rest.split_at_mut(ws_seq);
+        let (ch, dsum) = rest.split_at_mut(ws_seq);
+        let (m, l, ch) = (&mut m[..t_len], &mut l[..t_len], &mut ch[..t_len]);
+        let dsum = &mut dsum[..t_len];
+        for pair in (ci..n_pairs).step_by(slots) {
+            let b = pair / heads;
+            let head = pair % heads;
+            let base = b * t_len;
+            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+            gather_rows(qkv, base, w3, qo, hd, 0..t_len, qh);
+            gather_rows(datt, base, d, head * hd, hd, 0..t_len, doh);
+
+            // Pass 1: replay the streaming forward — rebuilds m/l and the
+            // unnormalized accumulator; `O = oh/l` gives `D = Σ_j dO⊙O`
+            // (= Σ_j P·dP rowsum, the softmax-backward inner product).
+            stream_pair_forward(
+                qkv, base, w3, ko, vo, t_len, hd, scale, tc, qh, kt, vt, oh, tmp, pt, m, l, ch,
+            );
+            for t1 in 0..t_len {
+                let inv = 1.0 / l[t1];
+                let mut dsv = 0f32;
+                for (&ov, &dov) in oh[t1 * hd..(t1 + 1) * hd].iter().zip(&doh[t1 * hd..]) {
+                    dsv += ov * inv * dov;
+                }
+                dsum[t1] = dsv;
+            }
+            for x in dqh.iter_mut() {
+                *x = 0.0;
+            }
+
+            // Pass 2: per K/V tile, rebuild the probability panel from the
+            // final statistics and consume it immediately.
+            let mut j0 = 0usize;
+            while j0 < t_len {
+                let jlen = tc.min(t_len - j0);
+                gather_rows(qkv, base, w3, ko, hd, j0..j0 + jlen, kt);
+                gather_rows(qkv, base, w3, vo, hd, j0..j0 + jlen, vt);
+                let ra = t_len - j0;
+                let p = &mut pt[..ra * jlen];
+                kernels::matmul_nt_f32(
+                    &qh[j0 * hd..t_len * hd],
+                    &kt[..jlen * hd],
+                    ra,
+                    hd,
+                    jlen,
+                    p,
+                );
+                // P_ij = exp(scale·S_ij − m_i) / l_i on the causal support.
+                for i in 0..ra {
+                    let t1 = j0 + i;
+                    let vis = jlen.min(i + 1);
+                    let (mi, inv_l) = (m[t1], 1.0 / l[t1]);
+                    let prow = &mut p[i * jlen..(i + 1) * jlen];
+                    for s in prow[..vis].iter_mut() {
+                        *s = (*s * scale - mi).exp() * inv_l;
+                    }
+                    for s in prow[vis..].iter_mut() {
+                        *s = 0.0;
+                    }
+                }
+                // dV_tile = Pᵀ·dO over the active rows.
+                for x in dvt[..jlen * hd].iter_mut() {
+                    *x = 0.0;
+                }
+                kernels::matmul_tn_acc_f32(
+                    p,
+                    &doh[j0 * hd..t_len * hd],
+                    ra,
+                    jlen,
+                    hd,
+                    &mut dvt[..jlen * hd],
+                );
+                // dP_tile = dO·V_tileᵀ.
+                kernels::matmul_nt_f32(
+                    &doh[j0 * hd..t_len * hd],
+                    &vt[..jlen * hd],
+                    ra,
+                    hd,
+                    jlen,
+                    &mut dpt[..ra * jlen],
+                );
+                // dS = P ⊙ (dP − D) · scale, written over the P panel
+                // (masked entries are already 0 there and stay 0).
+                for i in 0..ra {
+                    let t1 = j0 + i;
+                    let vis = jlen.min(i + 1);
+                    let dsv = dsum[t1];
+                    let prow = &mut p[i * jlen..(i + 1) * jlen];
+                    for (s, &dp) in prow[..vis].iter_mut().zip(&dpt[i * jlen..]) {
+                        *s *= (dp - dsv) * scale;
+                    }
+                }
+                // dQ[j0..] += dS·K_tile (staged through tmp — the pooled
+                // matmul overwrites its output).
+                kernels::matmul_f32(p, &kt[..jlen * hd], ra, jlen, hd, &mut tmp[..ra * hd]);
+                for (dq, &tv) in dqh[j0 * hd..t_len * hd].iter_mut().zip(&tmp[..ra * hd]) {
+                    *dq += tv;
+                }
+                // dK_tile = dSᵀ·Q over the active rows.
+                for x in dkt[..jlen * hd].iter_mut() {
+                    *x = 0.0;
+                }
+                kernels::matmul_tn_acc_f32(
+                    p,
+                    &qh[j0 * hd..t_len * hd],
+                    ra,
+                    jlen,
+                    hd,
+                    &mut dkt[..jlen * hd],
+                );
+                // Each key row lives in exactly one tile: scatter dK/dV now.
+                for (jj, t2) in (j0..j0 + jlen).enumerate() {
+                    let row = (base + t2) * w3;
+                    // Safety: pair (b, head) owns the k/v column ranges of
+                    // its head within rows [base, base + t_len) — disjoint
+                    // across pairs; each (pair, key row) is written once.
+                    let (dk, dv) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(dqkv_ptr.0.add(row + ko), hd),
+                            std::slice::from_raw_parts_mut(dqkv_ptr.0.add(row + vo), hd),
+                        )
+                    };
+                    dk.copy_from_slice(&dkt[jj * hd..(jj + 1) * hd]);
+                    dv.copy_from_slice(&dvt[jj * hd..(jj + 1) * hd]);
+                }
+                j0 += jlen;
+            }
+            for t1 in 0..t_len {
+                let row = (base + t1) * w3;
+                // Safety: as above — pair-owned query columns, written once.
+                let dq = unsafe { std::slice::from_raw_parts_mut(dqkv_ptr.0.add(row + qo), hd) };
+                dq.copy_from_slice(&dqh[t1 * hd..(t1 + 1) * hd]);
             }
         }
     });
@@ -397,7 +951,8 @@ mod tests {
         // Randomized (batch, heads, head width, seq, slot count): the pooled
         // head-parallel path and the probs-retaining path must both agree
         // with the scalar recurrence, and retained probs rows must be causal
-        // distributions.
+        // distributions.  (The three-way streaming ≡ blocked ≡ scalar grid
+        // lives in tests/attention_equivalence.rs.)
         crate::prop::forall(
             610,
             40,
@@ -451,6 +1006,43 @@ mod tests {
     }
 
     #[test]
+    fn streaming_matches_blocked_basic() {
+        // Smoke-level streaming ≡ blocked check (the randomized grid with
+        // adversarial shapes lives in tests/attention_equivalence.rs).
+        let (batch, heads, hd, t_len) = (2usize, 3usize, 5usize, 17usize);
+        let d = heads * hd;
+        let mut rng = Rng::new(613);
+        let qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+        let mut att_b = vec![0f32; batch * t_len * d];
+        let mut att_s = vec![0f32; batch * t_len * d];
+        let mut ws_b = AttnWorkspace::new(t_len, hd, 2);
+        causal_attention(&qkv, batch, t_len, d, heads, &mut ws_b, &mut att_b, None);
+        for tile in [1usize, 4, 7, 17, 32] {
+            let mut ws_s = AttnWorkspace::new_streaming(t_len, hd, 3, tile);
+            assert!(ws_s.is_streaming());
+            causal_attention(&qkv, batch, t_len, d, heads, &mut ws_s, &mut att_s, None);
+            for (i, (s, b)) in att_s.iter().zip(&att_b).enumerate() {
+                assert!(
+                    (s - b).abs() < 1e-5 * 1.0f32.max(b.abs()),
+                    "tile {tile} att[{i}]: streaming {s} vs blocked {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "probs retention requires a blocked workspace")]
+    fn streaming_workspace_rejects_probs_retention() {
+        let (batch, heads, hd, t_len) = (1usize, 1usize, 2usize, 4usize);
+        let d = heads * hd;
+        let qkv = vec![0.1f32; batch * t_len * 3 * d];
+        let mut att = vec![0f32; batch * t_len * d];
+        let mut probs = vec![0f32; batch * heads * t_len * t_len];
+        let mut ws = AttnWorkspace::new_streaming(t_len, hd, 1, 2);
+        causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, Some(&mut probs));
+    }
+
+    #[test]
     fn backward_matches_finite_difference_through_forward() {
         // Central-difference check of dL/dqkv for L = Σ c·att through the
         // shared forward/backward pair, across several slot counts.
@@ -496,18 +1088,96 @@ mod tests {
     }
 
     #[test]
+    fn streaming_backward_matches_retained_backward() {
+        // The recompute-based streaming backward must reproduce the
+        // retained-probs backward to f32 rounding, across tiles and slots
+        // (the tiny cross-path pin; the full grid + finite differences
+        // live in tests/attention_equivalence.rs).
+        let (batch, heads, hd, t_len) = (2usize, 2usize, 3usize, 11usize);
+        let d = heads * hd;
+        let mut rng = Rng::new(614);
+        let qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+        let datt: Vec<f32> = (0..batch * t_len * d).map(|_| rng.normal() as f32).collect();
+
+        let mut ws = AttnWorkspace::new(t_len, hd, 2);
+        let mut att = vec![0f32; batch * t_len * d];
+        let mut probs = vec![0f32; batch * heads * t_len * t_len];
+        causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, Some(&mut probs));
+        let mut want = vec![0f32; batch * t_len * 3 * d];
+        let mut gws = AttnGradWorkspace::new(t_len, hd, 2);
+        causal_attention_backward(
+            &qkv, &probs, &datt, batch, t_len, d, heads, &mut gws, &mut want,
+        );
+
+        for (tile, slots) in [(1usize, 1usize), (4, 2), (5, 4), (11, 3), (16, 1)] {
+            let mut sgws = AttnGradWorkspace::new_streaming(t_len, hd, slots, tile);
+            let mut got = vec![0f32; batch * t_len * 3 * d];
+            causal_attention_backward_streaming(
+                &qkv, &datt, batch, t_len, d, heads, &mut sgws, &mut got,
+            );
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() < 1e-4 * 1.0f32.max(w.abs()),
+                    "tile {tile} slots {slots} dqkv[{i}]: streaming {g} vs retained {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn workspace_never_reallocates_across_calls() {
         let (batch, heads, hd, t_len) = (2usize, 4usize, 8usize, 16usize);
         let d = heads * hd;
         let mut rng = Rng::new(612);
         let qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
-        let mut ws = AttnWorkspace::new(t_len, hd, AttnWorkspace::auto_slots(batch * heads));
         let mut att = vec![0f32; batch * t_len * d];
-        causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
-        let fp = ws.fingerprint();
-        for _ in 0..4 {
+        for mut ws in [
+            AttnWorkspace::new(t_len, hd, AttnWorkspace::auto_slots(batch * heads)),
+            AttnWorkspace::new_streaming(t_len, hd, AttnWorkspace::auto_slots(batch * heads), 4),
+        ] {
             causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
+            let fp = ws.fingerprint();
+            for _ in 0..4 {
+                causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
+            }
+            assert_eq!(ws.fingerprint(), fp, "attention workspace must not reallocate");
         }
-        assert_eq!(ws.fingerprint(), fp, "attention workspace must not reallocate");
+    }
+
+    #[test]
+    fn streaming_workspace_is_linear_in_seq() {
+        // The no-(t, t)-buffer contract, as size accounting: the streaming
+        // layout's largest per-slot panel is max(seq·hd, seq·tile) and the
+        // total footprint scales linearly when seq doubles; the blocked
+        // layout is quadratic.
+        let (hd, tile, slots) = (16usize, 32usize, 2usize);
+        for seq in [256usize, 512] {
+            let s = AttnWorkspace::new_streaming(seq, hd, slots, tile);
+            let b = AttnWorkspace::new(seq, hd, slots);
+            assert_eq!(s.max_slot_panel_floats(), seq * tile.max(hd));
+            assert!(s.max_slot_panel_floats() < seq * seq, "streaming panel must stay sub-(t,t)");
+            assert_eq!(b.max_slot_panel_floats(), seq * seq);
+            assert!(s.total_floats() < b.total_floats());
+            let g = AttnGradWorkspace::new_streaming(seq, hd, slots, tile);
+            assert_eq!(g.total_floats(), slots * stream_grad_stride(seq, hd, tile));
+            assert!(g.total_floats() < AttnGradWorkspace::new(seq, hd, slots).total_floats());
+        }
+        // Doubling seq at most doubles the footprint (the K/V tile panels
+        // are constant in seq, everything else is linear — nothing is
+        // quadratic).  The blocked layout quadruples its score matrices.
+        let s1 = AttnWorkspace::new_streaming(256, hd, slots, tile).total_floats();
+        let s2 = AttnWorkspace::new_streaming(512, hd, slots, tile).total_floats();
+        assert!(s2 <= 2 * s1, "streaming workspace must scale (sub-)linearly in seq: {s1} -> {s2}");
+    }
+
+    #[test]
+    fn attn_path_resolution() {
+        assert_eq!(AttnPath::Blocked.resolve(4096), None);
+        assert_eq!(AttnPath::Streaming { tile: 32 }.resolve(8), Some(32));
+        let auto = AttnPath::Auto { min_seq: 256, tile: 64 };
+        assert_eq!(auto.resolve(255), None);
+        assert_eq!(auto.resolve(256), Some(64));
+        assert!(AttnWorkspace::with_path(512, 8, 1, AttnPath::auto_default()).is_streaming());
+        assert!(!AttnWorkspace::with_path(64, 8, 1, AttnPath::auto_default()).is_streaming());
     }
 }

@@ -28,4 +28,12 @@ pub trait ServingBackend {
     /// Execute one batch (row-major `(batch, seq_len)` tokens, padded to the
     /// fixed serving batch) on a tier.
     fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]>;
+    /// Attention-path tag for bench/log lines ("blocked",
+    /// "streaming(tile=64)", …).  The native backend reports its scratch's
+    /// resolved [`crate::runtime::attention::AttnPath`]; backends whose
+    /// attention is opaque (compiled artifacts, remote devices) keep the
+    /// default.
+    fn attn_path_label(&self) -> String {
+        "n/a".to_string()
+    }
 }

@@ -73,6 +73,16 @@ pub struct ModelConfig {
     pub bench_dim: usize,
     pub bench_batch: usize,
     pub lora_rank: usize,
+    /// Streaming (flash-style) attention K/V tile width Tc.  Optional in
+    /// configs/*.json; defaults to
+    /// [`crate::runtime::attention::DEFAULT_ATTN_TILE`].
+    pub attn_tile: usize,
+    /// Sequence-length crossover for the attention path: workspaces pick
+    /// the streaming formulation at/above this `seq_len` and the blocked
+    /// `(t, t)`-score formulation below it.  Optional in configs/*.json;
+    /// defaults to
+    /// [`crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ`].
+    pub attn_streaming_min_seq: usize,
 }
 
 impl ModelConfig {
@@ -99,6 +109,16 @@ impl ModelConfig {
             bench_dim: v.req("bench_dim")?.as_usize()?,
             bench_batch: v.req("bench_batch")?.as_usize()?,
             lora_rank: v.req("lora_rank")?.as_usize()?,
+            attn_tile: v
+                .get("attn_tile")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(crate::runtime::attention::DEFAULT_ATTN_TILE),
+            attn_streaming_min_seq: v
+                .get("attn_streaming_min_seq")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -121,7 +141,22 @@ impl ModelConfig {
             self.d_model,
             self.n_heads
         );
+        anyhow::ensure!(
+            self.attn_tile > 0,
+            "config '{}': attn_tile must be positive",
+            self.name
+        );
         Ok(())
+    }
+
+    /// Attention path selection the serving/training workspaces resolve at
+    /// their sequence length: streaming at/above `attn_streaming_min_seq`
+    /// with tile `attn_tile`, blocked below.
+    pub fn attn_path(&self) -> crate::runtime::attention::AttnPath {
+        crate::runtime::attention::AttnPath::Auto {
+            min_seq: self.attn_streaming_min_seq,
+            tile: self.attn_tile,
+        }
     }
 
     /// The four factorization surfaces per block: (kind, n_in, m_out).

@@ -1,8 +1,12 @@
 //! Runtime — execution backends for the serving/training stack.
 //!
-//! * [`attention`] — the single blocked causal attention implementation,
-//!   shared by the serving and training forwards (probs retained or
-//!   discarded), head-parallel over the worker pool.
+//! * [`attention`] — the single causal attention implementation, shared by
+//!   the serving and training forwards, head-parallel over the worker
+//!   pool.  Two formulations behind one entry point: blocked ((t, t)
+//!   scores, probs retained or discarded) and streaming/flash-style (tiled
+//!   K/V, online softmax, nothing quadratic in seq; backward recomputes
+//!   probs tile by tile), selected by the workspace layout at the
+//!   config's sequence-length crossover.
 //! * [`backend`] — the [`ServingBackend`] trait the coordinator, serving
 //!   bench, and CLI dispatch through.
 //! * [`native`] (default) — the pure-rust backend: GAR submodel forwards

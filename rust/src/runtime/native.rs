@@ -15,18 +15,20 @@
 //! worker pool (`linalg::pool`), so no threads are spawned on the path
 //! either.
 //!
-//! **Attention:** the causal multi-head attention is the shared blocked
+//! **Attention:** the causal multi-head attention is the shared
 //! implementation in [`crate::runtime::attention`] (panels gathered into an
-//! [`AttnWorkspace`] held by `Scratch`, pooled `Q·Kᵀ`/`S·V`, in-place
-//! masked row softmax, head-parallel over the worker pool) with softmax
-//! probs discarded — the training forward calls the same kernel with probs
-//! retained for its backward pass.
+//! [`AttnWorkspace`] held by `Scratch`, pooled `Q·Kᵀ`/`S·V`, head-parallel
+//! over the worker pool) with softmax probs discarded.  The workspace
+//! layout picks the formulation at load time: the streaming (flash-style)
+//! tile at/above the config's `attn_streaming_min_seq` crossover — no
+//! `(t, t)` score matrix, workspace linear in `seq` — and the blocked path
+//! below it ([`crate::runtime::attention::AttnPath`]).
 
 use anyhow::{ensure, Context, Result};
 
 use crate::flexrank::gar::gar_solve;
 use crate::linalg::kernels;
-use crate::runtime::attention::{causal_attention, AttnWorkspace};
+use crate::runtime::attention::{causal_attention, AttnPath, AttnWorkspace};
 use crate::runtime::manifest::ModelConfig;
 use crate::training::params::{ParamSet, LAYER_KINDS};
 
@@ -120,9 +122,31 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Scratch with the built-in attention crossover defaults (streaming
+    /// at/above [`crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ`]).
     pub fn new(max_rows: usize, d: usize, heads: usize, seq: usize, vocab: usize) -> Scratch {
+        Scratch::with_attn(max_rows, d, heads, seq, vocab, AttnPath::auto_default())
+    }
+
+    /// Scratch honoring a config's `attn_tile` / `attn_streaming_min_seq`
+    /// knobs — what the serving registry loads through.
+    pub fn for_config(cfg: &ModelConfig, max_rows: usize) -> Scratch {
+        Scratch::with_attn(max_rows, cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.vocab, cfg.attn_path())
+    }
+
+    /// Scratch with an explicit attention path (tests pin both formulations
+    /// regardless of the sequence-length crossover).
+    pub fn with_attn(
+        max_rows: usize,
+        d: usize,
+        heads: usize,
+        seq: usize,
+        vocab: usize,
+        path: AttnPath,
+    ) -> Scratch {
         let hd = d / heads.max(1);
         let max_batch = if seq > 0 { (max_rows / seq).max(1) } else { 1 };
+        let slots = AttnWorkspace::auto_slots(max_batch * heads.max(1));
         Scratch {
             max_rows,
             x: vec![0.0; max_rows * d],
@@ -131,9 +155,26 @@ impl Scratch {
             qkv: vec![0.0; max_rows * 3 * d],
             att: vec![0.0; max_rows * d],
             ff: vec![0.0; max_rows * 4 * d],
-            attn: AttnWorkspace::new(seq, hd, AttnWorkspace::auto_slots(max_batch * heads.max(1))),
+            attn: AttnWorkspace::with_path(seq, hd, slots, path),
             logits: vec![0.0; max_rows * vocab],
         }
+    }
+
+    /// Whether forwards through this scratch run the streaming attention.
+    pub fn attn_is_streaming(&self) -> bool {
+        self.attn.is_streaming()
+    }
+
+    /// Attention-path tag for bench/log lines ("blocked",
+    /// "streaming(tile=64)", …).
+    pub fn attn_path_label(&self) -> String {
+        self.attn.path_label()
+    }
+
+    /// Largest per-slot attention panel in f32 elements — the streaming
+    /// serving path's no-`(t, t)`-buffer contract is asserted against this.
+    pub fn attn_max_slot_panel_floats(&self) -> usize {
+        self.attn.max_slot_panel_floats()
     }
 
     /// Logits of the last forward: `(rows, vocab)` row-major.
@@ -422,6 +463,54 @@ mod tests {
         sub.forward(&tokens, batch, &mut scratch).unwrap();
         assert_eq!(scratch.fingerprint(), fp, "scratch must not reallocate");
         assert_eq!(scratch.logits(batch * cfg.seq_len, cfg.vocab), &l1[..]);
+    }
+
+    #[test]
+    fn streaming_scratch_matches_blocked_and_stays_allocation_free() {
+        // The serving forward through a streaming-attention Scratch must
+        // produce the blocked path's logits (to f32 rounding), allocate
+        // nothing per request, and hold no (t, t) attention panel.
+        let cfg = tiny_cfg();
+        let teacher = random_teacher(&cfg, 17);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let sub =
+            GarSubmodel::from_student(&cfg, &student, &uniform_budget_profile(&cfg, 0.5)).unwrap();
+
+        let batch = 2;
+        let rows = batch * cfg.seq_len;
+        let tokens: Vec<i32> = (0..rows).map(|i| (i * 3 % cfg.vocab) as i32).collect();
+
+        let mut blocked = Scratch::with_attn(
+            rows, cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.vocab, AttnPath::Blocked,
+        );
+        assert!(!blocked.attn_is_streaming());
+        sub.forward(&tokens, batch, &mut blocked).unwrap();
+        let want = blocked.logits(rows, cfg.vocab).to_vec();
+
+        let mut streaming = Scratch::with_attn(
+            rows,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.seq_len,
+            cfg.vocab,
+            AttnPath::Streaming { tile: 4 },
+        );
+        assert!(streaming.attn_is_streaming());
+        assert!(
+            streaming.attn_max_slot_panel_floats() < cfg.seq_len * cfg.seq_len,
+            "streaming scratch must not hold a (t, t) attention panel"
+        );
+        sub.forward(&tokens, batch, &mut streaming).unwrap();
+        let fp = streaming.fingerprint();
+        for (i, (g, w)) in streaming.logits(rows, cfg.vocab).iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                "logit {i}: streaming {g} vs blocked {w}"
+            );
+        }
+        sub.forward(&tokens, batch, &mut streaming).unwrap();
+        assert_eq!(streaming.fingerprint(), fp, "streaming scratch must not reallocate");
     }
 
     #[test]

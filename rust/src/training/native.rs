@@ -32,7 +32,8 @@ use crate::flexrank::sensitivity::ProbeModel;
 use crate::linalg::{kernels, pool, Mat};
 use crate::rng::Rng;
 use crate::runtime::attention::{
-    causal_attention, causal_attention_backward, AttnGradWorkspace, AttnWorkspace,
+    causal_attention, causal_attention_backward, causal_attention_backward_streaming, AttnPath,
+    AttnGradWorkspace, AttnWorkspace,
 };
 use crate::runtime::{ModelConfig, Tensor};
 
@@ -270,16 +271,24 @@ fn lin_backward(
 // Persistent training workspace + attention (shared blocked implementation)
 // ---------------------------------------------------------------------------
 
-/// Persistent per-trainer workspace: the shared blocked-attention panel
-/// sets for forward and backward ([`crate::runtime::attention`]), sized
-/// once from the config and reused across layers and steps — the previous
+/// Persistent per-trainer workspace: the shared attention panel sets for
+/// forward and backward ([`crate::runtime::attention`]), sized once from
+/// the config and reused across layers and steps — the previous
 /// `attention_forward` heap-allocated its panel buffers per layer per
 /// step, which throttled the native KD loop.
+///
+/// The layout follows the config's attention crossover: at/above
+/// `attn_streaming_min_seq` the forward runs the streaming tile (no
+/// retained probs, nothing quadratic in `seq`) and the backward is the
+/// recompute-based [`causal_attention_backward_streaming`]; below it the
+/// blocked forward retains probs for [`causal_attention_backward`].
 #[derive(Debug)]
 pub struct Workspace {
     seq: usize,
     hd: usize,
     slots: usize,
+    /// Forward panels; its layout (`AttnWorkspace::tile`) is the single
+    /// source of truth for which path this workspace runs.
     attn: AttnWorkspace,
     /// Backward panels, sized lazily on the first backward pass — the
     /// forward-only users (probe, eval, calibration) never pay for them.
@@ -287,22 +296,43 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Workspace following the config's `attn_streaming_min_seq` crossover.
     pub fn new(cfg: &ModelConfig) -> Workspace {
+        Workspace::with_path(cfg, cfg.attn_path())
+    }
+
+    /// Blocked (probs-retaining) workspace regardless of the crossover.
+    pub fn new_blocked(cfg: &ModelConfig) -> Workspace {
+        Workspace::with_path(cfg, AttnPath::Blocked)
+    }
+
+    /// Streaming workspace at the config's tile regardless of the crossover.
+    pub fn new_streaming(cfg: &ModelConfig) -> Workspace {
+        Workspace::with_path(cfg, AttnPath::Streaming { tile: cfg.attn_tile })
+    }
+
+    fn with_path(cfg: &ModelConfig, path: AttnPath) -> Workspace {
         let hd = cfg.d_model / cfg.n_heads.max(1);
         // Enough slots to saturate the pool at any batch size ≥ 1.
         let slots = pool::size();
-        Workspace {
-            seq: cfg.seq_len,
-            hd,
-            slots,
-            attn: AttnWorkspace::new(cfg.seq_len, hd, slots),
-            grad: None,
-        }
+        let attn = AttnWorkspace::with_path(cfg.seq_len, hd, slots, path);
+        Workspace { seq: cfg.seq_len, hd, slots, attn, grad: None }
+    }
+
+    /// Whether forwards/backwards through this workspace run the streaming
+    /// (flash-style) attention.
+    pub fn is_streaming(&self) -> bool {
+        self.attn.is_streaming()
     }
 
     fn grad_ws(&mut self) -> &mut AttnGradWorkspace {
         if self.grad.is_none() {
-            self.grad = Some(AttnGradWorkspace::new(self.seq, self.hd, self.slots));
+            // Mirror the forward workspace's resolved (clamped) layout so
+            // forward and backward can never disagree on the path.
+            self.grad = Some(match self.attn.tile() {
+                Some(tc) => AttnGradWorkspace::new_streaming(self.seq, self.hd, self.slots, tc),
+                None => AttnGradWorkspace::new(self.seq, self.hd, self.slots),
+            });
         }
         self.grad.as_mut().unwrap()
     }
@@ -319,9 +349,11 @@ impl Workspace {
     }
 }
 
-/// Returns `(att, probs)`: merged heads (rows, d) and the retained causal
-/// softmax weights, one (t_len, t_len) matrix per (batch, head) pair —
-/// the shared blocked attention with probs kept for [`attention_backward`].
+/// Returns `(att, probs)`: merged heads (rows, d) and, on the blocked
+/// path, the retained causal softmax weights — one (t_len, t_len) matrix
+/// per (batch, head) pair — for [`attention_backward`].  On the streaming
+/// path `probs` is **empty**: the backward recomputes them tile by tile,
+/// so the training cache never holds a `(t, t)` buffer either.
 fn attention_forward(
     qkv: &[f32],
     batch: usize,
@@ -331,12 +363,19 @@ fn attention_forward(
     ws: &mut Workspace,
 ) -> (Vec<f32>, Vec<f32>) {
     let mut att = vec![0f32; batch * t_len * d];
-    let mut probs = vec![0f32; batch * heads * t_len * t_len];
-    causal_attention(qkv, batch, t_len, d, heads, &mut ws.attn, &mut att, Some(&mut probs));
-    (att, probs)
+    if ws.is_streaming() {
+        causal_attention(qkv, batch, t_len, d, heads, &mut ws.attn, &mut att, None);
+        (att, Vec::new())
+    } else {
+        let mut probs = vec![0f32; batch * heads * t_len * t_len];
+        causal_attention(qkv, batch, t_len, d, heads, &mut ws.attn, &mut att, Some(&mut probs));
+        (att, probs)
+    }
 }
 
 /// Backward through the attention: `datt` (rows, d) → `dqkv` (rows, 3d).
+/// Dispatches on the workspace layout: retained-probs backward (blocked)
+/// or recompute-based streaming backward (probs empty).
 #[allow(clippy::too_many_arguments)]
 fn attention_backward(
     qkv: &[f32],
@@ -349,7 +388,16 @@ fn attention_backward(
     ws: &mut Workspace,
 ) -> Vec<f32> {
     let mut dqkv = vec![0f32; batch * t_len * 3 * d];
-    causal_attention_backward(qkv, probs, datt, batch, t_len, d, heads, ws.grad_ws(), &mut dqkv);
+    if ws.is_streaming() {
+        debug_assert!(probs.is_empty(), "streaming forward retains no probs");
+        causal_attention_backward_streaming(
+            qkv, datt, batch, t_len, d, heads, ws.grad_ws(), &mut dqkv,
+        );
+    } else {
+        causal_attention_backward(
+            qkv, probs, datt, batch, t_len, d, heads, ws.grad_ws(), &mut dqkv,
+        );
+    }
     dqkv
 }
 
@@ -1069,6 +1117,8 @@ mod tests {
             bench_dim: 8,
             bench_batch: 4,
             lora_rank: 2,
+            attn_tile: 4,
+            attn_streaming_min_seq: crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ,
         }
     }
 
@@ -1258,6 +1308,78 @@ mod tests {
     }
 
     #[test]
+    fn streaming_training_matches_blocked_forward_and_backward() {
+        // The whole-model forward and every parameter gradient must agree
+        // between the streaming workspace (no retained probs, recompute
+        // backward) and the blocked one (retained probs) — the cross-path
+        // pin that lets the crossover knob flip the training path safely.
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 71);
+        let mut rng = Rng::new(72);
+        let x = rand_tokens(&cfg, &mut rng, 2);
+        let y: Vec<i32> = (0..x.len()).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+        let mut ws_b = Workspace::new_blocked(&cfg);
+        let mut ws_s = Workspace::new_streaming(&cfg);
+        assert!(!ws_b.is_streaming() && ws_s.is_streaming());
+
+        let cache_b = forward_ws(&cfg, &teacher, None, &x, 2, &mut ws_b).unwrap();
+        let cache_s = forward_ws(&cfg, &teacher, None, &x, 2, &mut ws_s).unwrap();
+        assert!(
+            cache_s.blocks.iter().all(|blk| blk.probs.is_empty()),
+            "streaming forward must not retain (t, t) probs"
+        );
+        for (a, b) in cache_b.logits.iter().zip(&cache_s.logits) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "logits diverge: {a} vs {b}");
+        }
+
+        let (_, dlogits) = ce_loss_grad(&cache_b.logits, &y, cfg.vocab);
+        let grads_b = backward_ws(&cfg, &teacher, None, &cache_b, &dlogits, &mut ws_b).unwrap();
+        let (_, dlogits_s) = ce_loss_grad(&cache_s.logits, &y, cfg.vocab);
+        let grads_s = backward_ws(&cfg, &teacher, None, &cache_s, &dlogits_s, &mut ws_s).unwrap();
+        for (name, gb) in grads_b.map.iter() {
+            let gb = gb.as_f32().unwrap();
+            let gs = grads_s.get(name).unwrap().as_f32().unwrap();
+            for (i, (a, b)) in gb.iter().zip(gs).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "grad {name}[{i}]: blocked {a} vs streaming {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_training_workspace_never_reallocates_across_steps() {
+        // The KD-style loop over a streaming Workspace (recompute backward,
+        // lazily sized grad panels) must never grow it after the first
+        // step — the streaming resize keeps the zero-realloc contract.
+        let cfg = test_cfg();
+        let teacher = random_teacher(&cfg, 93);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let mut student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let profile: Vec<usize> = vec![5; cfg.n_fact_layers()];
+        let mut rng = Rng::new(94);
+        let mut ws = Workspace::new_streaming(&cfg);
+        let mut opt = AdamW::new(&cfg, &student);
+        let mut step = |p: &mut ParamSet, opt: &mut AdamW, ws: &mut Workspace, rng: &mut Rng| {
+            let x = rand_tokens(&cfg, rng, 2);
+            let t_cache = forward_ws(&cfg, &teacher, None, &x, 2, ws).unwrap();
+            let s_cache = forward_ws(&cfg, p, Some(&profile), &x, 2, ws).unwrap();
+            let (_, dlogits) =
+                kd_loss_grad(&s_cache.logits, &t_cache.logits, cfg.vocab, cfg.tau_kd as f32);
+            let grads = backward_ws(&cfg, p, Some(&profile), &s_cache, &dlogits, ws).unwrap();
+            opt.step(p, &grads).unwrap();
+        };
+        step(&mut student, &mut opt, &mut ws, &mut rng);
+        let fp = ws.fingerprint();
+        for _ in 0..3 {
+            step(&mut student, &mut opt, &mut ws, &mut rng);
+        }
+        assert_eq!(ws.fingerprint(), fp, "streaming training workspace must not reallocate");
+    }
+
+    #[test]
     fn native_training_forward_matches_serving_gar() {
         // The serving GAR re-gauge at a profile must compute the same
         // function the training path evaluated — pins that DP probe losses
@@ -1275,8 +1397,7 @@ mod tests {
 
         let cache = forward(&cfg, &student, Some(&profile), &tokens, batch).unwrap();
         let sub = GarSubmodel::from_student(&cfg, &student, &profile).unwrap();
-        let mut scratch =
-            Scratch::new(batch * cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.vocab);
+        let mut scratch = Scratch::for_config(&cfg, batch * cfg.seq_len);
         sub.forward(&tokens, batch, &mut scratch).unwrap();
         let serve = scratch.logits(batch * cfg.seq_len, cfg.vocab);
         for (a, b) in cache.logits.iter().zip(serve) {

@@ -55,6 +55,43 @@ impl ParamSet {
         self.map.values().map(|t| t.len()).sum()
     }
 
+    /// Content fingerprint over every parameter's name, shape, and exact
+    /// value bits (FNV-1a 64).  Deterministic across runs and checkpoint
+    /// round trips (ckpt save/load is byte-exact); any retrained parameter
+    /// — even one with identical shapes — flips it.  Recorded as
+    /// `params_fp` in profiles.json so serving can detect DP profiles
+    /// probed on a different student (`coordinator::load_tier_profiles`).
+    pub fn content_fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        for (name, t) in &self.map {
+            eat(name.as_bytes());
+            for &dim in t.shape() {
+                eat(&(dim as u64).to_le_bytes());
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        eat(&v.to_bits().to_le_bytes());
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        eat(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        h
+    }
+
     /// Ordered inputs for artifact argument `arg_idx`, matched by name.
     /// Spec names look like `"{arg_idx}.{param_path}"`; scalar/plain args
     /// have just `"{arg_idx}"`.
@@ -330,4 +367,37 @@ pub fn gar_params_for(
         );
     }
     Ok(ordered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_fingerprint_is_stable_and_flips_on_any_change() {
+        let mut ps = ParamSet::default();
+        ps.insert("w", Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        ps.insert("b", Tensor::f32(vec![2], vec![0.5, -0.5]));
+        let fp = ps.content_fingerprint();
+        assert_eq!(fp, ps.content_fingerprint(), "fingerprint must be deterministic");
+        assert_eq!(fp, ps.clone().content_fingerprint(), "fingerprint survives a copy");
+
+        // A retrained value with identical shapes flips it — the case the
+        // full_cost dimensional check cannot see.
+        let mut retrained = ps.clone();
+        retrained.map.get_mut("w").unwrap().as_f32_mut().unwrap()[3] = 4.0 + 1e-6;
+        assert_ne!(fp, retrained.content_fingerprint(), "value change must flip params_fp");
+
+        // Same values under a different name flip it too.
+        let mut renamed = ParamSet::default();
+        renamed.insert("w2", Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        renamed.insert("b", Tensor::f32(vec![2], vec![0.5, -0.5]));
+        assert_ne!(fp, renamed.content_fingerprint());
+
+        // And a reshape of the same flat data flips it.
+        let mut reshaped = ParamSet::default();
+        reshaped.insert("w", Tensor::f32(vec![4, 1], vec![1.0, 2.0, 3.0, 4.0]));
+        reshaped.insert("b", Tensor::f32(vec![2], vec![0.5, -0.5]));
+        assert_ne!(fp, reshaped.content_fingerprint());
+    }
 }

@@ -272,7 +272,9 @@ fn run_stages(
     }
 
     // --- Stage 6: per-tier DP profiles for serving --------------------------
-    let (ppath, tier_profiles) = write_profiles_json(cfg, &dp.chain, sens.full_cost)?;
+    // Fingerprint the *consolidated* student: that is what `repro serve`
+    // loads next to profiles.json, and what the staleness check compares.
+    let (ppath, tier_profiles) = write_profiles_json(cfg, &dp.chain, sens.full_cost, &student)?;
     eprintln!("[pipeline] wrote {} ({} tiers)", ppath.display(), tier_profiles.len());
 
     Ok(PipelineOut {
@@ -430,16 +432,24 @@ fn select_tier_indices(chain: &NestedChain, tiers: &[f64], full_cost: usize) -> 
 /// {
 ///   "config": "tiny",            // model config the profiles were DP'd for
 ///   "full_cost": 24576,          // full-model GAR parameter cost
+///   "params_fp": "a1b2c3d4e5f60718",  // student content fingerprint (hex)
 ///   "tiers": [                   // one entry per cfg.serve_tiers, ascending
 ///     {"budget": 0.5, "cost": 117, "error": 0.012, "profile": [11, 21, ...]},
 ///     ...
 ///   ]
 /// }
 /// ```
+///
+/// `params_fp` is [`ParamSet::content_fingerprint`] of the student these
+/// profiles describe (the consolidated `student_kd`); `load_tier_profiles`
+/// rejects the file when the served student fingerprints differently — a
+/// re-trained same-shape student silently invalidating its DP profiles was
+/// the one staleness class the `full_cost` dimensional check could not see.
 pub fn write_profiles_json(
     cfg: &ModelConfig,
     chain: &NestedChain,
     full_cost: u64,
+    student: &ParamSet,
 ) -> Result<(PathBuf, Vec<RankProfile>)> {
     let idxs = select_tier_indices(chain, &cfg.serve_tiers, full_cost as usize)?;
     let tiers: Vec<Value> = idxs
@@ -457,6 +467,9 @@ pub fn write_profiles_json(
     let doc = json::obj(vec![
         ("config", Value::Str(cfg.name.clone())),
         ("full_cost", Value::Num(full_cost as f64)),
+        // Hex string, not a JSON number: the fingerprint is a full u64 and
+        // f64 round-tripping would corrupt it.
+        ("params_fp", Value::Str(format!("{:016x}", student.content_fingerprint()))),
         ("tiers", Value::Arr(tiers)),
     ]);
     let path = profiles_path();

@@ -1,0 +1,256 @@
+//! The attention equivalence suite: streaming (flash-style) ≡ blocked ≡
+//! scalar reference, over a randomized shape grid that includes every
+//! adversarial corner — `seq` not a multiple of the tile, `seq == 1`,
+//! `tile >= seq`, a single workspace slot, and head widths that are not a
+//! multiple of the kernels' 4-wide unroll.  Plus finite-difference checks
+//! of the recompute-based streaming backward on every gradient path
+//! (dQ, dK, dV), a cross-path pin of streaming grads against the
+//! retained-probs backward, and the workspace memory contract (nothing
+//! quadratic in `seq`, no reallocation across calls).
+//!
+//! This file is the pin that lets the serving/training crossover knob flip
+//! between the two formulations safely: everything downstream (DP probe
+//! losses, KD gradients, served logits) is identical to f32 rounding.
+
+use flexrank::prop::forall;
+use flexrank::rng::Rng;
+use flexrank::runtime::attention::{
+    causal_attention, causal_attention_backward, causal_attention_backward_streaming,
+    AttnGradWorkspace, AttnWorkspace,
+};
+
+/// Scalar causal softmax-attention recurrence with f64 accumulation — the
+/// oracle both blocked formulations must reproduce.  f64 sums make the
+/// oracle itself exact to well below the 1e-5 gate, so the gate measures
+/// only the kernels' re-association error.
+fn scalar_reference(qkv: &[f32], batch: usize, t_len: usize, d: usize, heads: usize) -> Vec<f32> {
+    let hd = d / heads;
+    let w3 = 3 * d;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut att = vec![0f32; batch * t_len * d];
+    for b in 0..batch {
+        let base = b * t_len;
+        for head in 0..heads {
+            let (qo, ko, vo) = (head * hd, d + head * hd, 2 * d + head * hd);
+            for t1 in 0..t_len {
+                let q = &qkv[(base + t1) * w3 + qo..(base + t1) * w3 + qo + hd];
+                let mut sc = vec![0f64; t1 + 1];
+                let mut mx = f64::NEG_INFINITY;
+                for (t2, s) in sc.iter_mut().enumerate() {
+                    let k = &qkv[(base + t2) * w3 + ko..(base + t2) * w3 + ko + hd];
+                    *s = q.iter().zip(k).map(|(a, b)| *a as f64 * *b as f64).sum::<f64>() * scale;
+                    mx = mx.max(*s);
+                }
+                let mut sum = 0f64;
+                for s in sc.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                for j in 0..hd {
+                    let mut o = 0f64;
+                    for (t2, w) in sc.iter().enumerate() {
+                        o += w / sum * qkv[(base + t2) * w3 + vo + j] as f64;
+                    }
+                    att[(base + t1) * d + head * hd + j] = o as f32;
+                }
+            }
+        }
+    }
+    att
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f32.max(w.abs());
+        if (g - w).abs() > tol * scale {
+            return Err(format!("{what}[{i}]: {g} vs {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn property_streaming_blocked_scalar_three_way_equivalence() {
+    // Randomized (batch, heads, hd, seq, slots, tile): the streaming and
+    // blocked paths must both match the f64 scalar oracle to 1e-5 and each
+    // other, for every workspace slot count and tile width — including
+    // tiles that do not divide seq, tiles wider than seq, and head widths
+    // off the 4-wide unroll.
+    forall(
+        711,
+        60,
+        |rng| {
+            let batch = 1 + rng.below(3);
+            let heads = 1 + rng.below(4);
+            // 1..=9 covers hd % 4 ∈ {0,1,2,3} (adversarial unroll widths).
+            let hd = 1 + rng.below(9);
+            let t_len = 1 + rng.below(33); // includes seq == 1
+            let slots = 1 + rng.below(8); // includes a single slot
+            let tile = 1 + rng.below(t_len + 8); // includes tile >= seq
+            let d = heads * hd;
+            let qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+            (batch, heads, t_len, slots, tile, qkv)
+        },
+        |(batch, heads, t_len, slots, tile, qkv)| {
+            let (batch, heads, t_len) = (*batch, *heads, *t_len);
+            let d = qkv.len() / (batch * t_len * 3);
+            let want = scalar_reference(qkv, batch, t_len, d, heads);
+            let hd = d / heads;
+
+            let mut att = vec![0f32; batch * t_len * d];
+            let mut ws_b = AttnWorkspace::new(t_len, hd, *slots);
+            causal_attention(qkv, batch, t_len, d, heads, &mut ws_b, &mut att, None);
+            assert_close(&att, &want, 1e-5, "blocked vs scalar")?;
+            let blocked = att.clone();
+
+            let mut ws_s = AttnWorkspace::new_streaming(t_len, hd, *slots, *tile);
+            causal_attention(qkv, batch, t_len, d, heads, &mut ws_s, &mut att, None);
+            assert_close(&att, &want, 1e-5, "streaming vs scalar")?;
+            assert_close(&att, &blocked, 1e-5, "streaming vs blocked")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_streaming_backward_matches_retained_backward() {
+    // Cross-path gradient pin over the same adversarial grid: the
+    // recompute-based streaming backward ≡ the retained-probs backward for
+    // all of dQ, dK, dV (they live in the three thirds of dqkv).
+    forall(
+        712,
+        30,
+        |rng| {
+            let batch = 1 + rng.below(2);
+            let heads = 1 + rng.below(3);
+            let hd = 1 + rng.below(7);
+            let t_len = 1 + rng.below(19);
+            let slots = 1 + rng.below(6);
+            let tile = 1 + rng.below(t_len + 4);
+            let d = heads * hd;
+            let qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+            let datt: Vec<f32> = (0..batch * t_len * d).map(|_| rng.normal() as f32).collect();
+            (batch, heads, t_len, slots, tile, qkv, datt)
+        },
+        |(batch, heads, t_len, slots, tile, qkv, datt)| {
+            let (batch, heads, t_len) = (*batch, *heads, *t_len);
+            let d = qkv.len() / (batch * t_len * 3);
+            let hd = d / heads;
+
+            let mut ws = AttnWorkspace::new(t_len, hd, *slots);
+            let mut att = vec![0f32; batch * t_len * d];
+            let mut probs = vec![0f32; batch * heads * t_len * t_len];
+            causal_attention(qkv, batch, t_len, d, heads, &mut ws, &mut att, Some(&mut probs));
+            let mut want = vec![0f32; batch * t_len * 3 * d];
+            let mut gws = AttnGradWorkspace::new(t_len, hd, *slots);
+            causal_attention_backward(
+                qkv, &probs, datt, batch, t_len, d, heads, &mut gws, &mut want,
+            );
+
+            let mut got = vec![0f32; batch * t_len * 3 * d];
+            let mut sgws = AttnGradWorkspace::new_streaming(t_len, hd, *slots, *tile);
+            causal_attention_backward_streaming(
+                qkv, datt, batch, t_len, d, heads, &mut sgws, &mut got,
+            );
+            assert_close(&got, &want, 1e-4, "streaming vs retained dqkv")
+        },
+    );
+}
+
+#[test]
+fn streaming_backward_matches_finite_difference_on_every_path() {
+    // Central differences through the *streaming* forward for
+    // L = Σ coef·att, probing indices in each of the q, k, and v thirds of
+    // every row so all three gradient paths of the recompute backward are
+    // exercised — across tiles that split the sequence unevenly.
+    let (batch, heads, hd, t_len) = (2usize, 2usize, 3usize, 7usize);
+    let d = heads * hd;
+    let mut rng = Rng::new(713);
+    let mut qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+    let coef: Vec<f32> = (0..batch * t_len * d).map(|_| rng.normal() as f32).collect();
+
+    for (tile, slots) in [(1usize, 2usize), (3, 1), (4, 4), (16, 2)] {
+        let mut ws = AttnWorkspace::new_streaming(t_len, hd, slots, tile);
+        let mut gws = AttnGradWorkspace::new_streaming(t_len, hd, slots, tile);
+        let loss = |qkv: &[f32], ws: &mut AttnWorkspace| -> f32 {
+            let mut att = vec![0f32; batch * t_len * d];
+            causal_attention(qkv, batch, t_len, d, heads, ws, &mut att, None);
+            att.iter().zip(&coef).map(|(a, c)| a * c).sum()
+        };
+        let mut dqkv = vec![0f32; batch * t_len * 3 * d];
+        causal_attention_backward_streaming(
+            &qkv, &coef, batch, t_len, d, heads, &mut gws, &mut dqkv,
+        );
+
+        let eps = 1e-2f32;
+        // One probe in each third (q, k, v) of several rows: row 0 (first
+        // tile), a mid row, and the last row of the last batch.
+        let rows = [0usize, t_len / 2, batch * t_len - 1];
+        for &row in &rows {
+            for (third, off) in [(0usize, 0usize), (1, d), (2, 2 * d)] {
+                let idx = row * 3 * d + off + (row + third) % d;
+                let orig = qkv[idx];
+                qkv[idx] = orig + eps;
+                let lp = loss(&qkv, &mut ws);
+                qkv[idx] = orig - eps;
+                let lm = loss(&qkv, &mut ws);
+                qkv[idx] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - dqkv[idx]).abs() < 2e-2 + 0.05 * dqkv[idx].abs(),
+                    "tile {tile} slots {slots} third {third} dqkv[{idx}]: \
+                     numeric {num} vs analytic {}",
+                    dqkv[idx]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_workspaces_hold_nothing_quadratic_and_never_reallocate() {
+    // The workspace memory contract: at a long sequence the streaming
+    // forward/backward workspaces stay strictly below any (t, t) panel and
+    // far below the blocked footprint, and repeated calls never reallocate.
+    let (batch, heads, hd, t_len, tile) = (1usize, 2usize, 8usize, 384usize, 32usize);
+    let d = heads * hd;
+
+    let ws = AttnWorkspace::new_streaming(t_len, hd, 2, tile);
+    assert!(
+        ws.max_slot_panel_floats() < t_len * t_len,
+        "streaming forward workspace holds a (t, t)-sized panel"
+    );
+    assert!(ws.total_floats() < AttnWorkspace::new(t_len, hd, 2).total_floats());
+
+    let gws = AttnGradWorkspace::new_streaming(t_len, hd, 2, tile);
+    assert!(
+        gws.total_floats() < 2 * (t_len * t_len),
+        "streaming grad workspace is not linear in seq (total {} vs t² {})",
+        gws.total_floats(),
+        t_len * t_len
+    );
+    assert!(gws.total_floats() < AttnGradWorkspace::new(t_len, hd, 2).total_floats());
+
+    // Zero per-call allocation on the streaming path, forward and backward.
+    let mut rng = Rng::new(714);
+    let qkv: Vec<f32> = (0..batch * t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+    let datt: Vec<f32> = (0..batch * t_len * d).map(|_| rng.normal() as f32).collect();
+    let mut att = vec![0f32; batch * t_len * d];
+    let mut dqkv = vec![0f32; batch * t_len * 3 * d];
+    let mut ws = AttnWorkspace::new_streaming(t_len, hd, 2, tile);
+    let mut gws = AttnGradWorkspace::new_streaming(t_len, hd, 2, tile);
+    causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
+    causal_attention_backward_streaming(&qkv, &datt, batch, t_len, d, heads, &mut gws, &mut dqkv);
+    let (fp, gfp) = (ws.fingerprint(), gws.fingerprint());
+    for _ in 0..3 {
+        causal_attention(&qkv, batch, t_len, d, heads, &mut ws, &mut att, None);
+        causal_attention_backward_streaming(
+            &qkv, &datt, batch, t_len, d, heads, &mut gws, &mut dqkv,
+        );
+    }
+    assert_eq!(ws.fingerprint(), fp, "streaming forward workspace reallocated");
+    assert_eq!(gws.fingerprint(), gfp, "streaming grad workspace reallocated");
+}

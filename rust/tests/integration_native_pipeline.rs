@@ -147,6 +147,11 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
     );
     let ppath = pipeline::profiles_path();
     let good = std::fs::read_to_string(&ppath).unwrap();
+    let good_fp = format!("{:016x}", out.student.content_fingerprint());
+    assert!(
+        good.contains(&format!("\"params_fp\":\"{good_fp}\"")),
+        "profiles.json must record the consolidated student's content fingerprint: {good}"
+    );
     // A profiles.json whose recorded full_cost disagrees with the loaded
     // student's GAR param count was written by an older run of this
     // same-named config (different checkpoint/student) — stale, so serving
@@ -166,16 +171,14 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
             .collect::<Vec<_>>()
             .join(",")
     };
-    std::fs::write(
-        &ppath,
+    let doc_json = |full_cost: u64, fp: &str, plen_ok: bool| {
         format!(
-            "{{\"config\":\"{}\",\"full_cost\":{},\"tiers\":[{}]}}",
+            "{{\"config\":\"{}\",\"full_cost\":{full_cost},\"params_fp\":\"{fp}\",\"tiers\":[{}]}}",
             cfg.name,
-            out.full_cost + 1,
-            tiers_json(true)
-        ),
-    )
-    .unwrap();
+            tiers_json(plen_ok)
+        )
+    };
+    std::fs::write(&ppath, doc_json(out.full_cost + 1, &good_fp, true)).unwrap();
     assert!(
         load_tier_profiles(&cfg, &out.student)
             .expect("mismatched full_cost is stale, not an error")
@@ -185,21 +188,52 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
     // A file that claims to match this config *and* student but is
     // malformed (wrong profile length) is a hard error — never serve
     // silently wrong ranks.
-    std::fs::write(
-        &ppath,
-        format!(
-            "{{\"config\":\"{}\",\"full_cost\":{},\"tiers\":[{}]}}",
-            cfg.name,
-            out.full_cost,
-            tiers_json(false)
-        ),
-    )
-    .unwrap();
+    std::fs::write(&ppath, doc_json(out.full_cost, &good_fp, false)).unwrap();
     assert!(
         load_tier_profiles(&cfg, &out.student).is_err(),
         "a malformed profiles.json claiming to match the config must fail loudly"
     );
+    std::fs::write(&ppath, good.clone()).unwrap();
+
+    // --- params content-fingerprint: retraining invalidates profiles -------
+    // A re-trained student has identical shapes (full_cost can't see it) but
+    // different values: the content fingerprint flips, and load must fall
+    // back to uniform rather than serve profiles DP'd on the old student.
+    let mut retrained = out.student.clone();
+    {
+        let w = retrained
+            .map
+            .get_mut("blocks.0.qkv_u")
+            .expect("student has blocks.0.qkv_u")
+            .as_f32_mut()
+            .unwrap();
+        w[0] += 1e-3;
+    }
+    assert_ne!(
+        retrained.content_fingerprint(),
+        out.student.content_fingerprint(),
+        "retraining (any value change) must flip the content fingerprint"
+    );
+    assert!(
+        load_tier_profiles(&cfg, &retrained)
+            .expect("fingerprint mismatch is stale, not an error")
+            .is_none(),
+        "profiles DP'd on the old student must not be served to a re-trained one"
+    );
+    // A pre-fingerprint profiles.json (no params_fp field) is unverifiable
+    // and must fall back too.
+    let legacy = good.replace(&format!("\"params_fp\":\"{good_fp}\","), "");
+    assert!(!legacy.contains("params_fp"), "fixture edit failed: {legacy}");
+    std::fs::write(&ppath, legacy).unwrap();
+    assert!(
+        load_tier_profiles(&cfg, &out.student)
+            .expect("missing params_fp is stale, not an error")
+            .is_none(),
+        "a pre-fingerprint profiles.json must not be trusted"
+    );
     std::fs::write(&ppath, good).unwrap();
+    // And the original file still loads for the original student.
+    assert!(load_tier_profiles(&cfg, &out.student).unwrap().is_some());
 
     std::env::remove_var("FLEXRANK_RESULTS");
     let _ = std::fs::remove_dir_all(&dir);

@@ -17,10 +17,32 @@ cargo build --release --examples
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== attention equivalence suite (release: streaming ≡ blocked ≡ scalar + grads) =="
+cargo test --release -q --test attention_equivalence
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   echo "== kernel bench smoke (BENCH_QUICK=1) =="
   BENCH_QUICK=1 cargo bench -p flexrank --bench kernels
-  echo "wrote results/BENCH_kernels.json"
+  # The bench writes under FLEXRANK_RESULTS when set (flexrank::results_dir).
+  BENCH_JSON="${FLEXRANK_RESULTS:-results}/BENCH_kernels.json"
+  echo "wrote ${BENCH_JSON}"
+  echo "== BENCH_kernels.json schema: attention_flash rows present + valid =="
+  BENCH_JSON="$BENCH_JSON" python3 - <<'EOF'
+import json
+import os
+
+rows = json.load(open(os.environ["BENCH_JSON"]))
+flash = [r for r in rows if r["kernel"].startswith("attention_flash ")]
+assert flash, "no attention_flash rows in results/BENCH_kernels.json"
+assert len(flash) >= 3, f"expected flash rows at 1x/4x/16x seq, got {len(flash)}"
+for r in rows:
+    for key in ("kernel", "shape", "mean_ns", "gflops", "speedup_vs_reference"):
+        assert key in r, f"row missing '{key}': {r}"
+for r in flash:
+    assert r["mean_ns"] > 0 and r["gflops"] > 0, f"degenerate flash row: {r}"
+    assert r["speedup_vs_reference"] > 0, f"degenerate flash speedup: {r}"
+print(f"OK: {len(flash)} attention_flash rows, schema valid across {len(rows)} records")
+EOF
 fi
 
 echo "verify OK"
