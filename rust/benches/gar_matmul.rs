@@ -50,12 +50,12 @@ fn main() -> anyhow::Result<()> {
             };
             let mut arena = kernels::Arena::new();
             let warm = gar.forward_arena(&x, &mut arena);
-            arena.give(warm.data);
+            arena.give(warm);
             let g = bench
                 .run(&format!("bench_gar_r{r}"), Some(elems), || {
                     let y = gar.forward_arena(&x, &mut arena);
-                    std::hint::black_box(y.data[0]);
-                    arena.give(y.data);
+                    std::hint::black_box(y[0]);
+                    arena.give(y);
                 })
                 .mean_secs()
                 / dense;

@@ -8,20 +8,26 @@
 //!
 //! Emits `results/BENCH_kernels.json` (kernel, shape, mean ns, GFLOP/s,
 //! speedup-vs-reference) via `bench_harness::write_kernel_json` — the seed
-//! of the perf trajectory — plus the usual CSV.
+//! of the perf trajectory — plus the usual CSV.  Since the SIMD PR the file
+//! also carries `simd_vs_scalar …` rows (dispatched f32 kernels re-based on
+//! the scalar oracle) and `quantized_vs_f32 …` rows (bf16/i8 factor kernels
+//! re-based on their f32 twins, one pair per serve tier).
 //!
 //! `cargo bench --bench kernels` (`BENCH_QUICK=1` for the short profile).
 
 use flexrank::bench_harness::{self, write_kernel_json, KernelRecord};
 use flexrank::flexrank::gar::Gar;
-use flexrank::linalg::{kernels, reference, Mat};
+use flexrank::linalg::quant::{Precision, QuantMat};
+use flexrank::linalg::{kernels, reference, simd, Mat};
 use flexrank::rng::Rng;
 use flexrank::runtime::attention::{causal_attention, AttnWorkspace, DEFAULT_ATTN_TILE};
+use flexrank::runtime::native::uniform_budget_profile;
 
 fn main() {
     let mut bench = bench_harness::from_env();
     let mut rng = Rng::new(17);
     let mut records: Vec<KernelRecord> = Vec::new();
+    println!("simd: {}", simd::isa_label());
 
     // --- matmul: square sweep + the model's layer shapes -------------------
     let shapes: &[(usize, usize, usize)] = &[
@@ -70,6 +76,17 @@ fn main() {
             std::hint::black_box(o32[0]);
         });
         records.push(KernelRecord::from_stats(&f32s, &refstats, &shape, flops));
+
+        // Dispatched f32 re-based on the scalar oracle — the row the SIMD
+        // acceptance gate reads (speedup ≈ 1 when FLEXRANK_SIMD=scalar or
+        // on ISAs without a vector path).
+        let scal = bench.run(&format!("matmul_f32_scalar {shape}"), Some(flops), || {
+            kernels::matmul_f32_scalar(&a32, &b32, m, k, n, &mut o32);
+            std::hint::black_box(o32[0]);
+        });
+        let mut simd_row = KernelRecord::from_stats(&f32s, &scal, &shape, flops);
+        simd_row.kernel = format!("simd_vs_scalar matmul_f32 {shape}");
+        records.push(simd_row);
     }
 
     // --- fused GAR forward vs two-matmul + copy across the rank sweep ------
@@ -98,13 +115,65 @@ fn main() {
         // Arena-backed zero-alloc variant.
         let mut arena = kernels::Arena::new();
         let warm = gar.forward_arena(&x, &mut arena);
-        arena.give(warm.data);
+        arena.give(warm);
         let fused_a = bench.run(&format!("gar_forward_arena r={r}"), Some(flops), || {
             let y = gar.forward_arena(&x, &mut arena);
-            std::hint::black_box(y.data[0]);
-            arena.give(y.data);
+            std::hint::black_box(y[0]);
+            arena.give(y);
         });
         records.push(KernelRecord::from_stats(&fused_a, &refstats, &shape, flops));
+
+        // f32 fused emit: dispatched vs scalar oracle (the serving path).
+        let t32: Vec<f32> = (0..bsz * r).map(|_| rng.normal() as f32).collect();
+        let uh32 = gar.u_hat.to_f32();
+        let mut y32 = vec![0f32; bsz * m];
+        let emit_flops = (2 * bsz * (m - r) * r) as f64;
+        let emit = bench.run(&format!("gar_emit_f32 r={r}"), Some(emit_flops), || {
+            kernels::gar_emit_f32(&t32, bsz, r, &uh32, m - r, &mut y32, m, 0);
+            std::hint::black_box(y32[0]);
+        });
+        let emit_s = bench.run(&format!("gar_emit_f32_scalar r={r}"), Some(emit_flops), || {
+            kernels::gar_emit_f32_scalar(&t32, bsz, r, &uh32, m - r, &mut y32, m, 0);
+            std::hint::black_box(y32[0]);
+        });
+        let mut emit_row = KernelRecord::from_stats(&emit, &emit_s, &shape, emit_flops);
+        emit_row.kernel = format!("simd_vs_scalar gar_emit_f32 r={r}");
+        records.push(emit_row);
+    }
+
+    // --- quantized nested factors vs f32, one pair of rows per serve tier --
+    // The serving registry stores one quantized factor set per tier; this
+    // times the panel-dequantizing product x·Ṽ at each tier's uniform qkv
+    // rank against the f32 kernel on identical data.
+    {
+        let cfg = flexrank::config::load_model_config("base").expect("configs/model_base.json");
+        let (rows, n) = (cfg.batch_serve * cfg.seq_len, cfg.d_model);
+        let xq: Vec<f32> = (0..rows * n).map(|_| rng.normal() as f32).collect();
+        for (i, &budget) in cfg.serve_tiers.iter().enumerate() {
+            let r = uniform_budget_profile(&cfg, budget)[0].max(1);
+            let v32: Vec<f32> = (0..n * r).map(|_| rng.normal() as f32).collect();
+            let mut yq = vec![0f32; rows * r];
+            let flops = (2 * rows * n * r) as f64;
+            let shape = format!("tier={i} {rows}x{n}x{r}");
+            let base = bench.run(&format!("factor_matmul_f32 {shape}"), Some(flops), || {
+                kernels::matmul_f32(&xq, &v32, rows, n, r, &mut yq);
+                std::hint::black_box(yq[0]);
+            });
+            for prec in [Precision::Bf16, Precision::I8] {
+                let q = QuantMat::from_f32(&v32, n, r, prec);
+                let qs = bench.run(
+                    &format!("factor_matmul_{} {shape}", prec.label()),
+                    Some(flops),
+                    || {
+                        kernels::matmul_f32_q(&xq, &q, rows, n, r, &mut yq);
+                        std::hint::black_box(yq[0]);
+                    },
+                );
+                let mut qrow = KernelRecord::from_stats(&qs, &base, &shape, flops);
+                qrow.kernel = format!("quantized_vs_f32 {} {shape}", prec.label());
+                records.push(qrow);
+            }
+        }
     }
 
     // --- causal attention: streaming (flash) vs blocked vs sequential ------
@@ -193,6 +262,25 @@ fn main() {
             println!(
                 "matmul 512³ speedup vs reference: {:.2}x ({:.2} GFLOP/s)",
                 rec.speedup_vs_reference, rec.gflops
+            );
+        }
+    }
+    for rec in &records {
+        if rec.kernel.starts_with("simd_vs_scalar matmul_f32 512x128x384") {
+            println!(
+                "simd matmul_f32 vs scalar oracle at qkv shape [{}]: {:.2}x",
+                simd::isa_label(),
+                rec.speedup_vs_reference
+            );
+        }
+    }
+    for rec in &records {
+        if rec.kernel.starts_with("quantized_vs_f32 ") {
+            println!(
+                "quantized factor matmul vs f32 [{}]: {:.2}x ({:.2} GFLOP/s)",
+                rec.kernel.trim_start_matches("quantized_vs_f32 "),
+                rec.speedup_vs_reference,
+                rec.gflops
             );
         }
     }

@@ -15,6 +15,21 @@ fn main() -> anyhow::Result<()> {
     let student = student_from_factors(&cfg, &teacher, &factors)?;
     let mut registry = SubmodelRegistry::load_native(&cfg, &student, None)?;
     println!("attention path: {} (seq_len {})", registry.attn_path_label(), cfg.seq_len);
+    println!(
+        "simd: {}; tier precision: [{}]",
+        flexrank::linalg::simd::isa_label(),
+        (0..registry.n_tiers())
+            .map(|t| registry.tier_precision_label(t))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    for (i, tier) in registry.tiers.iter().enumerate() {
+        println!(
+            "  tier {i}: {} stored factor bytes ({})",
+            flexrank::training::params::quantized_profile_bytes(&cfg, &tier.profile, tier.precision),
+            tier.precision.label()
+        );
+    }
     let corpus = Corpus::generate(100_000, 5);
     let n = if quick { 80 } else { 400 };
 

@@ -10,6 +10,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::flexrank::masks::gar_layer_params;
 use crate::json;
+use crate::linalg::quant::Precision;
 use crate::runtime::native::{uniform_budget_rank, GarSubmodel, Scratch};
 use crate::runtime::{ModelConfig, ServingBackend};
 use crate::training::params::{ParamSet, LAYER_KINDS};
@@ -129,6 +130,27 @@ pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Optio
             );
             return Ok(None);
         }
+        // Per-tier storage precision (schema v3): absent means f32 (older
+        // files predate quantized tiers and still describe the ranks
+        // correctly); a recorded precision that contradicts the config is
+        // the same staleness class as a changed budget.
+        let stored_prec = match t.get("precision").map(|p| p.as_str()).transpose()? {
+            Some(ps) => Precision::parse(ps)
+                .with_context(|| format!("{}: tier {i} precision", path.display()))?,
+            None => Precision::F32,
+        };
+        let want_prec = cfg.tier_precision.get(i).copied().unwrap_or(Precision::F32);
+        if stored_prec != want_prec {
+            eprintln!(
+                "[serve] {}: tier {i} recorded precision {} but the config \
+                 serves {} — falling back to uniform profiles (rerun \
+                 `repro profiles`)",
+                path.display(),
+                stored_prec.label(),
+                want_prec.label()
+            );
+            return Ok(None);
+        }
         let profile = t.req("profile")?.as_usize_vec()?;
         ensure!(
             profile.len() == cfg.n_fact_layers(),
@@ -161,8 +183,10 @@ pub struct Tier {
     pub budget: f64,
     /// Rank profile baked into the submodel.
     pub profile: Vec<usize>,
-    /// Inference parameter count (GAR form).
+    /// Inference parameter count (GAR form, elements — precision-free).
     pub params: usize,
+    /// Factor storage precision the submodel was quantized to.
+    pub precision: Precision,
     model: GarSubmodel,
 }
 
@@ -227,8 +251,19 @@ impl SubmodelRegistry {
                     vec![r; cfg.n_fact_layers()]
                 }
             };
-            let model = GarSubmodel::from_student(cfg, student, &profile)?;
-            tiers.push(Tier { idx: i, budget, profile, params: model.n_params, model });
+            // Factor storage precision comes from the config's per-tier
+            // list; a registry loaded with fewer entries than tiers (tests
+            // mutate serve_tiers in place) pads with f32.
+            let prec = cfg.tier_precision.get(i).copied().unwrap_or(Precision::F32);
+            let model = GarSubmodel::from_student_prec(cfg, student, &profile, prec)?;
+            tiers.push(Tier {
+                idx: i,
+                budget,
+                profile,
+                params: model.n_params,
+                precision: prec,
+                model,
+            });
         }
         // Covers the explicit-profiles path too: duplicate or shrinking
         // tiers are a selection bug, never something to serve silently.
@@ -292,6 +327,9 @@ impl ServingBackend for SubmodelRegistry {
     }
     fn attn_path_label(&self) -> String {
         self.scratch.attn_path_label()
+    }
+    fn tier_precision_label(&self, tier: usize) -> &'static str {
+        self.tiers[tier].precision.label()
     }
 }
 

@@ -8,7 +8,7 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::linalg::{inverse, kernels, lu_solve_many, Mat};
+use crate::linalg::{inverse, kernels, lu_solve_many, AlignedVec, Mat};
 
 /// GAR form of a rank-r layer: `Ũ = [I_r; Û]`, `Ṽ`.
 #[derive(Debug, Clone)]
@@ -72,13 +72,17 @@ impl Gar {
     }
 
     /// Fused forward drawing scratch from (and returning it to) `arena` —
-    /// zero allocations once the arena is warm.
-    pub fn forward_arena(&self, x: &Mat, arena: &mut kernels::Arena) -> Mat {
-        let mut t = Mat::from_vec(x.rows, self.rank, arena.take(x.rows * self.rank));
-        let m = self.out_dim();
-        let mut y = Mat::from_vec(x.rows, m, arena.take(x.rows * m));
-        self.forward_into(x, &mut t, &mut y);
-        arena.give(t.data);
+    /// zero allocations once the arena is warm, and the returned buffer is
+    /// 64-byte aligned.  Row-major `(B, m)`; callers hand it back via
+    /// [`kernels::Arena::give`].  Bit-identical to [`Gar::forward_into`]
+    /// (same slice kernels, same order).
+    pub fn forward_arena(&self, x: &Mat, arena: &mut kernels::Arena) -> AlignedVec<f64> {
+        let (rows, r, m) = (x.rows, self.rank, self.out_dim());
+        let mut t = arena.take(rows * r);
+        let mut y = arena.take(rows * m);
+        kernels::matmul_f64(&x.data, &self.v_tilde.data, rows, x.cols, r, &mut t);
+        kernels::gar_emit_f64(&t, rows, r, &self.u_hat.data, self.u_hat.rows, &mut y, m, 0);
+        arena.give(t);
         y
     }
 
@@ -212,9 +216,10 @@ mod tests {
                 // Arena path must agree bit-for-bit with the plain path.
                 let mut arena = crate::linalg::kernels::Arena::new();
                 let a1 = gar.forward_arena(x, &mut arena);
-                if !a1.close_to(&fused, 0.0) {
+                if a1[..] != fused.data[..] {
                     return Err("arena path diverged".into());
                 }
+                arena.give(a1);
                 Ok(())
             },
         );

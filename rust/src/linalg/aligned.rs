@@ -1,0 +1,199 @@
+//! 64-byte-aligned scratch buffers.
+//!
+//! The SIMD micro-kernels use unaligned loads, so alignment is a
+//! performance property, not a correctness one — but a 64-byte base keeps
+//! vector loads off cache-line straddles and leaves headroom for 512-bit
+//! ISAs.  `Vec<T>` cannot be realigned after the fact (its deallocation
+//! layout is pinned at allocation), so the scratch owners ([`Arena`],
+//! attention workspaces, the serving `Scratch`) hold [`AlignedVec`]
+//! instead.  Every allocation site carries a debug assertion on the
+//! alignment actually returned.
+//!
+//! [`Arena`]: crate::linalg::kernels::Arena
+
+use std::alloc::{self, Layout};
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Allocation boundary: one cache line (and the widest vector register
+/// this crate targets).
+pub const ALIGN: usize = 64;
+
+/// A `Vec`-like owned buffer of plain scalars whose storage is 64-byte
+/// aligned.  Derefs to `[T]`, so slice-consuming kernels take it directly.
+pub struct AlignedVec<T: Copy + Default> {
+    ptr: NonNull<T>,
+    len: usize,
+    cap: usize,
+}
+
+impl<T: Copy + Default> AlignedVec<T> {
+    /// An empty buffer; allocates nothing until the first [`resize`].
+    ///
+    /// [`resize`]: AlignedVec::resize
+    pub fn new() -> AlignedVec<T> {
+        AlignedVec { ptr: NonNull::dangling(), len: 0, cap: 0 }
+    }
+
+    /// A zero-filled buffer of `len` elements.
+    pub fn zeroed(len: usize) -> AlignedVec<T> {
+        let mut v = AlignedVec::new();
+        v.resize(len, T::default());
+        v
+    }
+
+    /// An aligned copy of `s`.
+    pub fn from_slice(s: &[T]) -> AlignedVec<T> {
+        let mut v = AlignedVec::zeroed(s.len());
+        v.copy_from_slice(s);
+        v
+    }
+
+    /// Grow or shrink to exactly `new_len` elements, filling any new tail
+    /// with `fill`.  The prefix is preserved; shrinking keeps the
+    /// allocation for reuse (like `Vec`).
+    pub fn resize(&mut self, new_len: usize, fill: T) {
+        if new_len > self.cap {
+            self.grow(new_len);
+        }
+        while self.len < new_len {
+            unsafe { self.ptr.as_ptr().add(self.len).write(fill) };
+            self.len += 1;
+        }
+        self.len = new_len;
+    }
+
+    /// Elements the current allocation can hold without reallocating.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * std::mem::size_of::<T>(), ALIGN)
+            .expect("AlignedVec: layout overflow")
+    }
+
+    fn grow(&mut self, new_cap: usize) {
+        debug_assert!(std::mem::align_of::<T>() <= ALIGN, "AlignedVec: over-aligned element");
+        let layout = Self::layout(new_cap);
+        let raw = unsafe { alloc::alloc(layout) } as *mut T;
+        let Some(ptr) = NonNull::new(raw) else { alloc::handle_alloc_error(layout) };
+        debug_assert_eq!(
+            ptr.as_ptr() as usize % ALIGN,
+            0,
+            "scratch allocation must be 64-byte aligned"
+        );
+        unsafe { std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.len) };
+        self.release();
+        self.ptr = ptr;
+        self.cap = new_cap;
+    }
+
+    fn release(&mut self) {
+        if self.cap > 0 {
+            unsafe { alloc::dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+}
+
+impl<T: Copy + Default> Drop for AlignedVec<T> {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+impl<T: Copy + Default> Default for AlignedVec<T> {
+    fn default() -> AlignedVec<T> {
+        AlignedVec::new()
+    }
+}
+
+impl<T: Copy + Default> Clone for AlignedVec<T> {
+    fn clone(&self) -> AlignedVec<T> {
+        AlignedVec::from_slice(self)
+    }
+}
+
+impl<T: Copy + Default> Deref for AlignedVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy + Default> DerefMut for AlignedVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy + Default + fmt::Debug> fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        <[T] as fmt::Debug>::fmt(self, f)
+    }
+}
+
+impl<T: Copy + Default + PartialEq> PartialEq for AlignedVec<T> {
+    fn eq(&self, other: &AlignedVec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+// The buffer owns its (plain-scalar) elements exactly like Vec<T>.
+unsafe impl<T: Copy + Default + Send> Send for AlignedVec<T> {}
+unsafe impl<T: Copy + Default + Sync> Sync for AlignedVec<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocations_are_64_byte_aligned() {
+        for len in [1usize, 7, 63, 64, 65, 1000] {
+            let v: AlignedVec<f32> = AlignedVec::zeroed(len);
+            assert_eq!(v.as_ptr() as usize % ALIGN, 0, "len {len}");
+            assert_eq!(v.len(), len);
+            assert!(v.iter().all(|&x| x == 0.0));
+            let d: AlignedVec<f64> = AlignedVec::zeroed(len);
+            assert_eq!(d.as_ptr() as usize % ALIGN, 0, "f64 len {len}");
+        }
+    }
+
+    #[test]
+    fn resize_preserves_prefix_and_reuses_capacity() {
+        let mut v: AlignedVec<f64> = AlignedVec::new();
+        v.resize(8, 1.5);
+        assert!(v.iter().all(|&x| x == 1.5));
+        let p = v.as_ptr() as usize;
+        v.resize(4, 0.0);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.as_ptr() as usize, p, "shrink must keep the allocation");
+        v.resize(8, 2.5);
+        assert_eq!(v.as_ptr() as usize, p, "regrow within capacity must not realloc");
+        assert_eq!(&v[..4], &[1.5; 4]);
+        assert_eq!(&v[4..], &[2.5; 4]);
+        v.resize(64, 0.0);
+        assert_eq!(&v[..4], &[1.5; 4], "grow must copy the prefix");
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let v: AlignedVec<f32> = AlignedVec::from_slice(&[1.0, 2.0, 3.0]);
+        let mut w = v.clone();
+        w[0] = 9.0;
+        assert_eq!(v[0], 1.0);
+        assert_eq!(w.as_ptr() as usize % ALIGN, 0);
+        assert_eq!(&v[1..], &w[1..]);
+    }
+
+    #[test]
+    fn empty_buffer_is_usable() {
+        let v: AlignedVec<f32> = AlignedVec::new();
+        assert!(v.is_empty());
+        assert_eq!(&v[..], &[] as &[f32]);
+        let w = v.clone();
+        assert!(w.is_empty());
+    }
+}

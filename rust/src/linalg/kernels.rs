@@ -1,7 +1,7 @@
 //! Native compute kernels: cache-blocked, panel-packed, multi-threaded
 //! matmul (f64 and f32 paths), blocked transpose, unrolled matvec, the fused
-//! GAR emit, and a reusable scratch [`Arena`] so hot-path ops stop
-//! allocating per call.
+//! GAR emit, quantized-factor variants, and a reusable scratch [`Arena`] so
+//! hot-path ops stop allocating per call.
 //!
 //! Design (CPU, row-major):
 //!
@@ -12,10 +12,20 @@
 //!   panel streaming; the one kernel whose access pattern is genuinely
 //!   strided — `Aᵀ·B` (gradient accumulation, covariance grams) — packs the
 //!   A column panel into a thread-local contiguous buffer first.
-//! * **4-way unrolled micro-kernels** — the axpy update accumulates four
-//!   B rows per pass over the output row (4× less write traffic, enough
-//!   independent streams for the FP pipelines to auto-vectorize), and dot
-//!   products carry four accumulators.
+//! * **SIMD micro-kernels with runtime dispatch** — the f32 dot/axpy inner
+//!   loops live in [`super::simd`] behind a once-per-process ISA probe:
+//!   AVX2+FMA on x86_64, NEON on aarch64, with the pre-SIMD scalar loops
+//!   kept verbatim as the fallback and as the `simd ≡ scalar` test oracle
+//!   (`FLEXRANK_SIMD=scalar` forces that tier; `_scalar`-suffixed kernels
+//!   expose it in-process for benches).  The f64 kernels stay scalar —
+//!   the 1e-10 `kernels ≡ reference` suite pins their summation order.
+//! * **quantized factors** — `matmul_f32_q` / `gar_emit_f32_q` accept a
+//!   [`QuantMat`] B/û operand (f32 identity, bf16 round-to-nearest-even,
+//!   or i8 with per-column f32 scales; see [`super::quant`]) and
+//!   dequantize it panel-by-panel into a thread-local 64-byte-aligned
+//!   buffer during the pack step — low-precision serving tiers trade
+//!   factor bandwidth for a cheap unpack, with zero steady-state
+//!   allocations.
 //! * **persistent-pool outer loops** — output row blocks are dispatched to
 //!   the process-wide worker [`pool`](super::pool) (parked workers, atomic
 //!   chunk claiming — no per-call thread spawn) above [`PAR_MIN_OPS`] MACs;
@@ -25,8 +35,13 @@
 //! The pre-existing naive loops live on in [`super::reference`]; property
 //! tests assert the two agree to 1e-10 across random and degenerate shapes.
 
+use crate::linalg::aligned::AlignedVec;
 use crate::linalg::pool;
+use crate::linalg::quant::QuantMat;
+use crate::linalg::simd;
 use crate::linalg::Mat;
+
+pub use crate::linalg::simd::{dot_f32, dot_f64};
 
 /// Depth of one k-panel (B panel of `KC × n` stays cache-resident).
 pub const KC: usize = 256;
@@ -52,71 +67,14 @@ fn chunk_rows(m: usize, ops: usize, packed: bool) -> Option<usize> {
 }
 
 // ---------------------------------------------------------------------------
-// Slice-level kernels, generated for f64 and f32.
+// Slice-level kernels, generated over the micro-kernel pair: f64 (scalar
+// micro-kernels), f32 (runtime-dispatched SIMD), and a `_scalar` f32 set
+// pinned to the fallback tier as the in-process bench/test oracle.
 // ---------------------------------------------------------------------------
 
 macro_rules! kernels_for {
-    ($ty:ty, $dot:ident, $axpy4:ident, $mm:ident, $mm_rows:ident,
+    ($ty:ty, $dot:path, $axpy4:path, $mm:ident, $mm_rows:ident,
      $nt:ident, $nt_rows:ident, $tn_acc:ident) => {
-        /// Four-accumulator dot product.
-        #[inline]
-        pub fn $dot(a: &[$ty], b: &[$ty]) -> $ty {
-            debug_assert_eq!(a.len(), b.len());
-            let n4 = a.len() & !3;
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            let mut i = 0;
-            while i < n4 {
-                s0 += a[i] * b[i];
-                s1 += a[i + 1] * b[i + 1];
-                s2 += a[i + 2] * b[i + 2];
-                s3 += a[i + 3] * b[i + 3];
-                i += 4;
-            }
-            let mut s = (s0 + s1) + (s2 + s3);
-            while i < a.len() {
-                s += a[i] * b[i];
-                i += 1;
-            }
-            s
-        }
-
-        /// Micro-kernel: `orow += Σ_kk aseg[kk] · b_panel_row(kk)`, four B
-        /// rows per pass.  `aseg` and `b_panel` cover the same k-range
-        /// (`b_panel` holds `aseg.len()` rows of length `n`).
-        #[inline]
-        fn $axpy4(aseg: &[$ty], b_panel: &[$ty], n: usize, orow: &mut [$ty]) {
-            debug_assert_eq!(b_panel.len(), aseg.len() * n);
-            debug_assert_eq!(orow.len(), n);
-            let k4 = aseg.len() & !3;
-            let mut kk = 0;
-            while kk < k4 {
-                let a0 = aseg[kk];
-                let a1 = aseg[kk + 1];
-                let a2 = aseg[kk + 2];
-                let a3 = aseg[kk + 3];
-                let b0 = &b_panel[kk * n..kk * n + n];
-                let b1 = &b_panel[(kk + 1) * n..(kk + 1) * n + n];
-                let b2 = &b_panel[(kk + 2) * n..(kk + 2) * n + n];
-                let b3 = &b_panel[(kk + 3) * n..(kk + 3) * n + n];
-                for ((((o, v0), v1), v2), v3) in
-                    orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
-                {
-                    *o += a0 * *v0 + a1 * *v1 + a2 * *v2 + a3 * *v3;
-                }
-                kk += 4;
-            }
-            while kk < aseg.len() {
-                let av = aseg[kk];
-                if av != 0.0 {
-                    let brow = &b_panel[kk * n..kk * n + n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
-                kk += 1;
-            }
-        }
-
         /// `out = A·B` with `A (m×k)`, `B (k×n)`, all row-major slices.
         pub fn $mm(a: &[$ty], b: &[$ty], m: usize, k: usize, n: usize, out: &mut [$ty]) {
             assert_eq!(a.len(), m * k, "matmul: A size");
@@ -233,8 +191,9 @@ macro_rules! kernels_for {
     };
 }
 
-kernels_for!(f64, dot_f64, axpy4_f64, matmul_f64, mm_rows_f64, matmul_nt_f64, nt_rows_f64, matmul_tn_acc_f64);
-kernels_for!(f32, dot_f32, axpy4_f32, matmul_f32, mm_rows_f32, matmul_nt_f32, nt_rows_f32, matmul_tn_acc_f32);
+kernels_for!(f64, simd::dot_f64, simd::axpy4_f64, matmul_f64, mm_rows_f64, matmul_nt_f64, nt_rows_f64, matmul_tn_acc_f64);
+kernels_for!(f32, simd::dot_f32, simd::axpy4_f32, matmul_f32, mm_rows_f32, matmul_nt_f32, nt_rows_f32, matmul_tn_acc_f32);
+kernels_for!(f32, simd::dot_f32_scalar, simd::axpy4_f32_scalar, matmul_f32_scalar, mm_rows_f32_scalar, matmul_nt_f32_scalar, nt_rows_f32_scalar, matmul_tn_acc_f32_scalar);
 
 // ---------------------------------------------------------------------------
 // Mat-level wrappers (f64 path used by linalg/nn/flexrank).
@@ -310,72 +269,170 @@ pub fn matvec_into(a: &Mat, x: &[f64], y: &mut [f64]) {
 // Fused GAR emit
 // ---------------------------------------------------------------------------
 
+macro_rules! gar_emit_for {
+    ($ty:ty, $dot:path, $name:ident) => {
+        /// Fused GAR emit with an output column offset and stride: writes
+        /// `[t, t·ûᵀ]` into `y[row*stride + off ..]` — no intermediate
+        /// `rest` matrix, no second pass over the output, and layer outputs
+        /// stream straight into a wider activation buffer.  Fans out over
+        /// the worker pool above [`PAR_MIN_OPS`] MACs like the matmul
+        /// kernels.
+        #[allow(clippy::too_many_arguments)]
+        pub fn $name(
+            t: &[$ty],
+            rows: usize,
+            r: usize,
+            u_hat: &[$ty],
+            mr: usize,
+            y: &mut [$ty],
+            stride: usize,
+            off: usize,
+        ) {
+            let m = r + mr;
+            assert_eq!(t.len(), rows * r, "gar_emit: t size");
+            assert_eq!(u_hat.len(), mr * r, "gar_emit: û size");
+            assert!(off + m <= stride || (rows == 0), "gar_emit: stride too small");
+            assert!(y.len() >= rows * stride, "gar_emit: out size");
+            if rows == 0 || m == 0 {
+                return;
+            }
+            // `chunk` starts at absolute row `i0` and holds whole strided rows.
+            let worker = |i0: usize, chunk: &mut [$ty]| {
+                for i in 0..chunk.len() / stride {
+                    let trow = &t[(i0 + i) * r..(i0 + i + 1) * r];
+                    let yrow = &mut chunk[i * stride + off..i * stride + off + m];
+                    yrow[..r].copy_from_slice(trow);
+                    for (j, o) in yrow[r..].iter_mut().enumerate() {
+                        *o = $dot(trow, &u_hat[j * r..(j + 1) * r]);
+                    }
+                }
+            };
+            let Some(rows_per) = chunk_rows(rows, rows * r * (mr + 1), false) else {
+                worker(0, &mut y[..rows * stride]);
+                return;
+            };
+            pool::parallel_for_rows(y, rows, stride, rows_per, &worker);
+        }
+    };
+}
+
+gar_emit_for!(f64, simd::dot_f64, gar_emit_f64);
+gar_emit_for!(f32, simd::dot_f32, gar_emit_f32);
+gar_emit_for!(f32, simd::dot_f32_scalar, gar_emit_f32_scalar);
+
 /// Fused GAR output stage: given `t = x·Ṽ` `(B × r)` and `û (m−r × r)`,
-/// stream `y = [t, t·ûᵀ]` `(B × m)` directly — no intermediate `rest`
-/// matrix, no second pass over the output.
+/// stream `y = [t, t·ûᵀ]` `(B × m)` directly.  Mat-level wrapper over
+/// [`gar_emit_f64`].
 pub fn gar_emit(t: &Mat, u_hat: &Mat, y: &mut Mat) {
     let r = t.cols;
     let mr = u_hat.rows;
     let m = r + mr;
     assert!(mr == 0 || u_hat.cols == r, "gar_emit: û rank mismatch");
     assert_eq!((y.rows, y.cols), (t.rows, m), "gar_emit: out dims");
-    if t.rows == 0 || m == 0 {
-        return;
-    }
-    let worker = |i0: usize, chunk: &mut [f64]| {
-        let rows = chunk.len() / m;
-        for i in 0..rows {
-            let trow = &t.data[(i0 + i) * r..(i0 + i + 1) * r];
-            let yrow = &mut chunk[i * m..(i + 1) * m];
-            yrow[..r].copy_from_slice(trow);
-            for (j, o) in yrow[r..].iter_mut().enumerate() {
-                *o = dot_f64(trow, &u_hat.data[j * r..(j + 1) * r]);
-            }
-        }
-    };
-    let Some(rows_per) = chunk_rows(t.rows, t.rows * r * (mr + 1), false) else {
-        worker(0, &mut y.data);
-        return;
-    };
-    pool::parallel_for_rows(&mut y.data, t.rows, m, rows_per, &worker);
+    gar_emit_f64(&t.data, t.rows, r, &u_hat.data, mr, &mut y.data, m, 0);
 }
 
-/// f32 fused GAR emit with an output column offset and stride: writes
-/// `[t, t·ûᵀ]` into `y[row*stride + off ..]` — lets the native serving
-/// backend stream layer outputs straight into a wider activation buffer.
-/// Fans out over the worker pool above [`PAR_MIN_OPS`] MACs like the
-/// matmul kernels.
-#[allow(clippy::too_many_arguments)]
-pub fn gar_emit_f32(
+// ---------------------------------------------------------------------------
+// Quantized-factor kernels: the B / û operand is a [`QuantMat`] that gets
+// dequantized panel-by-panel into a thread-local aligned buffer during the
+// pack step.  f32-stored operands short-circuit to the plain kernels.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread dequantization panel, reused across calls (persistent
+    /// pool workers keep theirs alive, so steady-state serving performs
+    /// zero allocations here after warmup).
+    static DEQ_PANEL: std::cell::RefCell<AlignedVec<f32>> =
+        std::cell::RefCell::new(AlignedVec::new());
+}
+
+/// `out = A·B` where B `(k×n)` is stored quantized.  Identical panel/pool
+/// structure to [`matmul_f32`], with the B panel dequantized in the pack
+/// step.
+pub fn matmul_f32_q(a: &[f32], b: &QuantMat, m: usize, k: usize, n: usize, out: &mut [f32]) {
+    if let Some(bf) = b.as_f32() {
+        matmul_f32(a, bf, m, k, n, out);
+        return;
+    }
+    assert_eq!(a.len(), m * k, "matmul_f32_q: A size");
+    assert_eq!((b.rows, b.cols), (k, n), "matmul_f32_q: B dims");
+    assert_eq!(out.len(), m * n, "matmul_f32_q: out size");
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let worker = |i0: usize, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        DEQ_PANEL.with(|cell| {
+            let mut panel = cell.borrow_mut();
+            panel.resize(KC.min(k) * n, 0.0);
+            let mut kb = 0;
+            while kb < k {
+                let kend = (kb + KC).min(k);
+                let klen = kend - kb;
+                let b_panel = &mut panel[..klen * n];
+                b.dequant_rows_into(kb, klen, b_panel);
+                for i in 0..rows {
+                    let aseg = &a[(i0 + i) * k + kb..(i0 + i) * k + kend];
+                    let orow = &mut chunk[i * n..(i + 1) * n];
+                    simd::axpy4_f32(aseg, b_panel, n, orow);
+                }
+                kb += KC;
+            }
+        });
+    };
+    // One chunk per pool thread: each invocation dequantizes its own panel.
+    let Some(rows_per) = chunk_rows(m, m * k * n, true) else {
+        worker(0, out);
+        return;
+    };
+    pool::parallel_for_rows(out, m, n, rows_per, &worker);
+}
+
+/// Strided f32 GAR emit where `û (mr×r)` is stored quantized: each worker
+/// dequantizes û into its thread-local panel once per chunk, then emits
+/// with the same dispatched dot kernel as [`gar_emit_f32`].
+pub fn gar_emit_f32_q(
     t: &[f32],
     rows: usize,
     r: usize,
-    u_hat: &[f32],
-    mr: usize,
+    u_hat: &QuantMat,
     y: &mut [f32],
     stride: usize,
     off: usize,
 ) {
+    if let Some(uf) = u_hat.as_f32() {
+        gar_emit_f32(t, rows, r, uf, u_hat.rows, y, stride, off);
+        return;
+    }
+    let mr = u_hat.rows;
+    assert!(mr == 0 || u_hat.cols == r, "gar_emit_f32_q: û rank mismatch");
     let m = r + mr;
-    assert_eq!(t.len(), rows * r, "gar_emit_f32: t size");
-    assert_eq!(u_hat.len(), mr * r, "gar_emit_f32: û size");
-    assert!(off + m <= stride || (rows == 0), "gar_emit_f32: stride too small");
-    assert!(y.len() >= rows * stride, "gar_emit_f32: out size");
+    assert_eq!(t.len(), rows * r, "gar_emit_f32_q: t size");
+    assert!(off + m <= stride || (rows == 0), "gar_emit_f32_q: stride too small");
+    assert!(y.len() >= rows * stride, "gar_emit_f32_q: out size");
     if rows == 0 || m == 0 {
         return;
     }
-    // `chunk` starts at absolute row `i0` and holds whole strided rows.
     let worker = |i0: usize, chunk: &mut [f32]| {
-        for i in 0..chunk.len() / stride {
-            let trow = &t[(i0 + i) * r..(i0 + i + 1) * r];
-            let yrow = &mut chunk[i * stride + off..i * stride + off + m];
-            yrow[..r].copy_from_slice(trow);
-            for (j, o) in yrow[r..].iter_mut().enumerate() {
-                *o = dot_f32(trow, &u_hat[j * r..(j + 1) * r]);
+        DEQ_PANEL.with(|cell| {
+            let mut panel = cell.borrow_mut();
+            panel.resize(mr * r, 0.0);
+            u_hat.dequant_rows_into(0, mr, &mut panel[..mr * r]);
+            for i in 0..chunk.len() / stride {
+                let trow = &t[(i0 + i) * r..(i0 + i + 1) * r];
+                let yrow = &mut chunk[i * stride + off..i * stride + off + m];
+                yrow[..r].copy_from_slice(trow);
+                for (j, o) in yrow[r..].iter_mut().enumerate() {
+                    *o = simd::dot_f32(trow, &panel[j * r..(j + 1) * r]);
+                }
             }
-        }
+        });
     };
-    let Some(rows_per) = chunk_rows(rows, rows * r * (mr + 1), false) else {
+    // One chunk per pool thread: each invocation dequantizes û privately.
+    let Some(rows_per) = chunk_rows(rows, rows * r * (mr + 1), true) else {
         worker(0, &mut y[..rows * stride]);
         return;
     };
@@ -386,12 +443,12 @@ pub fn gar_emit_f32(
 // Scratch arena
 // ---------------------------------------------------------------------------
 
-/// Reusable pool of f64 buffers: `take` hands out a zero-length-agnostic
-/// buffer resized to the request, `give` returns it for reuse.  After
-/// warmup, a fixed take/give pattern performs zero heap allocations.
+/// Reusable pool of 64-byte-aligned f64 buffers: `take` hands out a buffer
+/// resized to the request, `give` returns it for reuse.  After warmup, a
+/// fixed take/give pattern performs zero heap allocations.
 #[derive(Debug, Default)]
 pub struct Arena {
-    free: Vec<Vec<f64>>,
+    free: Vec<AlignedVec<f64>>,
 }
 
 impl Arena {
@@ -402,17 +459,14 @@ impl Arena {
     /// Check out a buffer of exactly `len` elements (contents unspecified —
     /// callers overwrite).  Reuses the most recently returned buffer, so a
     /// fixed take/give cycle settles on stable allocations.
-    pub fn take(&mut self, len: usize) -> Vec<f64> {
-        let mut buf = match self.free.pop() {
-            Some(b) => b,
-            None => Vec::new(),
-        };
+    pub fn take(&mut self, len: usize) -> AlignedVec<f64> {
+        let mut buf = self.free.pop().unwrap_or_default();
         buf.resize(len, 0.0);
         buf
     }
 
     /// Return a buffer to the pool.
-    pub fn give(&mut self, buf: Vec<f64>) {
+    pub fn give(&mut self, buf: AlignedVec<f64>) {
         self.free.push(buf);
     }
 
@@ -425,6 +479,7 @@ impl Arena {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::quant::Precision;
     use crate::linalg::reference;
     use crate::prop;
     use crate::rng::Rng;
@@ -499,6 +554,48 @@ mod tests {
     }
 
     #[test]
+    fn property_f32_simd_matches_scalar_oracle() {
+        // The dispatched f32 kernels must agree with the `_scalar` set
+        // (pre-SIMD loops) over random + degenerate shapes, including
+        // lengths off the 8/4-lane vector widths.  FMA reassociation means
+        // agreement is relative, not bit-exact.
+        prop::forall(
+            410,
+            40,
+            |rng| {
+                let m = prop::gen::dim(rng, 1, 40);
+                let k = prop::gen::dim(rng, 1, 70);
+                let n = prop::gen::dim(rng, 1, 40);
+                let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+                let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+                let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+                let at: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+                (a, b, bt, at, m, k, n)
+            },
+            |(a, b, bt, at, m, k, n)| {
+                let (m, k, n) = (*m, *k, *n);
+                let mut got = vec![0f32; m * n];
+                let mut want = vec![0f32; m * n];
+                matmul_f32(a, b, m, k, n, &mut got);
+                matmul_f32_scalar(a, b, m, k, n, &mut want);
+                prop::close(&got, &want, 1e-4)
+                    .map_err(|e| format!("matmul ({m},{k},{n}): {e}"))?;
+                matmul_nt_f32(a, bt, m, k, n, &mut got);
+                matmul_nt_f32_scalar(a, bt, m, k, n, &mut want);
+                prop::close(&got, &want, 1e-4)
+                    .map_err(|e| format!("nt ({m},{k},{n}): {e}"))?;
+                got.iter_mut().for_each(|x| *x = 0.0);
+                want.iter_mut().for_each(|x| *x = 0.0);
+                matmul_tn_acc_f32(at, b, k, m, n, &mut got);
+                matmul_tn_acc_f32_scalar(at, b, k, m, n, &mut want);
+                prop::close(&got, &want, 1e-4)
+                    .map_err(|e| format!("tn ({m},{k},{n}): {e}"))?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn matmul_crosses_panel_and_thread_boundaries() {
         // k > KC exercises the k-panel loop seam; m·k·n ≥ PAR_MIN_OPS with
         // m ≥ 2 exercises the pooled row split (including a ragged last
@@ -519,6 +616,41 @@ mod tests {
         let bt = Mat::randn(n, k, &mut rng);
         let want = reference::matmul(&a, &reference::transpose(&bt));
         assert!(matmul_nt(&a, &bt).close_to(&want, 1e-10));
+    }
+
+    #[test]
+    fn f32_simd_crosses_panel_and_thread_boundaries() {
+        // The dispatched f32 path at pooled + panel-seam size, against the
+        // scalar oracle.
+        let mut rng = Rng::new(411);
+        let (m, k, n) = (37, KC + 45, 112);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0f32; m * n];
+        let mut want = vec![0f32; m * n];
+        matmul_f32(&a, &b, m, k, n, &mut got);
+        matmul_f32_scalar(&a, &b, m, k, n, &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            // k ≈ 300 accumulations: allow a k-scaled f32 tolerance.
+            assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        // NT and TN variants at the same size.
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0f32; m * n];
+        let mut want = vec![0f32; m * n];
+        matmul_nt_f32(&a, &bt, m, k, n, &mut got);
+        matmul_nt_f32_scalar(&a, &bt, m, k, n, &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "nt {g} vs {w}");
+        }
+        let at: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0f32; m * n];
+        let mut want = vec![0f32; m * n];
+        matmul_tn_acc_f32(&at, &b, k, m, n, &mut got);
+        matmul_tn_acc_f32_scalar(&at, &b, k, m, n, &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "tn {g} vs {w}");
+        }
     }
 
     #[test]
@@ -546,6 +678,16 @@ mod tests {
                 assert_eq!(yrow[r + j], want, "emitted row {i} col {j}");
             }
         }
+        // The scalar-pinned emit agrees with its own dot oracle the same way.
+        let mut ys = vec![0f32; rows * stride];
+        gar_emit_f32_scalar(&t, rows, r, &u_hat, mr, &mut ys, stride, off);
+        for i in 0..rows {
+            let trow = &t[i * r..(i + 1) * r];
+            for j in 0..mr {
+                let want = simd::dot_f32_scalar(trow, &u_hat[j * r..(j + 1) * r]);
+                assert_eq!(ys[i * stride + off + r + j], want, "scalar emit row {i}");
+            }
+        }
     }
 
     #[test]
@@ -566,6 +708,79 @@ mod tests {
             }
             for j in 0..mr {
                 assert!((y[(i, r + j)] - rest[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_matmul_tracks_f32_within_precision_bounds() {
+        let mut rng = Rng::new(412);
+        // Crosses both the pool floor and a k-panel seam so the panel
+        // dequant runs on worker threads with kb > 0.
+        let (m, k, n) = (64usize, KC + 21, 48usize);
+        assert!(m * k * n >= PAR_MIN_OPS);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0f32; m * n];
+        matmul_f32(&a, &b, m, k, n, &mut want);
+
+        // f32-quantized operand short-circuits to the exact same kernel.
+        let qf = QuantMat::from_f32(&b, k, n, Precision::F32);
+        let mut got = vec![0f32; m * n];
+        matmul_f32_q(&a, &qf, m, k, n, &mut got);
+        assert_eq!(got, want, "f32 QuantMat must be the identity path");
+
+        // bf16: ~2⁻⁸ relative per factor element; the dot over k≈280 noisy
+        // terms keeps relative error well under 1e-1 at |out| scale.
+        let qb = QuantMat::from_f32(&b, k, n, Precision::Bf16);
+        let mut got = vec![0f32; m * n];
+        matmul_f32_q(&a, &qb, m, k, n, &mut got);
+        let scale: f32 = (k as f32).sqrt();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 4e-2 * scale.max(w.abs()), "bf16 {g} vs {w}");
+        }
+
+        // i8: half-step error per element, still bounded after the dot.
+        let qi = QuantMat::from_f32(&b, k, n, Precision::I8);
+        let mut got = vec![0f32; m * n];
+        matmul_f32_q(&a, &qi, m, k, n, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 2e-1 * scale.max(w.abs()), "i8 {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn quantized_gar_emit_tracks_f32() {
+        let mut rng = Rng::new(413);
+        let (rows, r, mr) = (128usize, 32usize, 32usize);
+        assert!(rows * r * (mr + 1) >= PAR_MIN_OPS);
+        let m = r + mr;
+        let (stride, off) = (m + 5, 3);
+        let t: Vec<f32> = (0..rows * r).map(|_| rng.normal() as f32).collect();
+        let u: Vec<f32> = (0..mr * r).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0f32; rows * stride];
+        gar_emit_f32(&t, rows, r, &u, mr, &mut want, stride, off);
+
+        let qf = QuantMat::from_f32(&u, mr, r, Precision::F32);
+        let mut got = vec![0f32; rows * stride];
+        gar_emit_f32_q(&t, rows, r, &qf, &mut got, stride, off);
+        assert_eq!(got, want, "f32 QuantMat emit must be the identity path");
+
+        for (prec, tol) in [(Precision::Bf16, 4e-2f32), (Precision::I8, 2e-1)] {
+            let q = QuantMat::from_f32(&u, mr, r, prec);
+            let mut got = vec![0f32; rows * stride];
+            gar_emit_f32_q(&t, rows, r, &q, &mut got, stride, off);
+            let scale = (r as f32).sqrt();
+            for i in 0..rows {
+                // The passthrough columns must be exact at any precision.
+                for j in 0..r {
+                    assert_eq!(got[i * stride + off + j], t[i * r + j], "{prec:?} row {i}");
+                }
+                for j in 0..mr {
+                    let g = got[i * stride + off + r + j];
+                    let w = want[i * stride + off + r + j];
+                    assert!((g - w).abs() <= tol * scale.max(w.abs()), "{prec:?}: {g} vs {w}");
+                }
             }
         }
     }
@@ -625,6 +840,7 @@ mod tests {
     fn arena_reuses_buffers() {
         let mut arena = Arena::new();
         let b1 = arena.take(64);
+        assert_eq!(b1.as_ptr() as usize % crate::linalg::aligned::ALIGN, 0);
         let p1 = b1.as_ptr() as usize;
         arena.give(b1);
         let b2 = arena.take(64);

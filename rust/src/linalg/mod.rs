@@ -12,15 +12,19 @@
 //! fast enough; precision is f64 internally even though model weights are
 //! f32 (decomposition quality dominates the error budget).
 
+pub mod aligned;
 mod eig;
 pub mod kernels;
 mod mat;
 pub mod pool;
+pub mod quant;
 mod qr;
 pub mod reference;
+pub mod simd;
 mod solve;
 mod svd;
 
+pub use aligned::AlignedVec;
 pub use eig::{sym_eig, SymEig};
 pub use mat::Mat;
 pub use qr::qr;

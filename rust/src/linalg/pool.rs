@@ -97,14 +97,20 @@ pub fn saturating_slots(items: usize) -> usize {
 fn pool() -> &'static Pool {
     static POOL: OnceLock<Pool> = OnceLock::new();
     static SPAWN: Once = Once::new();
-    let p = POOL.get_or_init(|| Pool {
-        state: Mutex::new(State { epoch: 0, job: None }),
-        bell: Condvar::new(),
-        dispatch: Mutex::new(()),
-        done_lock: Mutex::new(()),
-        done_bell: Condvar::new(),
-        spawned: AtomicUsize::new(0),
-        workers: size() - 1,
+    let p = POOL.get_or_init(|| {
+        // Resolve the SIMD dispatch tier exactly once, before any worker can
+        // touch a micro-kernel — every pooled chunk then reads a settled
+        // cache line instead of racing the first detection.
+        let _ = crate::linalg::simd::isa();
+        Pool {
+            state: Mutex::new(State { epoch: 0, job: None }),
+            bell: Condvar::new(),
+            dispatch: Mutex::new(()),
+            done_lock: Mutex::new(()),
+            done_bell: Condvar::new(),
+            spawned: AtomicUsize::new(0),
+            workers: size() - 1,
+        }
     });
     SPAWN.call_once(|| {
         for i in 0..p.workers {

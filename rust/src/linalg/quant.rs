@@ -1,0 +1,282 @@
+//! Per-tier quantized storage for the nested low-rank factors.
+//!
+//! Serving tiers trade factor bandwidth for a cheap unpack in the matmul
+//! panel-pack step:
+//!
+//! * **`f32`** — identity storage; kernels take the slice directly (the
+//!   quantized entry points short-circuit to the plain f32 kernels).
+//! * **`bf16`** — round-to-nearest-even truncation of the top 16 bits
+//!   (8-bit mantissa, full f32 exponent range): 2× less factor traffic at
+//!   ≲2⁻⁸ relative error.  The high-accuracy quantized option.
+//! * **`i8`** — symmetric per-**column** scales `s_j = max_i |a_ij| / 127`
+//!   with round-to-nearest values clamped to ±127: 4× less traffic at
+//!   ≤ s_j/2 absolute error per element.  Columns of the stored factor are
+//!   rank directions (`Ṽ (n×r)`, `û (m−r×r)` are both stored row-major
+//!   with `r` columns), so each rank direction gets its own scale.
+//!
+//! Dequantization happens inside the kernels' k-panel pack step (see
+//! [`crate::linalg::kernels::matmul_f32_q`]) into thread-local reused
+//! buffers — steady-state serving stays allocation-free.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::aligned::AlignedVec;
+
+/// Storage precision of one serving tier's factor set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Bf16,
+    I8,
+}
+
+impl Precision {
+    /// Parse the configs/profiles.json spelling (`"f32" | "bf16" | "i8"`).
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "bf16" => Precision::Bf16,
+            "i8" => Precision::I8,
+            other => bail!("unknown precision '{other}' (expected f32 | bf16 | i8)"),
+        })
+    }
+
+    /// The canonical spelling, round-tripping through [`Precision::parse`].
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::I8 => "i8",
+        }
+    }
+
+    /// Storage bytes per element (excluding per-column scales).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+            Precision::I8 => 1,
+        }
+    }
+}
+
+/// bf16 bit pattern of `x`, round-to-nearest-even.
+fn bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    (bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+#[derive(Debug, Clone)]
+enum Store {
+    F32(AlignedVec<f32>),
+    Bf16(AlignedVec<u16>),
+    I8 { q: AlignedVec<i8>, scale: AlignedVec<f32> },
+}
+
+/// A row-major matrix stored at a chosen [`Precision`], dequantized
+/// row-panel-at-a-time by the consuming kernels.
+#[derive(Debug, Clone)]
+pub struct QuantMat {
+    pub rows: usize,
+    pub cols: usize,
+    store: Store,
+}
+
+impl QuantMat {
+    /// Quantize a row-major `rows × cols` slice to `prec`.
+    pub fn from_f32(a: &[f32], rows: usize, cols: usize, prec: Precision) -> QuantMat {
+        assert_eq!(a.len(), rows * cols, "QuantMat: data size");
+        let store = match prec {
+            Precision::F32 => Store::F32(AlignedVec::from_slice(a)),
+            Precision::Bf16 => {
+                let mut v: AlignedVec<u16> = AlignedVec::zeroed(a.len());
+                for (d, &x) in v.iter_mut().zip(a) {
+                    *d = bf16_bits(x);
+                }
+                Store::Bf16(v)
+            }
+            Precision::I8 => {
+                let mut scale: AlignedVec<f32> = AlignedVec::zeroed(cols);
+                for (j, s) in scale.iter_mut().enumerate() {
+                    let mut mx = 0f32;
+                    for i in 0..rows {
+                        mx = mx.max(a[i * cols + j].abs());
+                    }
+                    *s = if mx > 0.0 { mx / 127.0 } else { 1.0 };
+                }
+                let mut q: AlignedVec<i8> = AlignedVec::zeroed(a.len());
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let v = (a[i * cols + j] / scale[j]).round().clamp(-127.0, 127.0);
+                        q[i * cols + j] = v as i8;
+                    }
+                }
+                Store::I8 { q, scale }
+            }
+        };
+        QuantMat { rows, cols, store }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self.store {
+            Store::F32(_) => Precision::F32,
+            Store::Bf16(_) => Precision::Bf16,
+            Store::I8 { .. } => Precision::I8,
+        }
+    }
+
+    /// Direct slice access — `Some` only for identity (f32) storage, the
+    /// kernels' short-circuit past the dequant pack step.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.store {
+            Store::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Bytes this factor actually occupies (values + per-column scales).
+    pub fn stored_bytes(&self) -> usize {
+        let scales = match self.store {
+            Store::I8 { .. } => self.cols * 4,
+            _ => 0,
+        };
+        self.n_elems() * self.precision().bytes_per_elem() + scales
+    }
+
+    /// Dequantize rows `[row0, row0 + nrows)` into `out` (`nrows × cols`,
+    /// row-major).  This is the kernels' panel-pack step.
+    pub fn dequant_rows_into(&self, row0: usize, nrows: usize, out: &mut [f32]) {
+        let c = self.cols;
+        assert!(row0 + nrows <= self.rows, "QuantMat: row range");
+        assert_eq!(out.len(), nrows * c, "QuantMat: dequant out size");
+        match &self.store {
+            Store::F32(v) => out.copy_from_slice(&v[row0 * c..(row0 + nrows) * c]),
+            Store::Bf16(v) => {
+                for (o, &b) in out.iter_mut().zip(&v[row0 * c..(row0 + nrows) * c]) {
+                    *o = bf16_to_f32(b);
+                }
+            }
+            Store::I8 { q, scale } => {
+                for i in 0..nrows {
+                    let qrow = &q[(row0 + i) * c..(row0 + i + 1) * c];
+                    let orow = &mut out[i * c..(i + 1) * c];
+                    for ((o, &qq), &s) in orow.iter_mut().zip(qrow).zip(scale.iter()) {
+                        *o = qq as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Full dequantization (tests/diagnostics — hot paths use the panel
+    /// form).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_elems()];
+        if self.rows > 0 {
+            self.dequant_rows_into(0, self.rows, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn precision_labels_round_trip() {
+        for p in [Precision::F32, Precision::Bf16, Precision::I8] {
+            assert_eq!(Precision::parse(p.label()).unwrap(), p);
+        }
+        assert!(Precision::parse("fp8").is_err());
+        assert_eq!(Precision::F32.bytes_per_elem(), 4);
+        assert_eq!(Precision::Bf16.bytes_per_elem(), 2);
+        assert_eq!(Precision::I8.bytes_per_elem(), 1);
+    }
+
+    #[test]
+    fn f32_storage_is_identity() {
+        let mut rng = Rng::new(910);
+        let a: Vec<f32> = (0..6 * 5).map(|_| rng.normal() as f32).collect();
+        let q = QuantMat::from_f32(&a, 6, 5, Precision::F32);
+        assert_eq!(q.as_f32().unwrap(), &a[..]);
+        assert_eq!(q.to_f32_vec(), a);
+        assert_eq!(q.stored_bytes(), 6 * 5 * 4);
+    }
+
+    #[test]
+    fn i8_round_trip_error_is_bounded_per_column() {
+        // |deq − a| ≤ s_j/2 per element, with s_j = max_i |a_ij| / 127.
+        let mut rng = Rng::new(911);
+        let (rows, cols) = (37, 9);
+        let mut a: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        for i in 0..rows {
+            a[i * cols + 4] = 0.0; // degenerate zero column
+            a[i * cols + 5] *= 100.0; // column scale must adapt per column
+        }
+        let q = QuantMat::from_f32(&a, rows, cols, Precision::I8);
+        assert!(q.as_f32().is_none());
+        assert_eq!(q.stored_bytes(), rows * cols + cols * 4);
+        let deq = q.to_f32_vec();
+        for j in 0..cols {
+            let col_max = (0..rows).map(|i| a[i * cols + j].abs()).fold(0f32, f32::max);
+            let s = if col_max > 0.0 { col_max / 127.0 } else { 1.0 };
+            for i in 0..rows {
+                let err = (deq[i * cols + j] - a[i * cols + j]).abs();
+                // Half a quantization step, plus f32 slack for quotients
+                // that land within rounding error of a tie boundary.
+                assert!(
+                    err <= 0.5 * s * (1.0 + 1e-4) + 1e-7,
+                    "col {j} row {i}: err {err} vs half-step {}",
+                    0.5 * s
+                );
+            }
+        }
+        // The zero column must reconstruct exactly.
+        for i in 0..rows {
+            assert_eq!(deq[i * cols + 4], 0.0);
+        }
+    }
+
+    #[test]
+    fn bf16_round_trip_error_is_relative() {
+        let mut rng = Rng::new(912);
+        let a: Vec<f32> = (0..300).map(|_| (rng.normal() * 10.0) as f32).collect();
+        let q = QuantMat::from_f32(&a, 30, 10, Precision::Bf16);
+        let deq = q.to_f32_vec();
+        for (d, &x) in deq.iter().zip(&a) {
+            // 8 mantissa bits + RNE → half-ulp ≤ 2⁻⁹ relative.
+            assert!(
+                (d - x).abs() <= x.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE,
+                "{d} vs {x}"
+            );
+        }
+        // RNE: exactly-representable values survive, and ties go to even.
+        let exact = [1.0f32, -2.5, 0.0, 0.15625];
+        let q = QuantMat::from_f32(&exact, 1, 4, Precision::Bf16);
+        assert_eq!(q.to_f32_vec(), exact);
+    }
+
+    #[test]
+    fn panel_dequant_matches_full_dequant() {
+        let mut rng = Rng::new(913);
+        let (rows, cols) = (11, 7);
+        let a: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        for prec in [Precision::F32, Precision::Bf16, Precision::I8] {
+            let q = QuantMat::from_f32(&a, rows, cols, prec);
+            let full = q.to_f32_vec();
+            let mut panel = vec![0f32; 4 * cols];
+            q.dequant_rows_into(5, 4, &mut panel);
+            assert_eq!(&panel[..], &full[5 * cols..9 * cols], "{prec:?}");
+        }
+    }
+}

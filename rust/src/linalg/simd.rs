@@ -1,0 +1,758 @@
+//! Runtime-dispatched SIMD micro-kernels for the f32 hot paths.
+//!
+//! Dispatch tiers:
+//!
+//! * **x86_64 AVX2+FMA** — 8-lane f32 vectors with fused multiply-add for
+//!   the dot/axpy micro-kernels plus a vectorized polynomial `exp` for the
+//!   softmax row loops.
+//! * **aarch64 NEON** — 4-lane f32 dot/axpy micro-kernels (the softmax
+//!   helpers stay scalar there).
+//! * **scalar** — the pre-SIMD loops, kept verbatim as the oracle the
+//!   `simd ≡ scalar` property tests compare against.
+//!
+//! The active tier is detected once per process and cached;
+//! `FLEXRANK_SIMD=scalar` pins the scalar fallback regardless of hardware
+//! (the CI matrix runs a scalar-forced job).  [`crate::linalg::pool`]
+//! resolves the dispatch at worker-pool init so the first hot call never
+//! pays the detection, and [`isa_label`] is the capability string the
+//! `repro` binary and the serving bench report.
+//!
+//! The f64 micro-kernels intentionally stay scalar: the 1e-10
+//! `kernels ≡ reference` property suite pins their exact summation order.
+
+use std::sync::OnceLock;
+
+/// Instruction-set tier the f32 micro-kernels dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// x86_64 with AVX2 + FMA (8 × f32 lanes).
+    Avx2Fma,
+    /// aarch64 with NEON (4 × f32 lanes).
+    Neon,
+    /// Portable scalar fallback — identical to the pre-SIMD kernels.
+    Scalar,
+}
+
+static ISA: OnceLock<Isa> = OnceLock::new();
+
+/// The dispatch tier, detected once per process.  `FLEXRANK_SIMD=scalar`
+/// forces the scalar fallback regardless of hardware.
+pub fn isa() -> Isa {
+    *ISA.get_or_init(|| {
+        if std::env::var("FLEXRANK_SIMD").as_deref() == Ok("scalar") {
+            return Isa::Scalar;
+        }
+        detect()
+    })
+}
+
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Isa::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// Human-readable capability label for startup banners and bench output.
+pub fn isa_label() -> &'static str {
+    match isa() {
+        Isa::Avx2Fma => "x86_64/avx2+fma",
+        Isa::Neon => "aarch64/neon",
+        Isa::Scalar => "scalar",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar micro-kernels (f64 always; f32 as the dispatch fallback + oracle).
+// ---------------------------------------------------------------------------
+
+macro_rules! scalar_micro {
+    ($ty:ty, $dot:ident, $axpy4:ident) => {
+        /// Four-accumulator dot product (scalar).
+        #[inline]
+        pub fn $dot(a: &[$ty], b: &[$ty]) -> $ty {
+            debug_assert_eq!(a.len(), b.len());
+            let n4 = a.len() & !3;
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            let mut i = 0;
+            while i < n4 {
+                s0 += a[i] * b[i];
+                s1 += a[i + 1] * b[i + 1];
+                s2 += a[i + 2] * b[i + 2];
+                s3 += a[i + 3] * b[i + 3];
+                i += 4;
+            }
+            let mut s = (s0 + s1) + (s2 + s3);
+            while i < a.len() {
+                s += a[i] * b[i];
+                i += 1;
+            }
+            s
+        }
+
+        /// Micro-kernel: `orow += Σ_kk aseg[kk] · b_panel_row(kk)`, four B
+        /// rows per pass (scalar).  The k-tail is branchless so the FLOP
+        /// count is shape-only, matching the SIMD tails exactly.
+        #[inline]
+        pub fn $axpy4(aseg: &[$ty], b_panel: &[$ty], n: usize, orow: &mut [$ty]) {
+            debug_assert_eq!(b_panel.len(), aseg.len() * n);
+            debug_assert_eq!(orow.len(), n);
+            let k4 = aseg.len() & !3;
+            let mut kk = 0;
+            while kk < k4 {
+                let a0 = aseg[kk];
+                let a1 = aseg[kk + 1];
+                let a2 = aseg[kk + 2];
+                let a3 = aseg[kk + 3];
+                let b0 = &b_panel[kk * n..kk * n + n];
+                let b1 = &b_panel[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b_panel[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b_panel[(kk + 3) * n..(kk + 3) * n + n];
+                for ((((o, v0), v1), v2), v3) in
+                    orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                {
+                    *o += a0 * *v0 + a1 * *v1 + a2 * *v2 + a3 * *v3;
+                }
+                kk += 4;
+            }
+            while kk < aseg.len() {
+                let av = aseg[kk];
+                let brow = &b_panel[kk * n..kk * n + n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+                kk += 1;
+            }
+        }
+    };
+}
+
+scalar_micro!(f64, dot_f64, axpy4_f64);
+scalar_micro!(f32, dot_f32_scalar, axpy4_f32_scalar);
+
+// ---------------------------------------------------------------------------
+// Dispatched f32 micro-kernels.
+// ---------------------------------------------------------------------------
+
+/// Dispatched f32 dot product.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// Dispatched f32 axpy micro-kernel (four B rows per pass).
+#[inline]
+pub fn axpy4_f32(aseg: &[f32], b_panel: &[f32], n: usize, orow: &mut [f32]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::axpy4(aseg, b_panel, n, orow) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::axpy4(aseg, b_panel, n, orow) },
+        _ => axpy4_f32_scalar(aseg, b_panel, n, orow),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax row helpers (dispatched).  Scalar bodies are verbatim the loops
+// the attention paths ran before SIMD dispatch existed, so the scalar tier
+// reproduces the legacy numerics bit for bit.
+// ---------------------------------------------------------------------------
+
+/// `row[i] *= scale`; returns the running max (−∞ for an empty row).
+#[inline]
+pub fn scale_max(row: &mut [f32], scale: f32) -> f32 {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::scale_max(row, scale) },
+        _ => scale_max_scalar(row, scale),
+    }
+}
+
+#[inline]
+pub fn scale_max_scalar(row: &mut [f32], scale: f32) -> f32 {
+    let mut mx = f32::NEG_INFINITY;
+    for s in row.iter_mut() {
+        *s *= scale;
+        if *s > mx {
+            mx = *s;
+        }
+    }
+    mx
+}
+
+/// `row[i] = exp(row[i] − mx)`; returns the sum.
+#[inline]
+pub fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::exp_sub_sum(row, mx) },
+        _ => exp_sub_sum_scalar(row, mx),
+    }
+}
+
+#[inline]
+pub fn exp_sub_sum_scalar(row: &mut [f32], mx: f32) -> f32 {
+    let mut sum = 0f32;
+    for s in row.iter_mut() {
+        *s = (*s - mx).exp();
+        sum += *s;
+    }
+    sum
+}
+
+/// `row[i] *= c` (softmax normalization pass).
+#[inline]
+pub fn scale_in_place(row: &mut [f32], c: f32) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::scale_in_place(row, c) },
+        _ => scale_in_place_scalar(row, c),
+    }
+}
+
+#[inline]
+pub fn scale_in_place_scalar(row: &mut [f32], c: f32) {
+    for s in row.iter_mut() {
+        *s *= c;
+    }
+}
+
+/// Online-softmax output rescale: `out[i] = out[i] * corr + add[i]`.
+#[inline]
+pub fn rescale_add(out: &mut [f32], add: &[f32], corr: f32) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::rescale_add(out, add, corr) },
+        _ => rescale_add_scalar(out, add, corr),
+    }
+}
+
+#[inline]
+pub fn rescale_add_scalar(out: &mut [f32], add: &[f32], corr: f32) {
+    debug_assert_eq!(out.len(), add.len());
+    for (o, &a) in out.iter_mut().zip(add) {
+        *o = *o * corr + a;
+    }
+}
+
+/// Streaming-backward probability recompute:
+/// `row[i] = exp(row[i] * scale − mi) * inv_l`.
+#[inline]
+pub fn exp_recompute(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::exp_recompute(row, scale, mi, inv_l) },
+        _ => exp_recompute_scalar(row, scale, mi, inv_l),
+    }
+}
+
+#[inline]
+pub fn exp_recompute_scalar(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
+    for s in row.iter_mut() {
+        *s = (*s * scale - mi).exp() * inv_l;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA implementations (x86_64).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut t = [0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), v);
+        ((t[0] + t[4]) + (t[1] + t[5])) + ((t[2] + t[6]) + (t[3] + t[7]))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hmax(v: __m256) -> f32 {
+        let mut t = [0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), v);
+        t.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x))
+    }
+
+    /// Polynomial exp for 8 lanes: `2^n · P(r)` with `x = n·ln2 + r`,
+    /// `|r| ≤ ln2/2`, degree-6 Taylor `P` (≈1e-7 relative error).  Inputs
+    /// are clamped to the finite range; the softmax callers only pass
+    /// `x ≤ 0`, where the clamp never fires.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp8(x: __m256) -> __m256 {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(88.0));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(-87.0));
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        let ln2_hi = _mm256_set1_ps(0.693_359_375);
+        let ln2_lo = _mm256_set1_ps(-2.121_944_4e-4);
+        // n = round-to-nearest(x · log2(e)) via the cvt rounding mode.
+        let ni = _mm256_cvtps_epi32(_mm256_mul_ps(x, log2e));
+        let nf = _mm256_cvtepi32_ps(ni);
+        // r = x − n·ln2, split ln2 so the subtraction stays exact.
+        let r = _mm256_fnmadd_ps(nf, ln2_hi, x);
+        let r = _mm256_fnmadd_ps(nf, ln2_lo, r);
+        // Horner over 1 + r + r²/2! + … + r⁶/6!.
+        let mut p = _mm256_set1_ps(1.0 / 720.0);
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 120.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 24.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0 / 6.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(0.5));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.0));
+        // Scale by 2^n through the exponent bits.
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32(
+            _mm256_add_epi32(ni, _mm256_set1_epi32(127)),
+            23,
+        ));
+        _mm256_mul_ps(p, pow2)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 16)),
+                _mm256_loadu_ps(pb.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 24)),
+                _mm256_loadu_ps(pb.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy4(aseg: &[f32], b_panel: &[f32], n: usize, orow: &mut [f32]) {
+        debug_assert_eq!(b_panel.len(), aseg.len() * n);
+        debug_assert_eq!(orow.len(), n);
+        let bp = b_panel.as_ptr();
+        let op = orow.as_mut_ptr();
+        let k4 = aseg.len() & !3;
+        let mut kk = 0;
+        while kk < k4 {
+            let a0 = _mm256_set1_ps(aseg[kk]);
+            let a1 = _mm256_set1_ps(aseg[kk + 1]);
+            let a2 = _mm256_set1_ps(aseg[kk + 2]);
+            let a3 = _mm256_set1_ps(aseg[kk + 3]);
+            let b0 = bp.add(kk * n);
+            let b1 = bp.add((kk + 1) * n);
+            let b2 = bp.add((kk + 2) * n);
+            let b3 = bp.add((kk + 3) * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut o = _mm256_loadu_ps(op.add(j));
+                o = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b0.add(j)), o);
+                o = _mm256_fmadd_ps(a1, _mm256_loadu_ps(b1.add(j)), o);
+                o = _mm256_fmadd_ps(a2, _mm256_loadu_ps(b2.add(j)), o);
+                o = _mm256_fmadd_ps(a3, _mm256_loadu_ps(b3.add(j)), o);
+                _mm256_storeu_ps(op.add(j), o);
+                j += 8;
+            }
+            while j < n {
+                *op.add(j) += aseg[kk] * *b0.add(j)
+                    + aseg[kk + 1] * *b1.add(j)
+                    + aseg[kk + 2] * *b2.add(j)
+                    + aseg[kk + 3] * *b3.add(j);
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < aseg.len() {
+            let av = aseg[kk];
+            let a0 = _mm256_set1_ps(av);
+            let b0 = bp.add(kk * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let o = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b0.add(j)), _mm256_loadu_ps(op.add(j)));
+                _mm256_storeu_ps(op.add(j), o);
+                j += 8;
+            }
+            while j < n {
+                *op.add(j) += av * *b0.add(j);
+                j += 1;
+            }
+            kk += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale_max(row: &mut [f32], scale: f32) -> f32 {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let sv = _mm256_set1_ps(scale);
+        let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), sv);
+            _mm256_storeu_ps(p.add(i), v);
+            mv = _mm256_max_ps(mv, v);
+            i += 8;
+        }
+        let mut mx = hmax(mv);
+        while i < n {
+            let v = *p.add(i) * scale;
+            *p.add(i) = v;
+            if v > mx {
+                mx = v;
+            }
+            i += 1;
+        }
+        mx
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let mv = _mm256_set1_ps(mx);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let e = exp8(_mm256_sub_ps(_mm256_loadu_ps(p.add(i)), mv));
+            _mm256_storeu_ps(p.add(i), e);
+            acc = _mm256_add_ps(acc, e);
+            i += 8;
+        }
+        let mut sum = hsum(acc);
+        while i < n {
+            let e = (*p.add(i) - mx).exp();
+            *p.add(i) = e;
+            sum += e;
+            i += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale_in_place(row: &mut [f32], c: f32) {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let cv = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(p.add(i), _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), cv));
+            i += 8;
+        }
+        while i < n {
+            *p.add(i) *= c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rescale_add(out: &mut [f32], add: &[f32], corr: f32) {
+        debug_assert_eq!(out.len(), add.len());
+        let n = out.len();
+        let po = out.as_mut_ptr();
+        let pa = add.as_ptr();
+        let cv = _mm256_set1_ps(corr);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_fmadd_ps(_mm256_loadu_ps(po.add(i)), cv, _mm256_loadu_ps(pa.add(i)));
+            _mm256_storeu_ps(po.add(i), v);
+            i += 8;
+        }
+        while i < n {
+            *po.add(i) = *po.add(i) * corr + *pa.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_recompute(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let sv = _mm256_set1_ps(scale);
+        let miv = _mm256_set1_ps(mi);
+        let lv = _mm256_set1_ps(inv_l);
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_fmsub_ps(_mm256_loadu_ps(p.add(i)), sv, miv);
+            _mm256_storeu_ps(p.add(i), _mm256_mul_ps(exp8(x), lv));
+            i += 8;
+        }
+        while i < n {
+            *p.add(i) = (*p.add(i) * scale - mi).exp() * inv_l;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON implementations (aarch64).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 16 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            acc2 = vfmaq_f32(acc2, vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+            acc3 = vfmaq_f32(acc3, vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+            i += 16;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy4(aseg: &[f32], b_panel: &[f32], n: usize, orow: &mut [f32]) {
+        debug_assert_eq!(b_panel.len(), aseg.len() * n);
+        debug_assert_eq!(orow.len(), n);
+        let bp = b_panel.as_ptr();
+        let op = orow.as_mut_ptr();
+        let k4 = aseg.len() & !3;
+        let mut kk = 0;
+        while kk < k4 {
+            let a0 = vdupq_n_f32(aseg[kk]);
+            let a1 = vdupq_n_f32(aseg[kk + 1]);
+            let a2 = vdupq_n_f32(aseg[kk + 2]);
+            let a3 = vdupq_n_f32(aseg[kk + 3]);
+            let b0 = bp.add(kk * n);
+            let b1 = bp.add((kk + 1) * n);
+            let b2 = bp.add((kk + 2) * n);
+            let b3 = bp.add((kk + 3) * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                let mut o = vld1q_f32(op.add(j));
+                o = vfmaq_f32(o, a0, vld1q_f32(b0.add(j)));
+                o = vfmaq_f32(o, a1, vld1q_f32(b1.add(j)));
+                o = vfmaq_f32(o, a2, vld1q_f32(b2.add(j)));
+                o = vfmaq_f32(o, a3, vld1q_f32(b3.add(j)));
+                vst1q_f32(op.add(j), o);
+                j += 4;
+            }
+            while j < n {
+                *op.add(j) += aseg[kk] * *b0.add(j)
+                    + aseg[kk + 1] * *b1.add(j)
+                    + aseg[kk + 2] * *b2.add(j)
+                    + aseg[kk + 3] * *b3.add(j);
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < aseg.len() {
+            let av = aseg[kk];
+            let a0 = vdupq_n_f32(av);
+            let b0 = bp.add(kk * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                let o = vfmaq_f32(vld1q_f32(op.add(j)), a0, vld1q_f32(b0.add(j)));
+                vst1q_f32(op.add(j), o);
+                j += 4;
+            }
+            while j < n {
+                *op.add(j) += av * *b0.add(j);
+                j += 1;
+            }
+            kk += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    #[test]
+    fn isa_label_is_reported() {
+        let label = isa_label();
+        assert!(!label.is_empty());
+        match isa() {
+            Isa::Scalar => assert_eq!(label, "scalar"),
+            Isa::Avx2Fma => assert_eq!(label, "x86_64/avx2+fma"),
+            Isa::Neon => assert_eq!(label, "aarch64/neon"),
+        }
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_over_off_width_lengths() {
+        // Lengths off the vector width (1..70 covers <1 vector, partial
+        // tails, and multi-vector bodies for both 8-lane and 4-lane ISAs).
+        let mut rng = Rng::new(900);
+        for n in (0..70).chain([128, 129, 255, 1024]) {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let want = dot_f32_scalar(&a, &b);
+            let got = dot_f32(&a, &b);
+            assert!(close(got, want, 1e-4), "dot len {n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dispatched_axpy4_matches_scalar_over_off_width_shapes() {
+        let mut rng = Rng::new(901);
+        for &(k, n) in &[
+            (1usize, 1usize),
+            (3, 5),
+            (4, 8),
+            (5, 7),
+            (7, 9),
+            (8, 16),
+            (13, 33),
+            (31, 64),
+            (64, 65),
+        ] {
+            let aseg = randv(&mut rng, k);
+            let b_panel = randv(&mut rng, k * n);
+            let base = randv(&mut rng, n);
+            let mut want = base.clone();
+            axpy4_f32_scalar(&aseg, &b_panel, n, &mut want);
+            let mut got = base.clone();
+            axpy4_f32(&aseg, &b_panel, n, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(close(*g, *w, 1e-4), "axpy4 ({k},{n}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_scalar_tail_is_branchless_on_zero_coefficients() {
+        // A zero k-tail coefficient must still touch the output (no
+        // data-dependent skip): the result is identical either way, but the
+        // FLOP count — and the SIMD/scalar equivalence — must be shape-only.
+        let aseg = [0.0f32; 3];
+        let b_panel = [1.0f32; 6];
+        let mut o = [2.0f32, 3.0];
+        axpy4_f32_scalar(&aseg, &b_panel, 2, &mut o);
+        assert_eq!(o, [2.0, 3.0]);
+        let mut o = [2.0f32, 3.0];
+        axpy4_f32(&aseg, &b_panel, 2, &mut o);
+        assert_eq!(o, [2.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_helpers_match_scalar() {
+        let mut rng = Rng::new(902);
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 33, 100] {
+            let base = randv(&mut rng, n);
+            let scale = 0.37f32;
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            let ma = scale_max(&mut a, scale);
+            let mb = scale_max_scalar(&mut b, scale);
+            assert_eq!(a, b, "scale_max len {n}");
+            assert_eq!(ma, mb, "scale_max max len {n}");
+
+            let sa = exp_sub_sum(&mut a, ma);
+            let sb = exp_sub_sum_scalar(&mut b, mb);
+            assert!(close(sa, sb, 1e-5), "exp_sub_sum len {n}: {sa} vs {sb}");
+            for (x, y) in a.iter().zip(&b) {
+                assert!(close(*x, *y, 1e-5), "exp_sub_sum elem len {n}: {x} vs {y}");
+            }
+
+            if sa > 0.0 {
+                scale_in_place(&mut a, 1.0 / sa);
+                scale_in_place_scalar(&mut b, 1.0 / sb);
+                for (x, y) in a.iter().zip(&b) {
+                    assert!(close(*x, *y, 1e-5), "scale_in_place len {n}");
+                }
+            }
+
+            let add = randv(&mut rng, n);
+            let mut oa = base.clone();
+            let mut ob = base.clone();
+            rescale_add(&mut oa, &add, 0.73);
+            rescale_add_scalar(&mut ob, &add, 0.73);
+            for (x, y) in oa.iter().zip(&ob) {
+                assert!(close(*x, *y, 1e-5), "rescale_add len {n}");
+            }
+
+            let mut ra = base.clone();
+            let mut rb = base.clone();
+            // mi above the scaled max keeps arguments ≤ 0 like real callers.
+            let mi = 1.0 + base.iter().fold(0f32, |m, x| m.max(x.abs()));
+            exp_recompute(&mut ra, 0.25, mi, 0.5);
+            exp_recompute_scalar(&mut rb, 0.25, mi, 0.5);
+            for (x, y) in ra.iter().zip(&rb) {
+                assert!(close(*x, *y, 1e-5), "exp_recompute len {n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn exp_helpers_handle_large_negative_arguments() {
+        // Far-below-max scores must underflow toward 0, never to NaN/∞.
+        let mut row = vec![-200.0f32, -50.0, 0.0];
+        let sum = exp_sub_sum(&mut row, 0.0);
+        assert!(row.iter().all(|x| x.is_finite() && *x >= 0.0), "{row:?}");
+        assert!((row[2] - 1.0).abs() < 1e-6);
+        assert!(sum >= 1.0 && sum.is_finite());
+        assert!(row[0] < 1e-20, "exp(-200) must underflow: {}", row[0]);
+    }
+}

@@ -18,6 +18,7 @@ use flexrank::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    println!("simd: {}", flexrank::linalg::simd::isa_label());
     match args.subcommand.as_deref() {
         Some("smoke") => cmd_smoke(&args),
         Some("pipeline") => flexrank::training::pipeline::run_cli(&args),

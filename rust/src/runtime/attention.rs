@@ -43,6 +43,8 @@
 
 use crate::linalg::kernels;
 use crate::linalg::pool::{self, SendPtr};
+use crate::linalg::simd;
+use crate::linalg::AlignedVec;
 
 /// Default streaming K/V tile width Tc (keys gathered per panel).
 pub const DEFAULT_ATTN_TILE: usize = 64;
@@ -98,13 +100,13 @@ pub struct AttnWorkspace {
     slots: usize,
     /// `Some(tc)` = streaming layout at tile width `tc`; `None` = blocked.
     tile: Option<usize>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    o: Vec<f32>,
-    scores: Vec<f32>,
-    otile: Vec<f32>,
-    stats: Vec<f32>,
+    q: AlignedVec<f32>,
+    k: AlignedVec<f32>,
+    v: AlignedVec<f32>,
+    o: AlignedVec<f32>,
+    scores: AlignedVec<f32>,
+    otile: AlignedVec<f32>,
+    stats: AlignedVec<f32>,
 }
 
 impl AttnWorkspace {
@@ -117,13 +119,13 @@ impl AttnWorkspace {
             hd,
             slots,
             tile: None,
-            q: vec![0.0; slots * seq * hd],
-            k: vec![0.0; slots * seq * hd],
-            v: vec![0.0; slots * seq * hd],
-            o: vec![0.0; slots * seq * hd],
-            scores: vec![0.0; slots * seq * seq],
-            otile: Vec::new(),
-            stats: Vec::new(),
+            q: AlignedVec::zeroed(slots * seq * hd),
+            k: AlignedVec::zeroed(slots * seq * hd),
+            v: AlignedVec::zeroed(slots * seq * hd),
+            o: AlignedVec::zeroed(slots * seq * hd),
+            scores: AlignedVec::zeroed(slots * seq * seq),
+            otile: AlignedVec::new(),
+            stats: AlignedVec::new(),
         }
     }
 
@@ -142,13 +144,13 @@ impl AttnWorkspace {
             hd,
             slots,
             tile: Some(tile),
-            q: vec![0.0; slots * seq * hd],
-            k: vec![0.0; slots * tile * hd],
-            v: vec![0.0; slots * tile * hd],
-            o: vec![0.0; slots * seq * hd],
-            scores: vec![0.0; slots * seq * tile],
-            otile: vec![0.0; slots * seq * hd],
-            stats: vec![0.0; slots * 3 * seq],
+            q: AlignedVec::zeroed(slots * seq * hd),
+            k: AlignedVec::zeroed(slots * tile * hd),
+            v: AlignedVec::zeroed(slots * tile * hd),
+            o: AlignedVec::zeroed(slots * seq * hd),
+            scores: AlignedVec::zeroed(slots * seq * tile),
+            otile: AlignedVec::zeroed(slots * seq * hd),
+            stats: AlignedVec::zeroed(slots * 3 * seq),
         }
     }
 
@@ -245,7 +247,7 @@ pub struct AttnGradWorkspace {
     slots: usize,
     /// `Some(tc)` = streaming recompute layout; `None` = retained-probs.
     tile: Option<usize>,
-    panels: Vec<f32>,
+    panels: AlignedVec<f32>,
 }
 
 /// Per-slot f32 stride of the streaming grad layout.
@@ -262,7 +264,7 @@ impl AttnGradWorkspace {
             hd,
             slots,
             tile: None,
-            panels: vec![0.0; slots * (7 * seq * hd + seq * seq)],
+            panels: AlignedVec::zeroed(slots * (7 * seq * hd + seq * seq)),
         }
     }
 
@@ -275,7 +277,7 @@ impl AttnGradWorkspace {
             hd,
             slots,
             tile: Some(tile),
-            panels: vec![0.0; slots * stream_grad_stride(seq, hd, tile)],
+            panels: AlignedVec::zeroed(slots * stream_grad_stride(seq, hd, tile)),
         }
     }
 
@@ -296,26 +298,15 @@ impl AttnGradWorkspace {
 
 /// Scale + causal softmax over the first `t_len` rows of `sc` in place:
 /// row `t` normalizes entries `0..=t` and zeroes the strict upper triangle
-/// (masked keys must contribute exactly nothing to `S·V`).
+/// (masked keys must contribute exactly nothing to `S·V`).  The row-wide
+/// scale/max, exp/sum, and normalize passes run on the dispatched SIMD
+/// micro-kernels (see [`simd`]).
 fn masked_softmax_rows(sc: &mut [f32], t_len: usize, scale: f32) {
     for t1 in 0..t_len {
         let srow = &mut sc[t1 * t_len..t1 * t_len + t1 + 1];
-        let mut mx = f32::NEG_INFINITY;
-        for s in srow.iter_mut() {
-            *s *= scale;
-            if *s > mx {
-                mx = *s;
-            }
-        }
-        let mut sum = 0.0f32;
-        for s in srow.iter_mut() {
-            *s = (*s - mx).exp();
-            sum += *s;
-        }
-        let inv = 1.0 / sum;
-        for s in srow.iter_mut() {
-            *s *= inv;
-        }
+        let mx = simd::scale_max(srow, scale);
+        let sum = simd::exp_sub_sum(srow, mx);
+        simd::scale_in_place(srow, 1.0 / sum);
         for s in sc[t1 * t_len + t1 + 1..(t1 + 1) * t_len].iter_mut() {
             *s = 0.0;
         }
@@ -382,20 +373,12 @@ fn stream_pair_forward(
             // Row t1 sees keys t2 ≤ t1 → local indices < t1 − j0 + 1.
             let vis = jlen.min(i + 1);
             let prow = &mut p[i * jlen..(i + 1) * jlen];
-            let mut tm = f32::NEG_INFINITY;
-            for s in prow[..vis].iter_mut() {
-                *s *= scale;
-                if *s > tm {
-                    tm = *s;
-                }
-            }
+            let tm = simd::scale_max(&mut prow[..vis], scale);
+            // Per-row running stats stay scalar: `corr` mixes state across
+            // tiles and must keep the legacy exp on the −∞ first-tile edge.
             let m_new = if first { tm } else { m[t1].max(tm) };
             let corr = if first { 0.0 } else { (m[t1] - m_new).exp() };
-            let mut tsum = 0.0f32;
-            for s in prow[..vis].iter_mut() {
-                *s = (*s - m_new).exp();
-                tsum += *s;
-            }
+            let tsum = simd::exp_sub_sum(&mut prow[..vis], m_new);
             for s in prow[vis..].iter_mut() {
                 *s = 0.0;
             }
@@ -411,12 +394,11 @@ fn stream_pair_forward(
             kernels::matmul_f32(p, &vt[..jlen * hd], ra, jlen, hd, &mut ot[..ra * hd]);
             for i in 0..ra {
                 let t1 = j0 + i;
-                let corr = ch[t1];
-                for (od, &os) in
-                    oh[t1 * hd..(t1 + 1) * hd].iter_mut().zip(&ot[i * hd..(i + 1) * hd])
-                {
-                    *od = *od * corr + os;
-                }
+                simd::rescale_add(
+                    &mut oh[t1 * hd..(t1 + 1) * hd],
+                    &ot[i * hd..(i + 1) * hd],
+                    ch[t1],
+                );
             }
         }
         j0 += jlen;
@@ -818,9 +800,7 @@ pub fn causal_attention_backward_streaming(
                     let vis = jlen.min(i + 1);
                     let (mi, inv_l) = (m[t1], 1.0 / l[t1]);
                     let prow = &mut p[i * jlen..(i + 1) * jlen];
-                    for s in prow[..vis].iter_mut() {
-                        *s = (*s * scale - mi).exp() * inv_l;
-                    }
+                    simd::exp_recompute(&mut prow[..vis], scale, mi, inv_l);
                     for s in prow[vis..].iter_mut() {
                         *s = 0.0;
                     }

@@ -36,4 +36,9 @@ pub trait ServingBackend {
     fn attn_path_label(&self) -> String {
         "n/a".to_string()
     }
+    /// Storage-precision label of a tier's factor set ("f32" | "bf16" |
+    /// "i8").  Backends without quantized storage keep the default.
+    fn tier_precision_label(&self, _tier: usize) -> &'static str {
+        "f32"
+    }
 }

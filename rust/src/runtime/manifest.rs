@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 use crate::json::{self, Value};
+use crate::linalg::quant::Precision;
 use crate::runtime::tensor::DType;
 
 /// Shape + dtype + pytree-path name of one artifact input/output leaf.
@@ -83,6 +84,10 @@ pub struct ModelConfig {
     /// defaults to
     /// [`crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ`].
     pub attn_streaming_min_seq: usize,
+    /// Factor storage precision per serving tier (parallel to
+    /// `serve_tiers`; `"f32" | "bf16" | "i8"`).  Optional in
+    /// configs/*.json; defaults to f32 everywhere.
+    pub tier_precision: Vec<Precision>,
 }
 
 impl ModelConfig {
@@ -119,6 +124,16 @@ impl ModelConfig {
                 .map(|x| x.as_usize())
                 .transpose()?
                 .unwrap_or(crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ),
+            tier_precision: Vec::new(),
+        };
+        let mut cfg = cfg;
+        cfg.tier_precision = match v.get("tier_precision") {
+            Some(tp) => tp
+                .as_arr()?
+                .iter()
+                .map(|x| Precision::parse(x.as_str()?))
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![Precision::F32; cfg.serve_tiers.len()],
         };
         cfg.validate()?;
         Ok(cfg)
@@ -145,6 +160,13 @@ impl ModelConfig {
             self.attn_tile > 0,
             "config '{}': attn_tile must be positive",
             self.name
+        );
+        anyhow::ensure!(
+            self.tier_precision.len() == self.serve_tiers.len(),
+            "config '{}': tier_precision has {} entries for {} serve_tiers",
+            self.name,
+            self.tier_precision.len(),
+            self.serve_tiers.len()
         );
         Ok(())
     }

@@ -28,28 +28,39 @@ use anyhow::{ensure, Context, Result};
 
 use crate::flexrank::gar::gar_solve;
 use crate::linalg::kernels;
+use crate::linalg::quant::{Precision, QuantMat};
+use crate::linalg::AlignedVec;
 use crate::runtime::attention::{causal_attention, AttnPath, AttnWorkspace};
 use crate::runtime::manifest::ModelConfig;
 use crate::training::params::{ParamSet, LAYER_KINDS};
 
-/// One GAR-form factorized linear in f32: `y = [t, t·Ûᵀ] + b`, `t = x·Ṽ`.
+/// One GAR-form factorized linear: `y = [t, t·Ûᵀ] + b`, `t = x·Ṽ`.  The
+/// factors are stored at the tier's [`Precision`] (f32 / bf16 / i8 with
+/// per-column scales) and dequantized panel-wise inside the kernels;
+/// activations and biases stay f32.
 #[derive(Debug, Clone)]
 pub struct GarLayerF32 {
     pub n: usize,
     pub m: usize,
     pub r: usize,
     /// (m − r, r); empty when r == m (square full-rank layer, Ũ = I).
-    pub u_hat: Vec<f32>,
+    pub u_hat: QuantMat,
     /// (n, r)
-    pub v_tilde: Vec<f32>,
+    pub v_tilde: QuantMat,
     /// (m)
     pub bias: Vec<f32>,
 }
 
 impl GarLayerF32 {
-    /// Inference parameter count of this layer.
+    /// Inference parameter count of this layer (elements, independent of
+    /// storage precision).
     pub fn n_params(&self) -> usize {
-        self.u_hat.len() + self.v_tilde.len() + self.bias.len()
+        self.u_hat.n_elems() + self.v_tilde.n_elems() + self.bias.len()
+    }
+
+    /// Bytes the factor storage actually occupies at this precision.
+    pub fn stored_bytes(&self) -> usize {
+        self.u_hat.stored_bytes() + self.v_tilde.stored_bytes() + self.bias.len() * 4
     }
 
     /// Fused forward over `rows` input rows of width `n` (contiguous),
@@ -65,8 +76,8 @@ impl GarLayerF32 {
         off: usize,
     ) {
         let t = &mut t[..rows * self.r];
-        kernels::matmul_f32(&x[..rows * self.n], &self.v_tilde, rows, self.n, self.r, t);
-        kernels::gar_emit_f32(t, rows, self.r, &self.u_hat, self.m - self.r, y, stride, off);
+        kernels::matmul_f32_q(&x[..rows * self.n], &self.v_tilde, rows, self.n, self.r, t);
+        kernels::gar_emit_f32_q(t, rows, self.r, &self.u_hat, y, stride, off);
         for i in 0..rows {
             let yrow = &mut y[i * stride + off..i * stride + off + self.m];
             for (o, &b) in yrow.iter_mut().zip(&self.bias) {
@@ -93,6 +104,8 @@ pub struct NativeBlock {
 #[derive(Debug, Clone)]
 pub struct GarSubmodel {
     pub profile: Vec<usize>,
+    /// Storage precision of every factorized layer's Û/Ṽ.
+    pub precision: Precision,
     pub n_params: usize,
     pub d: usize,
     pub heads: usize,
@@ -111,14 +124,14 @@ pub struct GarSubmodel {
 #[derive(Debug)]
 pub struct Scratch {
     pub max_rows: usize,
-    x: Vec<f32>,        // (rows, d)   residual stream
-    a: Vec<f32>,        // (rows, d)   LN output / layer output staging
-    t: Vec<f32>,        // (rows, r≤d) factor intermediate
-    qkv: Vec<f32>,      // (rows, 3d)
-    att: Vec<f32>,      // (rows, d)   merged attention heads
-    ff: Vec<f32>,       // (rows, 4d)
-    attn: AttnWorkspace, // shared blocked-attention panels (per pool slot)
-    logits: Vec<f32>,   // (rows, vocab)
+    x: AlignedVec<f32>,   // (rows, d)   residual stream
+    a: AlignedVec<f32>,   // (rows, d)   LN output / layer output staging
+    t: AlignedVec<f32>,   // (rows, r≤d) factor intermediate
+    qkv: AlignedVec<f32>, // (rows, 3d)
+    att: AlignedVec<f32>, // (rows, d)   merged attention heads
+    ff: AlignedVec<f32>,  // (rows, 4d)
+    attn: AttnWorkspace,  // shared blocked-attention panels (per pool slot)
+    logits: AlignedVec<f32>, // (rows, vocab)
 }
 
 impl Scratch {
@@ -149,14 +162,14 @@ impl Scratch {
         let slots = AttnWorkspace::auto_slots(max_batch * heads.max(1));
         Scratch {
             max_rows,
-            x: vec![0.0; max_rows * d],
-            a: vec![0.0; max_rows * d],
-            t: vec![0.0; max_rows * d],
-            qkv: vec![0.0; max_rows * 3 * d],
-            att: vec![0.0; max_rows * d],
-            ff: vec![0.0; max_rows * 4 * d],
+            x: AlignedVec::zeroed(max_rows * d),
+            a: AlignedVec::zeroed(max_rows * d),
+            t: AlignedVec::zeroed(max_rows * d),
+            qkv: AlignedVec::zeroed(max_rows * 3 * d),
+            att: AlignedVec::zeroed(max_rows * d),
+            ff: AlignedVec::zeroed(max_rows * 4 * d),
             attn: AttnWorkspace::with_path(seq, hd, slots, path),
-            logits: vec![0.0; max_rows * vocab],
+            logits: AlignedVec::zeroed(max_rows * vocab),
         }
     }
 
@@ -226,9 +239,22 @@ fn add_assign(dst: &mut [f32], src: &[f32]) {
 }
 
 impl GarSubmodel {
-    /// Re-gauge a consolidated student's factors at `profile` (one rank per
-    /// factorized layer, canonical block-major order).
+    /// Re-gauge a consolidated student's factors at `profile` with f32
+    /// factor storage (one rank per factorized layer, canonical block-major
+    /// order).
     pub fn from_student(cfg: &ModelConfig, student: &ParamSet, profile: &[usize]) -> Result<GarSubmodel> {
+        GarSubmodel::from_student_prec(cfg, student, profile, Precision::F32)
+    }
+
+    /// Re-gauge a consolidated student's factors at `profile`, storing the
+    /// per-layer Û/Ṽ factors quantized at `prec` (the re-gauge itself runs
+    /// in f64 and is quantized once at load time).
+    pub fn from_student_prec(
+        cfg: &ModelConfig,
+        student: &ParamSet,
+        profile: &[usize],
+        prec: Precision,
+    ) -> Result<GarSubmodel> {
         ensure!(
             profile.len() == cfg.n_fact_layers(),
             "profile has {} entries, model has {} factorized layers",
@@ -253,8 +279,8 @@ impl GarSubmodel {
                     n,
                     m,
                     r,
-                    u_hat: gar.u_hat.to_f32(),
-                    v_tilde: gar.v_tilde.to_f32(),
+                    u_hat: QuantMat::from_f32(&gar.u_hat.to_f32(), m - r, r, prec),
+                    v_tilde: QuantMat::from_f32(&gar.v_tilde.to_f32(), n, r, prec),
                     bias: vec1(&format!("blocks.{b}.{kind}_b"))?,
                 })
             };
@@ -301,6 +327,7 @@ impl GarSubmodel {
                 .sum::<usize>();
         Ok(GarSubmodel {
             profile: profile.to_vec(),
+            precision: prec,
             n_params,
             d: cfg.d_model,
             heads: cfg.n_heads,
@@ -420,8 +447,8 @@ mod tests {
             n,
             m,
             r,
-            u_hat: gar.u_hat.to_f32(),
-            v_tilde: gar.v_tilde.to_f32(),
+            u_hat: QuantMat::from_f32(&gar.u_hat.to_f32(), m - r, r, Precision::F32),
+            v_tilde: QuantMat::from_f32(&gar.v_tilde.to_f32(), n, r, Precision::F32),
             bias: vec![0.0; m],
         };
         let x = Mat::randn(5, n, &mut rng);
@@ -511,6 +538,49 @@ mod tests {
         }
         sub.forward(&tokens, batch, &mut streaming).unwrap();
         assert_eq!(streaming.fingerprint(), fp, "streaming scratch must not reallocate");
+    }
+
+    #[test]
+    fn quantized_submodel_tracks_f32_logits() {
+        // A tier loaded at bf16 / i8 factor storage must stay close to the
+        // f32 tier's logits (quantization perturbs factors, not semantics),
+        // reuse the identical forward path (same scratch fingerprint), and
+        // actually shrink factor storage.
+        let cfg = tiny_cfg();
+        let teacher = random_teacher(&cfg, 23);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        let profile = uniform_budget_profile(&cfg, 0.5);
+        let f32_sub = GarSubmodel::from_student(&cfg, &student, &profile).unwrap();
+
+        let batch = 2;
+        let rows = batch * cfg.seq_len;
+        let tokens: Vec<i32> = (0..rows).map(|i| (i * 5 % cfg.vocab) as i32).collect();
+        let mut s = Scratch::new(rows, cfg.d_model, cfg.n_heads, cfg.seq_len, cfg.vocab);
+        f32_sub.forward(&tokens, batch, &mut s).unwrap();
+        let want = s.logits(rows, cfg.vocab).to_vec();
+        let f32_bytes: usize =
+            f32_sub.blocks.iter().map(|b| b.qkv.stored_bytes() + b.proj.stored_bytes()).sum();
+
+        for (prec, tol) in [(Precision::Bf16, 2e-2f32), (Precision::I8, 2e-1)] {
+            let q = GarSubmodel::from_student_prec(&cfg, &student, &profile, prec).unwrap();
+            assert_eq!(q.precision, prec);
+            assert_eq!(q.n_params, f32_sub.n_params, "logical param count is precision-free");
+            let q_bytes: usize =
+                q.blocks.iter().map(|b| b.qkv.stored_bytes() + b.proj.stored_bytes()).sum();
+            assert!(q_bytes < f32_bytes, "{prec:?} must shrink factor storage");
+            q.forward(&tokens, batch, &mut s).unwrap();
+            let fp = s.fingerprint();
+            for (i, (g, w)) in s.logits(rows, cfg.vocab).iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= tol * (1.0 + w.abs()),
+                    "{prec:?} logit {i}: {g} vs f32 {w}"
+                );
+            }
+            // The quantized path must stay allocation-free across requests.
+            q.forward(&tokens, batch, &mut s).unwrap();
+            assert_eq!(s.fingerprint(), fp, "quantized forward must not reallocate");
+        }
     }
 
     #[test]

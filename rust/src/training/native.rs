@@ -1119,6 +1119,7 @@ mod tests {
             lora_rank: 2,
             attn_tile: 4,
             attn_streaming_min_seq: crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ,
+            tier_precision: vec![crate::linalg::quant::Precision::F32; 2],
         }
     }
 

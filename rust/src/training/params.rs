@@ -369,6 +369,30 @@ pub fn gar_params_for(
     Ok(ordered)
 }
 
+/// Stored bytes of one tier's factor set at `profile` / `prec` — the
+/// shape-only view of per-tier precision that the serving registry realizes
+/// via [`crate::linalg::quant::QuantMat`].  Counts `û (m−r × r)` and
+/// `Ṽ (n × r)` per factorized layer at the precision's element width; i8
+/// adds the 4-byte per-column scale of each stored factor.
+pub fn quantized_profile_bytes(
+    cfg: &ModelConfig,
+    profile: &[usize],
+    prec: crate::linalg::quant::Precision,
+) -> usize {
+    let scale_bytes = match prec {
+        crate::linalg::quant::Precision::I8 => 4,
+        _ => 0,
+    };
+    fact_layers(cfg)
+        .into_iter()
+        .zip(profile)
+        .map(|((_, _, n, m), &r)| {
+            let r = r.clamp(1, n.min(m));
+            ((m - r) * r + n * r) * prec.bytes_per_elem() + 2 * r * scale_bytes
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -399,5 +423,27 @@ mod tests {
         reshaped.insert("w", Tensor::f32(vec![4, 1], vec![1.0, 2.0, 3.0, 4.0]));
         reshaped.insert("b", Tensor::f32(vec![2], vec![0.5, -0.5]));
         assert_ne!(fp, reshaped.content_fingerprint());
+    }
+
+    #[test]
+    fn quantized_profile_bytes_orders_precisions() {
+        use crate::linalg::quant::Precision;
+        let cfg = crate::config::load_model_config("tiny").expect("configs/model_tiny.json");
+        let profile = vec![3usize; cfg.n_fact_layers()];
+        let f32b = quantized_profile_bytes(&cfg, &profile, Precision::F32);
+        let bf16b = quantized_profile_bytes(&cfg, &profile, Precision::Bf16);
+        let i8b = quantized_profile_bytes(&cfg, &profile, Precision::I8);
+        assert_eq!(f32b, 2 * bf16b, "bf16 halves factor traffic exactly");
+        assert!(
+            i8b < bf16b && bf16b < f32b,
+            "per-tier bytes must order i8 < bf16 < f32: {i8b} {bf16b} {f32b}"
+        );
+        // The shape-only count matches what the registry actually stores.
+        let elems: usize = fact_layers(&cfg)
+            .into_iter()
+            .zip(&profile)
+            .map(|((_, _, n, m), &r)| (m - r) * r + n * r)
+            .sum();
+        assert_eq!(f32b, elems * 4);
     }
 }

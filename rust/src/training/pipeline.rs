@@ -434,7 +434,9 @@ fn select_tier_indices(chain: &NestedChain, tiers: &[f64], full_cost: usize) -> 
 ///   "full_cost": 24576,          // full-model GAR parameter cost
 ///   "params_fp": "a1b2c3d4e5f60718",  // student content fingerprint (hex)
 ///   "tiers": [                   // one entry per cfg.serve_tiers, ascending
-///     {"budget": 0.5, "cost": 117, "error": 0.012, "profile": [11, 21, ...]},
+///     {"budget": 0.5, "cost": 117, "error": 0.012,
+///      "precision": "f32",       // tier factor storage (f32 | bf16 | i8)
+///      "profile": [11, 21, ...]},
 ///     ...
 ///   ]
 /// }
@@ -454,12 +456,19 @@ pub fn write_profiles_json(
     let idxs = select_tier_indices(chain, &cfg.serve_tiers, full_cost as usize)?;
     let tiers: Vec<Value> = idxs
         .iter()
+        .enumerate()
         .zip(&cfg.serve_tiers)
-        .map(|(&ci, &budget)| {
+        .map(|((i, &ci), &budget)| {
+            let prec = cfg
+                .tier_precision
+                .get(i)
+                .copied()
+                .unwrap_or(crate::linalg::quant::Precision::F32);
             json::obj(vec![
                 ("budget", Value::Num(budget)),
                 ("cost", Value::Num(chain.costs[ci] as f64)),
                 ("error", Value::Num(chain.errors[ci])),
+                ("precision", Value::Str(prec.label().to_string())),
                 ("profile", json::arr_usize(&chain.profiles[ci])),
             ])
         })

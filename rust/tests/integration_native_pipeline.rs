@@ -17,7 +17,9 @@ use flexrank::coordinator::{
 };
 use flexrank::data::{Corpus, TokenBatcher, TraceCfg, TraceGen};
 use flexrank::flexrank::masks::is_nested;
+use flexrank::linalg::quant::Precision;
 use flexrank::runtime::native::uniform_budget_profile;
+use flexrank::runtime::ServingBackend;
 use flexrank::training::{native, pipeline, CORPUS_BYTES};
 
 #[test]
@@ -126,6 +128,70 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
     for w in report.tier_params.windows(2) {
         assert!(w[0] < w[1], "tier params must ascend: {:?}", report.tier_params);
     }
+
+    // --- quantized tier factors: serve within tolerance of f32 -------------
+    // Tiny serves with batch_eval == batch_serve, so eval batches feed
+    // `infer` directly: x is each row's first seq_len tokens, y the shift.
+    let serving_ce = |reg: &mut SubmodelRegistry, tier: usize| -> f64 {
+        let (b, s, v) = (cfg.batch_serve, cfg.seq_len, cfg.vocab);
+        let (mut tot, mut n) = (0.0f64, 0usize);
+        for batch in &eval_batches {
+            let mut x = vec![0i32; b * s];
+            let mut y = vec![0i32; b * s];
+            for row in 0..b {
+                let w = &batch[row * (s + 1)..(row + 1) * (s + 1)];
+                x[row * s..(row + 1) * s].copy_from_slice(&w[..s]);
+                y[row * s..(row + 1) * s].copy_from_slice(&w[1..]);
+            }
+            let logits = reg.infer(tier, &x).expect("serving infer for eval CE");
+            for (t, &tgt) in y.iter().enumerate() {
+                let row = &logits[t * v..(t + 1) * v];
+                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse =
+                    row.iter().map(|&z| f64::from(z - mx).exp()).sum::<f64>().ln() + f64::from(mx);
+                tot += lse - f64::from(row[tgt as usize]);
+                n += 1;
+            }
+        }
+        tot / n as f64
+    };
+    let f32_ce: Vec<f64> =
+        (0..registry.n_tiers()).map(|t| serving_ce(&mut registry, t)).collect();
+    assert!(f32_ce.iter().all(|l| l.is_finite()));
+    for t in 0..registry.n_tiers() {
+        assert_eq!(registry.tier_precision_label(t), "f32", "default tiers must store f32");
+    }
+    let mut cfg_q = cfg.clone();
+    cfg_q.tier_precision = vec![Precision::I8, Precision::Bf16];
+    let mut reg_q = SubmodelRegistry::load_native(&cfg_q, &out.student, Some(profiles.as_slice()))
+        .expect("quantized registry must load");
+    assert_eq!(reg_q.tier_precision_label(0), "i8");
+    assert_eq!(reg_q.tier_precision_label(1), "bf16");
+    for (tier, p) in reg_q.tiers.iter().zip(&profiles) {
+        assert_eq!(&tier.profile, p, "quantization must not disturb the served profile");
+    }
+    let q_ce: Vec<f64> = (0..reg_q.n_tiers()).map(|t| serving_ce(&mut reg_q, t)).collect();
+    assert!(q_ce.iter().all(|l| l.is_finite()));
+    // i8 factors (tier 0) may drift more than bf16 (tier 1); both must stay
+    // close to the f32 eval loss they approximate.
+    assert!(
+        (q_ce[0] - f32_ce[0]).abs() <= 0.25,
+        "i8 tier eval CE {} too far from f32 {}",
+        q_ce[0],
+        f32_ce[0]
+    );
+    assert!(
+        (q_ce[1] - f32_ce[1]).abs() <= 0.05,
+        "bf16 tier eval CE {} too far from f32 {}",
+        q_ce[1],
+        f32_ce[1]
+    );
+    // Monotone in budget up to quantization slack: the bigger (bf16) tier
+    // must not serve meaningfully worse than the smaller (i8) one.
+    assert!(
+        q_ce[1] <= q_ce[0] + 0.05,
+        "quantized tiers must stay monotone in budget: {q_ce:?}"
+    );
 
     // --- resume: a second run reuses every stage checkpoint ----------------
     let out2 = pipeline::run_native(&cfg, &rc, false).expect("checkpoint resume failed");

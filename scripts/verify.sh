@@ -26,7 +26,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   # The bench writes under FLEXRANK_RESULTS when set (flexrank::results_dir).
   BENCH_JSON="${FLEXRANK_RESULTS:-results}/BENCH_kernels.json"
   echo "wrote ${BENCH_JSON}"
-  echo "== BENCH_kernels.json schema: attention_flash rows present + valid =="
+  echo "== BENCH_kernels.json schema: flash + simd_vs_scalar + quantized_vs_f32 rows =="
   BENCH_JSON="$BENCH_JSON" python3 - <<'EOF'
 import json
 import os
@@ -38,10 +38,23 @@ assert len(flash) >= 3, f"expected flash rows at 1x/4x/16x seq, got {len(flash)}
 for r in rows:
     for key in ("kernel", "shape", "mean_ns", "gflops", "speedup_vs_reference"):
         assert key in r, f"row missing '{key}': {r}"
-for r in flash:
-    assert r["mean_ns"] > 0 and r["gflops"] > 0, f"degenerate flash row: {r}"
-    assert r["speedup_vs_reference"] > 0, f"degenerate flash speedup: {r}"
-print(f"OK: {len(flash)} attention_flash rows, schema valid across {len(rows)} records")
+simd = [r for r in rows if r["kernel"].startswith("simd_vs_scalar ")]
+assert any(
+    r["kernel"].startswith("simd_vs_scalar matmul_f32 ") for r in simd
+), "no simd_vs_scalar matmul_f32 rows"
+assert any(
+    r["kernel"].startswith("simd_vs_scalar gar_emit_f32 ") for r in simd
+), "no simd_vs_scalar gar_emit_f32 rows"
+quant = [r for r in rows if r["kernel"].startswith("quantized_vs_f32 ")]
+assert any(" bf16 " in r["kernel"] for r in quant), "no quantized_vs_f32 bf16 rows"
+assert any(" i8 " in r["kernel"] for r in quant), "no quantized_vs_f32 i8 rows"
+for r in flash + simd + quant:
+    assert r["mean_ns"] > 0 and r["gflops"] > 0, f"degenerate row: {r}"
+    assert r["speedup_vs_reference"] > 0, f"degenerate speedup: {r}"
+print(
+    f"OK: {len(flash)} flash, {len(simd)} simd_vs_scalar, {len(quant)} quantized_vs_f32 "
+    f"rows, schema valid across {len(rows)} records"
+)
 EOF
 fi
 
