@@ -11,7 +11,10 @@
 //! of the perf trajectory — plus the usual CSV.  Since the SIMD PR the file
 //! also carries `simd_vs_scalar …` rows (dispatched f32 kernels re-based on
 //! the scalar oracle) and `quantized_vs_f32 …` rows (bf16/i8 factor kernels
-//! re-based on their f32 twins, one pair per serve tier).
+//! re-based on their f32 twins, one pair per serve tier).  Since the paged
+//! decode PR it also carries `attention_decode …` rows — the single-query
+//! page-gather step re-based on a contiguous scalar single-query reference
+//! at 1×/4×/16× context lengths.
 //!
 //! `cargo bench --bench kernels` (`BENCH_QUICK=1` for the short profile).
 
@@ -231,6 +234,97 @@ fn main() {
         }
     }
 
+    // --- paged single-query decode attention (the serving decode step) -----
+    // One query row per live request, K/V gathered from the paged pool —
+    // the kernel every generated token pays once per layer.  Reference is
+    // the same single-query softmax over *contiguous* K/V in plain scalar
+    // loops, so the row measures what the page-tiled SIMD online-softmax
+    // step buys (and what page-gather indirection costs) at serving shapes:
+    // the base context, then 4×/16× contexts where the pool no longer fits
+    // in cache and the tile gather earns its keep.
+    {
+        use flexrank::runtime::attention::{paged_decode_attention, DecodeWorkspace};
+        use flexrank::runtime::{PagedKvCache, DEFAULT_KV_PAGE_SIZE};
+        let cfg = flexrank::config::load_model_config("base").expect("configs/model_base.json");
+        let (d, heads) = (cfg.d_model, cfg.n_heads);
+        let hd = d / heads;
+        let page = DEFAULT_KV_PAGE_SIZE;
+        for (mult, batch) in [(1usize, cfg.batch_serve), (4, cfg.batch_serve), (16, 4)] {
+            let kv_len = cfg.seq_len * mult;
+            // One layer of cache is all the kernel touches.
+            let mut cache = PagedKvCache::new(page, 1, heads, hd, batch, kv_len, 0);
+            let mut flat_k = vec![0f32; batch * kv_len * d];
+            let mut flat_v = vec![0f32; batch * kv_len * d];
+            let mut slots = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let slot = cache.try_acquire(kv_len).expect("pool sized for every slot");
+                for pos in 0..kv_len {
+                    let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    cache.write_kv(slot, 0, pos, &k, &v);
+                    flat_k[(b * kv_len + pos) * d..][..d].copy_from_slice(&k);
+                    flat_v[(b * kv_len + pos) * d..][..d].copy_from_slice(&v);
+                }
+                cache.advance(slot, kv_len);
+                slots.push(slot);
+            }
+            let qkv: Vec<f32> = (0..batch * 3 * d).map(|_| rng.normal() as f32).collect();
+            let row_lens = vec![kv_len; batch];
+            let mut ws =
+                DecodeWorkspace::new(hd, page, AttnWorkspace::auto_slots(batch * heads));
+            let mut att = vec![0f32; batch * d];
+            let mut att_ref = vec![0f32; batch * d];
+            let mut scores = vec![0f32; kv_len];
+            let shape = format!("B={batch} H={heads} kv={kv_len} hd={hd}");
+            // One query per request: q·Kᵀ + softmax·V over kv_len cached
+            // rows, 2 flops per MAC each.
+            let flops = (batch * heads * 4 * kv_len * hd) as f64;
+            let scale = 1.0 / (hd as f32).sqrt();
+
+            let refstats =
+                bench.run(&format!("attention_decode_ref {shape}"), Some(flops), || {
+                    for r in 0..batch {
+                        for h in 0..heads {
+                            let q = &qkv[r * 3 * d + h * hd..r * 3 * d + h * hd + hd];
+                            let mut mx = f32::NEG_INFINITY;
+                            for (t, s) in scores.iter_mut().enumerate() {
+                                let kr = &flat_k[(r * kv_len + t) * d + h * hd..][..hd];
+                                let mut acc = 0f32;
+                                for j in 0..hd {
+                                    acc += q[j] * kr[j];
+                                }
+                                *s = acc * scale;
+                                mx = mx.max(*s);
+                            }
+                            let mut l = 0f32;
+                            for s in scores.iter_mut() {
+                                *s = (*s - mx).exp();
+                                l += *s;
+                            }
+                            let inv = 1.0 / l;
+                            let o = &mut att_ref[r * d + h * hd..][..hd];
+                            o.fill(0.0);
+                            for (t, s) in scores.iter().enumerate() {
+                                let vr = &flat_v[(r * kv_len + t) * d + h * hd..][..hd];
+                                let w = s * inv;
+                                for j in 0..hd {
+                                    o[j] += w * vr[j];
+                                }
+                            }
+                        }
+                    }
+                    std::hint::black_box(att_ref[0]);
+                });
+            let paged = bench.run(&format!("attention_decode {shape}"), Some(flops), || {
+                paged_decode_attention(
+                    &cache, &qkv, &slots, &row_lens, 0, d, heads, &mut ws, &mut att,
+                );
+                std::hint::black_box(att[0]);
+            });
+            records.push(KernelRecord::from_stats(&paged, &refstats, &shape, flops));
+        }
+    }
+
     // --- covariance gram accumulation (DataSVD stage 1) --------------------
     {
         let x = Mat::randn(512, 128, &mut rng);
@@ -302,6 +396,19 @@ fn main() {
             };
             println!(
                 "attention flash vs blocked [{}]: {:.2}x ({:.2} GFLOP/s) — {verdict}",
+                rec.shape, rec.speedup_vs_reference, rec.gflops
+            );
+        }
+    }
+    for rec in &records {
+        if rec.kernel.starts_with("attention_decode ") {
+            let verdict = if rec.speedup_vs_reference >= 1.0 {
+                "OK"
+            } else {
+                "WARNING: paged gather slower than contiguous scalar"
+            };
+            println!(
+                "attention decode (paged) vs contiguous scalar [{}]: {:.2}x ({:.2} GFLOP/s) — {verdict}",
                 rec.shape, rec.speedup_vs_reference, rec.gflops
             );
         }

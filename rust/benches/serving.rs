@@ -2,7 +2,7 @@
 //! vs adaptive policy — the L3 headline numbers, now on the native kernel
 //! backend (runs fully offline, no PJRT).
 
-use flexrank::coordinator::{serve_trace, PolicyKind, ServeCfg, SubmodelRegistry};
+use flexrank::coordinator::{serve_trace, serve_trace_decode, PolicyKind, ServeCfg, SubmodelRegistry};
 use flexrank::data::{Corpus, TraceCfg, TraceGen};
 use flexrank::runtime::ServingBackend;
 use flexrank::training::params::{decompose_teacher, random_teacher, student_from_factors};
@@ -73,6 +73,50 @@ fn main() -> anyhow::Result<()> {
                 report.metrics.mean_occupancy(),
             );
         }
+    }
+
+    // Continuous-batching decode path: variable-length prompts with
+    // generation through the prefill/decode seam over the paged K/V cache.
+    // The headline is tokens/sec (prefilled + generated over the wall), and
+    // the step latencies the batcher's join/retire churn produces.
+    println!();
+    println!(
+        "decode    rate(req/s)  tok/s  prefill_p50(ms)  decode_p50(ms)  decode_p99(ms)  req_p50(ms)"
+    );
+    for rate in [100.0, 400.0] {
+        let trace = TraceGen::new(
+            TraceCfg {
+                n_requests: n,
+                rate,
+                seq_len: cfg.seq_len,
+                vocab: cfg.vocab,
+                seed: 11,
+                prompt_len_min: (cfg.seq_len / 8).max(1),
+                prompt_len_max: cfg.seq_len,
+                gen_len_min: 1,
+                gen_len_max: (cfg.seq_len / 2).max(1),
+                ..Default::default()
+            },
+            &corpus.heldout,
+        )
+        .generate();
+        let report = serve_trace_decode(
+            &mut registry,
+            trace,
+            &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0 },
+        )?;
+        let d = report.decode_latency();
+        let p = report.prefill_latency();
+        let l = report.request_latency();
+        println!(
+            "{:>8}  {rate:>11.0}  {:>5.0}  {:>15.3}  {:>14.3}  {:>14.3}  {:>10.1}",
+            "Static",
+            report.tokens_per_sec(),
+            p.p50_ms,
+            d.p50_ms,
+            d.p99_ms,
+            l.p50_ms,
+        );
     }
     Ok(())
 }

@@ -103,6 +103,21 @@ impl DynamicBatcher {
         let n = q.len().min(self.max_batch);
         q.drain(..n).collect()
     }
+
+    /// The head of a tier queue, without removing it — the continuous
+    /// batching loop inspects the head's K/V demand before committing a
+    /// slot + page reservation to it.
+    pub fn peek_head(&self, tier: usize) -> Option<&Pending> {
+        self.queues[tier].front()
+    }
+
+    /// Pop a single request — the head of a tier queue.  The continuous
+    /// batching loop admits requests one at a time (each admission is gated
+    /// on a slot + page reservation), so it pulls heads instead of whole
+    /// batches.
+    pub fn pop_head(&mut self, tier: usize) -> Option<Pending> {
+        self.queues[tier].pop_front()
+    }
 }
 
 #[cfg(test)]
@@ -111,7 +126,7 @@ mod tests {
     use crate::data::trace::Slo;
 
     fn req(id: u64) -> Request {
-        Request { id, arrival_s: 0.0, slo: Slo::Standard, tokens: vec![], budget: None }
+        Request { id, arrival_s: 0.0, slo: Slo::Standard, tokens: vec![], gen_len: 0, budget: None }
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub use policy::{Policy, PolicyKind};
 #[cfg(feature = "pjrt")]
 pub use registry::{PjrtRegistry, PjrtServing};
 pub use registry::{load_tier_profiles, SubmodelRegistry, Tier};
-pub use server::{serve_trace, ServeCfg, ServeReport};
+pub use server::{serve_trace, serve_trace_decode, DecodeReport, ServeCfg, ServeReport};
 
 use anyhow::{ensure, Context, Result};
 
@@ -104,6 +104,10 @@ pub fn run_cli(args: &Args) -> Result<()> {
 }
 
 /// Trace generation + serve + report over any loaded backend.
+///
+/// `--mode window` (default) replays the one-shot padded-batch path;
+/// `--mode decode` replays variable-length prompts with generation through
+/// the continuous-batching prefill/decode seam.
 fn serve_cli_on<B: ServingBackend>(
     backend: &mut B,
     cfg: &ModelConfig,
@@ -111,12 +115,24 @@ fn serve_cli_on<B: ServingBackend>(
     seed: u64,
 ) -> Result<()> {
     let corpus = crate::data::Corpus::generate(crate::training::CORPUS_BYTES, 5);
+    let mode = args.get_or("mode", "window");
+    ensure!(
+        mode == "window" || mode == "decode",
+        "unknown --mode '{mode}' (window | decode)"
+    );
+    let decode = mode == "decode";
     let trace_cfg = TraceCfg {
         n_requests: args.usize_or("requests", 200)?,
         rate: args.f64_or("rate", 100.0)?,
         seq_len: cfg.seq_len,
         vocab: cfg.vocab,
         seed,
+        // Decode replays a realistic length mix: short-to-full prompts,
+        // generation clamped so prompt + gen fits the positional table.
+        prompt_len_min: if decode { (cfg.seq_len / 8).max(1) } else { 0 },
+        prompt_len_max: if decode { cfg.seq_len } else { 0 },
+        gen_len_min: if decode { 1 } else { 0 },
+        gen_len_max: if decode { (cfg.seq_len / 2).max(1) } else { 0 },
         ..Default::default()
     };
     let trace = TraceGen::new(trace_cfg, &corpus.heldout).generate();
@@ -130,6 +146,16 @@ fn serve_cli_on<B: ServingBackend>(
         policy,
         ..Default::default()
     };
+
+    if decode {
+        let report = serve_trace_decode(backend, trace, &serve_cfg)?;
+        report.print();
+        let path = crate::results_dir().join("decode_report.json");
+        std::fs::write(&path, report.to_json())?;
+        println!("report -> {}", path.display());
+        return Ok(());
+    }
+
     let report = serve_trace(backend, trace, &serve_cfg)?;
     report.print();
 

@@ -88,7 +88,7 @@ mod tests {
     use super::*;
 
     fn req(slo: Slo) -> Request {
-        Request { id: 0, arrival_s: 0.0, slo, tokens: vec![], budget: None }
+        Request { id: 0, arrival_s: 0.0, slo, tokens: vec![], gen_len: 0, budget: None }
     }
 
     #[test]

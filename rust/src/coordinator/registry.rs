@@ -11,8 +11,8 @@ use anyhow::{ensure, Context, Result};
 use crate::flexrank::masks::gar_layer_params;
 use crate::json;
 use crate::linalg::quant::Precision;
-use crate::runtime::native::{uniform_budget_rank, GarSubmodel, Scratch};
-use crate::runtime::{ModelConfig, ServingBackend};
+use crate::runtime::native::{uniform_budget_rank, DecodeScratch, GarSubmodel, Scratch};
+use crate::runtime::{ModelConfig, PagedKvCache, ServingBackend};
 use crate::training::params::{ParamSet, LAYER_KINDS};
 
 /// Full-model GAR parameter cost of a student's factor set (what the
@@ -197,6 +197,12 @@ pub struct SubmodelRegistry {
     pub seq_len: usize,
     pub vocab: usize,
     scratch: Scratch,
+    /// Per-request paged K/V state for the incremental seam.  One cache is
+    /// shared by every tier: K/V shapes depend only on (d, heads), which
+    /// the rank profiles don't touch, and a request stays pinned to one
+    /// tier for its lifetime.
+    cache: PagedKvCache,
+    decode_scratch: DecodeScratch,
 }
 
 impl SubmodelRegistry {
@@ -275,12 +281,26 @@ impl SubmodelRegistry {
         // Attention path resolves from the config's crossover knobs:
         // streaming (no (t, t) score matrix) at/above attn_streaming_min_seq.
         let scratch = Scratch::for_config(cfg, cfg.batch_serve * cfg.seq_len);
+        // Incremental-decode state: batch_serve concurrent request slots of
+        // up to seq_len tokens each, page pool sized by the kv_* knobs.
+        let cache = PagedKvCache::new(
+            cfg.kv_page_size,
+            cfg.n_blocks,
+            cfg.n_heads,
+            cfg.d_model / cfg.n_heads,
+            cfg.batch_serve,
+            cfg.seq_len,
+            cfg.kv_max_pages,
+        );
+        let decode_scratch = DecodeScratch::for_config(cfg);
         Ok(SubmodelRegistry {
             tiers,
             batch: cfg.batch_serve,
             seq_len: cfg.seq_len,
             vocab: cfg.vocab,
             scratch,
+            cache,
+            decode_scratch,
         })
     }
 
@@ -303,6 +323,14 @@ impl SubmodelRegistry {
     /// Scratch buffer identity (tests assert it never reallocates).
     pub fn scratch_fingerprint(&self) -> Vec<usize> {
         self.scratch.fingerprint()
+    }
+
+    /// Incremental-path buffer identity (cache pool + decode scratch) —
+    /// the decode loop's zero-allocation pin.
+    pub fn decode_fingerprint(&self) -> Vec<usize> {
+        let mut fp = self.cache.fingerprint();
+        fp.extend(self.decode_scratch.fingerprint());
+        fp
     }
 }
 
@@ -330,6 +358,34 @@ impl ServingBackend for SubmodelRegistry {
     }
     fn tier_precision_label(&self, tier: usize) -> &'static str {
         self.tiers[tier].precision.label()
+    }
+    fn supports_decode(&self) -> bool {
+        true
+    }
+    fn decode_slots(&self) -> usize {
+        self.cache.max_slots()
+    }
+    fn acquire_slot(&mut self, need_tokens: usize) -> Option<usize> {
+        self.cache.try_acquire(need_tokens)
+    }
+    fn release_slot(&mut self, slot: usize) {
+        self.cache.release(slot);
+    }
+    fn prefill(&mut self, tier: usize, slot: usize, tokens: &[i32]) -> Result<&[f32]> {
+        ensure!(tier < self.tiers.len(), "tier {tier} out of range");
+        let vocab = self.vocab;
+        let rows = tokens.len();
+        let Self { tiers, cache, decode_scratch, .. } = self;
+        tiers[tier].model.prefill(tokens, slot, cache, decode_scratch)?;
+        Ok(decode_scratch.logits(rows, vocab))
+    }
+    fn decode_step(&mut self, tier: usize, slots: &[usize], tokens: &[i32]) -> Result<&[f32]> {
+        ensure!(tier < self.tiers.len(), "tier {tier} out of range");
+        let vocab = self.vocab;
+        let rows = slots.len();
+        let Self { tiers, cache, decode_scratch, .. } = self;
+        tiers[tier].model.decode_step(tokens, slots, cache, decode_scratch)?;
+        Ok(decode_scratch.logits(rows, vocab))
     }
 }
 

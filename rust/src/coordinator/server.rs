@@ -5,14 +5,14 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::data::trace::Request;
 use crate::json::{self, Value};
 use crate::runtime::ServingBackend;
 
 use super::batcher::{DynamicBatcher, Pending};
-use super::metrics::Metrics;
+use super::metrics::{LatencyStats, Metrics};
 use super::policy::{Policy, PolicyKind};
 
 /// Serving-run configuration.
@@ -101,9 +101,11 @@ impl ServeReport {
     }
 }
 
-/// Execute one batch on a tier: pad tokens into the reusable buffer, run
-/// the backend forward, record metrics.  Shared by the steady-state and
-/// drain paths (they were previously copy-pasted).
+/// Execute one batch on a tier: full-window requests pack into the reusable
+/// buffer for one `infer` call; shorter prompts route padding-free through
+/// the backend's prefill seam (they used to hard-error here and abort the
+/// whole replay).  Shared by the steady-state and drain paths (they were
+/// previously copy-pasted).
 fn run_batch<B: ServingBackend + ?Sized>(
     backend: &mut B,
     metrics: &mut Metrics,
@@ -112,30 +114,81 @@ fn run_batch<B: ServingBackend + ?Sized>(
     tier: usize,
     batch: &[Pending],
 ) -> Result<()> {
-    let fill = batch.len();
     let (cap, seq) = (backend.batch(), backend.seq_len());
     tokens.clear();
+    let mut full = 0usize;
     for p in batch {
-        // A request with a wrong-length token window would shift every
-        // later request's rows in the packed batch and silently corrupt
-        // whose logits are whose — reject it loudly instead.
+        // An over-long window fits neither the packed batch nor a K/V
+        // stream; in the packed batch it would shift every later request's
+        // rows and silently corrupt whose logits are whose — reject loudly.
         ensure!(
-            p.req.tokens.len() == seq,
+            p.req.tokens.len() <= seq,
             "request {} carries {} tokens but the serving seq_len is {seq}; \
              refusing to pack a misaligned batch",
             p.req.id,
             p.req.tokens.len()
         );
-        tokens.extend_from_slice(&p.req.tokens);
+        ensure!(
+            !p.req.tokens.is_empty(),
+            "request {} carries an empty token window; refusing to pack it",
+            p.req.id
+        );
+        if p.req.tokens.len() == seq {
+            tokens.extend_from_slice(&p.req.tokens);
+            full += 1;
+        } else {
+            ensure!(
+                backend.supports_decode(),
+                "request {} carries {} tokens but the serving seq_len is {seq} \
+                 and this backend has no prefill seam; refusing to pack a \
+                 misaligned batch",
+                p.req.id,
+                p.req.tokens.len()
+            );
+        }
     }
-    tokens.resize(cap * seq, 0);
-    let exec_t0 = Instant::now();
-    let _logits = backend.infer(tier, tokens)?;
-    let exec = exec_t0.elapsed();
-    let done = Instant::now();
-    lats.clear();
-    lats.extend(batch.iter().map(|p| done.duration_since(p.enqueued)));
-    metrics.record_batch(tier, fill, cap, exec, lats);
+
+    if full > 0 {
+        tokens.resize(cap * seq, 0);
+        let exec_t0 = Instant::now();
+        let _logits = backend.infer(tier, tokens)?;
+        let exec = exec_t0.elapsed();
+        let done = Instant::now();
+        lats.clear();
+        lats.extend(
+            batch
+                .iter()
+                .filter(|p| p.req.tokens.len() == seq)
+                .map(|p| done.duration_since(p.enqueued)),
+        );
+        metrics.record_batch(tier, full, cap, exec, lats);
+    }
+
+    let short = batch.len() - full;
+    if short > 0 {
+        // Short prompts run one at a time through prefill — no padding, no
+        // row-shifting risk — and release their pages immediately since the
+        // one-shot path keeps no decode state.
+        let exec_t0 = Instant::now();
+        for p in batch.iter().filter(|p| p.req.tokens.len() < seq) {
+            let Some(slot) = backend.acquire_slot(p.req.tokens.len()) else {
+                bail!("no K/V slot free to prefill request {}", p.req.id)
+            };
+            let res = backend.prefill(tier, slot, &p.req.tokens).map(|_| ());
+            backend.release_slot(slot);
+            res?;
+        }
+        let exec = exec_t0.elapsed();
+        let done = Instant::now();
+        lats.clear();
+        lats.extend(
+            batch
+                .iter()
+                .filter(|p| p.req.tokens.len() < seq)
+                .map(|p| done.duration_since(p.enqueued)),
+        );
+        metrics.record_batch(tier, short, short, exec, lats);
+    }
     Ok(())
 }
 
@@ -247,6 +300,320 @@ pub fn serve_trace<B: ServingBackend + ?Sized>(
     })
 }
 
+/// Final report of a continuous-batching decode run.
+pub struct DecodeReport {
+    pub requests_done: usize,
+    /// Executed `decode_step` calls (each advances a whole tier group).
+    pub steps: usize,
+    pub tokens_prefilled: usize,
+    pub tokens_generated: usize,
+    pub wall_s: f64,
+    /// Per-call decode-step execution samples (ms).
+    pub decode_step_ms: Vec<f64>,
+    /// Per-request prefill execution samples (ms).
+    pub prefill_ms: Vec<f64>,
+    /// End-to-end request latency samples (ms): queueing + prefill + decode.
+    pub latency_ms: Vec<f64>,
+    pub tier_requests: Vec<usize>,
+}
+
+impl DecodeReport {
+    /// End-to-end token throughput (prefilled + generated per wall second).
+    pub fn tokens_per_sec(&self) -> f64 {
+        (self.tokens_prefilled + self.tokens_generated) as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn decode_latency(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.decode_step_ms)
+    }
+
+    pub fn prefill_latency(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.prefill_ms)
+    }
+
+    pub fn request_latency(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.latency_ms)
+    }
+
+    pub fn print(&self) {
+        println!("== decode serving report ==");
+        println!(
+            "requests {}  steps {}  prefill {} tok  generated {} tok  \
+             wall {:.2}s  throughput {:.1} tok/s",
+            self.requests_done,
+            self.steps,
+            self.tokens_prefilled,
+            self.tokens_generated,
+            self.wall_s,
+            self.tokens_per_sec()
+        );
+        let d = self.decode_latency();
+        let p = self.prefill_latency();
+        let l = self.request_latency();
+        println!(
+            "decode step p50 {:.3}ms p99 {:.3}ms | prefill p50 {:.3}ms \
+             p99 {:.3}ms | request p50 {:.1}ms p99 {:.1}ms",
+            d.p50_ms, d.p99_ms, p.p50_ms, p.p99_ms, l.p50_ms, l.p99_ms
+        );
+        for (i, &n) in self.tier_requests.iter().enumerate() {
+            println!("tier {i}: {n} reqs");
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let d = self.decode_latency();
+        let p = self.prefill_latency();
+        let l = self.request_latency();
+        json::to_string(&json::obj(vec![
+            ("requests", Value::Num(self.requests_done as f64)),
+            ("steps", Value::Num(self.steps as f64)),
+            ("tokens_prefilled", Value::Num(self.tokens_prefilled as f64)),
+            ("tokens_generated", Value::Num(self.tokens_generated as f64)),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("tokens_per_sec", Value::Num(self.tokens_per_sec())),
+            ("decode_p50_ms", Value::Num(d.p50_ms)),
+            ("decode_p99_ms", Value::Num(d.p99_ms)),
+            ("prefill_p50_ms", Value::Num(p.p50_ms)),
+            ("prefill_p99_ms", Value::Num(p.p99_ms)),
+            ("latency_p50_ms", Value::Num(l.p50_ms)),
+            ("latency_p99_ms", Value::Num(l.p99_ms)),
+        ]))
+    }
+}
+
+/// Greedy (deterministic) token choice from one logits row.
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Serve a trace through the incremental prefill/decode seam with
+/// continuous batching: new requests join the running batch between decode
+/// steps as soon as a slot plus an eager (prompt + generation) page
+/// reservation is free, and a finished request's pages free immediately —
+/// no flush barriers, no padding.
+pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
+    backend: &mut B,
+    trace: Vec<Request>,
+    cfg: &ServeCfg,
+) -> Result<DecodeReport> {
+    ensure!(
+        backend.supports_decode() && backend.decode_slots() > 0,
+        "this backend has no incremental decode seam"
+    );
+    let n_tiers = backend.n_tiers();
+    let seq = backend.seq_len();
+    let policy = Policy::new(cfg.policy, n_tiers);
+    let mut batcher = DynamicBatcher::new(
+        n_tiers,
+        backend.batch(),
+        Duration::from_secs_f64(cfg.max_wait_ms / 1e3),
+    );
+    let mut tier_requests = vec![0usize; n_tiers];
+
+    // Same ingest contracts as `serve_trace`, checked before the replay
+    // thread spawns so an abort leaves no detached thread behind.  The
+    // extra decode-path contract: a stream (prompt + generation) must fit
+    // the positional table, and eager reservation needs at least one token.
+    for req in &trace {
+        if let Some(b) = req.budget {
+            ensure!(
+                b.is_finite() && b > 0.0 && b <= 1.0,
+                "request {} carries budget {b} outside the (0, 1] \
+                 contract; refusing to route it",
+                req.id
+            );
+        }
+        ensure!(!req.tokens.is_empty(), "request {} carries an empty prompt", req.id);
+        ensure!(
+            req.total_tokens() <= seq,
+            "request {} needs {} tokens (prompt {} + gen {}) but the \
+             positional table holds {seq}; refusing to admit it",
+            req.id,
+            req.total_tokens(),
+            req.tokens.len(),
+            req.gen_len
+        );
+    }
+
+    // Ingest thread: replays arrivals on the trace's timeline.
+    let (tx, rx) = mpsc::channel::<Request>();
+    let replay = cfg.replay_speed;
+    let ingest = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        for req in trace {
+            if replay > 0.0 {
+                let due = Duration::from_secs_f64(req.arrival_s / replay);
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            if tx.send(req).is_err() {
+                break;
+            }
+        }
+    });
+
+    /// One admitted, still-generating request.
+    struct Active {
+        tier: usize,
+        slot: usize,
+        last_token: i32,
+        remaining: usize,
+        enqueued: Instant,
+    }
+
+    let mut active: Vec<Active> = Vec::with_capacity(backend.decode_slots());
+    // Reused across steps so the decode loop stays allocation-free.
+    let mut step_slots: Vec<usize> = Vec::with_capacity(backend.decode_slots());
+    let mut step_tokens: Vec<i32> = Vec::with_capacity(backend.decode_slots());
+
+    let mut requests_done = 0usize;
+    let mut steps = 0usize;
+    let mut tokens_prefilled = 0usize;
+    let mut tokens_generated = 0usize;
+    let mut decode_step_ms: Vec<f64> = Vec::new();
+    let mut prefill_ms: Vec<f64> = Vec::new();
+    let mut latency_ms: Vec<f64> = Vec::new();
+
+    let start = Instant::now();
+    let mut open = true;
+    while open || batcher.depth() > 0 || !active.is_empty() {
+        // Drain arrivals.
+        loop {
+            match rx.try_recv() {
+                Ok(req) => {
+                    let now = Instant::now();
+                    let tier = policy.select(&req, batcher.depth());
+                    tier_requests[tier] += 1;
+                    batcher.push(tier, req, now);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+
+        // Admission: between steps, queued requests join the running batch
+        // as long as a slot plus a full eager page reservation is free;
+        // oldest queue head first — the batcher's one fairness rule.
+        loop {
+            let Some(tier) = batcher.oldest_head_tier() else { break };
+            let need = match batcher.peek_head(tier) {
+                Some(p) => p.req.total_tokens(),
+                None => break,
+            };
+            let Some(slot) = backend.acquire_slot(need) else { break };
+            let p = batcher.pop_head(tier).expect("peeked head vanished");
+            let t0 = Instant::now();
+            let first = {
+                let logits = backend.prefill(tier, slot, &p.req.tokens)?;
+                let vocab = logits.len() / p.req.tokens.len();
+                argmax(&logits[(p.req.tokens.len() - 1) * vocab..])
+            };
+            prefill_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            tokens_prefilled += p.req.tokens.len();
+            if p.req.gen_len <= 1 {
+                // Prefill-only, or the single generated token came straight
+                // off the prompt logits — complete without entering decode.
+                tokens_generated += p.req.gen_len;
+                backend.release_slot(slot);
+                latency_ms.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
+                requests_done += 1;
+                continue;
+            }
+            tokens_generated += 1;
+            active.push(Active {
+                tier,
+                slot,
+                last_token: first,
+                remaining: p.req.gen_len - 1,
+                enqueued: p.enqueued,
+            });
+        }
+
+        if active.is_empty() {
+            if open {
+                // Idle: wait for the next deadline or a short poll tick.
+                let wait = batcher
+                    .next_deadline(Instant::now())
+                    .unwrap_or(Duration::from_millis(1))
+                    .min(Duration::from_millis(2));
+                std::thread::sleep(wait.max(Duration::from_micros(100)));
+            }
+            continue;
+        }
+
+        // One decode step per tier group: feed each request's last sampled
+        // token, append its K/V row, sample the next token greedily.
+        for tier in 0..n_tiers {
+            step_slots.clear();
+            step_tokens.clear();
+            for a in active.iter().filter(|a| a.tier == tier) {
+                step_slots.push(a.slot);
+                step_tokens.push(a.last_token);
+            }
+            if step_slots.is_empty() {
+                continue;
+            }
+            let n_rows = step_slots.len();
+            let t0 = Instant::now();
+            {
+                let logits = backend.decode_step(tier, &step_slots, &step_tokens)?;
+                let vocab = logits.len() / n_rows;
+                step_tokens.clear();
+                for r in 0..n_rows {
+                    step_tokens.push(argmax(&logits[r * vocab..(r + 1) * vocab]));
+                }
+            }
+            decode_step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            steps += 1;
+            let mut r = 0;
+            for a in active.iter_mut().filter(|a| a.tier == tier) {
+                a.last_token = step_tokens[r];
+                a.remaining -= 1;
+                tokens_generated += 1;
+                r += 1;
+            }
+        }
+
+        // Retire finished requests; their pages free immediately so queued
+        // requests can admit on the very next iteration.
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].remaining == 0 {
+                let a = active.swap_remove(i);
+                backend.release_slot(a.slot);
+                latency_ms.push(a.enqueued.elapsed().as_secs_f64() * 1e3);
+                requests_done += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    ingest.join().ok();
+
+    Ok(DecodeReport {
+        requests_done,
+        steps,
+        tokens_prefilled,
+        tokens_generated,
+        wall_s,
+        decode_step_ms,
+        prefill_ms,
+        latency_ms,
+        tier_requests,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +641,7 @@ mod tests {
             arrival_s: 0.0,
             slo: Slo::Standard,
             tokens: vec![1; cfg.seq_len],
+            gen_len: 0,
             budget,
         };
         let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
@@ -294,29 +662,88 @@ mod tests {
     }
 
     #[test]
-    fn malformed_request_length_fails_loudly() {
+    fn overlong_request_fails_loudly_short_routes_through_prefill() {
         let (cfg, mut registry) = tiny_registry(9);
         let good = |id: u64| Request {
             id,
             arrival_s: 0.0,
             slo: Slo::Standard,
             tokens: vec![1; cfg.seq_len],
+            gen_len: 0,
             budget: None,
         };
-        // Request 2 carries a truncated token window: without the length
-        // check its rows silently shift request 3's logits in the packed
-        // batch; with it the run must abort naming the offender.
-        let mut bad = good(2);
-        bad.tokens.truncate(cfg.seq_len - 3);
-        let trace = vec![good(1), bad, good(3)];
-        let err = serve_trace(
-            &mut registry,
-            trace,
-            &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 },
-        )
-        .unwrap_err();
+        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+
+        // An over-long window fits neither the packed batch nor a K/V
+        // stream: the run must abort naming the offender.
+        let mut long = good(2);
+        long.tokens.extend_from_slice(&[1, 1, 1]);
+        let err = serve_trace(&mut registry, vec![good(1), long, good(3)], &scfg).unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("request 2"), "error must name the request: {msg}");
         assert!(msg.contains("seq_len"), "error must explain the mismatch: {msg}");
+
+        // A truncated window used to abort the whole replay here; it now
+        // routes padding-free through the prefill seam and the replay
+        // completes, serving every request.
+        let mut short = good(2);
+        short.tokens.truncate(cfg.seq_len - 3);
+        let report =
+            serve_trace(&mut registry, vec![good(1), short, good(3)], &scfg).unwrap();
+        assert_eq!(report.metrics.requests_done, 3);
+        // The one-shot prefill released its slot and pages.
+        assert!(registry.acquire_slot(cfg.seq_len).is_some());
+    }
+
+    #[test]
+    fn continuous_decode_serves_variable_length_trace() {
+        use crate::data::trace::{TraceCfg, TraceGen};
+        let (cfg, mut registry) = tiny_registry(23);
+        let n = 12;
+        let tcfg = TraceCfg {
+            n_requests: n,
+            rate: 1000.0,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            seed: 41,
+            prompt_len_min: 2,
+            prompt_len_max: cfg.seq_len - 2,
+            gen_len_min: 1,
+            gen_len_max: cfg.seq_len / 2,
+            ..Default::default()
+        };
+        let trace = TraceGen::new(tcfg, b"decode trace source text for the tiny registry").generate();
+        let want_gen: usize = trace.iter().map(|r| r.gen_len).sum();
+        let want_prefill: usize = trace.iter().map(|r| r.tokens.len()).sum();
+        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let report = serve_trace_decode(&mut registry, trace, &scfg).unwrap();
+        assert_eq!(report.requests_done, n);
+        assert_eq!(report.tokens_prefilled, want_prefill);
+        assert_eq!(report.tokens_generated, want_gen);
+        assert_eq!(report.latency_ms.len(), n);
+        assert_eq!(report.tier_requests.iter().sum::<usize>(), n);
+        assert!(report.tokens_per_sec() > 0.0);
+        // Every slot and page came back to the pool.
+        for _ in 0..registry.decode_slots() {
+            assert!(registry.acquire_slot(cfg.seq_len).is_some(), "slots or pages leaked");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_streams_that_outgrow_the_positional_table() {
+        let (cfg, mut registry) = tiny_registry(31);
+        let req = Request {
+            id: 5,
+            arrival_s: 0.0,
+            slo: Slo::Standard,
+            tokens: vec![1; cfg.seq_len - 2],
+            gen_len: 5,
+            budget: None,
+        };
+        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let err = serve_trace_decode(&mut registry, vec![req], &scfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("request 5"), "error must name the request: {msg}");
+        assert!(msg.contains("positional table"), "error must explain: {msg}");
     }
 }

@@ -1,8 +1,9 @@
 //! Synthetic serving request traces for the elastic coordinator.
 //!
-//! Poisson arrivals; each request carries a latency SLO class and a token
-//! payload.  Stands in for the production traces the paper's deployment
-//! story assumes (DESIGN.md §substitutions).
+//! Poisson arrivals; each request carries a latency SLO class, a token
+//! payload, and (for the incremental decode path) a generation length.
+//! Stands in for the production traces the paper's deployment story
+//! assumes (DESIGN.md §substitutions).
 
 use crate::rng::Rng;
 
@@ -28,12 +29,24 @@ pub struct Request {
     /// Arrival time offset from trace start (seconds).
     pub arrival_s: f64,
     pub slo: Slo,
-    /// Token window (model seq_len), values in [0, vocab).
+    /// Prompt tokens, values in [0, vocab).  The legacy one-shot path
+    /// expects exactly `seq_len` of them; the incremental decode path
+    /// accepts any prompt length with `prompt + gen_len ≤ seq_len`.
     pub tokens: Vec<i32>,
+    /// Tokens to generate after the prompt (0 = prefill-only / legacy
+    /// one-shot window semantics).
+    pub gen_len: usize,
     /// Optional explicit budget override.  Contract: finite and in (0, 1]
     /// — `serve_trace` rejects anything else at ingest rather than letting
     /// the tier arithmetic silently absorb NaN or out-of-range values.
     pub budget: Option<f64>,
+}
+
+impl Request {
+    /// K/V capacity the request needs end to end (prompt + generation).
+    pub fn total_tokens(&self) -> usize {
+        self.tokens.len() + self.gen_len
+    }
 }
 
 /// Trace generation knobs.
@@ -47,6 +60,17 @@ pub struct TraceCfg {
     pub seq_len: usize,
     pub vocab: usize,
     pub seed: u64,
+    /// Prompt-length distribution, uniform in `[prompt_len_min,
+    /// prompt_len_max]`.  `prompt_len_max == 0` (the default) keeps the
+    /// legacy fixed-`seq_len` prompts.
+    pub prompt_len_min: usize,
+    pub prompt_len_max: usize,
+    /// Generation-length distribution, uniform in `[gen_len_min,
+    /// gen_len_max]`, clamped so `prompt + gen ≤ seq_len` (the positional
+    /// table bound).  `gen_len_max == 0` (the default) generates nothing —
+    /// the legacy one-shot trace.
+    pub gen_len_min: usize,
+    pub gen_len_max: usize,
 }
 
 impl Default for TraceCfg {
@@ -58,6 +82,10 @@ impl Default for TraceCfg {
             seq_len: 64,
             vocab: 256,
             seed: 77,
+            prompt_len_min: 0,
+            prompt_len_max: 0,
+            gen_len_min: 0,
+            gen_len_max: 0,
         }
     }
 }
@@ -91,15 +119,30 @@ impl TraceGen {
         let u = self.rng.f64().max(1e-12);
         self.t += -u.ln() / self.cfg.rate;
         let slo = Slo::ALL[self.rng.weighted(&self.cfg.slo_mix)];
-        let start = self.rng.below(self.source.len().saturating_sub(self.cfg.seq_len).max(1));
-        let tokens: Vec<i32> = (0..self.cfg.seq_len)
+        let prompt_len = if self.cfg.prompt_len_max == 0 {
+            self.cfg.seq_len
+        } else {
+            let lo = self.cfg.prompt_len_min.clamp(1, self.cfg.seq_len);
+            let hi = self.cfg.prompt_len_max.clamp(lo, self.cfg.seq_len);
+            lo + self.rng.below(hi - lo + 1)
+        };
+        let gen_len = if self.cfg.gen_len_max == 0 {
+            0
+        } else {
+            let lo = self.cfg.gen_len_min.min(self.cfg.gen_len_max);
+            let drawn = lo + self.rng.below(self.cfg.gen_len_max - lo + 1);
+            // A stream never outgrows the positional table.
+            drawn.min(self.cfg.seq_len - prompt_len)
+        };
+        let start = self.rng.below(self.source.len().saturating_sub(prompt_len).max(1));
+        let tokens: Vec<i32> = (0..prompt_len)
             .map(|i| {
                 let b = self.source.get(start + i).copied().unwrap_or(b' ');
                 (b as usize % self.cfg.vocab) as i32
             })
             .collect();
         self.issued += 1;
-        Request { id: self.issued, arrival_s: self.t, slo, tokens, budget: None }
+        Request { id: self.issued, arrival_s: self.t, slo, tokens, gen_len, budget: None }
     }
 }
 
@@ -137,6 +180,29 @@ mod tests {
     fn tokens_in_range() {
         let a = trace(50, 3);
         assert!(a.iter().all(|r| r.tokens.iter().all(|&t| (0..256).contains(&t))));
-        assert!(a.iter().all(|r| r.tokens.len() == 64));
+        assert!(a.iter().all(|r| r.tokens.len() == 64 && r.gen_len == 0));
+    }
+
+    #[test]
+    fn variable_length_distributions_respect_bounds() {
+        let cfg = TraceCfg {
+            n_requests: 500,
+            seq_len: 32,
+            prompt_len_min: 4,
+            prompt_len_max: 24,
+            gen_len_min: 2,
+            gen_len_max: 16,
+            seed: 9,
+            ..Default::default()
+        };
+        let a = TraceGen::new(cfg, b"variable length source text for decode traces").generate();
+        for r in &a {
+            assert!((4..=24).contains(&r.tokens.len()), "prompt {}", r.tokens.len());
+            assert!(r.gen_len <= 16);
+            assert!(r.total_tokens() <= 32, "stream {} outgrows seq_len", r.total_tokens());
+        }
+        // Both knobs actually vary…
+        assert!(a.iter().any(|r| r.tokens.len() != a[0].tokens.len()));
+        assert!(a.iter().any(|r| r.gen_len >= 1), "generation lengths all clamped to zero");
     }
 }

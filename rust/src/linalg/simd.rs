@@ -5,8 +5,8 @@
 //! * **x86_64 AVX2+FMA** — 8-lane f32 vectors with fused multiply-add for
 //!   the dot/axpy micro-kernels plus a vectorized polynomial `exp` for the
 //!   softmax row loops.
-//! * **aarch64 NEON** — 4-lane f32 dot/axpy micro-kernels (the softmax
-//!   helpers stay scalar there).
+//! * **aarch64 NEON** — 4-lane f32 dot/axpy micro-kernels plus the same
+//!   polynomial-`exp` softmax helpers at NEON width.
 //! * **scalar** — the pre-SIMD loops, kept verbatim as the oracle the
 //!   `simd ≡ scalar` property tests compare against.
 //!
@@ -179,6 +179,8 @@ pub fn scale_max(row: &mut [f32], scale: f32) -> f32 {
     match isa() {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::scale_max(row, scale) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::scale_max(row, scale) },
         _ => scale_max_scalar(row, scale),
     }
 }
@@ -201,6 +203,8 @@ pub fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
     match isa() {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::exp_sub_sum(row, mx) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::exp_sub_sum(row, mx) },
         _ => exp_sub_sum_scalar(row, mx),
     }
 }
@@ -221,6 +225,8 @@ pub fn scale_in_place(row: &mut [f32], c: f32) {
     match isa() {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::scale_in_place(row, c) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::scale_in_place(row, c) },
         _ => scale_in_place_scalar(row, c),
     }
 }
@@ -238,6 +244,8 @@ pub fn rescale_add(out: &mut [f32], add: &[f32], corr: f32) {
     match isa() {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::rescale_add(out, add, corr) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::rescale_add(out, add, corr) },
         _ => rescale_add_scalar(out, add, corr),
     }
 }
@@ -257,6 +265,8 @@ pub fn exp_recompute(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
     match isa() {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::exp_recompute(row, scale, mi, inv_l) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::exp_recompute(row, scale, mi, inv_l) },
         _ => exp_recompute_scalar(row, scale, mi, inv_l),
     }
 }
@@ -611,6 +621,137 @@ mod neon {
                 j += 1;
             }
             kk += 1;
+        }
+    }
+
+    /// Polynomial exp for 4 lanes — the NEON mirror of `avx2::exp8`: same
+    /// clamp, same ln2 split, same degree-6 Horner, so the two ISAs agree
+    /// to the last coefficient (≈1e-7 relative error).
+    #[target_feature(enable = "neon")]
+    unsafe fn exp4(x: float32x4_t) -> float32x4_t {
+        let x = vminq_f32(x, vdupq_n_f32(88.0));
+        let x = vmaxq_f32(x, vdupq_n_f32(-87.0));
+        let log2e = vdupq_n_f32(std::f32::consts::LOG2_E);
+        let ln2_hi = vdupq_n_f32(0.693_359_375);
+        let ln2_lo = vdupq_n_f32(-2.121_944_4e-4);
+        // n = round-to-nearest(x · log2(e)).
+        let ni = vcvtnq_s32_f32(vmulq_f32(x, log2e));
+        let nf = vcvtq_f32_s32(ni);
+        // r = x − n·ln2, split ln2 so the subtraction stays exact.
+        let r = vfmsq_f32(x, nf, ln2_hi);
+        let r = vfmsq_f32(r, nf, ln2_lo);
+        // Horner over 1 + r + r²/2! + … + r⁶/6!.
+        let mut p = vdupq_n_f32(1.0 / 720.0);
+        p = vfmaq_f32(vdupq_n_f32(1.0 / 120.0), p, r);
+        p = vfmaq_f32(vdupq_n_f32(1.0 / 24.0), p, r);
+        p = vfmaq_f32(vdupq_n_f32(1.0 / 6.0), p, r);
+        p = vfmaq_f32(vdupq_n_f32(0.5), p, r);
+        p = vfmaq_f32(vdupq_n_f32(1.0), p, r);
+        p = vfmaq_f32(vdupq_n_f32(1.0), p, r);
+        // Scale by 2^n through the exponent bits.
+        let pow2 = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(ni, vdupq_n_s32(127))));
+        vmulq_f32(p, pow2)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_max(row: &mut [f32], scale: f32) -> f32 {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let sv = vdupq_n_f32(scale);
+        let mut mv = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = vmulq_f32(vld1q_f32(p.add(i)), sv);
+            vst1q_f32(p.add(i), v);
+            mv = vmaxq_f32(mv, v);
+            i += 4;
+        }
+        let mut mx = vmaxvq_f32(mv);
+        while i < n {
+            let v = *p.add(i) * scale;
+            *p.add(i) = v;
+            if v > mx {
+                mx = v;
+            }
+            i += 1;
+        }
+        mx
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let mv = vdupq_n_f32(mx);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let e = exp4(vsubq_f32(vld1q_f32(p.add(i)), mv));
+            vst1q_f32(p.add(i), e);
+            acc = vaddq_f32(acc, e);
+            i += 4;
+        }
+        let mut sum = vaddvq_f32(acc);
+        while i < n {
+            let e = (*p.add(i) - mx).exp();
+            *p.add(i) = e;
+            sum += e;
+            i += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_in_place(row: &mut [f32], c: f32) {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let cv = vdupq_n_f32(c);
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(p.add(i), vmulq_f32(vld1q_f32(p.add(i)), cv));
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) *= c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rescale_add(out: &mut [f32], add: &[f32], corr: f32) {
+        debug_assert_eq!(out.len(), add.len());
+        let n = out.len();
+        let po = out.as_mut_ptr();
+        let pa = add.as_ptr();
+        let cv = vdupq_n_f32(corr);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = vfmaq_f32(vld1q_f32(pa.add(i)), vld1q_f32(po.add(i)), cv);
+            vst1q_f32(po.add(i), v);
+            i += 4;
+        }
+        while i < n {
+            *po.add(i) = *po.add(i) * corr + *pa.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_recompute(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
+        let n = row.len();
+        let p = row.as_mut_ptr();
+        let sv = vdupq_n_f32(scale);
+        let miv = vdupq_n_f32(mi);
+        let lv = vdupq_n_f32(inv_l);
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vsubq_f32(vmulq_f32(vld1q_f32(p.add(i)), sv), miv);
+            vst1q_f32(p.add(i), vmulq_f32(exp4(x), lv));
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) = (*p.add(i) * scale - mi).exp() * inv_l;
+            i += 1;
         }
     }
 }

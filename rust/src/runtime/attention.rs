@@ -45,6 +45,7 @@ use crate::linalg::kernels;
 use crate::linalg::pool::{self, SendPtr};
 use crate::linalg::simd;
 use crate::linalg::AlignedVec;
+use crate::runtime::kvcache::PagedKvCache;
 
 /// Default streaming K/V tile width Tc (keys gathered per panel).
 pub const DEFAULT_ATTN_TILE: usize = 64;
@@ -566,6 +567,187 @@ pub fn causal_attention(
             });
         }
     }
+}
+
+/// Preallocated staging for the paged single-query decode attention:
+/// `slots` independent (score-tile, output-accumulator) pairs, one per
+/// pooled chunk of the (row × head) decode loop.  Per slot: `page_size`
+/// score floats (one page of keys at a time — the decode analogue of the
+/// streaming score tile) and `hd` accumulator floats.  Sized once;
+/// [`paged_decode_attention`] never allocates.
+#[derive(Debug)]
+pub struct DecodeWorkspace {
+    hd: usize,
+    page_size: usize,
+    slots: usize,
+    scores: AlignedVec<f32>,
+    acc: AlignedVec<f32>,
+}
+
+impl DecodeWorkspace {
+    pub fn new(hd: usize, page_size: usize, slots: usize) -> DecodeWorkspace {
+        let slots = slots.max(1);
+        DecodeWorkspace {
+            hd,
+            page_size,
+            slots,
+            scores: AlignedVec::zeroed(slots * page_size),
+            acc: AlignedVec::zeroed(slots * hd),
+        }
+    }
+
+    /// Independent staging slots (the pooled fan-out width).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Buffer base pointers for the zero-allocation pin.
+    pub fn fingerprint(&self) -> Vec<usize> {
+        vec![self.scores.as_ptr() as usize, self.acc.as_ptr() as usize]
+    }
+}
+
+/// Single-query causal attention for one (request-slot, layer, head) stream:
+/// `out = softmax(q·Kᵀ·scale)·V` over the first `kv_len` cached positions,
+/// consuming the K/V pages as natural `(page_size × hd)` tiles with the
+/// same online-softmax recurrence as [`stream_pair_forward`] — per tile a
+/// running max `m` and denominator `l` merge via `corr = exp(m_old −
+/// m_new)` (with the legacy `corr = 0` convention on the first tile), and
+/// the accumulator is rescaled before the tile's weighted values fold in.
+///
+/// `scores` must hold `page_size` floats, `acc` and `out` must hold `hd`
+/// (`= q.len()`) floats each.  Causality is positional: the caller passes
+/// `kv_len` = the query's position + 1, and the cache holds exactly the
+/// rows before it, so no mask is needed.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attend_paged(
+    cache: &PagedKvCache,
+    slot: usize,
+    layer: usize,
+    head: usize,
+    q: &[f32],
+    kv_len: usize,
+    scale: f32,
+    scores: &mut [f32],
+    acc: &mut [f32],
+    out: &mut [f32],
+) {
+    let hd = q.len();
+    let ps = cache.page_size();
+    debug_assert!(kv_len > 0, "a decode query always sees at least itself");
+    debug_assert!(scores.len() >= ps && acc.len() >= hd && out.len() >= hd);
+    let acc = &mut acc[..hd];
+    let mut m = 0f32;
+    let mut l = 0f32;
+    let mut pos = 0usize;
+    let mut page = 0usize;
+    while pos < kv_len {
+        let jlen = ps.min(kv_len - pos);
+        let kt = cache.k_page(slot, layer, head, page);
+        let vt = cache.v_page(slot, layer, head, page);
+        let sc = &mut scores[..jlen];
+        for (j, s) in sc.iter_mut().enumerate() {
+            *s = simd::dot_f32(q, &kt[j * hd..(j + 1) * hd]);
+        }
+        let first = pos == 0;
+        let tm = simd::scale_max(sc, scale);
+        // The running stats mix state across tiles and keep the legacy exp
+        // on the −∞ first-tile edge, exactly like `stream_pair_forward`.
+        let m_new = if first { tm } else { m.max(tm) };
+        let corr = if first { 0.0 } else { (m - m_new).exp() };
+        let tsum = simd::exp_sub_sum(sc, m_new);
+        l = if first { tsum } else { l * corr + tsum };
+        m = m_new;
+        if first {
+            acc.fill(0.0);
+        } else {
+            simd::scale_in_place(acc, corr);
+        }
+        // acc += scᵀ · V_tile: the tile's rows enter in page order, so the
+        // summation order is a pure function of (kv_len, page_size) — a row
+        // decodes bit-identically whatever batch it shares a step with.
+        simd::axpy4_f32(sc, &vt[..jlen * hd], hd, acc);
+        pos += jlen;
+        page += 1;
+    }
+    let inv = 1.0 / l;
+    for (o, &a) in out[..hd].iter_mut().zip(acc.iter()) {
+        *o = a * inv;
+    }
+}
+
+/// Paged attention for a batch of incremental rows (prefill rows and
+/// single-token decode rows look identical here): row `r` of the packed
+/// `(rows, 3d)` qkv buffer queries the K/V stream of request slot
+/// `row_slots[r]` over its first `row_lens[r]` cached positions, merged
+/// heads landing in `att` (`(rows, d)`).  The (row × head) pair loop fans
+/// out over the worker pool slot-strided, one [`DecodeWorkspace`] staging
+/// slot per chunk — the same disjoint-slice discipline as
+/// [`causal_attention`], and just as allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_decode_attention(
+    cache: &PagedKvCache,
+    qkv: &[f32],
+    row_slots: &[usize],
+    row_lens: &[usize],
+    layer: usize,
+    d: usize,
+    heads: usize,
+    ws: &mut DecodeWorkspace,
+    att: &mut [f32],
+) {
+    assert!(heads > 0 && d % heads == 0, "d {d} not divisible by heads {heads}");
+    let hd = d / heads;
+    assert_eq!(hd, ws.hd, "decode workspace head width mismatch");
+    assert_eq!(cache.page_size(), ws.page_size, "decode workspace page size mismatch");
+    let rows = row_slots.len();
+    assert_eq!(rows, row_lens.len());
+    let w3 = 3 * d;
+    assert!(qkv.len() >= rows * w3, "qkv buffer too small");
+    assert!(att.len() >= rows * d, "att buffer too small");
+    let n_pairs = rows * heads;
+    if n_pairs == 0 {
+        return;
+    }
+    let scale = 1.0 / (hd as f32).sqrt();
+    let slots = ws.slots.min(n_pairs);
+    let ps = ws.page_size;
+    let att_ptr = SendPtr(att.as_mut_ptr());
+    let scp = SendPtr(ws.scores.as_mut_ptr());
+    let accp = SendPtr(ws.acc.as_mut_ptr());
+    pool::parallel_for(slots, &|ci| {
+        // Safety: staging regions `[ci·ps, (ci+1)·ps)` / `[ci·hd, (ci+1)·hd)`
+        // are disjoint across chunk indices (ci < slots ≤ ws.slots), and
+        // `ws` is borrowed mutably for the whole dispatch.
+        let (sc, acc) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(scp.0.add(ci * ps), ps),
+                std::slice::from_raw_parts_mut(accp.0.add(ci * hd), hd),
+            )
+        };
+        for pair in (ci..n_pairs).step_by(slots) {
+            let r = pair / heads;
+            let head = pair % heads;
+            let q = &qkv[r * w3 + head * hd..r * w3 + head * hd + hd];
+            // Safety: pair (r, head) owns columns [head·hd, (head+1)·hd) of
+            // att row r — disjoint across pairs, each processed once.
+            let out = unsafe {
+                std::slice::from_raw_parts_mut(att_ptr.0.add(r * d + head * hd), hd)
+            };
+            decode_attend_paged(
+                cache,
+                row_slots[r],
+                layer,
+                head,
+                q,
+                row_lens[r],
+                scale,
+                sc,
+                acc,
+                out,
+            );
+        }
+    });
 }
 
 /// Backward through the causal attention: `datt` (rows, d) and the retained
@@ -1159,5 +1341,59 @@ mod tests {
         assert_eq!(auto.resolve(256), Some(64));
         assert!(AttnWorkspace::with_path(512, 8, 1, AttnPath::auto_default()).is_streaming());
         assert!(!AttnWorkspace::with_path(64, 8, 1, AttnPath::auto_default()).is_streaming());
+    }
+
+    #[test]
+    fn property_paged_decode_matches_scalar_reference() {
+        // Randomized (heads, hd, t_len, page_size, pool slots): feeding a
+        // sequence through the paged single-query kernel one position at a
+        // time must reproduce the f64 scalar oracle at every position —
+        // page sizes that do and don't divide t_len, t_len == 1, and a
+        // single staging slot included.
+        crate::prop::forall(
+            1707,
+            40,
+            |rng| {
+                let heads = 1 + rng.below(3);
+                let hd = 1 + rng.below(9);
+                let t_len = 1 + rng.below(25);
+                let page = 1 + rng.below(t_len + 3);
+                let slots = 1 + rng.below(4);
+                let d = heads * hd;
+                let qkv: Vec<f32> =
+                    (0..t_len * 3 * d).map(|_| rng.normal() as f32).collect();
+                (heads, t_len, page, slots, qkv)
+            },
+            |(heads, t_len, page, slots, qkv)| {
+                let (heads, t_len, page, slots) = (*heads, *t_len, *page, *slots);
+                let d = qkv.len() / (t_len * 3);
+                let hd = d / heads;
+                let want = scalar_reference(qkv, 1, t_len, d, heads);
+                let mut cache = PagedKvCache::new(page, 1, heads, hd, 1, t_len, 0);
+                let slot = cache.try_acquire(t_len).expect("full pool admits");
+                let mut ws = DecodeWorkspace::new(hd, page, slots);
+                let mut att = vec![0f32; t_len * d];
+                let (mut row_slots, mut row_lens) = (vec![0usize; 1], vec![0usize; 1]);
+                for pos in 0..t_len {
+                    let row = &qkv[pos * 3 * d..(pos + 1) * 3 * d];
+                    cache.write_kv(slot, 0, pos, &row[d..2 * d], &row[2 * d..3 * d]);
+                    cache.advance(slot, 1);
+                    row_slots[0] = slot;
+                    row_lens[0] = pos + 1;
+                    paged_decode_attention(
+                        &cache,
+                        row,
+                        &row_slots,
+                        &row_lens,
+                        0,
+                        d,
+                        heads,
+                        &mut ws,
+                        &mut att[pos * d..(pos + 1) * d],
+                    );
+                }
+                crate::prop::close(&att, &want, 1e-5)
+            },
+        );
     }
 }

@@ -6,8 +6,23 @@
 //! backend (native kernels today, the PJRT registry behind the `pjrt`
 //! feature, a GPU runtime later) means implementing one trait — the
 //! routing/batching/metrics stack above it is backend-agnostic.
+//!
+//! Two execution styles share the trait.  The original one-shot seam is
+//! [`ServingBackend::infer`]: a padded full-window batch in, logits out.
+//! The incremental seam — [`acquire_slot`] / [`prefill`] / [`decode_step`]
+//! / [`release_slot`] — serves variable-length requests token by token
+//! against per-request paged K/V state, and is what the continuous-batching
+//! loop ([`crate::coordinator::serve_trace_decode`]) drives.  Every
+//! incremental method has a default (`supports_decode() == false`, the rest
+//! unreachable or erroring), so window-only backends like the PJRT registry
+//! keep compiling untouched.
+//!
+//! [`acquire_slot`]: ServingBackend::acquire_slot
+//! [`prefill`]: ServingBackend::prefill
+//! [`decode_step`]: ServingBackend::decode_step
+//! [`release_slot`]: ServingBackend::release_slot
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// A loaded set of serving tiers that can execute batches.
 ///
@@ -40,5 +55,41 @@ pub trait ServingBackend {
     /// "i8").  Backends without quantized storage keep the default.
     fn tier_precision_label(&self, _tier: usize) -> &'static str {
         "f32"
+    }
+
+    /// Whether the incremental prefill/decode seam below is implemented.
+    fn supports_decode(&self) -> bool {
+        false
+    }
+
+    /// Concurrent decode request slots (0 for window-only backends).
+    fn decode_slots(&self) -> usize {
+        0
+    }
+
+    /// Reserve a request slot plus K/V capacity for `need_tokens` tokens
+    /// (prompt + maximum generation).  `None` = no slot or no pages free —
+    /// the caller queues the request and retries after a release.  Eager
+    /// reservation means an admitted request never stalls mid-decode.
+    fn acquire_slot(&mut self, _need_tokens: usize) -> Option<usize> {
+        None
+    }
+
+    /// Return a finished (or abandoned) request's slot and pages.
+    fn release_slot(&mut self, _slot: usize) {}
+
+    /// Run a prompt through a tier, appending its K/V rows to `slot`'s
+    /// stream; returns logits `(prompt_len, vocab)`, one row per prompt
+    /// position, valid until the next incremental call.
+    fn prefill(&mut self, _tier: usize, _slot: usize, _tokens: &[i32]) -> Result<&[f32]> {
+        bail!("this backend does not implement incremental decode")
+    }
+
+    /// Advance every listed request by one token on a tier: `tokens[r]` is
+    /// the latest sampled token of the request in `slots[r]`.  Returns
+    /// logits `(slots.len(), vocab)` in `slots` order, valid until the next
+    /// incremental call.
+    fn decode_step(&mut self, _tier: usize, _slots: &[usize], _tokens: &[i32]) -> Result<&[f32]> {
+        bail!("this backend does not implement incremental decode")
     }
 }

@@ -1,0 +1,371 @@
+//! Paged K/V cache: the per-request state store behind incremental decode.
+//!
+//! Serving used to replay fixed-`seq_len` full windows, recomputing every
+//! key/value projection for every generated token.  This module holds the
+//! K/V rows each request has already produced so a decode step only touches
+//! the **new** token: fixed-size pages per (request-slot, layer, head) drawn
+//! from one preallocated pool.  A page is `page_size` consecutive token
+//! rows of one head's `hd`-wide K (or V) — exactly the `(Tc × hd)` panel
+//! shape the streaming-attention tile consumes, so the decode kernel
+//! ([`crate::runtime::attention::decode_attend_paged`]) gathers pages as
+//! natural tiles with no repacking.
+//!
+//! Allocation discipline (the serving zero-alloc contract, extended):
+//! every buffer — both K/V pools, the free list, the page table, the
+//! per-slot length/capacity arrays — is sized once at construction.
+//! Acquire/append/release move indices around inside that footprint;
+//! [`fingerprint`] exposes the base pointers so tests pin that no decode
+//! loop ever reallocates.
+//!
+//! Admission is **eager**: [`try_acquire`] reserves every page a request
+//! could touch (`prompt + max generation` tokens) up front, or admits
+//! nothing.  An admitted request can therefore always run to completion —
+//! there is no mid-decode allocation failure and no preemption machinery.
+//!
+//! [`fingerprint`]: PagedKvCache::fingerprint
+//! [`try_acquire`]: PagedKvCache::try_acquire
+
+use crate::linalg::AlignedVec;
+
+/// Default tokens per page (a `(16 × hd)` K/V tile; configs override via
+/// `kv_page_size`).
+pub const DEFAULT_KV_PAGE_SIZE: usize = 16;
+
+/// Sentinel for an unassigned page-table entry (debug builds assert reads
+/// never touch one).
+const NO_PAGE: u32 = u32::MAX;
+
+/// A pool-backed paged K/V cache over `max_slots` concurrent request slots.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    page_size: usize,
+    layers: usize,
+    heads: usize,
+    hd: usize,
+    max_slots: usize,
+    /// Page-table entries per (slot, layer, head) stream:
+    /// `ceil(max_seq / page_size)`.
+    pages_per_stream: usize,
+    /// Total pages in the pool.
+    n_pages: usize,
+    /// K pool: `n_pages × page_size × hd`.
+    pool_k: AlignedVec<f32>,
+    /// V pool, same shape.
+    pool_v: AlignedVec<f32>,
+    /// Unassigned page ids (stack; capacity `n_pages`, never grows).
+    free: Vec<u32>,
+    /// `[slot][layer][head][page_idx] → page id`, flat.
+    table: Vec<u32>,
+    /// Tokens appended so far, per slot.
+    len: Vec<usize>,
+    /// Reserved token capacity per slot (`None` = slot free).
+    cap: Vec<Option<usize>>,
+}
+
+impl PagedKvCache {
+    /// A cache for `max_slots` concurrent requests of up to `max_seq`
+    /// tokens each, over a model with `layers` blocks × `heads` heads of
+    /// width `hd`.  `max_pages = 0` sizes the pool so every slot can hold a
+    /// full `max_seq` stream simultaneously (the no-page-pressure default);
+    /// a smaller explicit `max_pages` makes admission contend for pages,
+    /// which [`try_acquire`] surfaces as `None`.
+    pub fn new(
+        page_size: usize,
+        layers: usize,
+        heads: usize,
+        hd: usize,
+        max_slots: usize,
+        max_seq: usize,
+        max_pages: usize,
+    ) -> PagedKvCache {
+        assert!(page_size > 0, "kv page size must be positive");
+        assert!(layers > 0 && heads > 0 && hd > 0 && max_slots > 0 && max_seq > 0);
+        let pages_per_stream = max_seq.div_ceil(page_size);
+        let full = max_slots * layers * heads * pages_per_stream;
+        let n_pages = if max_pages == 0 { full } else { max_pages };
+        let mut free = Vec::with_capacity(n_pages);
+        // Stack order: page 0 comes off first, so fresh pools allocate the
+        // pool front-to-back (cache-friendly and deterministic).
+        for p in (0..n_pages as u32).rev() {
+            free.push(p);
+        }
+        PagedKvCache {
+            page_size,
+            layers,
+            heads,
+            hd,
+            max_slots,
+            pages_per_stream,
+            n_pages,
+            pool_k: AlignedVec::zeroed(n_pages * page_size * hd),
+            pool_v: AlignedVec::zeroed(n_pages * page_size * hd),
+            free,
+            table: vec![NO_PAGE; max_slots * layers * heads * pages_per_stream],
+            len: vec![0; max_slots],
+            cap: vec![None; max_slots],
+        }
+    }
+
+    /// Tokens per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Concurrent request slots.
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
+    /// Total pages in the pool.
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Pages currently unassigned.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Slots currently free.
+    pub fn free_slots(&self) -> usize {
+        self.cap.iter().filter(|c| c.is_none()).count()
+    }
+
+    /// Pages a request reserving `tokens` of capacity needs across all its
+    /// (layer, head) streams.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        self.layers * self.heads * tokens.div_ceil(self.page_size)
+    }
+
+    /// Tokens appended to `slot` so far.
+    pub fn len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    /// Whether `slot` has no appended tokens.
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.len[slot] == 0
+    }
+
+    /// Reserved token capacity of an active `slot`.
+    pub fn capacity(&self, slot: usize) -> usize {
+        self.cap[slot].expect("capacity() on a free slot")
+    }
+
+    /// Reserve a slot plus every page `need_tokens` tokens will touch.
+    /// Returns the slot id, or `None` when no slot is free or the pool
+    /// cannot cover the reservation (caller queues and retries after a
+    /// release — eager reservation means admitted requests never stall).
+    pub fn try_acquire(&mut self, need_tokens: usize) -> Option<usize> {
+        assert!(need_tokens > 0, "a request must reserve at least one token");
+        assert!(
+            need_tokens <= self.pages_per_stream * self.page_size,
+            "reservation of {need_tokens} tokens exceeds the cache's max stream length {}",
+            self.pages_per_stream * self.page_size
+        );
+        let slot = (0..self.max_slots).find(|&s| self.cap[s].is_none())?;
+        let need_pages = self.pages_for(need_tokens);
+        if self.free.len() < need_pages {
+            return None;
+        }
+        let per_stream = need_tokens.div_ceil(self.page_size);
+        for layer in 0..self.layers {
+            for head in 0..self.heads {
+                let base = self.stream_base(slot, layer, head);
+                for p in 0..per_stream {
+                    self.table[base + p] = self.free.pop().expect("free list undercounted");
+                }
+            }
+        }
+        self.cap[slot] = Some(need_tokens);
+        self.len[slot] = 0;
+        Some(slot)
+    }
+
+    /// Return every page of `slot` to the pool and free the slot.
+    pub fn release(&mut self, slot: usize) {
+        let cap = self.cap[slot].expect("release() on a free slot");
+        let per_stream = cap.div_ceil(self.page_size);
+        for layer in 0..self.layers {
+            for head in 0..self.heads {
+                let base = self.stream_base(slot, layer, head);
+                for p in 0..per_stream {
+                    debug_assert_ne!(self.table[base + p], NO_PAGE);
+                    self.free.push(self.table[base + p]);
+                    self.table[base + p] = NO_PAGE;
+                }
+            }
+        }
+        self.cap[slot] = None;
+        self.len[slot] = 0;
+    }
+
+    /// Write one token's K/V rows (`d = heads · hd` wide, heads packed
+    /// side by side as in the qkv buffer) into `slot` at position `pos` for
+    /// `layer`.  Positions are written once per layer; [`advance`] moves
+    /// the slot's length after every layer has seen the token.
+    ///
+    /// [`advance`]: PagedKvCache::advance
+    pub fn write_kv(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let d = self.heads * self.hd;
+        debug_assert!(k.len() >= d && v.len() >= d);
+        debug_assert!(
+            pos < self.cap[slot].expect("write_kv() on a free slot"),
+            "position {pos} outside the slot's reservation"
+        );
+        let (page_idx, in_page) = (pos / self.page_size, pos % self.page_size);
+        for head in 0..self.heads {
+            let page = self.table[self.stream_base(slot, layer, head) + page_idx];
+            debug_assert_ne!(page, NO_PAGE, "write into an unassigned page");
+            let at = (page as usize * self.page_size + in_page) * self.hd;
+            let src = head * self.hd;
+            self.pool_k[at..at + self.hd].copy_from_slice(&k[src..src + self.hd]);
+            self.pool_v[at..at + self.hd].copy_from_slice(&v[src..src + self.hd]);
+        }
+    }
+
+    /// Advance `slot`'s stream length by `n` freshly written tokens.
+    pub fn advance(&mut self, slot: usize, n: usize) {
+        let cap = self.cap[slot].expect("advance() on a free slot");
+        assert!(self.len[slot] + n <= cap, "stream overran its reservation");
+        self.len[slot] += n;
+    }
+
+    /// One `(page_size × hd)` K tile of a stream (the tail page is valid
+    /// only up to the stream length; callers mask by row count).
+    pub fn k_page(&self, slot: usize, layer: usize, head: usize, page_idx: usize) -> &[f32] {
+        let page = self.table[self.stream_base(slot, layer, head) + page_idx];
+        debug_assert_ne!(page, NO_PAGE, "read of an unassigned page");
+        let at = page as usize * self.page_size * self.hd;
+        &self.pool_k[at..at + self.page_size * self.hd]
+    }
+
+    /// One `(page_size × hd)` V tile of a stream.
+    pub fn v_page(&self, slot: usize, layer: usize, head: usize, page_idx: usize) -> &[f32] {
+        let page = self.table[self.stream_base(slot, layer, head) + page_idx];
+        debug_assert_ne!(page, NO_PAGE, "read of an unassigned page");
+        let at = page as usize * self.page_size * self.hd;
+        &self.pool_v[at..at + self.page_size * self.hd]
+    }
+
+    /// Buffer base pointers + free-list capacity — the decode loop's
+    /// zero-allocation pin (same contract as `Scratch::fingerprint`).
+    pub fn fingerprint(&self) -> Vec<usize> {
+        vec![
+            self.pool_k.as_ptr() as usize,
+            self.pool_v.as_ptr() as usize,
+            self.free.as_ptr() as usize,
+            self.free.capacity(),
+            self.table.as_ptr() as usize,
+            self.len.as_ptr() as usize,
+            self.cap.as_ptr() as usize,
+        ]
+    }
+
+    fn stream_base(&self, slot: usize, layer: usize, head: usize) -> usize {
+        ((slot * self.layers + layer) * self.heads + head) * self.pages_per_stream
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> PagedKvCache {
+        // 2 layers × 2 heads × hd 4, 2 slots, streams up to 8 tokens in
+        // pages of 3 (deliberately not dividing 8).
+        PagedKvCache::new(3, 2, 2, 4, 2, 8, 0)
+    }
+
+    #[test]
+    fn acquire_write_read_roundtrip() {
+        let mut c = tiny();
+        let slot = c.try_acquire(5).unwrap();
+        let d = 8; // heads · hd
+        for pos in 0..5 {
+            let k: Vec<f32> = (0..d).map(|j| (pos * d + j) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            for layer in 0..2 {
+                c.write_kv(slot, layer, pos, &k, &v);
+            }
+            c.advance(slot, 1);
+        }
+        assert_eq!(c.len(slot), 5);
+        // Row `pos` of head `h` lands at page pos/3, in-page row pos%3.
+        for pos in 0..5 {
+            for head in 0..2 {
+                let kt = c.k_page(slot, 1, head, pos / 3);
+                let row = &kt[(pos % 3) * 4..(pos % 3) * 4 + 4];
+                let want: Vec<f32> =
+                    (0..4).map(|j| (pos * d + head * 4 + j) as f32).collect();
+                assert_eq!(row, &want[..]);
+                let vt = c.v_page(slot, 1, head, pos / 3);
+                let vrow = &vt[(pos % 3) * 4..(pos % 3) * 4 + 4];
+                assert!(vrow.iter().zip(&want).all(|(a, b)| *a == -b));
+            }
+        }
+    }
+
+    #[test]
+    fn eager_reservation_and_release_accounting() {
+        let mut c = tiny();
+        let total = c.n_pages();
+        assert_eq!(c.free_pages(), total);
+        // 5 tokens in pages of 3 → 2 pages per stream × 4 streams.
+        let s0 = c.try_acquire(5).unwrap();
+        assert_eq!(c.free_pages(), total - c.pages_for(5));
+        let s1 = c.try_acquire(8).unwrap();
+        assert_ne!(s0, s1);
+        // Both slots busy: a third request is refused even though pages
+        // remain only if slots are the bottleneck…
+        assert!(c.try_acquire(1).is_none());
+        c.release(s0);
+        // …and released pages come straight back.
+        assert_eq!(c.free_pages(), total - c.pages_for(8));
+        let s2 = c.try_acquire(8).unwrap();
+        assert_eq!(c.free_pages(), total - 2 * c.pages_for(8));
+        c.release(s1);
+        c.release(s2);
+        assert_eq!(c.free_pages(), total);
+        assert_eq!(c.free_slots(), 2);
+    }
+
+    #[test]
+    fn page_pressure_refuses_admission() {
+        // Pool deliberately smaller than slots × full-stream: 1 slot's
+        // worth of pages shared by 2 slots.
+        let mut c = PagedKvCache::new(4, 1, 1, 4, 2, 8, 2);
+        let s0 = c.try_acquire(8).unwrap(); // takes both pages
+        assert!(c.try_acquire(1).is_none(), "pool exhausted, must refuse");
+        c.release(s0);
+        assert!(c.try_acquire(4).is_some(), "released pages readmit");
+    }
+
+    #[test]
+    fn fingerprint_stable_across_churn() {
+        let mut c = tiny();
+        let fp = c.fingerprint();
+        for round in 0..20 {
+            let n = 1 + round % 8;
+            let slot = c.try_acquire(n).unwrap();
+            let k = vec![0.5f32; 8];
+            for pos in 0..n {
+                for layer in 0..2 {
+                    c.write_kv(slot, layer, pos, &k, &k);
+                }
+                c.advance(slot, 1);
+            }
+            c.release(slot);
+        }
+        assert_eq!(fp, c.fingerprint(), "cache churn must never reallocate");
+    }
+
+    #[test]
+    #[should_panic(expected = "reservation")]
+    fn over_long_reservation_panics() {
+        let mut c = tiny();
+        let _ = c.try_acquire(9); // max stream is ceil(8/3)·3 = 9 — ok…
+        let mut c = tiny();
+        let _ = c.try_acquire(10); // …but 10 overruns the page table.
+    }
+}

@@ -88,6 +88,16 @@ pub struct ModelConfig {
     /// `serve_tiers`; `"f32" | "bf16" | "i8"`).  Optional in
     /// configs/*.json; defaults to f32 everywhere.
     pub tier_precision: Vec<Precision>,
+    /// Tokens per K/V cache page in the incremental decode path (each page
+    /// is one `(kv_page_size × head_dim)` K or V tile per (request, layer,
+    /// head)).  Optional in configs/*.json; defaults to
+    /// [`crate::runtime::kvcache::DEFAULT_KV_PAGE_SIZE`].
+    pub kv_page_size: usize,
+    /// Total pages in the preallocated K/V pool.  `0` (the default) sizes
+    /// the pool so every one of `batch_serve` slots can hold a full
+    /// `seq_len` stream simultaneously; a smaller explicit value makes
+    /// continuous-batching admission contend for pages.
+    pub kv_max_pages: usize,
 }
 
 impl ModelConfig {
@@ -125,6 +135,16 @@ impl ModelConfig {
                 .transpose()?
                 .unwrap_or(crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ),
             tier_precision: Vec::new(),
+            kv_page_size: v
+                .get("kv_page_size")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(crate::runtime::kvcache::DEFAULT_KV_PAGE_SIZE),
+            kv_max_pages: v
+                .get("kv_max_pages")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(0),
         };
         let mut cfg = cfg;
         cfg.tier_precision = match v.get("tier_precision") {
@@ -160,6 +180,24 @@ impl ModelConfig {
             self.attn_tile > 0,
             "config '{}': attn_tile must be positive",
             self.name
+        );
+        anyhow::ensure!(
+            self.kv_page_size > 0,
+            "config '{}': kv_page_size must be positive",
+            self.name
+        );
+        anyhow::ensure!(
+            self.kv_max_pages == 0
+                || self.kv_max_pages
+                    >= self.n_blocks * self.n_heads * self.seq_len.div_ceil(self.kv_page_size),
+            "config '{}': kv_max_pages {} cannot hold even one full seq_len {} stream \
+             ({} blocks x {} heads x {} pages)",
+            self.name,
+            self.kv_max_pages,
+            self.seq_len,
+            self.n_blocks,
+            self.n_heads,
+            self.seq_len.div_ceil(self.kv_page_size)
         );
         anyhow::ensure!(
             self.tier_precision.len() == self.serve_tiers.len(),

@@ -8,7 +8,12 @@
 //!   probs tile by tile), selected by the workspace layout at the
 //!   config's sequence-length crossover.
 //! * [`backend`] — the [`ServingBackend`] trait the coordinator, serving
-//!   bench, and CLI dispatch through.
+//!   bench, and CLI dispatch through, including the prefill/decode seam for
+//!   incremental generation.
+//! * [`kvcache`] — the paged per-request K/V store behind the decode seam:
+//!   fixed-size `(page_size × hd)` pages per (request, layer, head) from
+//!   one preallocated pool, consumed tile-by-tile by the single-query
+//!   decode kernel in [`attention`].
 //! * [`native`] (default) — the pure-rust backend: GAR submodel forwards
 //!   through `linalg::kernels` with a preallocated scratch arena.  This is
 //!   what the coordinator, benches, and tests run on an offline machine.
@@ -22,11 +27,13 @@ pub mod attention;
 pub mod backend;
 #[cfg(feature = "pjrt")]
 mod engine;
+pub mod kvcache;
 pub mod manifest;
 pub mod native;
 mod tensor;
 
 pub use backend::ServingBackend;
+pub use kvcache::{PagedKvCache, DEFAULT_KV_PAGE_SIZE};
 #[cfg(feature = "pjrt")]
 pub use engine::{DeviceTensor, Engine, Executable};
 pub use manifest::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};

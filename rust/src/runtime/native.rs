@@ -30,7 +30,10 @@ use crate::flexrank::gar::gar_solve;
 use crate::linalg::kernels;
 use crate::linalg::quant::{Precision, QuantMat};
 use crate::linalg::AlignedVec;
-use crate::runtime::attention::{causal_attention, AttnPath, AttnWorkspace};
+use crate::runtime::attention::{
+    causal_attention, paged_decode_attention, AttnPath, AttnWorkspace, DecodeWorkspace,
+};
+use crate::runtime::kvcache::PagedKvCache;
 use crate::runtime::manifest::ModelConfig;
 use crate::training::params::{ParamSet, LAYER_KINDS};
 
@@ -212,6 +215,92 @@ impl Scratch {
     }
 }
 
+/// Preallocated workspace for the incremental (prefill/decode) path: up to
+/// `max_rows` active token rows per step — a whole prompt during prefill,
+/// one row per in-flight request during decode.  Unlike [`Scratch`] there is
+/// no monolithic `(seq × seq)`-capable attention workspace: attention state
+/// lives in the caller's [`PagedKvCache`], and the only attention staging
+/// here is one page-tile score row + accumulator per pool slot
+/// ([`DecodeWorkspace`]).  All buffers are written before being read each
+/// step — no zeroing between steps, no growth after construction.
+#[derive(Debug)]
+pub struct DecodeScratch {
+    pub max_rows: usize,
+    x: AlignedVec<f32>,   // (rows, d)   residual stream
+    a: AlignedVec<f32>,   // (rows, d)   LN / layer output staging
+    t: AlignedVec<f32>,   // (rows, r≤d) factor intermediate
+    qkv: AlignedVec<f32>, // (rows, 3d)
+    att: AlignedVec<f32>, // (rows, d)   merged attention heads
+    ff: AlignedVec<f32>,  // (rows, 4d)
+    dec: DecodeWorkspace, // per-pool-slot page-tile staging
+    logits: AlignedVec<f32>, // (rows, vocab)
+    /// Request slot per active row (filled each step, fixed length).
+    row_slots: Vec<usize>,
+    /// K/V length per active row (the row's position + 1).
+    row_lens: Vec<usize>,
+}
+
+impl DecodeScratch {
+    pub fn new(
+        max_rows: usize,
+        d: usize,
+        heads: usize,
+        vocab: usize,
+        page_size: usize,
+    ) -> DecodeScratch {
+        let hd = d / heads.max(1);
+        let slots = AttnWorkspace::auto_slots(max_rows * heads.max(1));
+        DecodeScratch {
+            max_rows,
+            x: AlignedVec::zeroed(max_rows * d),
+            a: AlignedVec::zeroed(max_rows * d),
+            t: AlignedVec::zeroed(max_rows * d),
+            qkv: AlignedVec::zeroed(max_rows * 3 * d),
+            att: AlignedVec::zeroed(max_rows * d),
+            ff: AlignedVec::zeroed(max_rows * 4 * d),
+            dec: DecodeWorkspace::new(hd, page_size, slots),
+            logits: AlignedVec::zeroed(max_rows * vocab),
+            row_slots: vec![0; max_rows],
+            row_lens: vec![0; max_rows],
+        }
+    }
+
+    /// Sized for a config's serving shape: prefill of a full `seq_len`
+    /// prompt or one decode row per `batch_serve` slot, whichever is wider.
+    pub fn for_config(cfg: &ModelConfig) -> DecodeScratch {
+        DecodeScratch::new(
+            cfg.seq_len.max(cfg.batch_serve),
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.vocab,
+            cfg.kv_page_size,
+        )
+    }
+
+    /// Logits of the last prefill/decode step: `(rows, vocab)` row-major,
+    /// one row per active token in step order.
+    pub fn logits(&self, rows: usize, vocab: usize) -> &[f32] {
+        &self.logits[..rows * vocab]
+    }
+
+    /// Buffer base pointers — the decode loop's zero-allocation pin.
+    pub fn fingerprint(&self) -> Vec<usize> {
+        let mut fp = vec![
+            self.x.as_ptr() as usize,
+            self.a.as_ptr() as usize,
+            self.t.as_ptr() as usize,
+            self.qkv.as_ptr() as usize,
+            self.att.as_ptr() as usize,
+            self.ff.as_ptr() as usize,
+            self.logits.as_ptr() as usize,
+            self.row_slots.as_ptr() as usize,
+            self.row_lens.as_ptr() as usize,
+        ];
+        fp.extend(self.dec.fingerprint());
+        fp
+    }
+}
+
 fn layer_norm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
     for i in 0..rows {
         let xr = &x[i * d..(i + 1) * d];
@@ -345,9 +434,27 @@ impl GarSubmodel {
     /// `scratch.logits`.  Allocation-free: every buffer is preallocated in
     /// `scratch` and fully overwritten.
     pub fn forward(&self, tokens: &[i32], batch: usize, s: &mut Scratch) -> Result<()> {
-        let t_len = self.seq;
+        self.forward_window(tokens, batch, self.seq, s)
+    }
+
+    /// Forward `batch` sequences of `t_len ≤ seq` tokens each (positions
+    /// `0..t_len`) — the one-shot window the incremental prefill/decode
+    /// path is pinned against, and the reference semantics for requests
+    /// shorter than the serving window.
+    pub fn forward_window(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        t_len: usize,
+        s: &mut Scratch,
+    ) -> Result<()> {
         let rows = batch * t_len;
         let d = self.d;
+        ensure!(
+            t_len > 0 && t_len <= self.seq,
+            "window of {t_len} tokens outside the model's 1..={} range",
+            self.seq
+        );
         ensure!(tokens.len() == rows, "expected {} tokens, got {}", rows, tokens.len());
         ensure!(rows <= s.max_rows, "scratch sized for {} rows, need {rows}", s.max_rows);
 
@@ -406,6 +513,158 @@ impl GarSubmodel {
         Ok(())
     }
 
+    /// Prefill: run a whole prompt through the incremental path, appending
+    /// its K/V rows to `slot`'s paged stream and leaving one logits row per
+    /// prompt position in `s.logits`.  The slot must have been acquired
+    /// with capacity for the prompt (plus any tokens to be decoded after
+    /// it).  Equivalent to [`forward_window`] at the prompt length —
+    /// the decode-equivalence suite pins the two to f32 rounding.
+    ///
+    /// [`forward_window`]: GarSubmodel::forward_window
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        slot: usize,
+        cache: &mut PagedKvCache,
+        s: &mut DecodeScratch,
+    ) -> Result<()> {
+        let rows = tokens.len();
+        ensure!(rows > 0, "empty prompt");
+        ensure!(rows <= s.max_rows, "decode scratch sized for {} rows, need {rows}", s.max_rows);
+        let start = cache.len(slot);
+        ensure!(
+            start + rows <= cache.capacity(slot),
+            "prompt of {rows} tokens overruns slot {slot}'s reservation \
+             ({start} cached, capacity {})",
+            cache.capacity(slot)
+        );
+        for r in 0..rows {
+            s.row_slots[r] = slot;
+            s.row_lens[r] = start + r + 1;
+        }
+        self.forward_incremental(tokens, cache, s, rows)?;
+        cache.advance(slot, rows);
+        Ok(())
+    }
+
+    /// One continuous-batching decode step: row `r` holds the latest token
+    /// of the request in cache slot `slots[r]` (sampled from the previous
+    /// step's logits), appended at that stream's current length.  Leaves
+    /// one logits row per request in `s.logits`, in `slots` order.  Each
+    /// row's computation depends only on its own stream, so a request
+    /// decodes bit-identically whatever batch composition it lands in —
+    /// the property that makes continuous batching safe to verify against
+    /// sequential replay.
+    pub fn decode_step(
+        &self,
+        tokens: &[i32],
+        slots: &[usize],
+        cache: &mut PagedKvCache,
+        s: &mut DecodeScratch,
+    ) -> Result<()> {
+        let rows = slots.len();
+        ensure!(rows > 0, "empty decode step");
+        ensure!(tokens.len() == rows, "{} tokens for {rows} slots", tokens.len());
+        ensure!(rows <= s.max_rows, "decode scratch sized for {} rows, need {rows}", s.max_rows);
+        for (r, &slot) in slots.iter().enumerate() {
+            ensure!(
+                cache.len(slot) < cache.capacity(slot),
+                "slot {slot} decode overruns its reservation of {} tokens",
+                cache.capacity(slot)
+            );
+            s.row_slots[r] = slot;
+            s.row_lens[r] = cache.len(slot) + 1;
+        }
+        self.forward_incremental(tokens, cache, s, rows)?;
+        for &slot in slots {
+            cache.advance(slot, 1);
+        }
+        Ok(())
+    }
+
+    /// Shared body of prefill and decode: forward `rows` token rows whose
+    /// (slot, position) assignments the caller staged in
+    /// `s.row_slots`/`s.row_lens`, each block appending its K/V rows to the
+    /// paged cache before attending over it.  Allocation-free: every
+    /// intermediate lives in `s` or the cache pool.
+    fn forward_incremental(
+        &self,
+        tokens: &[i32],
+        cache: &mut PagedKvCache,
+        s: &mut DecodeScratch,
+        rows: usize,
+    ) -> Result<()> {
+        let d = self.d;
+        for r in 0..rows {
+            let tok = tokens[r];
+            ensure!(
+                tok >= 0 && (tok as usize) < self.vocab,
+                "token {tok} at decode row {r} outside vocab {}",
+                self.vocab
+            );
+            let pos = s.row_lens[r] - 1;
+            ensure!(
+                pos < self.seq,
+                "position {pos} outside the learned positional table of {} entries",
+                self.seq
+            );
+            let tv = &self.tok_emb[tok as usize * d..tok as usize * d + d];
+            let pv = &self.pos_emb[pos * d..pos * d + d];
+            let xr = &mut s.x[r * d..(r + 1) * d];
+            for ((o, &a), &b) in xr.iter_mut().zip(tv).zip(pv) {
+                *o = a + b;
+            }
+        }
+
+        for (li, blk) in self.blocks.iter().enumerate() {
+            // Attention half: x += proj(attn(qkv(ln1(x)))), with K/V read
+            // from (and this step's rows appended to) the paged cache.
+            layer_norm(&s.x, rows, d, &blk.ln1_g, &blk.ln1_b, &mut s.a);
+            blk.qkv.forward_into(&s.a, rows, &mut s.t, &mut s.qkv, 3 * d, 0);
+            for r in 0..rows {
+                let qrow = &s.qkv[r * 3 * d..(r + 1) * 3 * d];
+                cache.write_kv(
+                    s.row_slots[r],
+                    li,
+                    s.row_lens[r] - 1,
+                    &qrow[d..2 * d],
+                    &qrow[2 * d..3 * d],
+                );
+            }
+            paged_decode_attention(
+                cache,
+                &s.qkv,
+                &s.row_slots[..rows],
+                &s.row_lens[..rows],
+                li,
+                d,
+                self.heads,
+                &mut s.dec,
+                &mut s.att[..rows * d],
+            );
+            blk.proj.forward_into(&s.att, rows, &mut s.t, &mut s.a, d, 0);
+            add_assign(&mut s.x[..rows * d], &s.a[..rows * d]);
+
+            // MLP half: x += fcp(gelu(fc(ln2(x)))).
+            layer_norm(&s.x, rows, d, &blk.ln2_g, &blk.ln2_b, &mut s.a);
+            blk.fc.forward_into(&s.a, rows, &mut s.t, &mut s.ff, 4 * d, 0);
+            gelu(&mut s.ff[..rows * 4 * d]);
+            blk.fcp.forward_into(&s.ff, rows, &mut s.t, &mut s.a, d, 0);
+            add_assign(&mut s.x[..rows * d], &s.a[..rows * d]);
+        }
+
+        // Final LN + tied head: logits = ln_f(x) · tok_embᵀ.
+        layer_norm(&s.x, rows, d, &self.lnf_g, &self.lnf_b, &mut s.a);
+        kernels::matmul_nt_f32(
+            &s.a[..rows * d],
+            &self.tok_emb,
+            rows,
+            d,
+            self.vocab,
+            &mut s.logits[..rows * self.vocab],
+        );
+        Ok(())
+    }
 }
 
 /// Uniform rank for a budget fraction: `round(budget · rank_full)`,

@@ -1120,6 +1120,8 @@ mod tests {
             attn_tile: 4,
             attn_streaming_min_seq: crate::runtime::attention::DEFAULT_STREAMING_MIN_SEQ,
             tier_precision: vec![crate::linalg::quant::Precision::F32; 2],
+            kv_page_size: crate::runtime::kvcache::DEFAULT_KV_PAGE_SIZE,
+            kv_max_pages: 0,
         }
     }
 

@@ -1,0 +1,280 @@
+//! The decode equivalence suite: the incremental prefill/decode path over
+//! the paged K/V cache must reproduce the one-shot full-window forward at
+//! every position to f32 rounding (1e-5), over a randomized grid that
+//! includes every adversarial corner — page sizes that do and do not divide
+//! the sequence, one-token prompts, decode-from-empty-cache, and
+//! single-slot pools.  On top of that, continuous batching must be **bit**
+//! identical to sequential replay: a request's rows depend only on its own
+//! stream, so whatever batch composition it lands in, its logits match
+//! byte for byte.  Finally, the decode loop's buffer identity is pinned
+//! (zero per-step heap allocation) and the long-context config is pinned to
+//! the streaming attention path.
+//!
+//! This file is the pin that makes the serving stack's incremental seam
+//! safe: the coordinator can route any mix of prompt lengths through
+//! prefill/decode and serve exactly what the one-shot window would have.
+
+use flexrank::config::load_model_config;
+use flexrank::coordinator::SubmodelRegistry;
+use flexrank::prop::forall;
+use flexrank::rng::Rng;
+use flexrank::runtime::native::{DecodeScratch, GarSubmodel, Scratch};
+use flexrank::runtime::{ModelConfig, PagedKvCache, ServingBackend};
+use flexrank::training::params::{
+    decompose_teacher, random_teacher, student_from_factors, ParamSet,
+};
+
+fn tiny_student(seed: u64) -> (ModelConfig, ParamSet) {
+    let cfg = load_model_config("tiny").unwrap();
+    let teacher = random_teacher(&cfg, seed);
+    let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+    let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+    (cfg, student)
+}
+
+fn full_rank_model(cfg: &ModelConfig, student: &ParamSet) -> GarSubmodel {
+    GarSubmodel::from_student(cfg, student, &vec![cfg.rank_full(); cfg.n_fact_layers()]).unwrap()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f32.max(w.abs());
+        if (g - w).abs() > tol * scale {
+            return Err(format!("{what}[{i}]: {g} vs {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Prefill + token-by-token decode ≡ the one-shot full window, at every
+/// position, to 1e-5.  The prefill/decode boundary, the page size (both
+/// dividing and not dividing the stream), the prompt length (down to one
+/// token, and down to *zero* prefilled tokens — pure decode from an empty
+/// cache), and the pool slot count are all randomized.
+#[test]
+fn property_decode_matches_full_window_at_every_position() {
+    let (cfg, student) = tiny_student(11);
+    let model = full_rank_model(&cfg, &student);
+    let (d, heads, vocab) = (cfg.d_model, cfg.n_heads, cfg.vocab);
+    let mut scratch = Scratch::for_config(&cfg, cfg.seq_len);
+
+    forall(
+        2718,
+        24,
+        |rng: &mut Rng| {
+            let t_len = 1 + rng.below(cfg.seq_len);
+            let page = 1 + rng.below(t_len + 2);
+            let split = rng.below(t_len + 1); // prefill length; 0 = decode-only
+            let slots = 1 + rng.below(3);
+            let tokens: Vec<i32> =
+                (0..t_len).map(|_| rng.below(vocab) as i32).collect();
+            (t_len, page, split, slots, tokens)
+        },
+        |(t_len, page, split, slots, tokens)| {
+            let (t_len, page, split, slots) = (*t_len, *page, *split, *slots);
+            // Reference: one-shot window at the same positions.
+            model
+                .forward_window(tokens, 1, t_len, &mut scratch)
+                .map_err(|e| e.to_string())?;
+            let want = scratch.logits(t_len, vocab).to_vec();
+
+            let mut cache = PagedKvCache::new(
+                page,
+                cfg.n_blocks,
+                heads,
+                d / heads,
+                slots,
+                cfg.seq_len,
+                0,
+            );
+            let mut ds = DecodeScratch::new(t_len, d, heads, vocab, page);
+            let slot = cache.try_acquire(t_len).ok_or("no slot")?;
+            if split > 0 {
+                model
+                    .prefill(&tokens[..split], slot, &mut cache, &mut ds)
+                    .map_err(|e| e.to_string())?;
+                assert_close(
+                    ds.logits(split, vocab),
+                    &want[..split * vocab],
+                    1e-5,
+                    &format!("prefill rows (t_len {t_len} page {page} split {split})"),
+                )?;
+            }
+            for pos in split..t_len {
+                model
+                    .decode_step(&tokens[pos..pos + 1], &[slot], &mut cache, &mut ds)
+                    .map_err(|e| e.to_string())?;
+                assert_close(
+                    ds.logits(1, vocab),
+                    &want[pos * vocab..(pos + 1) * vocab],
+                    1e-5,
+                    &format!("decode row {pos} (t_len {t_len} page {page} split {split})"),
+                )?;
+            }
+            cache.release(slot);
+            Ok(())
+        },
+    );
+}
+
+/// Continuous batching is **bit-identical** to sequential replay: each
+/// decode row reads only its own stream's pages and its own scratch row, so
+/// joining a running batch (or having neighbors complete mid-flight) cannot
+/// perturb a request's logits even in the last ulp.
+#[test]
+fn continuous_batch_decode_is_bit_identical_to_sequential_replay() {
+    let (cfg, student) = tiny_student(29);
+    let mut reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+    let tier = 0;
+    let vocab = cfg.vocab;
+    let mut rng = Rng::new(501);
+    // Four requests with distinct prompts, lengths, and generation budgets
+    // (request 3 arrives late, joining the running batch mid-decode).
+    let prompts: Vec<Vec<i32>> = [3usize, 7, 5, 4]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let gens = [4usize, 2, 5, 3];
+
+    // Greedy decode one request in isolation; returns every sampled token.
+    let sequential = |reg: &mut SubmodelRegistry, i: usize| -> Vec<i32> {
+        let slot = reg.acquire_slot(prompts[i].len() + gens[i]).unwrap();
+        let mut out = Vec::new();
+        let mut last = {
+            let logits = reg.prefill(tier, slot, &prompts[i]).unwrap();
+            argmax(&logits[(prompts[i].len() - 1) * vocab..prompts[i].len() * vocab])
+        };
+        out.push(last);
+        for _ in 1..gens[i] {
+            let logits = reg.decode_step(tier, &[slot], &[last]).unwrap();
+            last = argmax(&logits[..vocab]);
+            out.push(last);
+        }
+        reg.release_slot(slot);
+        out
+    };
+    let want: Vec<Vec<i32>> = (0..4).map(|i| sequential(&mut reg, i)).collect();
+
+    // Continuous: requests 0..3 prefill together; request 3 joins after two
+    // steps; requests retire as their budgets run out, shrinking the batch.
+    let mut slots: Vec<Option<usize>> = (0..3)
+        .map(|i| Some(reg.acquire_slot(prompts[i].len() + gens[i]).unwrap()))
+        .collect();
+    slots.push(None);
+    let mut last = vec![0i32; 4];
+    let mut got: Vec<Vec<i32>> = vec![Vec::new(); 4];
+    for i in 0..3 {
+        let logits = reg.prefill(tier, slots[i].unwrap(), &prompts[i]).unwrap();
+        last[i] = argmax(&logits[(prompts[i].len() - 1) * vocab..prompts[i].len() * vocab]);
+        got[i].push(last[i]);
+    }
+    let mut remaining: Vec<usize> = gens.iter().map(|g| g - 1).collect();
+    remaining[3] = gens[3]; // not yet admitted
+    let mut step = 0usize;
+    loop {
+        if step == 2 {
+            // Late arrival joins the running batch between steps.
+            let slot = reg.acquire_slot(prompts[3].len() + gens[3]).unwrap();
+            slots[3] = Some(slot);
+            let logits = reg.prefill(tier, slot, &prompts[3]).unwrap();
+            last[3] = argmax(&logits[(prompts[3].len() - 1) * vocab..prompts[3].len() * vocab]);
+            got[3].push(last[3]);
+            remaining[3] -= 1;
+        }
+        let live: Vec<usize> =
+            (0..4).filter(|&i| slots[i].is_some() && remaining[i] > 0).collect();
+        if live.is_empty() {
+            if step < 2 {
+                step += 1; // keep ticking until the late arrival lands
+                continue;
+            }
+            break;
+        }
+        let step_slots: Vec<usize> = live.iter().map(|&i| slots[i].unwrap()).collect();
+        let step_tokens: Vec<i32> = live.iter().map(|&i| last[i]).collect();
+        let sampled: Vec<i32> = {
+            let logits = reg.decode_step(tier, &step_slots, &step_tokens).unwrap();
+            (0..live.len()).map(|r| argmax(&logits[r * vocab..(r + 1) * vocab])).collect()
+        };
+        for (r, &i) in live.iter().enumerate() {
+            last[i] = sampled[r];
+            got[i].push(last[i]);
+            remaining[i] -= 1;
+            if remaining[i] == 0 {
+                reg.release_slot(slots[i].take().unwrap());
+            }
+        }
+        step += 1;
+    }
+
+    // Bit-identical: greedy argmax over bit-identical logits picks the
+    // exact same token at every position of every request.
+    for i in 0..4 {
+        assert_eq!(
+            got[i], want[i],
+            "request {i}: continuous-batch decode diverged from sequential replay"
+        );
+    }
+}
+
+/// The decode loop performs zero per-step heap allocation: every buffer the
+/// incremental path touches (K/V page pool, free list, page tables, decode
+/// scratch) keeps its base pointer across admission / prefill / decode /
+/// retire churn.
+#[test]
+fn decode_loop_is_allocation_free() {
+    let (cfg, student) = tiny_student(43);
+    let mut reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+    let fp = reg.decode_fingerprint();
+    let mut rng = Rng::new(777);
+    for round in 0..10 {
+        let n = 1 + rng.below(cfg.batch_serve);
+        let mut slots = Vec::new();
+        for _ in 0..n {
+            let plen = 1 + rng.below(cfg.seq_len - 4);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+            let Some(slot) = reg.acquire_slot(plen + 4) else { break };
+            reg.prefill(round % reg.n_tiers(), slot, &prompt).unwrap();
+            slots.push(slot);
+        }
+        for _ in 0..4 {
+            let toks: Vec<i32> = slots.iter().map(|_| 1).collect();
+            reg.decode_step(round % reg.n_tiers(), &slots, &toks).unwrap();
+        }
+        for slot in slots {
+            reg.release_slot(slot);
+        }
+        assert_eq!(reg.decode_fingerprint(), fp, "round {round}: decode state reallocated");
+    }
+}
+
+/// The long-context serving config crosses the streaming crossover, so the
+/// production registry reports the streaming attention path — the `(Tc×hd)`
+/// panel formulation the paged decode kernel tiles against.
+#[test]
+fn long_context_config_serves_the_streaming_attention_path() {
+    let cfg = load_model_config("long").unwrap();
+    let teacher = random_teacher(&cfg, 7);
+    let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+    let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+    let reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+    let label = reg.attn_path_label();
+    assert!(
+        label.contains("streaming"),
+        "long-context config must resolve the streaming path, got '{label}'"
+    );
+    assert!(reg.supports_decode() && reg.decode_slots() == cfg.batch_serve);
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}

@@ -20,13 +20,16 @@ cargo test -q
 echo "== attention equivalence suite (release: streaming ≡ blocked ≡ scalar + grads) =="
 cargo test --release -q --test attention_equivalence
 
+echo "== decode equivalence suite (release: paged decode ≡ full window + continuous ≡ sequential) =="
+cargo test --release -q --test decode_equivalence
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   echo "== kernel bench smoke (BENCH_QUICK=1) =="
   BENCH_QUICK=1 cargo bench -p flexrank --bench kernels
   # The bench writes under FLEXRANK_RESULTS when set (flexrank::results_dir).
   BENCH_JSON="${FLEXRANK_RESULTS:-results}/BENCH_kernels.json"
   echo "wrote ${BENCH_JSON}"
-  echo "== BENCH_kernels.json schema: flash + simd_vs_scalar + quantized_vs_f32 rows =="
+  echo "== BENCH_kernels.json schema: flash + decode + simd_vs_scalar + quantized_vs_f32 rows =="
   BENCH_JSON="$BENCH_JSON" python3 - <<'EOF'
 import json
 import os
@@ -35,6 +38,9 @@ rows = json.load(open(os.environ["BENCH_JSON"]))
 flash = [r for r in rows if r["kernel"].startswith("attention_flash ")]
 assert flash, "no attention_flash rows in results/BENCH_kernels.json"
 assert len(flash) >= 3, f"expected flash rows at 1x/4x/16x seq, got {len(flash)}"
+decode = [r for r in rows if r["kernel"].startswith("attention_decode ")]
+assert decode, "no attention_decode rows in results/BENCH_kernels.json"
+assert len(decode) >= 3, f"expected decode rows at 1x/4x/16x context, got {len(decode)}"
 for r in rows:
     for key in ("kernel", "shape", "mean_ns", "gflops", "speedup_vs_reference"):
         assert key in r, f"row missing '{key}': {r}"
@@ -48,12 +54,12 @@ assert any(
 quant = [r for r in rows if r["kernel"].startswith("quantized_vs_f32 ")]
 assert any(" bf16 " in r["kernel"] for r in quant), "no quantized_vs_f32 bf16 rows"
 assert any(" i8 " in r["kernel"] for r in quant), "no quantized_vs_f32 i8 rows"
-for r in flash + simd + quant:
+for r in flash + decode + simd + quant:
     assert r["mean_ns"] > 0 and r["gflops"] > 0, f"degenerate row: {r}"
     assert r["speedup_vs_reference"] > 0, f"degenerate speedup: {r}"
 print(
-    f"OK: {len(flash)} flash, {len(simd)} simd_vs_scalar, {len(quant)} quantized_vs_f32 "
-    f"rows, schema valid across {len(rows)} records"
+    f"OK: {len(flash)} flash, {len(decode)} decode, {len(simd)} simd_vs_scalar, "
+    f"{len(quant)} quantized_vs_f32 rows, schema valid across {len(rows)} records"
 )
 EOF
 fi
