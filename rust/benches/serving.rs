@@ -2,7 +2,9 @@
 //! vs adaptive policy — the L3 headline numbers, now on the native kernel
 //! backend (runs fully offline, no PJRT).
 
-use flexrank::coordinator::{serve_trace, serve_trace_decode, PolicyKind, ServeCfg, SubmodelRegistry};
+use flexrank::coordinator::{
+    serve_trace, serve_trace_decode, ListenCfg, Listener, PolicyKind, ServeCfg, SubmodelRegistry,
+};
 use flexrank::data::{Corpus, TraceCfg, TraceGen};
 use flexrank::runtime::ServingBackend;
 use flexrank::training::params::{decompose_teacher, random_teacher, student_from_factors};
@@ -118,5 +120,114 @@ fn main() -> anyhow::Result<()> {
             l.p50_ms,
         );
     }
+
+    // Online listener front-end over loopback: bursty multi-tenant clients
+    // pipeline framed requests through real sockets; the headline is
+    // sustained req/s and the end-to-end (send → response frame) latency
+    // tail, plus explicit shed counts under the admission bound.
+    println!();
+    println!("listener  tenants  reqs  ok  shed  req/s  p50(ms)  p99(ms)");
+    let lcfg = ListenCfg {
+        serve: ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0 },
+        max_connections: 16,
+        queue_cap: 64,
+        conn_pipeline: 8,
+    };
+    let listener = Listener::bind("127.0.0.1:0", lcfg)?;
+    let addr = listener.local_addr()?;
+    let handle = listener.shutdown_handle();
+    let n_clients: usize = if quick { 3 } else { 6 };
+    let per_client: usize = if quick { 24 } else { 80 };
+    let seq = registry.seq_len();
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<(Vec<f64>, usize, usize)> {
+                use flexrank::data::trace::wire::{self, Status};
+                use flexrank::data::trace::Slo;
+                use flexrank::data::Request;
+                use std::io::Write;
+                let mut stream = std::net::TcpStream::connect(addr)?;
+                stream.set_nodelay(true)?;
+                let burst = 4usize;
+                let mut latencies = Vec::new();
+                let (mut ok, mut shed) = (0usize, 0usize);
+                let mut buf = Vec::with_capacity(wire::MAX_PAYLOAD);
+                let mut out = Vec::new();
+                let mut sent_at = std::collections::HashMap::new();
+                let mut next_id = 1u64;
+                for _ in 0..per_client / burst {
+                    out.clear();
+                    for _ in 0..burst {
+                        let req = Request {
+                            id: next_id,
+                            arrival_s: 0.0,
+                            slo: Slo::ALL[next_id as usize % Slo::ALL.len()],
+                            tokens: (0..(seq / 4).max(1)).map(|t| (t % 50) as i32).collect(),
+                            gen_len: 4,
+                            budget: None,
+                        };
+                        wire::encode_request(&mut out, &req);
+                        sent_at.insert(next_id, std::time::Instant::now());
+                        next_id += 1;
+                    }
+                    stream.write_all(&out)?;
+                    for _ in 0..burst {
+                        let magic = wire::read_frame(&mut stream, &mut buf, wire::MAX_PAYLOAD)?
+                            .ok_or_else(|| anyhow::anyhow!("server closed mid-burst"))?;
+                        anyhow::ensure!(magic == wire::RESP_MAGIC, "bad response magic {magic}");
+                        let (id, status, _tokens) = wire::decode_response(&buf)?;
+                        if let Some(t0) = sent_at.remove(&id) {
+                            latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+                        }
+                        match status {
+                            Status::Ok => ok += 1,
+                            Status::Shed => shed += 1,
+                            Status::Error => {}
+                        }
+                    }
+                    // Bursty tenant: idle gap between bursts, staggered per
+                    // tenant so arrivals overlap unevenly.
+                    std::thread::sleep(std::time::Duration::from_millis(2 + c as u64));
+                }
+                Ok((latencies, ok, shed))
+            })
+        })
+        .collect();
+    // The supervisor joins every tenant, then begins the graceful drain;
+    // the main thread owns the backend and runs the serving loop.
+    let supervisor = std::thread::spawn(move || {
+        let mut latencies = Vec::new();
+        let (mut ok, mut shed) = (0usize, 0usize);
+        for c in clients {
+            match c.join() {
+                Ok(Ok((l, o, s))) => {
+                    latencies.extend(l);
+                    ok += o;
+                    shed += s;
+                }
+                Ok(Err(e)) => eprintln!("bench tenant failed: {e}"),
+                Err(_) => eprintln!("bench tenant panicked"),
+            }
+        }
+        handle.shutdown();
+        (latencies, ok, shed)
+    });
+    let report = listener.run(&mut registry)?;
+    let (latencies, ok, shed) = supervisor.join().expect("supervisor thread");
+    let stats = flexrank::coordinator::LatencyStats::from_samples(&latencies);
+    println!(
+        "{:>8}  {:>7}  {:>4}  {ok:>2}  {shed:>4}  {:>5.0}  {:>7.2}  {:>7.2}",
+        "framed",
+        n_clients,
+        n_clients * per_client,
+        report.requests_done as f64 / report.wall_s.max(1e-9),
+        stats.p50_ms,
+        stats.p99_ms,
+    );
+    anyhow::ensure!(
+        report.ingest_fingerprint_drift == 0,
+        "zero-alloc ingest invariant broke under load ({} drifts)",
+        report.ingest_fingerprint_drift
+    );
     Ok(())
 }

@@ -2,39 +2,64 @@
 //!
 //! Pure logic (no engine dependency) so invariants are property-testable:
 //! a batch flushes when it reaches `max_batch` or when its oldest request
-//! has waited `max_wait`; fairness is oldest-first within a tier.
+//! has waited that tier's deadline; fairness is oldest-first within a tier.
+//! Deadlines are per tier so SLO classes feed `max_wait` directly: the
+//! interactive tier (0) can flush on a tight deadline while the quality
+//! tier batches longer (see [`DynamicBatcher::with_tier_waits`]); the plain
+//! constructor keeps one uniform wait.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::data::trace::Request;
 
-/// A request waiting in a tier queue.
+/// A request waiting in a tier queue.  `tag` is an opaque caller token
+/// (the network listener uses it to index its reply-context slab; the
+/// trace-replay paths leave it 0) — carrying it through the queue keeps the
+/// ingest path free of side-table insertions.
 #[derive(Debug)]
 pub struct Pending {
     pub req: Request,
     pub enqueued: Instant,
+    pub tag: u64,
 }
 
 /// Per-tier dynamic batching queues.
 pub struct DynamicBatcher {
     queues: Vec<VecDeque<Pending>>,
     pub max_batch: usize,
-    pub max_wait: Duration,
+    /// Per-tier flush deadline (indexed like the queues).
+    waits: Vec<Duration>,
 }
 
 impl DynamicBatcher {
     pub fn new(n_tiers: usize, max_batch: usize, max_wait: Duration) -> Self {
+        Self::with_tier_waits(max_batch, vec![max_wait; n_tiers])
+    }
+
+    /// Per-tier deadlines: `waits[t]` is how long tier `t`'s oldest request
+    /// may sit before the tier is flush-ready.
+    pub fn with_tier_waits(max_batch: usize, waits: Vec<Duration>) -> Self {
         assert!(max_batch >= 1);
         DynamicBatcher {
-            queues: (0..n_tiers).map(|_| VecDeque::new()).collect(),
+            queues: (0..waits.len()).map(|_| VecDeque::new()).collect(),
             max_batch,
-            max_wait,
+            waits,
         }
     }
 
+    /// A tier's flush deadline.
+    pub fn wait(&self, tier: usize) -> Duration {
+        self.waits[tier]
+    }
+
     pub fn push(&mut self, tier: usize, req: Request, now: Instant) {
-        self.queues[tier].push_back(Pending { req, enqueued: now });
+        self.push_tagged(tier, req, now, 0);
+    }
+
+    /// Push with a caller tag (see [`Pending::tag`]).
+    pub fn push_tagged(&mut self, tier: usize, req: Request, now: Instant, tag: u64) {
+        self.queues[tier].push_back(Pending { req, enqueued: now, tag });
     }
 
     /// Total queued requests across tiers.
@@ -50,11 +75,11 @@ impl DynamicBatcher {
     /// never qualify), the tier whose front request has waited longest.
     /// Every selection path — full-batch, expired-deadline, shutdown drain
     /// — routes through here so they can't diverge.
-    fn oldest_head_among(&self, keep: impl Fn(&VecDeque<Pending>) -> bool) -> Option<usize> {
+    fn oldest_head_among(&self, keep: impl Fn(usize, &VecDeque<Pending>) -> bool) -> Option<usize> {
         self.queues
             .iter()
             .enumerate()
-            .filter(|(_, q)| !q.is_empty() && keep(q))
+            .filter(|(i, q)| !q.is_empty() && keep(*i, q))
             .min_by_key(|(_, q)| q.front().map(|p| p.enqueued))
             .map(|(i, _)| i)
     }
@@ -66,12 +91,12 @@ impl DynamicBatcher {
         // Among multiple full queues, prefer the one with the oldest head —
         // the lowest-index scan this replaced starved higher tiers whenever
         // a low tier refilled faster than it drained.
-        if let Some(i) = self.oldest_head_among(|q| q.len() >= self.max_batch) {
+        if let Some(i) = self.oldest_head_among(|_, q| q.len() >= self.max_batch) {
             return Some(i);
         }
-        self.oldest_head_among(|q| {
+        self.oldest_head_among(|t, q| {
             q.front()
-                .map(|p| now.duration_since(p.enqueued) >= self.max_wait)
+                .map(|p| now.duration_since(p.enqueued) >= self.waits[t])
                 .unwrap_or(false)
         })
     }
@@ -82,17 +107,18 @@ impl DynamicBatcher {
     /// flushes pop the longest-waiting requests first instead of the
     /// deepest queue.
     pub fn oldest_head_tier(&self) -> Option<usize> {
-        self.oldest_head_among(|_| true)
+        self.oldest_head_among(|_, _| true)
     }
 
     /// Time until the next deadline expiry (None if all queues empty).
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.queues
             .iter()
-            .filter_map(|q| q.front())
-            .map(|p| {
+            .enumerate()
+            .filter_map(|(t, q)| q.front().map(|p| (t, p)))
+            .map(|(t, p)| {
                 let waited = now.duration_since(p.enqueued);
-                self.max_wait.saturating_sub(waited)
+                self.waits[t].saturating_sub(waited)
             })
             .min()
     }
@@ -185,6 +211,38 @@ mod tests {
         assert_eq!(b.ready_tier(now), None);
         let later = now + Duration::from_millis(11);
         assert_eq!(b.ready_tier(later), Some(0));
+    }
+
+    #[test]
+    fn per_tier_deadlines_flush_independently() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::with_tier_waits(
+            8,
+            vec![Duration::from_millis(5), Duration::from_millis(50)],
+        );
+        assert_eq!(b.wait(0), Duration::from_millis(5));
+        b.push(1, req(1), now); // older, but on the lenient tier
+        b.push(0, req(2), now + Duration::from_millis(1));
+        // At t=7ms tier 0's head (waited 6ms) is past its 5ms deadline while
+        // tier 1's head (waited 7ms) is still inside its 50ms deadline.
+        let t = now + Duration::from_millis(7);
+        assert_eq!(b.ready_tier(t), Some(0));
+        b.take_batch(0);
+        assert_eq!(b.ready_tier(t), None);
+        assert_eq!(b.ready_tier(now + Duration::from_millis(51)), Some(1));
+        // next_deadline tracks the per-tier wait, not a global one.
+        let d = b.next_deadline(t).unwrap();
+        assert!(d <= Duration::from_millis(43), "{d:?}");
+    }
+
+    #[test]
+    fn tags_survive_the_queue() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new(1, 4, Duration::from_millis(1));
+        b.push_tagged(0, req(1), now, 41);
+        b.push(0, req(2), now);
+        let batch = b.take_batch(0);
+        assert_eq!(batch.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![41, 0]);
     }
 
     #[test]

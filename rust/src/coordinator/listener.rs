@@ -1,0 +1,1091 @@
+//! Online serving front-end: a blocking TCP listener in front of the
+//! [`ServingBackend`] decode seam.
+//!
+//! Two wire protocols share one ingest path (see [`crate::data::trace::wire`]
+//! for the frame layout):
+//!
+//! * **framed** — length-prefixed binary request/response frames; a
+//!   connection may pipeline up to `conn_pipeline` requests and receives
+//!   id-tagged responses, possibly out of submission order;
+//! * **HTTP/1.1** — a `POST` with a JSON body, one request per connection
+//!   (`curl`-able fallback); the body goes through the pull parser, never
+//!   the tree builder.
+//!
+//! The ingest contract is the one `serve_trace_decode` enforces: budget in
+//! (0, 1], non-empty prompt, prompt + gen_len within the positional table —
+//! checked connection-side so a bad request answers `Error` without ever
+//! touching the batcher.  Between `read()` and `batcher.push(…)` a framed
+//! request performs **zero heap allocations**: frames decode into a reused
+//! [`wire::RequestSlot`], and the token buffer hand-off swaps ownership
+//! with a recycled buffer from a fixed per-connection pool
+//! ([`wire::RequestSlot::take_request`]).  Buffer identity is watched
+//! per-connection and surfaces as [`ListenReport::ingest_fingerprint_drift`]
+//! (0 = the invariant held); the allocator-counted proof lives in
+//! `tests/fuzz_ingest.rs`.
+//!
+//! Overload: admission is bounded by `queue_cap` in-flight requests across
+//! all connections — past it a request is refused with an explicit `Shed`
+//! response (HTTP 503) instead of queueing without bound.  Shutdown
+//! ([`ShutdownHandle::shutdown`]) stops accepting and reading, then drains:
+//! queued requests still admit oldest-head-first (the batcher's one
+//! fairness rule), every in-flight request generates to completion, every
+//! reply flushes before the connection closes.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::trace::wire::{self, Status};
+use crate::data::trace::Request;
+use crate::json::{self, Value};
+use crate::runtime::ServingBackend;
+
+use super::batcher::DynamicBatcher;
+use super::metrics::LatencyStats;
+use super::policy::Policy;
+use super::server::ServeCfg;
+
+/// Listener configuration on top of the serving knobs.
+#[derive(Debug, Clone)]
+pub struct ListenCfg {
+    pub serve: ServeCfg,
+    /// Concurrent connections; one past this is refused with a shed frame.
+    pub max_connections: usize,
+    /// In-flight request bound across all connections (admission + decode);
+    /// past it new requests shed.  Also sizes the ingest channel.
+    pub queue_cap: usize,
+    /// Pipelined requests one framed connection may keep outstanding; also
+    /// the size of its recycled token-buffer pool.
+    pub conn_pipeline: usize,
+}
+
+impl Default for ListenCfg {
+    fn default() -> Self {
+        ListenCfg {
+            serve: ServeCfg::default(),
+            max_connections: 32,
+            queue_cap: 64,
+            conn_pipeline: 8,
+        }
+    }
+}
+
+/// Per-tier batch deadlines from one base wait: tier 0 (interactive SLO)
+/// flushes tightest, the top (quality) tier gets the full base — queued
+/// interactive heads overtake older lenient-tier heads once expired.
+pub fn tier_waits(base: Duration, n_tiers: usize) -> Vec<Duration> {
+    (0..n_tiers)
+        .map(|t| base.mul_f64((t + 1) as f64 / n_tiers.max(1) as f64))
+        .collect()
+}
+
+/// Counters shared between the accept loop, connection handlers, and the
+/// serving loop.
+struct Shared {
+    shutdown: AtomicBool,
+    /// Admitted, not-yet-replied requests (the shed bound).
+    inflight: AtomicUsize,
+    conns: AtomicUsize,
+    accepted: AtomicUsize,
+    rejected: AtomicUsize,
+    shed: AtomicUsize,
+    conn_errors: AtomicUsize,
+    /// Times a connection's request-slot buffer changed identity (must
+    /// stay 0 — the zero-alloc ingest invariant).
+    fingerprint_drift: AtomicUsize,
+}
+
+impl Shared {
+    fn new() -> Self {
+        Shared {
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            conns: AtomicUsize::new(0),
+            accepted: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            conn_errors: AtomicUsize::new(0),
+            fingerprint_drift: AtomicUsize::new(0),
+        }
+    }
+
+    fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+}
+
+/// Clonable remote-control handle for a running [`Listener`].
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    shared: Arc<Shared>,
+}
+
+impl ShutdownHandle {
+    /// Begin graceful drain: stop accepting/reading, finish everything
+    /// already admitted or queued, flush replies, then return from `run`.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+/// A request handed from a connection to the serving loop, carrying the
+/// channel its reply goes back on.
+struct IngestItem {
+    req: Request,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// A finished request on its way back to the connection writer.  `tokens`
+/// is the request's own buffer (now holding the generated tokens) — the
+/// writer recycles it into the connection pool after encoding.
+struct Reply {
+    id: u64,
+    status: Status,
+    tokens: Vec<i32>,
+}
+
+/// Final report of a listener run.
+pub struct ListenReport {
+    pub accepted_conns: usize,
+    pub rejected_conns: usize,
+    pub requests_done: usize,
+    pub shed: usize,
+    pub conn_errors: usize,
+    /// Must be 0: per-connection ingest buffers never changed identity.
+    pub ingest_fingerprint_drift: usize,
+    pub steps: usize,
+    pub tokens_prefilled: usize,
+    pub tokens_generated: usize,
+    pub wall_s: f64,
+    /// End-to-end latency samples (ms), enqueue → reply handed off.
+    pub latency_ms: Vec<f64>,
+    pub tier_requests: Vec<usize>,
+}
+
+impl ListenReport {
+    pub fn request_latency(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.latency_ms)
+    }
+
+    pub fn print(&self) {
+        println!("== listener report ==");
+        println!(
+            "conns {} (+{} refused)  requests {}  shed {}  conn-errors {}  \
+             steps {}  prefill {} tok  generated {} tok  wall {:.2}s",
+            self.accepted_conns,
+            self.rejected_conns,
+            self.requests_done,
+            self.shed,
+            self.conn_errors,
+            self.steps,
+            self.tokens_prefilled,
+            self.tokens_generated,
+            self.wall_s
+        );
+        let l = self.request_latency();
+        println!(
+            "request latency p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms  \
+             fingerprint drift {}",
+            l.p50_ms, l.p95_ms, l.p99_ms, self.ingest_fingerprint_drift
+        );
+        for (i, &n) in self.tier_requests.iter().enumerate() {
+            println!("tier {i}: {n} reqs");
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let l = self.request_latency();
+        json::to_string(&json::obj(vec![
+            ("accepted_conns", Value::Num(self.accepted_conns as f64)),
+            ("rejected_conns", Value::Num(self.rejected_conns as f64)),
+            ("requests", Value::Num(self.requests_done as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("conn_errors", Value::Num(self.conn_errors as f64)),
+            (
+                "ingest_fingerprint_drift",
+                Value::Num(self.ingest_fingerprint_drift as f64),
+            ),
+            ("steps", Value::Num(self.steps as f64)),
+            ("tokens_prefilled", Value::Num(self.tokens_prefilled as f64)),
+            ("tokens_generated", Value::Num(self.tokens_generated as f64)),
+            ("wall_s", json::finite_num(self.wall_s)),
+            ("latency_p50_ms", json::finite_num(l.p50_ms)),
+            ("latency_p95_ms", json::finite_num(l.p95_ms)),
+            ("latency_p99_ms", json::finite_num(l.p99_ms)),
+            (
+                "tier_requests",
+                Value::Arr(
+                    self.tier_requests.iter().map(|&n| Value::Num(n as f64)).collect(),
+                ),
+            ),
+        ]))
+    }
+}
+
+/// The bound socket plus everything `run` needs.  Binding is separate from
+/// running so callers can learn the ephemeral port and take a
+/// [`ShutdownHandle`] before the (blocking) serving loop starts.
+pub struct Listener {
+    socket: TcpListener,
+    cfg: ListenCfg,
+    shared: Arc<Shared>,
+}
+
+impl Listener {
+    pub fn bind(addr: &str, cfg: ListenCfg) -> Result<Listener> {
+        ensure!(cfg.max_connections >= 1, "max_connections must be >= 1");
+        ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+        ensure!(cfg.conn_pipeline >= 1, "conn_pipeline must be >= 1");
+        let socket = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Listener { socket, cfg, shared: Arc::new(Shared::new()) })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.socket.local_addr()?)
+    }
+
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Accept and serve until [`ShutdownHandle::shutdown`], then drain.
+    /// Runs the serving loop on the calling thread (it owns the backend);
+    /// accepting and per-connection I/O run on their own threads.
+    pub fn run<B: ServingBackend + ?Sized>(self, backend: &mut B) -> Result<ListenReport> {
+        ensure!(
+            backend.supports_decode() && backend.decode_slots() > 0,
+            "the listener serves through the incremental decode seam; \
+             this backend has none"
+        );
+        let n_tiers = backend.n_tiers();
+        let seq = backend.seq_len();
+        let policy = Policy::new(self.cfg.serve.policy, n_tiers);
+        let base = Duration::from_secs_f64(self.cfg.serve.max_wait_ms / 1e3);
+        let mut batcher =
+            DynamicBatcher::with_tier_waits(backend.batch(), tier_waits(base, n_tiers));
+
+        // Admission bound == channel bound: `try_admit` gates every send,
+        // so the channel can never hold more than `queue_cap` items and a
+        // handler's `send` never blocks the connection.
+        let (tx, rx) = mpsc::sync_channel::<IngestItem>(self.cfg.queue_cap);
+        let shared = Arc::clone(&self.shared);
+        let accept = {
+            let socket = self.socket;
+            let shared = Arc::clone(&shared);
+            let cfg = self.cfg.clone();
+            std::thread::spawn(move || accept_loop(socket, shared, tx, cfg, seq))
+        };
+
+        /// One admitted, still-generating request in the serving loop.
+        struct Active {
+            tier: usize,
+            slot: usize,
+            id: u64,
+            tag: usize,
+            last: i32,
+            remaining: usize,
+            /// The request's own token buffer, now accumulating generated
+            /// tokens; travels back to the connection inside the reply.
+            gen: Vec<i32>,
+            enqueued: Instant,
+        }
+
+        // Reply channels live in a slab indexed by the batcher tag — no
+        // per-request map insertions on the ingest path.
+        let mut slab: Vec<Option<mpsc::Sender<Reply>>> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        let mut active: Vec<Active> = Vec::with_capacity(backend.decode_slots());
+        let mut step_slots: Vec<usize> = Vec::with_capacity(backend.decode_slots());
+        let mut step_tokens: Vec<i32> = Vec::with_capacity(backend.decode_slots());
+        let mut tier_requests = vec![0usize; n_tiers];
+        let mut latency_ms: Vec<f64> = Vec::new();
+        let (mut requests_done, mut steps) = (0usize, 0usize);
+        let (mut tokens_prefilled, mut tokens_generated) = (0usize, 0usize);
+
+        // Retire a request: hand the reply to its connection, free the
+        // slab entry, release the admission token.
+        let finish = |slab: &mut Vec<Option<mpsc::Sender<Reply>>>,
+                      free: &mut Vec<usize>,
+                      tag: usize,
+                      reply: Reply| {
+            if let Some(entry) = slab.get_mut(tag) {
+                if let Some(reply_tx) = entry.take() {
+                    // A send error means the connection died; the request
+                    // still completed — drop the reply, keep serving.
+                    let _ = reply_tx.send(reply);
+                }
+            }
+            free.push(tag);
+            shared.inflight.fetch_sub(1, Ordering::Relaxed);
+        };
+
+        let start = Instant::now();
+        let mut open = true;
+        while open || batcher.depth() > 0 || !active.is_empty() {
+            // Drain arrivals into the batcher.
+            loop {
+                match rx.try_recv() {
+                    Ok(item) => {
+                        let now = Instant::now();
+                        let tier = policy.select(&item.req, batcher.depth());
+                        let tag = match free.pop() {
+                            Some(i) => {
+                                slab[i] = Some(item.reply);
+                                i
+                            }
+                            None => {
+                                slab.push(Some(item.reply));
+                                slab.len() - 1
+                            }
+                        };
+                        tier_requests[tier] += 1;
+                        batcher.push_tagged(tier, item.req, now, tag as u64);
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+
+            // Admission between decode steps: deadline-expired tiers first
+            // (per-tier SLO waits), otherwise the oldest queue head — the
+            // same rule the shutdown drain keeps, so drain order is just
+            // steady-state order with no new arrivals.
+            loop {
+                let now = Instant::now();
+                let Some(tier) =
+                    batcher.ready_tier(now).or_else(|| batcher.oldest_head_tier())
+                else {
+                    break;
+                };
+                let need = match batcher.peek_head(tier) {
+                    Some(p) => p.req.total_tokens(),
+                    None => break,
+                };
+                let Some(slot) = backend.acquire_slot(need) else { break };
+                let p = batcher.pop_head(tier).expect("peeked head vanished");
+                let tag = p.tag as usize;
+                let first = match backend.prefill(tier, slot, &p.req.tokens) {
+                    Ok(logits) => {
+                        let vocab = logits.len() / p.req.tokens.len();
+                        argmax(&logits[(p.req.tokens.len() - 1) * vocab..])
+                    }
+                    Err(e) => {
+                        // Per-request failure: answer Error, keep serving.
+                        backend.release_slot(slot);
+                        eprintln!(
+                            "[listen] prefill failed for request {}: {e:#}",
+                            p.req.id
+                        );
+                        shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+                        finish(
+                            &mut slab,
+                            &mut free,
+                            tag,
+                            Reply { id: p.req.id, status: Status::Error, tokens: Vec::new() },
+                        );
+                        continue;
+                    }
+                };
+                tokens_prefilled += p.req.tokens.len();
+                let super::batcher::Pending { req, enqueued, .. } = p;
+                let Request { id, gen_len, tokens: mut gen, .. } = req;
+                gen.clear();
+                if gen_len >= 1 {
+                    gen.push(first);
+                    tokens_generated += 1;
+                }
+                if gen_len <= 1 {
+                    backend.release_slot(slot);
+                    latency_ms.push(enqueued.elapsed().as_secs_f64() * 1e3);
+                    requests_done += 1;
+                    finish(
+                        &mut slab,
+                        &mut free,
+                        tag,
+                        Reply { id, status: Status::Ok, tokens: gen },
+                    );
+                    continue;
+                }
+                active.push(Active {
+                    tier,
+                    slot,
+                    id,
+                    tag,
+                    last: first,
+                    remaining: gen_len - 1,
+                    gen,
+                    enqueued,
+                });
+            }
+
+            if active.is_empty() {
+                if open || batcher.depth() > 0 {
+                    let wait = batcher
+                        .next_deadline(Instant::now())
+                        .unwrap_or(Duration::from_millis(1))
+                        .min(Duration::from_millis(2));
+                    std::thread::sleep(wait.max(Duration::from_micros(100)));
+                }
+                continue;
+            }
+
+            // One decode step per tier group.
+            for tier in 0..n_tiers {
+                step_slots.clear();
+                step_tokens.clear();
+                for a in active.iter().filter(|a| a.tier == tier) {
+                    step_slots.push(a.slot);
+                    step_tokens.push(a.last);
+                }
+                if step_slots.is_empty() {
+                    continue;
+                }
+                let n_rows = step_slots.len();
+                {
+                    let logits = backend.decode_step(tier, &step_slots, &step_tokens)?;
+                    let vocab = logits.len() / n_rows;
+                    step_tokens.clear();
+                    for r in 0..n_rows {
+                        step_tokens.push(argmax(&logits[r * vocab..(r + 1) * vocab]));
+                    }
+                }
+                steps += 1;
+                let mut r = 0;
+                for a in active.iter_mut().filter(|a| a.tier == tier) {
+                    a.last = step_tokens[r];
+                    a.gen.push(step_tokens[r]);
+                    a.remaining -= 1;
+                    tokens_generated += 1;
+                    r += 1;
+                }
+            }
+
+            // Retire finished requests.
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].remaining == 0 {
+                    let a = active.swap_remove(i);
+                    backend.release_slot(a.slot);
+                    latency_ms.push(a.enqueued.elapsed().as_secs_f64() * 1e3);
+                    requests_done += 1;
+                    finish(
+                        &mut slab,
+                        &mut free,
+                        a.tag,
+                        Reply { id: a.id, status: Status::Ok, tokens: a.gen },
+                    );
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let wall_s = start.elapsed().as_secs_f64();
+        accept.join().ok();
+
+        Ok(ListenReport {
+            accepted_conns: shared.accepted.load(Ordering::Relaxed),
+            rejected_conns: shared.rejected.load(Ordering::Relaxed),
+            requests_done,
+            shed: shared.shed.load(Ordering::Relaxed),
+            conn_errors: shared.conn_errors.load(Ordering::Relaxed),
+            ingest_fingerprint_drift: shared.fingerprint_drift.load(Ordering::Relaxed),
+            steps,
+            tokens_prefilled,
+            tokens_generated,
+            wall_s,
+            latency_ms,
+            tier_requests,
+        })
+    }
+}
+
+/// Greedy (deterministic) token choice from one logits row — the same rule
+/// `serve_trace_decode` uses, so listener responses are bit-identical to an
+/// in-process replay.
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Strict admission: claim one of `cap` in-flight tokens, or refuse.  CAS
+/// loop so concurrent connections can't overshoot the bound.
+fn try_admit(shared: &Shared, cap: usize) -> bool {
+    let mut cur = shared.inflight.load(Ordering::Relaxed);
+    loop {
+        if cur >= cap {
+            return false;
+        }
+        match shared.inflight.compare_exchange(
+            cur,
+            cur + 1,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// The ingest contract `serve_trace_decode` enforces, applied
+/// connection-side so violations answer `Error` without touching the
+/// batcher (a bad request must never abort the serving loop).
+fn validate_contract(slot: &wire::RequestSlot, seq: usize) -> Result<()> {
+    if let Some(b) = slot.budget {
+        ensure!(
+            b.is_finite() && b > 0.0 && b <= 1.0,
+            "request {} carries budget {b} outside the (0, 1] contract",
+            slot.id
+        );
+    }
+    ensure!(!slot.tokens.is_empty(), "request {} carries an empty prompt", slot.id);
+    ensure!(
+        slot.tokens.len() + slot.gen_len <= seq,
+        "request {} needs {} tokens (prompt {} + gen {}) but the positional \
+         table holds {seq}",
+        slot.id,
+        slot.tokens.len() + slot.gen_len,
+        slot.tokens.len(),
+        slot.gen_len
+    );
+    Ok(())
+}
+
+fn accept_loop(
+    socket: TcpListener,
+    shared: Arc<Shared>,
+    tx: mpsc::SyncSender<IngestItem>,
+    cfg: ListenCfg,
+    seq: usize,
+) {
+    if let Err(e) = socket.set_nonblocking(true) {
+        eprintln!("[listen] cannot poll the accept socket: {e}");
+        shared.shutdown.store(true, Ordering::Relaxed);
+        return;
+    }
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shared.is_shutdown() {
+        match socket.accept() {
+            Ok((stream, peer)) => {
+                shared.accepted.fetch_add(1, Ordering::Relaxed);
+                if shared.conns.load(Ordering::Relaxed) >= cfg.max_connections {
+                    shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    refuse(stream);
+                    continue;
+                }
+                shared.conns.fetch_add(1, Ordering::Relaxed);
+                let shared = Arc::clone(&shared);
+                let tx = tx.clone();
+                let (queue_cap, pipeline) = (cfg.queue_cap, cfg.conn_pipeline);
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, &shared, &tx, seq, queue_cap, pipeline)
+                    {
+                        // Loud per-connection error; the accept loop and
+                        // every other connection keep going.
+                        eprintln!("[listen] connection {peer}: {e:#}");
+                        shared.conn_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    shared.conns.fetch_sub(1, Ordering::Relaxed);
+                }));
+                handles.retain(|h| !h.is_finished());
+            }
+            Err(e) if would_block(&e) => {
+                handles.retain(|h| !h.is_finished());
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("[listen] accept error: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    for h in handles {
+        h.join().ok();
+    }
+    // `tx` drops here: once every handler clone is gone too, the serving
+    // loop sees the channel disconnect and finishes its drain.
+}
+
+/// Best-effort shed answer for a connection refused at the accept gate
+/// (protocol unknown at this point, so it gets a shed frame).
+fn refuse(mut stream: TcpStream) {
+    let mut out = Vec::new();
+    wire::encode_response(&mut out, 0, Status::Shed, &[]);
+    let _ = stream.write_all(&out);
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    shared: &Shared,
+    tx: &mpsc::SyncSender<IngestItem>,
+    seq: usize,
+    queue_cap: usize,
+    pipeline: usize,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .context("setting the read timeout")?;
+    // First byte picks the protocol: the framed magic, or HTTP.
+    let mut first = [0u8; 1];
+    loop {
+        match stream.peek(&mut first) {
+            Ok(0) => return Ok(()), // closed without sending anything
+            Ok(_) => break,
+            Err(e) if would_block(&e) => {
+                if shared.is_shutdown() {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if first[0] == wire::REQ_MAGIC {
+        handle_framed(stream, shared, tx, seq, queue_cap, pipeline)
+    } else {
+        handle_http(stream, shared, tx, seq, queue_cap)
+    }
+}
+
+/// Like `wire::read_frame`, but over a socket with a read timeout so the
+/// handler notices shutdown: a timeout before any header byte is a quiesce
+/// point (and exits cleanly on shutdown); a timeout mid-frame keeps waiting
+/// for the slow client unless shutdown cuts it off.
+fn read_frame_polled(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    max_payload: usize,
+    shared: &Shared,
+) -> Result<Option<u8>> {
+    let mut header = [0u8; wire::HEADER_LEN];
+    let mut got = 0usize;
+    while got < wire::HEADER_LEN {
+        match stream.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                bail!("truncated frame: EOF after {got} header bytes");
+            }
+            Ok(n) => got += n,
+            Err(e) if would_block(&e) => {
+                if shared.is_shutdown() {
+                    if got == 0 {
+                        return Ok(None);
+                    }
+                    bail!("shutdown mid-frame");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    ensure!(
+        header[0] == wire::REQ_MAGIC,
+        "bad frame magic 0x{:02x} (not a framed-protocol stream)",
+        header[0]
+    );
+    ensure!(header[1] == wire::VERSION, "unsupported frame version {}", header[1]);
+    let len =
+        u32::from_le_bytes([header[2], header[3], header[4], header[5]]) as usize;
+    ensure!(
+        len <= max_payload,
+        "frame length prefix {len} exceeds the {max_payload}-byte limit"
+    );
+    buf.clear();
+    buf.resize(len, 0); // within the reserved capacity — no allocation
+    let mut at = 0usize;
+    while at < len {
+        match stream.read(&mut buf[at..]) {
+            Ok(0) => bail!("truncated frame: EOF {at}/{len} payload bytes in"),
+            Ok(n) => at += n,
+            Err(e) if would_block(&e) => {
+                if shared.is_shutdown() {
+                    bail!("shutdown mid-frame");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(header[0]))
+}
+
+/// Write one token-free response frame directly (shed / error answers the
+/// reader issues itself).  The write half is mutex-shared with the
+/// connection's writer thread so frames never interleave.
+fn respond_now(
+    write_half: &Mutex<TcpStream>,
+    out: &mut Vec<u8>,
+    id: u64,
+    status: Status,
+) -> Result<()> {
+    out.clear();
+    wire::encode_response(out, id, status, &[]);
+    let mut s = write_half.lock().unwrap_or_else(|p| p.into_inner());
+    s.write_all(out)?;
+    Ok(())
+}
+
+/// Framed-protocol connection: pipelined requests, id-tagged responses.
+fn handle_framed(
+    mut stream: TcpStream,
+    shared: &Shared,
+    tx: &mpsc::SyncSender<IngestItem>,
+    seq: usize,
+    queue_cap: usize,
+    pipeline: usize,
+) -> Result<()> {
+    let write_half = Arc::new(Mutex::new(stream.try_clone().context("cloning the socket")?));
+    // Serving replies for this connection (unbounded, but never holds more
+    // than `pipeline` replies — each Ok reply carries a pool buffer).
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    // The fixed token-buffer pool: `pipeline` buffers cycle request →
+    // reply → writer → back here.  Waiting on `recv` when the pool is
+    // empty is the connection's pipelining backpressure.
+    let (pool_tx, pool_rx) = mpsc::sync_channel::<Vec<i32>>(pipeline);
+    for _ in 0..pipeline {
+        pool_tx.send(Vec::with_capacity(seq)).expect("pool channel sized to pipeline");
+    }
+
+    let writer = {
+        let write_half = Arc::clone(&write_half);
+        let pool_tx = pool_tx.clone();
+        std::thread::spawn(move || writer_loop(reply_rx, write_half, pool_tx))
+    };
+
+    let max_payload = wire::REQ_FIXED + 4 * seq;
+    let mut payload: Vec<u8> = Vec::with_capacity(max_payload);
+    let mut out: Vec<u8> = Vec::with_capacity(wire::HEADER_LEN + 16);
+    let mut slot = wire::RequestSlot::with_capacity(seq);
+    let mut fingerprint: Option<(usize, usize)> = None;
+
+    let result = (|| -> Result<()> {
+        loop {
+            if read_frame_polled(&mut stream, &mut payload, max_payload, shared)?.is_none() {
+                return Ok(()); // clean EOF, or shutdown quiesce
+            }
+            if let Err(e) = wire::decode_request(&payload, seq, &mut slot) {
+                // A malformed frame poisons the stream (framing is lost) —
+                // answer and drop the connection loudly.
+                let _ = respond_now(&write_half, &mut out, slot.id, Status::Error);
+                bail!("malformed request frame: {e}");
+            }
+            match fingerprint {
+                None => fingerprint = Some(slot.fingerprint()),
+                Some(fp) if fp != slot.fingerprint() => {
+                    shared.fingerprint_drift.fetch_add(1, Ordering::Relaxed);
+                    fingerprint = Some(slot.fingerprint());
+                }
+                Some(_) => {}
+            }
+            if let Err(e) = validate_contract(&slot, seq) {
+                // Well-framed but out of contract: per-request error, the
+                // connection (and its other pipelined requests) live on.
+                eprintln!("[listen] rejected request: {e:#}");
+                respond_now(&write_half, &mut out, slot.id, Status::Error)?;
+                continue;
+            }
+            // A recycled buffer (blocks at `pipeline` outstanding).
+            let replacement = loop {
+                match pool_rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(v) => break v,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if shared.is_shutdown() {
+                            shared.shed.fetch_add(1, Ordering::Relaxed);
+                            respond_now(&write_half, &mut out, slot.id, Status::Shed)?;
+                            return Ok(());
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        bail!("connection writer exited early")
+                    }
+                }
+            };
+            if shared.is_shutdown() || !try_admit(shared, queue_cap) {
+                // Draining, or the global in-flight bound is saturated:
+                // explicit shed, never unbounded queueing.
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = pool_tx.send(replacement);
+                respond_now(&write_half, &mut out, slot.id, Status::Shed)?;
+                if shared.is_shutdown() {
+                    return Ok(());
+                }
+                continue;
+            }
+            // Zero allocations since `read()`: the slot's buffer moves into
+            // the Request, the recycled one takes its place.
+            let req = slot.take_request(0.0, replacement);
+            if tx.send(IngestItem { req, reply: reply_tx.clone() }).is_err() {
+                shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                bail!("serving loop closed the ingest channel");
+            }
+        }
+    })();
+    // Let the writer drain every in-flight reply, then exit: it ends when
+    // the last reply sender (ours here, the serving loop's per request)
+    // drops.
+    drop(reply_tx);
+    drop(pool_rx);
+    writer.join().ok();
+    result
+}
+
+/// Connection writer: encodes serving replies, recycles token buffers.
+fn writer_loop(
+    reply_rx: mpsc::Receiver<Reply>,
+    write_half: Arc<Mutex<TcpStream>>,
+    pool_tx: mpsc::SyncSender<Vec<i32>>,
+) {
+    let mut out: Vec<u8> = Vec::new();
+    while let Ok(mut reply) = reply_rx.recv() {
+        out.clear();
+        wire::encode_response(&mut out, reply.id, reply.status, &reply.tokens);
+        {
+            let mut s = write_half.lock().unwrap_or_else(|p| p.into_inner());
+            // A dead client can't cancel completed work; keep draining so
+            // buffers still recycle and the reader can finish cleanly.
+            let _ = s.write_all(&out);
+        }
+        if reply.tokens.capacity() > 0 {
+            reply.tokens.clear();
+            // Reader gone (pool receiver dropped) is fine — keep draining.
+            let _ = pool_tx.send(reply.tokens);
+        }
+    }
+}
+
+/// HTTP/1.1 fallback: one `POST` with a JSON body per connection.
+fn handle_http(
+    mut stream: TcpStream,
+    shared: &Shared,
+    tx: &mpsc::SyncSender<IngestItem>,
+    seq: usize,
+    queue_cap: usize,
+) -> Result<()> {
+    const HEAD_CAP: usize = 16 * 1024;
+    let mut head: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 512];
+    let body_start = loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => bail!("http: connection closed before the headers completed"),
+            Ok(n) => {
+                head.extend_from_slice(&chunk[..n]);
+                if let Some(pos) = find_subslice(&head, b"\r\n\r\n") {
+                    break pos + 4;
+                }
+                ensure!(head.len() <= HEAD_CAP, "http: headers exceed {HEAD_CAP} bytes");
+            }
+            Err(e) if would_block(&e) => {
+                if shared.is_shutdown() {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    };
+    let head_txt = std::str::from_utf8(&head[..body_start])
+        .map_err(|_| anyhow::anyhow!("http: non-UTF-8 request head"))?;
+    let mut lines = head_txt.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    if !request_line.starts_with("POST ") {
+        http_respond(&mut stream, 400, br#"{"error":"only POST is supported"}"#)?;
+        bail!("http: unsupported request line '{request_line}'");
+    }
+    let mut content_len: Option<usize> = None;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("http: bad content-length: {e}"))?,
+                );
+            }
+        }
+    }
+    let Some(clen) = content_len else {
+        http_respond(&mut stream, 400, br#"{"error":"content-length required"}"#)?;
+        bail!("http: missing content-length");
+    };
+    let max_body = wire::REQ_FIXED + 16 * seq + 1024;
+    if clen > max_body {
+        http_respond(&mut stream, 400, br#"{"error":"body too large"}"#)?;
+        bail!("http: {clen}-byte body exceeds the {max_body}-byte limit");
+    }
+    let mut body: Vec<u8> = Vec::with_capacity(clen);
+    body.extend_from_slice(&head[body_start..]);
+    while body.len() < clen {
+        match stream.read(&mut chunk) {
+            Ok(0) => bail!("http: EOF {}/{clen} body bytes in", body.len()),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if would_block(&e) => {
+                if shared.is_shutdown() {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    body.truncate(clen);
+
+    let mut req_slot = wire::RequestSlot::with_capacity(seq);
+    if let Err(e) = wire::decode_request_json(&body, seq, &mut req_slot)
+        .and_then(|()| validate_contract(&req_slot, seq))
+    {
+        let msg = json::to_string(&json::obj(vec![(
+            "error",
+            Value::Str(format!("{e:#}")),
+        )]));
+        http_respond(&mut stream, 400, msg.as_bytes())?;
+        bail!("http: rejected request: {e:#}");
+    }
+    if shared.is_shutdown() || !try_admit(shared, queue_cap) {
+        shared.shed.fetch_add(1, Ordering::Relaxed);
+        http_respond(&mut stream, 503, br#"{"error":"overloaded, retry later"}"#)?;
+        return Ok(());
+    }
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let req = req_slot.take_request(0.0, Vec::new());
+    if tx.send(IngestItem { req, reply: reply_tx }).is_err() {
+        shared.inflight.fetch_sub(1, Ordering::Relaxed);
+        http_respond(&mut stream, 503, br#"{"error":"server is stopping"}"#)?;
+        bail!("http: serving loop closed the ingest channel");
+    }
+    // Admitted requests always complete (the drain finishes them), so this
+    // only waits.
+    let reply = loop {
+        match reply_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(r) => break r,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("http: serving loop dropped the reply")
+            }
+        }
+    };
+    let status_txt = match reply.status {
+        Status::Ok => "ok",
+        Status::Shed => "shed",
+        Status::Error => "error",
+    };
+    let body = json::to_string(&json::obj(vec![
+        ("id", Value::Num(reply.id as f64)),
+        ("status", Value::Str(status_txt.to_string())),
+        ("tokens", json::arr_i32(&reply.tokens)),
+    ]));
+    let code = match reply.status {
+        Status::Ok => 200,
+        Status::Shed => 503,
+        Status::Error => 400,
+    };
+    http_respond(&mut stream, code, body.as_bytes())
+}
+
+fn http_respond(stream: &mut TcpStream, code: u16, body: &[u8]) -> Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    Ok(())
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_waits_scale_tight_to_lenient() {
+        let w = tier_waits(Duration::from_millis(8), 4);
+        assert_eq!(
+            w,
+            vec![
+                Duration::from_millis(2),
+                Duration::from_millis(4),
+                Duration::from_millis(6),
+                Duration::from_millis(8),
+            ]
+        );
+        assert_eq!(tier_waits(Duration::from_millis(5), 1), vec![Duration::from_millis(5)]);
+    }
+
+    #[test]
+    fn try_admit_is_a_strict_bound() {
+        let shared = Shared::new();
+        for _ in 0..4 {
+            assert!(try_admit(&shared, 4));
+        }
+        assert!(!try_admit(&shared, 4));
+        shared.inflight.fetch_sub(1, Ordering::Relaxed);
+        assert!(try_admit(&shared, 4));
+        assert!(!try_admit(&shared, 4));
+    }
+
+    #[test]
+    fn contract_validation_matches_serve_trace_decode() {
+        let mut slot = wire::RequestSlot::with_capacity(16);
+        slot.id = 3;
+        slot.tokens.extend_from_slice(&[1, 2, 3]);
+        slot.gen_len = 2;
+        assert!(validate_contract(&slot, 16).is_ok());
+        slot.budget = Some(f64::NAN);
+        assert!(validate_contract(&slot, 16).unwrap_err().to_string().contains("(0, 1]"));
+        slot.budget = Some(0.5);
+        assert!(validate_contract(&slot, 16).is_ok());
+        slot.gen_len = 14;
+        assert!(validate_contract(&slot, 16)
+            .unwrap_err()
+            .to_string()
+            .contains("positional"));
+        slot.gen_len = 0;
+        slot.tokens.clear();
+        assert!(validate_contract(&slot, 16).unwrap_err().to_string().contains("empty"));
+    }
+
+    #[test]
+    fn listen_report_json_reparses() {
+        let report = ListenReport {
+            accepted_conns: 3,
+            rejected_conns: 1,
+            requests_done: 40,
+            shed: 2,
+            conn_errors: 1,
+            ingest_fingerprint_drift: 0,
+            steps: 9,
+            tokens_prefilled: 100,
+            tokens_generated: 50,
+            wall_s: f64::INFINITY, // degenerate timing must still be JSON
+            latency_ms: vec![1.0, 2.0],
+            tier_requests: vec![30, 10],
+        };
+        let parsed = crate::json::parse(&report.to_json()).expect("must re-parse");
+        assert_eq!(parsed.get("requests").unwrap().as_f64().unwrap(), 40.0);
+        assert_eq!(parsed.get("wall_s").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -16,18 +16,22 @@
 //! (`linalg::pool`) inside each forward.
 
 mod batcher;
+mod listener;
 mod metrics;
 mod policy;
 mod registry;
 mod server;
 
 pub use batcher::{DynamicBatcher, Pending};
+pub use listener::{tier_waits, ListenCfg, ListenReport, Listener, ShutdownHandle};
 pub use metrics::{LatencyStats, Metrics};
 pub use policy::{Policy, PolicyKind};
 #[cfg(feature = "pjrt")]
 pub use registry::{PjrtRegistry, PjrtServing};
 pub use registry::{load_tier_profiles, SubmodelRegistry, Tier};
-pub use server::{serve_trace, serve_trace_decode, DecodeReport, ServeCfg, ServeReport};
+pub use server::{
+    ingest_bound, serve_trace, serve_trace_decode, DecodeReport, ServeCfg, ServeReport,
+};
 
 use anyhow::{ensure, Context, Result};
 
@@ -107,13 +111,17 @@ pub fn run_cli(args: &Args) -> Result<()> {
 ///
 /// `--mode window` (default) replays the one-shot padded-batch path;
 /// `--mode decode` replays variable-length prompts with generation through
-/// the continuous-batching prefill/decode seam.
+/// the continuous-batching prefill/decode seam; `--listen [addr]` skips
+/// trace replay and serves real sockets through the listener front-end.
 fn serve_cli_on<B: ServingBackend>(
     backend: &mut B,
     cfg: &ModelConfig,
     args: &Args,
     seed: u64,
 ) -> Result<()> {
+    if let Some(addr) = args.get("listen") {
+        return listen_cli_on(backend, args, addr);
+    }
     let corpus = crate::data::Corpus::generate(crate::training::CORPUS_BYTES, 5);
     let mode = args.get_or("mode", "window");
     ensure!(
@@ -160,6 +168,47 @@ fn serve_cli_on<B: ServingBackend>(
     report.print();
 
     let path = crate::results_dir().join("serving_report.json");
+    std::fs::write(&path, report.to_json())?;
+    println!("report -> {}", path.display());
+    Ok(())
+}
+
+/// `repro serve --listen [addr]` — the online front-end: accept real
+/// sockets (framed protocol + HTTP POST fallback) and serve through the
+/// decode seam until `--listen-secs` elapses (0 = until killed).
+fn listen_cli_on<B: ServingBackend>(backend: &mut B, args: &Args, addr: &str) -> Result<()> {
+    // A bare `--listen` parses as the value "true"; use the default addr.
+    let addr = if addr == "true" { "127.0.0.1:7171" } else { addr };
+    let lcfg = ListenCfg {
+        serve: ServeCfg {
+            max_wait_ms: args.f64_or("max-wait-ms", 4.0)?,
+            policy: match args.get_or("policy", "static") {
+                "adaptive" => PolicyKind::Adaptive,
+                _ => PolicyKind::Static,
+            },
+            ..Default::default()
+        },
+        max_connections: args.usize_or("max-conns", 32)?,
+        queue_cap: args.usize_or("queue-cap", 64)?,
+        conn_pipeline: args.usize_or("conn-pipeline", 8)?,
+    };
+    let listener = Listener::bind(addr, lcfg)?;
+    let bound = listener.local_addr()?;
+    let handle = listener.shutdown_handle();
+    let secs = args.f64_or("listen-secs", 0.0)?;
+    eprintln!(
+        "[serve] listening on {bound} (framed protocol + HTTP POST){}",
+        if secs > 0.0 { format!(", stopping after {secs}s") } else { String::new() }
+    );
+    if secs > 0.0 {
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+            handle.shutdown();
+        });
+    }
+    let report = listener.run(backend)?;
+    report.print();
+    let path = crate::results_dir().join("listen_report.json");
     std::fs::write(&path, report.to_json())?;
     println!("report -> {}", path.display());
     Ok(())

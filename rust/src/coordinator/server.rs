@@ -31,6 +31,39 @@ impl Default for ServeCfg {
     }
 }
 
+/// Capacity of the bounded ingest channel, sized off the batcher: enough to
+/// keep every tier's next batch fed, clamped so a tiny config still
+/// overlaps replay with execution and a huge one can't buffer the whole
+/// trace (each `Request` carries its token Vec — the unbounded channel this
+/// replaced held the entire trace in memory on a fast replay).
+pub fn ingest_bound(n_tiers: usize, max_batch: usize) -> usize {
+    (n_tiers * max_batch).clamp(8, 1024)
+}
+
+/// Replay a trace's arrivals onto a bounded channel on its own timeline.
+/// `send` on a full channel blocks — that backpressure is the point: a slow
+/// consumer stalls the replayer instead of ballooning the queue.
+fn spawn_replay(
+    trace: Vec<Request>,
+    replay: f64,
+    tx: mpsc::SyncSender<Request>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let t0 = Instant::now();
+        for req in trace {
+            if replay > 0.0 {
+                let due = Duration::from_secs_f64(req.arrival_s / replay);
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            if tx.send(req).is_err() {
+                break;
+            }
+        }
+    })
+}
+
 /// Final report of a serving run.
 pub struct ServeReport {
     pub metrics: Metrics,
@@ -72,6 +105,9 @@ impl ServeReport {
     }
 
     pub fn to_json(&self) -> String {
+        // Ratio fields route through `finite_num`: on a ~0-elapsed tiny
+        // trace `throughput_rps` divides by ~nothing, and a bare inf/NaN is
+        // not valid JSON — it would poison every downstream bench parse.
         let tiers: Vec<Value> = self
             .tier_budgets
             .iter()
@@ -80,22 +116,22 @@ impl ServeReport {
                 let l = self.metrics.tier_latency(i);
                 json::obj(vec![
                     ("tier", Value::Num(i as f64)),
-                    ("budget", Value::Num(b)),
+                    ("budget", json::finite_num(b)),
                     ("params", Value::Num(self.tier_params[i] as f64)),
                     ("requests", Value::Num(self.tier_requests[i] as f64)),
-                    ("latency_p50_ms", Value::Num(l.p50_ms)),
-                    ("latency_p95_ms", Value::Num(l.p95_ms)),
-                    ("latency_p99_ms", Value::Num(l.p99_ms)),
-                    ("exec_p50_ms", Value::Num(self.metrics.tier_exec(i).p50_ms)),
+                    ("latency_p50_ms", json::finite_num(l.p50_ms)),
+                    ("latency_p95_ms", json::finite_num(l.p95_ms)),
+                    ("latency_p99_ms", json::finite_num(l.p99_ms)),
+                    ("exec_p50_ms", json::finite_num(self.metrics.tier_exec(i).p50_ms)),
                 ])
             })
             .collect();
         json::to_string(&json::obj(vec![
             ("requests", Value::Num(self.metrics.requests_done as f64)),
             ("batches", Value::Num(self.metrics.batches as f64)),
-            ("wall_s", Value::Num(self.wall_s)),
-            ("throughput_rps", Value::Num(self.throughput_rps())),
-            ("mean_occupancy", Value::Num(self.metrics.mean_occupancy())),
+            ("wall_s", json::finite_num(self.wall_s)),
+            ("throughput_rps", json::finite_num(self.throughput_rps())),
+            ("mean_occupancy", json::finite_num(self.metrics.mean_occupancy())),
             ("tiers", Value::Arr(tiers)),
         ]))
     }
@@ -228,23 +264,10 @@ pub fn serve_trace<B: ServingBackend + ?Sized>(
         }
     }
 
-    // Ingest thread: replays arrivals on the trace's timeline.
-    let (tx, rx) = mpsc::channel::<Request>();
-    let replay = cfg.replay_speed;
-    let ingest = std::thread::spawn(move || {
-        let t0 = Instant::now();
-        for req in trace {
-            if replay > 0.0 {
-                let due = Duration::from_secs_f64(req.arrival_s / replay);
-                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
-                    std::thread::sleep(sleep);
-                }
-            }
-            if tx.send(req).is_err() {
-                break;
-            }
-        }
-    });
+    // Ingest thread: replays arrivals on the trace's timeline, through a
+    // bounded channel so a slow consumer backpressures the replayer.
+    let (tx, rx) = mpsc::sync_channel::<Request>(ingest_bound(n_tiers, backend.batch()));
+    let ingest = spawn_replay(trace, cfg.replay_speed, tx);
 
     let start = Instant::now();
     let mut open = true;
@@ -361,6 +384,8 @@ impl DecodeReport {
     }
 
     pub fn to_json(&self) -> String {
+        // Same inf/NaN guard as `ServeReport::to_json` — `tokens_per_sec`
+        // and the latency percentiles are ratios over elapsed time.
         let d = self.decode_latency();
         let p = self.prefill_latency();
         let l = self.request_latency();
@@ -369,14 +394,14 @@ impl DecodeReport {
             ("steps", Value::Num(self.steps as f64)),
             ("tokens_prefilled", Value::Num(self.tokens_prefilled as f64)),
             ("tokens_generated", Value::Num(self.tokens_generated as f64)),
-            ("wall_s", Value::Num(self.wall_s)),
-            ("tokens_per_sec", Value::Num(self.tokens_per_sec())),
-            ("decode_p50_ms", Value::Num(d.p50_ms)),
-            ("decode_p99_ms", Value::Num(d.p99_ms)),
-            ("prefill_p50_ms", Value::Num(p.p50_ms)),
-            ("prefill_p99_ms", Value::Num(p.p99_ms)),
-            ("latency_p50_ms", Value::Num(l.p50_ms)),
-            ("latency_p99_ms", Value::Num(l.p99_ms)),
+            ("wall_s", json::finite_num(self.wall_s)),
+            ("tokens_per_sec", json::finite_num(self.tokens_per_sec())),
+            ("decode_p50_ms", json::finite_num(d.p50_ms)),
+            ("decode_p99_ms", json::finite_num(d.p99_ms)),
+            ("prefill_p50_ms", json::finite_num(p.p50_ms)),
+            ("prefill_p99_ms", json::finite_num(p.p99_ms)),
+            ("latency_p50_ms", json::finite_num(l.p50_ms)),
+            ("latency_p99_ms", json::finite_num(l.p99_ms)),
         ]))
     }
 }
@@ -441,23 +466,10 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
         );
     }
 
-    // Ingest thread: replays arrivals on the trace's timeline.
-    let (tx, rx) = mpsc::channel::<Request>();
-    let replay = cfg.replay_speed;
-    let ingest = std::thread::spawn(move || {
-        let t0 = Instant::now();
-        for req in trace {
-            if replay > 0.0 {
-                let due = Duration::from_secs_f64(req.arrival_s / replay);
-                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
-                    std::thread::sleep(sleep);
-                }
-            }
-            if tx.send(req).is_err() {
-                break;
-            }
-        }
-    });
+    // Ingest thread: replays arrivals on the trace's timeline, through a
+    // bounded channel so a slow consumer backpressures the replayer.
+    let (tx, rx) = mpsc::sync_channel::<Request>(ingest_bound(n_tiers, backend.batch()));
+    let ingest = spawn_replay(trace, cfg.replay_speed, tx);
 
     /// One admitted, still-generating request.
     struct Active {
@@ -727,6 +739,84 @@ mod tests {
         for _ in 0..registry.decode_slots() {
             assert!(registry.acquire_slot(cfg.seq_len).is_some(), "slots or pages leaked");
         }
+    }
+
+    #[test]
+    fn slow_consumer_blocks_replayer_instead_of_buffering_trace() {
+        // The ingest channel is bounded: with a consumer that never drains,
+        // the replay thread must stall at the bound instead of buffering
+        // every Request (tokens included) in memory.
+        let bound = ingest_bound(2, 4);
+        let n = bound + 64;
+        let trace: Vec<Request> = (0..n as u64)
+            .map(|id| Request {
+                id,
+                arrival_s: 0.0,
+                slo: Slo::Standard,
+                tokens: vec![1; 8],
+                gen_len: 0,
+                budget: None,
+            })
+            .collect();
+        let (tx, rx) = mpsc::sync_channel::<Request>(bound);
+        let replayer = spawn_replay(trace, 0.0, tx);
+        // Give it ample time: if the channel were unbounded it would finish
+        // the whole trace in well under this.
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(
+            !replayer.is_finished(),
+            "replayer drained {n} requests through a bound-{bound} channel \
+             with no consumer — ingest is not backpressured"
+        );
+        // Draining the channel releases it; nothing is lost or reordered.
+        let ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        replayer.join().unwrap();
+    }
+
+    #[test]
+    fn reports_reparse_even_on_degenerate_timings() {
+        // A ~0-elapsed run makes the ratio fields divide by ~nothing; the
+        // serializers must still emit valid JSON (inf/NaN are not tokens
+        // json::parse accepts).  Build reports with poisoned floats
+        // directly so the guard is exercised regardless of timer grain.
+        let serve = ServeReport {
+            metrics: Metrics::new(2),
+            tier_budgets: vec![0.5, f64::NAN],
+            tier_params: vec![1000, 2000],
+            tier_requests: vec![0, 0],
+            wall_s: f64::INFINITY,
+        };
+        let parsed = json::parse(&serve.to_json()).expect("ServeReport JSON must re-parse");
+        assert_eq!(parsed.get("wall_s").unwrap().as_f64().unwrap(), 0.0);
+
+        let decode = DecodeReport {
+            requests_done: 1,
+            steps: 1,
+            tokens_prefilled: 4,
+            tokens_generated: 2,
+            wall_s: 0.0,
+            decode_step_ms: vec![f64::NAN],
+            prefill_ms: vec![],
+            latency_ms: vec![f64::INFINITY],
+            tier_requests: vec![1],
+        };
+        let parsed = json::parse(&decode.to_json()).expect("DecodeReport JSON must re-parse");
+        assert!(parsed.get("decode_p50_ms").unwrap().as_f64().unwrap().is_finite());
+
+        // And a real tiny run's report re-parses too.
+        let (cfg, mut registry) = tiny_registry(3);
+        let req = Request {
+            id: 1,
+            arrival_s: 0.0,
+            slo: Slo::Standard,
+            tokens: vec![1; cfg.seq_len],
+            gen_len: 0,
+            budget: None,
+        };
+        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let report = serve_trace(&mut registry, vec![req], &scfg).unwrap();
+        json::parse(&report.to_json()).expect("live ServeReport JSON must re-parse");
     }
 
     #[test]

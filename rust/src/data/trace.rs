@@ -20,6 +20,19 @@ pub enum Slo {
 
 impl Slo {
     pub const ALL: [Slo; 3] = [Slo::Interactive, Slo::Standard, Slo::Quality];
+
+    /// Stable one-byte wire encoding (see [`wire`]).
+    pub fn code(self) -> u8 {
+        match self {
+            Slo::Interactive => 0,
+            Slo::Standard => 1,
+            Slo::Quality => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Slo> {
+        Slo::ALL.get(c as usize).copied()
+    }
 }
 
 /// One serving request.
@@ -143,6 +156,458 @@ impl TraceGen {
             .collect();
         self.issued += 1;
         Request { id: self.issued, arrival_s: self.t, slo, tokens, gen_len, budget: None }
+    }
+}
+
+pub mod wire {
+    //! The serving wire protocol: length-prefixed request/response frames.
+    //!
+    //! One frame = a 6-byte header (`magic`, `version`, `payload_len` u32
+    //! LE) followed by `payload_len` bytes.  Request payload layout (all
+    //! integers little-endian):
+    //!
+    //! ```text
+    //! id: u64 | flags: u8 (bit0 = has budget) | budget: f64 | slo: u8
+    //! | gen_len: u32 | n_tokens: u32 | tokens: n_tokens × i32
+    //! ```
+    //!
+    //! Response payload: `id: u64 | status: u8 | n_tokens: u32 | tokens`,
+    //! where `status` is [`Status`] (`Ok` carries the generated tokens,
+    //! `Shed` is the 503-style load-shedding refusal, `Error` a per-request
+    //! framing/contract rejection).  Responses are id-tagged and may arrive
+    //! out of submission order on a pipelined connection.
+    //!
+    //! The client side ([`encode_request`], [`decode_response`]) is used by
+    //! the serving bench, the `listen_client` example, and the listener
+    //! tests; the server side ([`decode_request`] into a reusable
+    //! [`RequestSlot`], [`encode_response`]) is what
+    //! `coordinator::listener` runs on its zero-allocation ingest path.
+    //! Request decoding touches only caller-provided buffers — the
+    //! fingerprint test in `tests/fuzz_ingest.rs` pins that decoding `N`
+    //! frames through one slot performs zero heap allocations.
+
+    use anyhow::{bail, ensure, Result};
+
+    use super::{Request, Slo};
+    use crate::json::pull::{Event, PullParser};
+
+    pub const REQ_MAGIC: u8 = 0xF7;
+    pub const RESP_MAGIC: u8 = 0xF8;
+    pub const VERSION: u8 = 1;
+    /// Frame header bytes: magic, version, payload_len u32.
+    pub const HEADER_LEN: usize = 6;
+    /// Request payload bytes before the token array.
+    pub const REQ_FIXED: usize = 8 + 1 + 8 + 1 + 4 + 4;
+    /// Hard ceiling on any accepted payload length; a length prefix past
+    /// this is a framing attack (or corruption), not a big request.
+    pub const MAX_PAYLOAD: usize = 1 << 20;
+
+    /// Response status byte.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Status {
+        Ok,
+        /// Load shed: admission queue saturated, retry later (HTTP 503).
+        Shed,
+        /// Malformed frame or ingest-contract violation (HTTP 400).
+        Error,
+    }
+
+    impl Status {
+        pub fn code(self) -> u8 {
+            match self {
+                Status::Ok => 0,
+                Status::Shed => 1,
+                Status::Error => 2,
+            }
+        }
+
+        pub fn from_code(c: u8) -> Option<Status> {
+            [Status::Ok, Status::Shed, Status::Error].get(c as usize).copied()
+        }
+    }
+
+    /// A parsed request in caller-owned storage.  The token buffer is
+    /// reused across frames on a connection: `decode_request` clears and
+    /// refills it but never grows it past its construction capacity, so
+    /// steady-state ingest performs no allocation (`fingerprint` pins the
+    /// buffer identity for tests).
+    #[derive(Debug)]
+    pub struct RequestSlot {
+        pub id: u64,
+        pub budget: Option<f64>,
+        pub slo: Slo,
+        pub gen_len: usize,
+        pub tokens: Vec<i32>,
+    }
+
+    impl RequestSlot {
+        /// A slot able to hold up to `max_tokens` prompt tokens without
+        /// ever reallocating.
+        pub fn with_capacity(max_tokens: usize) -> Self {
+            RequestSlot {
+                id: 0,
+                budget: None,
+                slo: Slo::Standard,
+                gen_len: 0,
+                tokens: Vec::with_capacity(max_tokens),
+            }
+        }
+
+        /// Buffer identity (pointer, capacity) — flat across decodes.
+        pub fn fingerprint(&self) -> (usize, usize) {
+            (self.tokens.as_ptr() as usize, self.tokens.capacity())
+        }
+
+        /// Move the parsed request out, installing `replacement` (a
+        /// recycled buffer from the connection's pool) as the next parse
+        /// target.  No allocation: ownership swaps, nothing is copied.
+        pub fn take_request(&mut self, arrival_s: f64, replacement: Vec<i32>) -> Request {
+            let tokens = std::mem::replace(&mut self.tokens, replacement);
+            Request {
+                id: self.id,
+                arrival_s,
+                slo: self.slo,
+                tokens,
+                gen_len: self.gen_len,
+                budget: self.budget,
+            }
+        }
+    }
+
+    fn put_u32(out: &mut Vec<u8>, x: u32) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn get_u32(b: &[u8], at: usize) -> u32 {
+        u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+    }
+
+    fn get_u64(b: &[u8], at: usize) -> u64 {
+        let mut x = [0u8; 8];
+        x.copy_from_slice(&b[at..at + 8]);
+        u64::from_le_bytes(x)
+    }
+
+    /// Client side: append one framed request to `out`.
+    pub fn encode_request(out: &mut Vec<u8>, req: &Request) {
+        let payload = REQ_FIXED + 4 * req.tokens.len();
+        out.push(REQ_MAGIC);
+        out.push(VERSION);
+        put_u32(out, payload as u32);
+        out.extend_from_slice(&req.id.to_le_bytes());
+        out.push(u8::from(req.budget.is_some()));
+        out.extend_from_slice(&req.budget.unwrap_or(0.0).to_le_bytes());
+        out.push(req.slo.code());
+        put_u32(out, req.gen_len as u32);
+        put_u32(out, req.tokens.len() as u32);
+        for t in &req.tokens {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+
+    /// Server side: decode a request payload (header already stripped)
+    /// into `slot`, rejecting token counts past `max_tokens` (the slot's
+    /// capacity floor) so the reused buffer never grows.
+    pub fn decode_request(payload: &[u8], max_tokens: usize, slot: &mut RequestSlot) -> Result<()> {
+        ensure!(
+            payload.len() >= REQ_FIXED,
+            "request frame payload {} bytes, need at least {REQ_FIXED}",
+            payload.len()
+        );
+        slot.id = get_u64(payload, 0);
+        let has_budget = payload[8];
+        ensure!(has_budget <= 1, "bad budget flag {has_budget}");
+        let budget = f64::from_le_bytes({
+            let mut x = [0u8; 8];
+            x.copy_from_slice(&payload[9..17]);
+            x
+        });
+        slot.budget = (has_budget == 1).then_some(budget);
+        slot.slo = match Slo::from_code(payload[17]) {
+            Some(s) => s,
+            None => bail!("bad slo code {}", payload[17]),
+        };
+        slot.gen_len = get_u32(payload, 18) as usize;
+        let n_tokens = get_u32(payload, 22) as usize;
+        ensure!(
+            n_tokens <= max_tokens,
+            "request {} carries {n_tokens} tokens, limit {max_tokens}",
+            slot.id
+        );
+        ensure!(
+            payload.len() == REQ_FIXED + 4 * n_tokens,
+            "request {} frame declares {n_tokens} tokens but payload is {} bytes \
+             (want {})",
+            slot.id,
+            payload.len(),
+            REQ_FIXED + 4 * n_tokens
+        );
+        slot.tokens.clear();
+        for i in 0..n_tokens {
+            slot.tokens.push(i32::from_le_bytes({
+                let mut x = [0u8; 4];
+                x.copy_from_slice(&payload[REQ_FIXED + 4 * i..REQ_FIXED + 4 * i + 4]);
+                x
+            }));
+        }
+        Ok(())
+    }
+
+    /// Parse an HTTP-fallback JSON body into `slot` through the pull
+    /// parser — same zero-allocation contract as [`decode_request`].
+    /// Schema: `{"id": u64, "tokens": [i32…], "gen_len": u32,
+    /// "budget": f64?, "slo": "interactive"|"standard"|"quality"?}`;
+    /// unknown keys are skipped.
+    pub fn decode_request_json(
+        body: &[u8],
+        max_tokens: usize,
+        slot: &mut RequestSlot,
+    ) -> Result<()> {
+        slot.id = 0;
+        slot.budget = None;
+        slot.slo = Slo::Standard;
+        slot.gen_len = 0;
+        slot.tokens.clear();
+        let mut p = PullParser::new(body);
+        ensure!(p.next()? == Event::ObjBegin, "request body must be a JSON object");
+        let mut saw_tokens = false;
+        loop {
+            match p.next()? {
+                Event::ObjEnd => break,
+                Event::Key { raw, escaped } => {
+                    ensure!(!escaped, "request keys must be plain ASCII");
+                    match raw {
+                        b"id" => match p.next()? {
+                            Event::Num(x) if x >= 0.0 => slot.id = x as u64,
+                            e => bail!("bad 'id' value {e:?}"),
+                        },
+                        b"budget" => match p.next()? {
+                            Event::Num(x) => slot.budget = Some(x),
+                            Event::Null => slot.budget = None,
+                            e => bail!("bad 'budget' value {e:?}"),
+                        },
+                        b"gen_len" => match p.next()? {
+                            Event::Num(x) if x >= 0.0 && x <= u32::MAX as f64 => {
+                                slot.gen_len = x as usize
+                            }
+                            e => bail!("bad 'gen_len' value {e:?}"),
+                        },
+                        b"slo" => match p.next()? {
+                            Event::Str { raw: b"interactive", .. } => slot.slo = Slo::Interactive,
+                            Event::Str { raw: b"standard", .. } => slot.slo = Slo::Standard,
+                            Event::Str { raw: b"quality", .. } => slot.slo = Slo::Quality,
+                            e => bail!("bad 'slo' value {e:?}"),
+                        },
+                        b"tokens" => {
+                            ensure!(p.next()? == Event::ArrBegin, "'tokens' must be an array");
+                            saw_tokens = true;
+                            loop {
+                                match p.next()? {
+                                    Event::ArrEnd => break,
+                                    Event::Num(x)
+                                        if x.fract() == 0.0
+                                            && (i32::MIN as f64..=i32::MAX as f64)
+                                                .contains(&x) =>
+                                    {
+                                        ensure!(
+                                            slot.tokens.len() < max_tokens,
+                                            "request carries more than {max_tokens} tokens"
+                                        );
+                                        slot.tokens.push(x as i32);
+                                    }
+                                    e => bail!("bad token {e:?}"),
+                                }
+                            }
+                        }
+                        _ => {
+                            let first = p.next()?;
+                            p.skip_value(&first)?;
+                        }
+                    }
+                }
+                e => bail!("unexpected {e:?} in request object"),
+            }
+        }
+        ensure!(p.next()? == Event::End, "trailing bytes after request object");
+        ensure!(saw_tokens, "request body missing 'tokens'");
+        Ok(())
+    }
+
+    /// Server side: append one framed response to `out`.
+    pub fn encode_response(out: &mut Vec<u8>, id: u64, status: Status, tokens: &[i32]) {
+        let payload = 8 + 1 + 4 + 4 * tokens.len();
+        out.push(RESP_MAGIC);
+        out.push(VERSION);
+        put_u32(out, payload as u32);
+        out.extend_from_slice(&id.to_le_bytes());
+        out.push(status.code());
+        put_u32(out, tokens.len() as u32);
+        for t in tokens {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+
+    /// Client side: decode a response payload (header already stripped).
+    pub fn decode_response(payload: &[u8]) -> Result<(u64, Status, Vec<i32>)> {
+        ensure!(payload.len() >= 13, "response payload too short: {}", payload.len());
+        let id = get_u64(payload, 0);
+        let status = match Status::from_code(payload[8]) {
+            Some(s) => s,
+            None => bail!("bad response status {}", payload[8]),
+        };
+        let n = get_u32(payload, 9) as usize;
+        ensure!(
+            payload.len() == 13 + 4 * n,
+            "response declares {n} tokens but payload is {} bytes",
+            payload.len()
+        );
+        let tokens = (0..n)
+            .map(|i| {
+                i32::from_le_bytes({
+                    let mut x = [0u8; 4];
+                    x.copy_from_slice(&payload[13 + 4 * i..13 + 4 * i + 4]);
+                    x
+                })
+            })
+            .collect();
+        Ok((id, status, tokens))
+    }
+
+    /// Read one frame header + payload from `r` into `buf` (reused; must
+    /// have been reserved to `max_payload` so the read never reallocates).
+    /// Returns the magic byte, with the payload left in `buf`, or `None`
+    /// on a clean EOF *before* any header byte.  EOF mid-frame, a bad
+    /// magic/version, and an oversized length prefix are all hard errors.
+    pub fn read_frame(
+        r: &mut impl std::io::Read,
+        buf: &mut Vec<u8>,
+        max_payload: usize,
+    ) -> Result<Option<u8>> {
+        let mut header = [0u8; HEADER_LEN];
+        let mut got = 0usize;
+        while got < HEADER_LEN {
+            match r.read(&mut header[got..]) {
+                Ok(0) => {
+                    if got == 0 {
+                        return Ok(None);
+                    }
+                    bail!("truncated frame: EOF after {got} header bytes");
+                }
+                Ok(n) => got += n,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let magic = header[0];
+        ensure!(
+            magic == REQ_MAGIC || magic == RESP_MAGIC,
+            "bad frame magic 0x{magic:02x} (not a framed-protocol stream)"
+        );
+        ensure!(header[1] == VERSION, "unsupported frame version {}", header[1]);
+        let len = get_u32(&header, 2) as usize;
+        ensure!(
+            len <= max_payload && len <= MAX_PAYLOAD,
+            "frame length prefix {len} exceeds the {max_payload}-byte limit"
+        );
+        buf.clear();
+        buf.resize(len, 0);
+        let mut at = 0usize;
+        while at < len {
+            match r.read(&mut buf[at..]) {
+                Ok(0) => bail!("truncated frame: EOF {at}/{len} payload bytes in"),
+                Ok(n) => at += n,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(Some(magic))
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn req(id: u64, tokens: Vec<i32>, gen: usize, budget: Option<f64>) -> Request {
+            Request { id, arrival_s: 0.0, slo: Slo::Quality, tokens, gen_len: gen, budget }
+        }
+
+        #[test]
+        fn request_frame_roundtrip() {
+            let r = req(42, vec![1, -7, 300], 5, Some(0.75));
+            let mut out = Vec::new();
+            encode_request(&mut out, &r);
+            let mut slot = RequestSlot::with_capacity(16);
+            decode_request(&out[HEADER_LEN..], 16, &mut slot).unwrap();
+            assert_eq!(slot.id, 42);
+            assert_eq!(slot.budget, Some(0.75));
+            assert_eq!(slot.slo, Slo::Quality);
+            assert_eq!(slot.gen_len, 5);
+            assert_eq!(slot.tokens, vec![1, -7, 300]);
+        }
+
+        #[test]
+        fn response_frame_roundtrip() {
+            let mut out = Vec::new();
+            encode_response(&mut out, 9, Status::Ok, &[4, 5, 6]);
+            let (id, status, toks) = decode_response(&out[HEADER_LEN..]).unwrap();
+            assert_eq!((id, status), (9, Status::Ok));
+            assert_eq!(toks, vec![4, 5, 6]);
+            let mut out = Vec::new();
+            encode_response(&mut out, 10, Status::Shed, &[]);
+            let (id, status, toks) = decode_response(&out[HEADER_LEN..]).unwrap();
+            assert_eq!((id, status), (10, Status::Shed));
+            assert!(toks.is_empty());
+        }
+
+        #[test]
+        fn json_body_roundtrip_and_unknown_keys() {
+            let body = br#"{"extra": {"deep": [1, 2]}, "id": 3, "tokens": [1, 2, 3],
+                            "gen_len": 4, "budget": 0.5, "slo": "interactive"}"#;
+            let mut slot = RequestSlot::with_capacity(8);
+            decode_request_json(body, 8, &mut slot).unwrap();
+            assert_eq!(slot.id, 3);
+            assert_eq!(slot.tokens, vec![1, 2, 3]);
+            assert_eq!(slot.gen_len, 4);
+            assert_eq!(slot.budget, Some(0.5));
+            assert_eq!(slot.slo, Slo::Interactive);
+            assert!(decode_request_json(br#"{"id": 1}"#, 8, &mut slot).is_err());
+            assert!(decode_request_json(br#"{"tokens": [1.5]}"#, 8, &mut slot).is_err());
+        }
+
+        #[test]
+        fn slot_reuse_never_reallocates() {
+            let mut slot = RequestSlot::with_capacity(32);
+            let fp = slot.fingerprint();
+            for i in 0..200u64 {
+                let r = req(i, vec![1; (i % 32) as usize], 2, None);
+                let mut out = Vec::new();
+                encode_request(&mut out, &r);
+                decode_request(&out[HEADER_LEN..], 32, &mut slot).unwrap();
+                assert_eq!(slot.fingerprint(), fp, "slot buffer moved at frame {i}");
+            }
+        }
+
+        #[test]
+        fn frame_reader_rejects_adversarial_streams() {
+            // Oversized length prefix.
+            let mut bad = vec![REQ_MAGIC, VERSION];
+            bad.extend_from_slice(&(u32::MAX).to_le_bytes());
+            let mut buf = Vec::with_capacity(64);
+            let err = read_frame(&mut bad.as_slice(), &mut buf, 1024).unwrap_err();
+            assert!(err.to_string().contains("length prefix"), "{err}");
+            // Garbage magic.
+            let garbage = [0xAAu8; 32];
+            let err = read_frame(&mut garbage.as_slice(), &mut buf, 1024).unwrap_err();
+            assert!(err.to_string().contains("magic"), "{err}");
+            // Truncated payload.
+            let r = req(1, vec![1, 2, 3, 4], 0, None);
+            let mut out = Vec::new();
+            encode_request(&mut out, &r);
+            out.truncate(out.len() - 3);
+            let err = read_frame(&mut out.as_slice(), &mut buf, 1024).unwrap_err();
+            assert!(err.to_string().contains("truncated"), "{err}");
+            // Clean EOF before any byte: None, not an error.
+            let mut empty: &[u8] = &[];
+            assert!(read_frame(&mut empty, &mut buf, 1024).unwrap().is_none());
+        }
     }
 }
 

@@ -5,11 +5,27 @@
 //! `configs/*.json`, and writing `profiles.json` / results CSV-adjacent JSON.
 //! It is a strict recursive-descent parser over UTF-8 with the usual escape
 //! handling; numbers are kept as f64 (all our uses fit).
+//!
+//! Two parsers live here:
+//!
+//! * the tree-building [`parse`] below — convenient, allocates a
+//!   [`Value`] node per element, fine for configs and result files;
+//! * [`pull`] — an allocation-free, non-recursive event parser for the
+//!   serving ingest path, where the tree builder is **banned** (a request
+//!   must not heap-allocate between `read()` and `batcher.push()`).
+
+pub mod pull;
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
+
+/// Maximum container nesting [`parse`] accepts.  Without a cap, a deeply
+/// nested `[[[[…` overflows the recursive-descent stack — once bytes arrive
+/// from a socket that is a remote crash, so the limit is a hard parse error
+/// (well inside any sane config/result document, far outside the stack).
+pub const MAX_DEPTH: usize = 128;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -96,9 +112,19 @@ impl Value {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    /// Entering a container: bump the nesting depth, error past [`MAX_DEPTH`].
+    fn descend(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("json: nesting deeper than {MAX_DEPTH} at byte {}", self.i);
+        }
+        Ok(())
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -148,10 +174,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Value> {
         self.expect(b'{')?;
+        self.descend()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Value::Obj(m));
         }
         loop {
@@ -166,6 +194,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Value::Obj(m));
                 }
                 other => bail!("json: expected ',' or '}}', got {other:?}"),
@@ -175,10 +204,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Value> {
         self.expect(b'[')?;
+        self.descend()?;
         let mut a = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Value::Arr(a));
         }
         loop {
@@ -188,6 +219,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Value::Arr(a));
                 }
                 other => bail!("json: expected ',' or ']', got {other:?}"),
@@ -258,7 +290,7 @@ impl<'a> Parser<'a> {
 
 /// Parse a JSON document.
 pub fn parse(text: &str) -> Result<Value> {
-    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
     let v = p.value()?;
     p.ws();
     if p.i != p.b.len() {
@@ -308,7 +340,12 @@ fn write_value(v: &Value, out: &mut String) {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // `inf`/`NaN` are not JSON; a report that sneaks one in
+                // poisons every downstream parser.  Serializers should guard
+                // their own numbers (see `finite_num`); this is the backstop.
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 let _ = write!(out, "{}", *n as i64);
             } else {
                 let _ = write!(out, "{n}");
@@ -353,6 +390,18 @@ pub fn arr_usize(xs: &[usize]) -> Value {
     Value::Arr(xs.iter().map(|x| Value::Num(*x as f64)).collect())
 }
 
+pub fn arr_i32(xs: &[i32]) -> Value {
+    Value::Arr(xs.iter().map(|x| Value::Num(*x as f64)).collect())
+}
+
+/// A number guaranteed to serialize as valid JSON: non-finite inputs
+/// (`inf`/`NaN` from a ~0-elapsed rate, an empty-sample percentile, …)
+/// collapse to `0.0` instead of emitting an unparseable token.  Report
+/// serializers route every float through this.
+pub fn finite_num(x: f64) -> Value {
+    Value::Num(if x.is_finite() { x } else { 0.0 })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,5 +437,33 @@ mod tests {
     fn integer_format_stable() {
         assert_eq!(to_string(&Value::Num(5.0)), "5");
         assert_eq!(to_string(&Value::Num(0.25)), "0.25");
+    }
+
+    #[test]
+    fn depth_cap_is_a_hard_error_not_a_crash() {
+        // A 100k-deep array used to overflow the recursive-descent stack —
+        // a remote crash once bytes arrive from a socket.
+        let bomb = "[".repeat(100_000);
+        let err = parse(&bomb).unwrap_err().to_string();
+        assert!(err.contains("nesting deeper than"), "{err}");
+        // Same for objects.
+        let obomb = "{\"k\":".repeat(100_000);
+        assert!(parse(&obomb).unwrap_err().to_string().contains("nesting deeper than"));
+        // At the cap: fine.  One past: error.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok());
+        let bad = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(parse(&bad).is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let txt = to_string(&obj(vec![("x", Value::Num(bad))]));
+            assert_eq!(txt, r#"{"x":null}"#);
+            parse(&txt).expect("guarded output must re-parse");
+        }
+        assert_eq!(finite_num(f64::NAN), Value::Num(0.0));
+        assert_eq!(finite_num(2.5), Value::Num(2.5));
     }
 }

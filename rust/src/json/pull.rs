@@ -1,0 +1,457 @@
+//! Allocation-free pull (event) parser over a caller-provided byte buffer.
+//!
+//! The serving listener parses request bodies on the hot path, where the
+//! tree-building [`super::parse`] is banned: every `Value` node costs a
+//! heap allocation (a `BTreeMap` or `String` per element), and the ingest
+//! contract is **zero** request-path allocations between `read()` and
+//! `batcher.push()`.  This parser follows the picojson/callback-lexer
+//! design instead: the caller drives [`PullParser::next`] and receives
+//! borrowed [`Event`]s; nothing is copied, nothing is allocated, and the
+//! implementation is one iterative loop (no recursion) over a fixed-size
+//! depth bitstack, so nesting depth is capped by construction rather than
+//! by the thread stack.
+//!
+//! Strings are returned as the raw bytes between their quotes, escapes
+//! *not* decoded ([`Event::Str`] carries an `escaped` flag).  The serving
+//! wire format never needs escape decoding — keys are plain ASCII and
+//! payloads are numeric — and offline callers can fall back to the tree
+//! parser.  Errors are ordinary `Result`s; the parser is panic-free on
+//! arbitrary input (pinned by the fuzz smoke in `tests/fuzz_ingest.rs`).
+
+use anyhow::{bail, Result};
+
+/// Maximum container nesting, tracked in a fixed bitstack (1 bit/level).
+pub const MAX_DEPTH: usize = 128;
+
+/// One parse event.  Borrowed slices point into the input buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// An object key (raw bytes between the quotes; `escaped` = contains
+    /// at least one backslash escape the caller would need to decode).
+    Key { raw: &'a [u8], escaped: bool },
+    /// A string value (same convention as [`Event::Key`]).
+    Str { raw: &'a [u8], escaped: bool },
+    Num(f64),
+    Bool(bool),
+    Null,
+    /// Document complete (trailing whitespace consumed, nothing after).
+    End,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// Expecting a value.
+    Value,
+    /// Just after `[`: a value or an immediate `]`.
+    ValueOrClose,
+    /// Inside an object: a key or `}`.
+    KeyOrClose,
+    /// After a value inside a container: `,` or the closing bracket.
+    CommaOrClose,
+    /// After the top-level value: only trailing whitespace remains.
+    Done,
+}
+
+/// Pull parser over `buf`.  `next()` yields events until [`Event::End`]
+/// or an error; both are terminal.
+pub struct PullParser<'a> {
+    b: &'a [u8],
+    i: usize,
+    /// Container kind per level: bit set = object.
+    bits: [u64; MAX_DEPTH / 64],
+    depth: usize,
+    state: State,
+}
+
+impl<'a> PullParser<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        PullParser { b: buf, i: 0, bits: [0; MAX_DEPTH / 64], depth: 0, state: State::Value }
+    }
+
+    /// Byte offset of the parse cursor (for error reporting).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    fn push_level(&mut self, is_obj: bool) -> Result<()> {
+        if self.depth >= MAX_DEPTH {
+            bail!("json-pull: nesting deeper than {MAX_DEPTH} at byte {}", self.i);
+        }
+        let (w, m) = (self.depth / 64, 1u64 << (self.depth % 64));
+        if is_obj {
+            self.bits[w] |= m;
+        } else {
+            self.bits[w] &= !m;
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    /// Is the current innermost container an object?
+    fn in_obj(&self) -> bool {
+        debug_assert!(self.depth > 0);
+        let d = self.depth - 1;
+        self.bits[d / 64] & (1u64 << (d % 64)) != 0
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    /// State after a completed value at the current depth.
+    fn after_value(&self) -> State {
+        if self.depth == 0 {
+            State::Done
+        } else {
+            State::CommaOrClose
+        }
+    }
+
+    /// Scan a string body (cursor on the opening quote); returns the raw
+    /// byte range between the quotes and whether it contains escapes.
+    fn string_raw(&mut self) -> Result<(&'a [u8], bool)> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.i += 1;
+        let start = self.i;
+        let mut escaped = false;
+        loop {
+            match self.peek() {
+                None => bail!("json-pull: unterminated string at byte {}", self.i),
+                Some(b'"') => {
+                    let raw = &self.b[start..self.i];
+                    self.i += 1;
+                    return Ok((raw, escaped));
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    // Skip the escape introducer + the escaped byte (enough
+                    // to never mistake an escaped quote for the terminator;
+                    // \uXXXX hex digits are plain bytes and fall through).
+                    self.i += 2;
+                    if self.i > self.b.len() {
+                        bail!("json-pull: unterminated escape at end of input");
+                    }
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        // `from_utf8` and `parse::<f64>` borrow — no allocation.
+        let txt = match std::str::from_utf8(&self.b[start..self.i]) {
+            Ok(t) => t,
+            Err(_) => bail!("json-pull: bad number bytes at {start}"),
+        };
+        match txt.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(x),
+            _ => bail!("json-pull: bad number '{txt}' at byte {start}"),
+        }
+    }
+
+    fn lit(&mut self, s: &'static str) -> Result<()> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(())
+        } else {
+            bail!("json-pull: bad literal at byte {}", self.i)
+        }
+    }
+
+    /// Produce the next event.  After [`Event::End`] or an error the parser
+    /// must not be advanced further.
+    pub fn next(&mut self) -> Result<Event<'a>> {
+        loop {
+            self.ws();
+            match self.state {
+                State::Done => {
+                    return if self.i == self.b.len() {
+                        Ok(Event::End)
+                    } else {
+                        bail!("json-pull: trailing garbage at byte {}", self.i)
+                    };
+                }
+                State::KeyOrClose => match self.peek() {
+                    Some(b'}') => {
+                        self.i += 1;
+                        self.depth -= 1;
+                        self.state = self.after_value();
+                        return Ok(Event::ObjEnd);
+                    }
+                    Some(b'"') => {
+                        let (raw, escaped) = self.string_raw()?;
+                        self.ws();
+                        if self.peek() != Some(b':') {
+                            bail!("json-pull: expected ':' at byte {}", self.i);
+                        }
+                        self.i += 1;
+                        self.state = State::Value;
+                        return Ok(Event::Key { raw, escaped });
+                    }
+                    other => bail!(
+                        "json-pull: expected key or '}}' at byte {} (found {other:?})",
+                        self.i
+                    ),
+                },
+                State::CommaOrClose => {
+                    let close = if self.in_obj() { b'}' } else { b']' };
+                    match self.peek() {
+                        Some(b',') => {
+                            self.i += 1;
+                            self.state =
+                                if self.in_obj() { State::KeyOrClose } else { State::Value };
+                            // No event for a separator — keep scanning.
+                        }
+                        Some(c) if c == close => {
+                            self.i += 1;
+                            let was_obj = self.in_obj();
+                            self.depth -= 1;
+                            self.state = self.after_value();
+                            return Ok(if was_obj { Event::ObjEnd } else { Event::ArrEnd });
+                        }
+                        other => bail!(
+                            "json-pull: expected ',' or '{}' at byte {} (found {other:?})",
+                            close as char,
+                            self.i
+                        ),
+                    }
+                }
+                State::Value | State::ValueOrClose => {
+                    if self.state == State::ValueOrClose && self.peek() == Some(b']') {
+                        self.i += 1;
+                        self.depth -= 1;
+                        self.state = self.after_value();
+                        return Ok(Event::ArrEnd);
+                    }
+                    match self.peek() {
+                        Some(b'{') => {
+                            self.i += 1;
+                            self.push_level(true)?;
+                            self.state = State::KeyOrClose;
+                            return Ok(Event::ObjBegin);
+                        }
+                        Some(b'[') => {
+                            self.i += 1;
+                            self.push_level(false)?;
+                            self.state = State::ValueOrClose;
+                            return Ok(Event::ArrBegin);
+                        }
+                        Some(b'"') => {
+                            let (raw, escaped) = self.string_raw()?;
+                            self.state = self.after_value();
+                            return Ok(Event::Str { raw, escaped });
+                        }
+                        Some(b't') => {
+                            self.lit("true")?;
+                            self.state = self.after_value();
+                            return Ok(Event::Bool(true));
+                        }
+                        Some(b'f') => {
+                            self.lit("false")?;
+                            self.state = self.after_value();
+                            return Ok(Event::Bool(false));
+                        }
+                        Some(b'n') => {
+                            self.lit("null")?;
+                            self.state = self.after_value();
+                            return Ok(Event::Null);
+                        }
+                        Some(c) if c == b'-' || c.is_ascii_digit() => {
+                            let x = self.number()?;
+                            self.state = self.after_value();
+                            return Ok(Event::Num(x));
+                        }
+                        other => bail!(
+                            "json-pull: unexpected {other:?} at byte {} (expected a value)",
+                            self.i
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consume and discard the value whose *first* event was just returned
+    /// (a scalar is already fully consumed; for `ObjBegin`/`ArrBegin` this
+    /// skips to the matching close).  Lets visitors ignore unknown keys.
+    pub fn skip_value(&mut self, first: &Event<'_>) -> Result<()> {
+        let mut open = match first {
+            Event::ObjBegin | Event::ArrBegin => 1usize,
+            _ => return Ok(()),
+        };
+        while open > 0 {
+            match self.next()? {
+                Event::ObjBegin | Event::ArrBegin => open += 1,
+                Event::ObjEnd | Event::ArrEnd => open -= 1,
+                Event::End => bail!("json-pull: input ended inside a skipped value"),
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(s: &str) -> Result<Vec<String>> {
+        let mut p = PullParser::new(s.as_bytes());
+        let mut out = Vec::new();
+        loop {
+            let e = p.next()?;
+            let done = e == Event::End;
+            out.push(format!("{e:?}"));
+            if done {
+                return Ok(out);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_documents() {
+        assert_eq!(events("42").unwrap(), vec!["Num(42.0)", "End"]);
+        assert_eq!(events("true").unwrap(), vec!["Bool(true)", "End"]);
+        assert_eq!(events("null").unwrap(), vec!["Null", "End"]);
+    }
+
+    #[test]
+    fn object_and_array_stream() {
+        let got = events(r#"{"a": [1, 2], "b": {"c": "x"}, "d": null}"#).unwrap();
+        let want = [
+            "ObjBegin",
+            r#"Key { raw: [97], escaped: false }"#,
+            "ArrBegin",
+            "Num(1.0)",
+            "Num(2.0)",
+            "ArrEnd",
+            r#"Key { raw: [98], escaped: false }"#,
+            "ObjBegin",
+            r#"Key { raw: [99], escaped: false }"#,
+            r#"Str { raw: [120], escaped: false }"#,
+            "ObjEnd",
+            r#"Key { raw: [100], escaped: false }"#,
+            "Null",
+            "ObjEnd",
+            "End",
+        ];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_containers_and_escapes() {
+        assert_eq!(events("[]").unwrap(), vec!["ArrBegin", "ArrEnd", "End"]);
+        assert_eq!(events("{}").unwrap(), vec!["ObjBegin", "ObjEnd", "End"]);
+        let mut p = PullParser::new(br#""a\"b""#);
+        match p.next().unwrap() {
+            Event::Str { raw, escaped } => {
+                assert!(escaped);
+                assert_eq!(raw, br#"a\"b"#);
+            }
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["{", "[1,]", "[1 2]", "{\"a\" 1}", "{} extra", "[1,2", "nul", "-", "\"x"] {
+            let mut p = PullParser::new(bad.as_bytes());
+            let r = loop {
+                match p.next() {
+                    Ok(Event::End) => break Ok(()),
+                    Ok(_) => {}
+                    Err(e) => break Err(e),
+                }
+            };
+            assert!(r.is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn depth_capped_without_recursion() {
+        let bomb = "[".repeat(1_000_000);
+        let mut p = PullParser::new(bomb.as_bytes());
+        let err = loop {
+            match p.next() {
+                Ok(_) => {}
+                Err(e) => break e,
+            }
+        };
+        assert!(err.to_string().contains("nesting deeper than"), "{err}");
+    }
+
+    #[test]
+    fn skip_value_over_nested_unknowns() {
+        let doc = r#"{"skip": {"deep": [1, {"x": [2, 3]}]}, "keep": 7}"#;
+        let mut p = PullParser::new(doc.as_bytes());
+        assert_eq!(p.next().unwrap(), Event::ObjBegin);
+        let _key = p.next().unwrap();
+        let first = p.next().unwrap();
+        p.skip_value(&first).unwrap();
+        match p.next().unwrap() {
+            Event::Key { raw, .. } => assert_eq!(raw, b"keep"),
+            e => panic!("{e:?}"),
+        }
+        assert_eq!(p.next().unwrap(), Event::Num(7.0));
+        assert_eq!(p.next().unwrap(), Event::ObjEnd);
+        assert_eq!(p.next().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn agrees_with_tree_parser_on_roundtrips() {
+        // Random tree-parser documents re-lexed by the pull parser must
+        // yield the same scalar stream the tree contains.
+        crate::prop::forall(
+            313,
+            40,
+            |rng| {
+                let n = 1 + rng.below(8);
+                let nums: Vec<f64> = (0..n).map(|_| (rng.below(1000) as f64) / 8.0).collect();
+                nums
+            },
+            |nums| {
+                let doc = crate::json::to_string(&crate::json::obj(vec![
+                    ("xs", crate::json::arr_f64(nums)),
+                    ("n", crate::json::Value::Num(nums.len() as f64)),
+                ]));
+                let mut p = PullParser::new(doc.as_bytes());
+                let mut got: Vec<f64> = Vec::new();
+                loop {
+                    match p.next().map_err(|e| e.to_string())? {
+                        Event::Num(x) => got.push(x),
+                        Event::End => break,
+                        _ => {}
+                    }
+                }
+                // Keys sort "n" before "xs" in the BTreeMap writer.
+                let want: Vec<f64> =
+                    std::iter::once(nums.len() as f64).chain(nums.iter().copied()).collect();
+                if got != want {
+                    return Err(format!("{got:?} != {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

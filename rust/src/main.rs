@@ -8,7 +8,9 @@
 //!                           `--backend pjrt` drives the AOT artifacts
 //!   serve                 — elastic serving demo over a synthetic trace;
 //!                           picks up DP tier profiles from the pipeline's
-//!                           profiles.json when present
+//!                           profiles.json when present.  `--listen [addr]`
+//!                           serves real sockets instead (framed protocol +
+//!                           HTTP POST fallback; see examples/README.md)
 //!   figure <figN>         — regenerate a paper figure's series into results/
 //!   table  <tabN>         — regenerate a paper table
 //!   profiles              — write stage_dir()/profiles.json from DP selection
@@ -32,7 +34,9 @@ fn main() -> Result<()> {
             }
             eprintln!(
                 "usage: repro <smoke|pipeline|serve|figure|table|profiles> [--flags]\n\
-                 figures: fig2 fig3 fig4 fig5 fig6 fig7a fig7b fig8 fig9 fig10; tables: tab1"
+                 figures: fig2 fig3 fig4 fig5 fig6 fig7a fig7b fig8 fig9 fig10; tables: tab1\n\
+                 serve --listen [addr]: online front-end (default 127.0.0.1:7171; \
+                 --queue-cap N --max-conns N --conn-pipeline N --listen-secs S)"
             );
             Ok(())
         }

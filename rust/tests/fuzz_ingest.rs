@@ -1,0 +1,208 @@
+//! Fuzz-style smoke + allocation proof for the ingest path.
+//!
+//! Two invariants guard the listener's hot path:
+//!
+//! 1. **Panic-free**: the frame reader, the binary request decoder, and the
+//!    JSON pull parser must return `Err` — never panic, never overflow the
+//!    stack — on arbitrarily mutated input (seeded, deterministic).
+//! 2. **Zero-alloc**: decoding a valid request into a reused
+//!    [`wire::RequestSlot`] performs zero heap allocations after warmup.
+//!    The listener pins this with a buffer-identity fingerprint; here the
+//!    proof is counted at the allocator itself, via a thread-local counter
+//!    in a custom `#[global_allocator]` (thread-local so the harness's
+//!    other test threads can't perturb the count).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use flexrank::data::trace::wire;
+use flexrank::data::trace::{Request, Slo};
+use flexrank::json::pull::{Event, PullParser};
+use flexrank::rng::Rng;
+
+struct CountingAlloc;
+
+std::thread_local! {
+    // const-init + no destructor: the TLS access compiles to a plain
+    // thread-local load, safe inside the allocator.
+    static TL_ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        TL_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        TL_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f`, returning its result and how many heap allocations (including
+/// reallocations) this thread performed inside it.
+fn counted<R>(f: impl FnOnce() -> R) -> (R, usize) {
+    let before = TL_ALLOCS.with(|c| c.get());
+    let r = f();
+    let after = TL_ALLOCS.with(|c| c.get());
+    (r, after - before)
+}
+
+fn sample_request(rng: &mut Rng, id: u64, max_tokens: usize) -> Request {
+    Request {
+        id,
+        arrival_s: 0.0,
+        slo: Slo::ALL[rng.below(3)],
+        tokens: (0..1 + rng.below(max_tokens)).map(|_| rng.below(64) as i32).collect(),
+        gen_len: rng.below(8),
+        budget: if rng.f64() < 0.5 { Some(rng.f64().max(0.01)) } else { None },
+    }
+}
+
+/// The binary ingest path — frame read + request decode through a reused
+/// slot — allocates exactly zero times per request after warmup.
+#[test]
+fn framed_ingest_decodes_with_zero_allocations() {
+    let seq = 64usize;
+    let mut rng = Rng::new(0xF7);
+    // Pipelined stream of valid frames (allocation here is fine — this is
+    // the client side).
+    let mut stream: Vec<u8> = Vec::new();
+    let n = 200u64;
+    for id in 1..=n {
+        wire::encode_request(&mut stream, &sample_request(&mut rng, id, seq));
+    }
+
+    let max_payload = wire::REQ_FIXED + 4 * seq;
+    let mut buf: Vec<u8> = Vec::with_capacity(max_payload);
+    let mut slot = wire::RequestSlot::with_capacity(seq);
+
+    // Warmup: first decode may fault in lazily-initialized state.
+    let mut r: &[u8] = &stream;
+    assert_eq!(wire::read_frame(&mut r, &mut buf, max_payload).unwrap(), Some(wire::REQ_MAGIC));
+    wire::decode_request(&buf, seq, &mut slot).unwrap();
+
+    let fp = slot.fingerprint();
+    let (sum, allocs) = counted(|| {
+        let mut sum = 0u64;
+        loop {
+            match wire::read_frame(&mut r, &mut buf, max_payload) {
+                Ok(Some(_)) => {
+                    wire::decode_request(&buf, seq, &mut slot).expect("valid frame");
+                    sum = sum.wrapping_add(slot.id).wrapping_add(slot.tokens.len() as u64);
+                }
+                Ok(None) => break sum,
+                Err(e) => panic!("valid stream failed: {e}"),
+            }
+        }
+    });
+    assert!(sum > 0);
+    assert_eq!(allocs, 0, "framed ingest allocated {allocs} times for {} frames", n - 1);
+    assert_eq!(slot.fingerprint(), fp, "slot buffer changed identity");
+}
+
+/// The HTTP-fallback pull-parse path is also allocation-free per request —
+/// the tree parser (a heap node per JSON value) stays banned from ingest.
+#[test]
+fn json_pull_ingest_decodes_with_zero_allocations() {
+    let body = br#"{"id": 42, "unknown": {"nested": [1, "x", null]}, "tokens":
+                    [1, 2, 3, 4, 5, 6, 7, 8], "gen_len": 5, "budget": 0.75,
+                    "slo": "interactive"}"#;
+    let mut slot = wire::RequestSlot::with_capacity(16);
+    wire::decode_request_json(body, 16, &mut slot).unwrap(); // warmup
+    let fp = slot.fingerprint();
+
+    let (_, allocs) = counted(|| {
+        for _ in 0..100 {
+            wire::decode_request_json(body, 16, &mut slot).expect("valid body");
+        }
+    });
+    assert_eq!(slot.id, 42);
+    assert_eq!(slot.tokens.len(), 8);
+    assert_eq!(allocs, 0, "pull-parse ingest allocated {allocs} times over 100 bodies");
+    assert_eq!(slot.fingerprint(), fp, "slot buffer changed identity");
+}
+
+/// Seeded byte mutations of valid frames: the frame reader and request
+/// decoder must answer every corruption with `Err`, never a panic, and the
+/// reused slot must survive to decode the next valid frame.
+#[test]
+fn mutated_frames_never_panic_the_decoders() {
+    let seq = 64usize;
+    let mut rng = Rng::new(0x5eed);
+    let mut slot = wire::RequestSlot::with_capacity(seq);
+    let mut buf: Vec<u8> = Vec::with_capacity(wire::MAX_PAYLOAD);
+    for round in 0..2000u64 {
+        let mut frame = Vec::new();
+        wire::encode_request(&mut frame, &sample_request(&mut rng, round, seq));
+        if rng.below(4) == 0 {
+            // Truncation (mid-header, mid-payload, or empty).
+            let cut = rng.below(frame.len() + 1);
+            frame.truncate(cut);
+        } else {
+            // 1..8 random byte stomps (length prefix, magic, counts, ...).
+            for _ in 0..1 + rng.below(8) {
+                let i = rng.below(frame.len());
+                frame[i] = rng.below(256) as u8;
+            }
+        }
+        let mut r: &[u8] = &frame;
+        // Any Ok/Err outcome is acceptable; panics and hangs are not.
+        if let Ok(Some(magic)) = wire::read_frame(&mut r, &mut buf, wire::MAX_PAYLOAD) {
+            if magic == wire::REQ_MAGIC {
+                let _ = wire::decode_request(&buf, seq, &mut slot);
+            } else {
+                let _ = wire::decode_response(&buf);
+            }
+        }
+        // The slot is still serviceable after arbitrary garbage.
+        let mut good = Vec::new();
+        wire::encode_request(&mut good, &sample_request(&mut rng, round, seq));
+        wire::decode_request(&good[wire::HEADER_LEN..], seq, &mut slot)
+            .expect("slot must survive mutated input");
+    }
+}
+
+/// Seeded mutations of a JSON body: the pull parser and the visitor decoder
+/// return `Err` on garbage — no panics, no unbounded loops, and (via the
+/// bitstack depth cap) no stack overflow on nesting bombs.
+#[test]
+fn mutated_json_never_panics_the_pull_parser() {
+    let base: &[u8] = br#"{"id": 9, "tokens": [1, 2, 3, 4], "gen_len": 3,
+        "budget": 0.25, "slo": "quality", "extra": {"a": [true, null, "xA"]}}"#;
+    let mut rng = Rng::new(0x714);
+    let mut slot = wire::RequestSlot::with_capacity(16);
+    for _ in 0..2000 {
+        let mut body = base.to_vec();
+        if rng.below(4) == 0 {
+            body.truncate(rng.below(body.len() + 1));
+        } else {
+            for _ in 0..1 + rng.below(8) {
+                let i = rng.below(body.len());
+                body[i] = rng.below(256) as u8;
+            }
+        }
+        let _ = wire::decode_request_json(&body, 16, &mut slot);
+        // The raw event stream must also terminate (End or Err) in a
+        // bounded number of steps.
+        let mut p = PullParser::new(&body);
+        let mut steps = 0usize;
+        loop {
+            match p.next() {
+                Ok(Event::End) | Err(_) => break,
+                Ok(_) => {
+                    steps += 1;
+                    assert!(steps <= 4 * base.len(), "event stream failed to terminate");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,496 @@
+//! Listener front-end e2e: real sockets in, bit-identical tokens out.
+//!
+//! The load-bearing test drives a multi-tenant trace through the framed
+//! protocol over loopback and asserts the responses equal a sequential
+//! per-request replay on a same-seed registry — `decode_equivalence`
+//! pins continuous batching ≡ sequential replay, so the socket path must
+//! reproduce it bit for bit.  Around it: the zero-alloc ingest fingerprint
+//! stays flat, a saturated admission queue sheds explicitly, adversarial
+//! byte streams kill their own connection loudly but never the listener,
+//! the HTTP fallback round-trips, and shutdown drains without losing or
+//! duplicating a single admitted request.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use flexrank::config::load_model_config;
+use flexrank::coordinator::{
+    ListenCfg, ListenReport, Listener, Policy, PolicyKind, ServeCfg, ShutdownHandle,
+    SubmodelRegistry,
+};
+use flexrank::data::trace::wire::{self, Status};
+use flexrank::data::trace::Slo;
+use flexrank::data::{Corpus, Request, TraceCfg, TraceGen};
+use flexrank::runtime::{ModelConfig, ServingBackend};
+use flexrank::training::params::{
+    decompose_teacher, random_teacher, student_from_factors, ParamSet,
+};
+
+fn tiny_student(seed: u64) -> (ModelConfig, ParamSet) {
+    let cfg = load_model_config("tiny").unwrap();
+    let teacher = random_teacher(&cfg, seed);
+    let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+    let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+    (cfg, student)
+}
+
+struct TestServer {
+    addr: SocketAddr,
+    handle: ShutdownHandle,
+    join: std::thread::JoinHandle<anyhow::Result<ListenReport>>,
+}
+
+impl TestServer {
+    /// Graceful drain, then the final report.
+    fn stop(self) -> ListenReport {
+        self.handle.shutdown();
+        self.join.join().expect("server thread").expect("listener run")
+    }
+}
+
+/// Bind an ephemeral port and run a listener over a fresh same-seed tiny
+/// registry on its own thread (the serving loop owns the backend).
+fn spawn_listener(seed: u64, lcfg: ListenCfg) -> TestServer {
+    let listener = Listener::bind("127.0.0.1:0", lcfg).expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    let handle = listener.shutdown_handle();
+    let join = std::thread::spawn(move || -> anyhow::Result<ListenReport> {
+        let (cfg, student) = tiny_student(seed);
+        let mut reg = SubmodelRegistry::load_native(&cfg, &student, None)?;
+        listener.run(&mut reg)
+    });
+    TestServer { addr, handle, join }
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_nodelay(true).ok();
+    // Generous cap so a wedged server fails the test instead of hanging it.
+    s.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    s
+}
+
+/// Read response frames until `want` arrived or the server closed.
+fn read_replies(stream: &mut TcpStream, want: usize) -> Vec<(u64, Status, Vec<i32>)> {
+    let mut buf = Vec::with_capacity(wire::MAX_PAYLOAD);
+    let mut out = Vec::new();
+    while out.len() < want {
+        match wire::read_frame(stream, &mut buf, wire::MAX_PAYLOAD) {
+            Ok(Some(magic)) => {
+                assert_eq!(magic, wire::RESP_MAGIC, "server sent a non-response frame");
+                out.push(wire::decode_response(&buf).expect("response frame decodes"));
+            }
+            Ok(None) => break,
+            Err(e) => panic!("reading replies: {e}"),
+        }
+    }
+    out
+}
+
+fn read_to_eof(s: &mut TcpStream) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => out.extend_from_slice(&chunk[..n]),
+            Err(e) => panic!("reading to EOF: {e}"),
+        }
+    }
+    out
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Greedy-decode one request in isolation on the oracle registry — the
+/// reference the socket path must reproduce exactly.  Tier choice mirrors
+/// the listener's static-policy routing (depth-independent).
+fn sequential_oracle(cfg: &ModelConfig, reg: &mut SubmodelRegistry, req: &Request) -> Vec<i32> {
+    if req.gen_len == 0 {
+        return Vec::new();
+    }
+    let tier = Policy::new(PolicyKind::Static, reg.n_tiers()).select(req, 0);
+    let vocab = cfg.vocab;
+    let slot = reg.acquire_slot(req.total_tokens()).expect("oracle slot");
+    let mut out = Vec::new();
+    let mut last = {
+        let logits = reg.prefill(tier, slot, &req.tokens).unwrap();
+        argmax(&logits[(req.tokens.len() - 1) * vocab..req.tokens.len() * vocab])
+    };
+    out.push(last);
+    for _ in 1..req.gen_len {
+        let logits = reg.decode_step(tier, &[slot], &[last]).unwrap();
+        last = argmax(&logits[..vocab]);
+        out.push(last);
+    }
+    reg.release_slot(slot);
+    out
+}
+
+fn lcfg(queue_cap: usize, conn_pipeline: usize) -> ListenCfg {
+    ListenCfg {
+        serve: ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 1.0 },
+        max_connections: 8,
+        queue_cap,
+        conn_pipeline,
+    }
+}
+
+const SEED: u64 = 321;
+
+/// Acceptance: multi-tenant trace over real sockets ≡ in-process replay,
+/// ingest fingerprint flat, clean drain with every request answered once.
+#[test]
+fn socket_responses_match_in_process_replay() {
+    let server = spawn_listener(SEED, lcfg(64, 8));
+
+    let (cfg, student) = tiny_student(SEED);
+    let mut oracle_reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+
+    let corpus = Corpus::generate(20_000, 5);
+    let trace = TraceGen::new(
+        TraceCfg {
+            n_requests: 24,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            seed: 9,
+            prompt_len_min: (cfg.seq_len / 8).max(1),
+            prompt_len_max: cfg.seq_len / 2,
+            gen_len_min: 1,
+            gen_len_max: (cfg.seq_len / 4).max(1),
+            ..Default::default()
+        },
+        &corpus.heldout,
+    )
+    .generate();
+
+    let want: HashMap<u64, Vec<i32>> = trace
+        .iter()
+        .map(|r| (r.id, sequential_oracle(&cfg, &mut oracle_reg, r)))
+        .collect();
+
+    // Three tenants, each pipelining its share over one connection.
+    let clients: Vec<_> = (0u64..3)
+        .map(|tenant| {
+            let chunk: Vec<Request> =
+                trace.iter().filter(|r| r.id % 3 == tenant).cloned().collect();
+            let addr = server.addr;
+            std::thread::spawn(move || {
+                let mut stream = connect(addr);
+                let mut out = Vec::new();
+                for r in &chunk {
+                    wire::encode_request(&mut out, r);
+                }
+                stream.write_all(&out).unwrap();
+                read_replies(&mut stream, chunk.len())
+            })
+        })
+        .collect();
+
+    let mut got: HashMap<u64, (Status, Vec<i32>)> = HashMap::new();
+    for c in clients {
+        for (id, status, tokens) in c.join().expect("tenant thread") {
+            assert!(
+                got.insert(id, (status, tokens)).is_none(),
+                "duplicate reply for request {id}"
+            );
+        }
+    }
+    let report = server.stop();
+
+    assert_eq!(got.len(), trace.len(), "every request answered exactly once");
+    for r in &trace {
+        let (status, tokens) = &got[&r.id];
+        assert_eq!(*status, Status::Ok, "request {} was not served", r.id);
+        assert_eq!(
+            tokens, &want[&r.id],
+            "request {}: socket tokens diverge from the in-process replay",
+            r.id
+        );
+    }
+    assert_eq!(report.requests_done, trace.len());
+    assert_eq!(report.shed, 0, "uncontended run must not shed");
+    assert_eq!(report.conn_errors, 0);
+    assert_eq!(
+        report.ingest_fingerprint_drift, 0,
+        "zero-alloc ingest invariant broke: a request-slot buffer changed identity"
+    );
+}
+
+/// Acceptance: a burst past `queue_cap` sheds explicitly — every request
+/// still answered (Ok or Shed), nothing queues without bound, nothing leaks.
+#[test]
+fn saturated_queue_sheds_instead_of_queueing_unboundedly() {
+    let mut cfg = lcfg(2, 32);
+    cfg.serve.max_wait_ms = 1.0;
+    let server = spawn_listener(77, cfg);
+    let mcfg = load_model_config("tiny").unwrap();
+
+    let n = 32u64;
+    let gen_len = mcfg.seq_len - 4; // longest legal decode: slow on purpose
+    let mut stream = connect(server.addr);
+    let mut out = Vec::new();
+    for id in 1..=n {
+        let req = Request {
+            id,
+            arrival_s: 0.0,
+            slo: Slo::Quality,
+            tokens: vec![1, 2, 3, 4],
+            gen_len,
+            budget: None,
+        };
+        wire::encode_request(&mut out, &req);
+    }
+    stream.write_all(&out).unwrap();
+    let replies = read_replies(&mut stream, n as usize);
+    let report = server.stop();
+
+    assert_eq!(replies.len(), n as usize, "every pipelined request answered");
+    let ok = replies.iter().filter(|(_, s, _)| *s == Status::Ok).count();
+    let shed = replies.iter().filter(|(_, s, _)| *s == Status::Shed).count();
+    assert_eq!(ok + shed, n as usize, "only Ok/Shed expected under saturation");
+    assert!(shed >= 1, "a 2-deep admission bound must shed some of a 32-deep burst");
+    assert!(ok >= 1, "the admitted head of the burst must still serve");
+    for (id, s, tokens) in &replies {
+        match s {
+            Status::Ok => assert_eq!(tokens.len(), gen_len, "request {id} short-served"),
+            _ => assert!(tokens.is_empty(), "shed reply for {id} must carry no tokens"),
+        }
+    }
+    // The report agrees with what the client saw — no admitted request
+    // was dropped on the floor, no shed was double-counted.
+    assert_eq!(report.shed, shed);
+    assert_eq!(report.requests_done, ok);
+    assert_eq!(report.ingest_fingerprint_drift, 0);
+}
+
+/// Satellite: adversarial byte streams — truncated frame, oversized length
+/// prefix, garbage bytes, mid-frame disconnect, malformed payload, and an
+/// in-contract violation pipelined between good requests.  Each kills (at
+/// most) its own connection loudly; the accept loop and the serving loop
+/// keep going, and no batcher entry leaks.
+#[test]
+fn adversarial_streams_fail_loudly_without_killing_the_listener() {
+    let server = spawn_listener(123, lcfg(8, 4));
+
+    // (a) Header promises 80 payload bytes (legal), 10 arrive, disconnect.
+    {
+        let mut s = connect(server.addr);
+        let mut out = vec![wire::REQ_MAGIC, wire::VERSION];
+        out.extend_from_slice(&80u32.to_le_bytes());
+        out.extend_from_slice(&[0u8; 10]);
+        s.write_all(&out).unwrap();
+    }
+    // (b) Oversized length prefix: connection must close with no reply.
+    {
+        let mut s = connect(server.addr);
+        let mut out = vec![wire::REQ_MAGIC, wire::VERSION];
+        out.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&out).unwrap();
+        assert!(read_to_eof(&mut s).is_empty(), "no frame for a framing attack");
+    }
+    // (c) Garbage bytes (neither framed magic nor HTTP), then disconnect.
+    {
+        let mut s = connect(server.addr);
+        s.write_all(&[0xAAu8; 32]).unwrap();
+    }
+    // (d) Mid-frame disconnect: only half the header ever arrives.
+    {
+        let mut s = connect(server.addr);
+        s.write_all(&[wire::REQ_MAGIC, wire::VERSION, 7]).unwrap();
+    }
+    // (e) Well-framed but malformed payload (bad SLO code): the stream is
+    // poisoned, so the server answers Error and drops the connection.
+    {
+        let mut s = connect(server.addr);
+        let good = Request {
+            id: 900,
+            arrival_s: 0.0,
+            slo: Slo::Standard,
+            tokens: vec![1, 2],
+            gen_len: 1,
+            budget: None,
+        };
+        let mut out = Vec::new();
+        wire::encode_request(&mut out, &good);
+        out[wire::HEADER_LEN + 17] = 9; // stomp the slo byte
+        s.write_all(&out).unwrap();
+        let replies = read_replies(&mut s, 1);
+        assert_eq!(replies.len(), 1);
+        assert_eq!(replies[0].1, Status::Error);
+        assert!(read_to_eof(&mut s).is_empty(), "poisoned stream must close");
+    }
+    // (f) A contract violation (empty prompt) pipelined between two good
+    // requests: per-request Error, the connection and its neighbors live.
+    {
+        let mut s = connect(server.addr);
+        let mk = |id: u64, tokens: Vec<i32>| Request {
+            id,
+            arrival_s: 0.0,
+            slo: Slo::Interactive,
+            tokens,
+            gen_len: 2,
+            budget: None,
+        };
+        let mut out = Vec::new();
+        wire::encode_request(&mut out, &mk(1, vec![1, 2, 3]));
+        wire::encode_request(&mut out, &mk(2, vec![])); // empty prompt
+        wire::encode_request(&mut out, &mk(3, vec![4, 5]));
+        s.write_all(&out).unwrap();
+        let by_id: HashMap<u64, Status> =
+            read_replies(&mut s, 3).into_iter().map(|(id, st, _)| (id, st)).collect();
+        assert_eq!(by_id[&1], Status::Ok);
+        assert_eq!(by_id[&2], Status::Error, "contract violation answers Error");
+        assert_eq!(by_id[&3], Status::Ok, "the connection survives a bad neighbor");
+    }
+    // The listener survived all of it: a fresh connection still serves.
+    {
+        let mut s = connect(server.addr);
+        let req = Request {
+            id: 999,
+            arrival_s: 0.0,
+            slo: Slo::Quality,
+            tokens: vec![7, 8, 9],
+            gen_len: 3,
+            budget: Some(1.0),
+        };
+        let mut out = Vec::new();
+        wire::encode_request(&mut out, &req);
+        s.write_all(&out).unwrap();
+        let replies = read_replies(&mut s, 1);
+        assert_eq!(replies[0].0, 999);
+        assert_eq!(replies[0].1, Status::Ok);
+        assert_eq!(replies[0].2.len(), 3);
+    }
+    let report = server.stop();
+    // (a)–(d) and (e) each errored their own connection, loudly.
+    assert_eq!(report.conn_errors, 5, "each adversarial stream counted once");
+    // No batcher entry leaked: exactly the three good requests completed.
+    assert_eq!(report.requests_done, 3);
+    assert_eq!(report.shed, 0);
+}
+
+/// Satellite: the HTTP/1.1 POST fallback serves the same tokens as the
+/// framed path (and the in-process oracle), and rejects bad bodies with a
+/// 400 instead of a hung or poisoned connection.
+#[test]
+fn http_fallback_round_trips_and_rejects_bad_bodies() {
+    let server = spawn_listener(SEED, lcfg(8, 4));
+    let (cfg, student) = tiny_student(SEED);
+    let mut oracle_reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+    let req = Request {
+        id: 5,
+        arrival_s: 0.0,
+        slo: Slo::Standard, // the JSON default when 'slo' is omitted
+        tokens: vec![1, 2, 3],
+        gen_len: 4,
+        budget: None,
+    };
+    let want = sequential_oracle(&cfg, &mut oracle_reg, &req);
+
+    let body = r#"{"id": 5, "tokens": [1, 2, 3], "gen_len": 4}"#;
+    let mut s = connect(server.addr);
+    let msg = format!(
+        "POST / HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(msg.as_bytes()).unwrap();
+    let text = String::from_utf8(read_to_eof(&mut s)).unwrap();
+    assert!(text.starts_with("HTTP/1.1 200"), "unexpected response: {text}");
+    let json_body = &text[text.find("\r\n\r\n").unwrap() + 4..];
+    let parsed = flexrank::json::parse(json_body).unwrap();
+    assert_eq!(parsed.get("id").unwrap().as_f64().unwrap(), 5.0);
+    assert_eq!(parsed.get("status").unwrap().as_str().unwrap(), "ok");
+    let tokens: Vec<i32> = parsed
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+    assert_eq!(tokens, want, "HTTP tokens diverge from the in-process replay");
+
+    // Missing 'tokens' → 400 with a JSON error, not a hang.
+    let bad = r#"{"id": 1}"#;
+    let mut s = connect(server.addr);
+    let msg = format!(
+        "POST / HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{bad}",
+        bad.len()
+    );
+    s.write_all(msg.as_bytes()).unwrap();
+    let text = String::from_utf8(read_to_eof(&mut s)).unwrap();
+    assert!(text.starts_with("HTTP/1.1 400"), "unexpected response: {text}");
+
+    // Non-POST → 400.
+    let mut s = connect(server.addr);
+    s.write_all(b"GET / HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let text = String::from_utf8(read_to_eof(&mut s)).unwrap();
+    assert!(text.starts_with("HTTP/1.1 400"), "unexpected response: {text}");
+
+    let report = server.stop();
+    assert_eq!(report.requests_done, 1);
+    // The two rejected HTTP requests errored loudly without serving.
+    assert_eq!(report.conn_errors, 2);
+}
+
+/// Acceptance: shutdown mid-flight drains — every admitted request
+/// completes (oldest-head-first admission keeps running), late reads shed,
+/// and the client sees exactly one reply per request: none lost, none
+/// duplicated.
+#[test]
+fn shutdown_drains_in_flight_requests_without_loss() {
+    let server = spawn_listener(55, lcfg(16, 16));
+    let mcfg = load_model_config("tiny").unwrap();
+
+    let n = 12u64;
+    let gen_len = mcfg.seq_len - 2;
+    let mut stream = connect(server.addr);
+    let mut out = Vec::new();
+    for id in 1..=n {
+        let req = Request {
+            id,
+            arrival_s: 0.0,
+            slo: Slo::ALL[id as usize % Slo::ALL.len()],
+            tokens: vec![1, 2],
+            gen_len,
+            budget: None,
+        };
+        wire::encode_request(&mut out, &req);
+    }
+    stream.write_all(&out).unwrap();
+    // Let some requests admit, then pull the plug mid-flight.
+    std::thread::sleep(Duration::from_millis(2));
+    server.handle.shutdown();
+
+    // Read until the drain closes the connection.
+    let replies = read_replies(&mut stream, n as usize);
+    let report = server.join.join().expect("server thread").expect("listener run");
+
+    let mut seen = HashMap::new();
+    for (id, status, _) in &replies {
+        assert!(seen.insert(*id, *status).is_none(), "request {id} answered twice");
+        assert!(
+            matches!(status, Status::Ok | Status::Shed),
+            "request {id}: drain must answer Ok or Shed, got {status:?}"
+        );
+    }
+    assert_eq!(seen.len(), n as usize, "drain lost requests: {seen:?}");
+    let ok = replies.iter().filter(|(_, s, _)| *s == Status::Ok).count();
+    assert_eq!(
+        report.requests_done, ok,
+        "every admitted request must complete during the drain"
+    );
+    assert_eq!(report.shed, n as usize - ok);
+    assert_eq!(report.ingest_fingerprint_drift, 0);
+}

@@ -23,6 +23,12 @@ cargo test --release -q --test attention_equivalence
 echo "== decode equivalence suite (release: paged decode ≡ full window + continuous ≡ sequential) =="
 cargo test --release -q --test decode_equivalence
 
+echo "== ingest fuzz smoke (release: mutated frames/JSON panic-free + allocator-counted zero-alloc) =="
+cargo test --release -q --test fuzz_ingest
+
+echo "== listener e2e (release: sockets ≡ in-process replay, shed, drain, adversarial streams) =="
+cargo test --release -q --test listener_serving
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   echo "== kernel bench smoke (BENCH_QUICK=1) =="
   BENCH_QUICK=1 cargo bench -p flexrank --bench kernels
