@@ -1,0 +1,8 @@
+// Linter fixture (not compiled into the crate): R1 must fire exactly once
+// on the unannotated unsafe block below.  The commented invariant keyword
+// is deliberately absent everywhere in this file.
+// lint: module = linalg::fixture
+
+pub fn first_unchecked(xs: &[f32]) -> f32 {
+    unsafe { *xs.get_unchecked(0) }
+}

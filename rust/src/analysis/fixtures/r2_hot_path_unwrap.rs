@@ -1,0 +1,7 @@
+// Linter fixture (not compiled into the crate): R2 must fire exactly once —
+// a bare `.unwrap()` in a hot-path module with no allow marker.
+// lint: module = coordinator::batcher
+
+pub fn head_id(ids: &[u64]) -> u64 {
+    ids.first().copied().unwrap()
+}

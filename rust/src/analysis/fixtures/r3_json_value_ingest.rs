@@ -1,0 +1,9 @@
+// Linter fixture (not compiled into the crate): R3 must fire exactly once —
+// the tree-building `json::Value` imported into an ingest module.
+// lint: module = json::pull
+
+use crate::json::Value;
+
+pub fn stash(v: Value) -> Value {
+    v
+}

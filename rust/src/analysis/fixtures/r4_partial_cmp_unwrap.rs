@@ -1,0 +1,13 @@
+// Linter fixture (not compiled into the crate): R4 must fire exactly once —
+// float ordering through `partial_cmp(..).unwrap()` instead of `total_cmp`.
+// lint: module = eval::fixture
+
+pub fn max_val(xs: &[f64]) -> f64 {
+    let mut m = f64::NEG_INFINITY;
+    for &x in xs {
+        if x.partial_cmp(&m).unwrap() == std::cmp::Ordering::Greater {
+            m = x;
+        }
+    }
+    m
+}

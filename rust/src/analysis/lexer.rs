@@ -1,0 +1,371 @@
+//! A minimal hand-rolled Rust lexer for the invariant linter.
+//!
+//! Produces a flat token stream with comments retained (the rules engine
+//! reads safety comments and allow markers out of them) and with
+//! enough literal-awareness that `unsafe` inside a string, a nested block
+//! comment, or a raw string never reads as code.  It is deliberately *not*
+//! a full Rust lexer: multi-character operators come out as single `Punct`
+//! tokens (`::` is two `:`), and numeric edge cases collapse into whatever
+//! neighboring tokens they produce — none of which the rules care about.
+
+/// Token class.  `Punct` is one byte of punctuation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    LineComment,
+    BlockComment,
+}
+
+/// One token: byte range into the source plus 1-based line numbers.
+#[derive(Debug, Clone, Copy)]
+pub struct Tok {
+    pub kind: Kind,
+    pub start: usize,
+    pub end: usize,
+    /// Line the token starts on (1-based).
+    pub line: u32,
+    /// Line the token ends on (equal to `line` except for block
+    /// comments and multi-line strings).
+    pub end_line: u32,
+}
+
+impl Tok {
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.start..self.end]
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Tokenize `src`.  Never panics on malformed input: an unterminated
+/// literal or comment simply swallows the rest of the file.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::with_capacity(n / 6 + 16);
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    // Count newlines in b[from..to), returning the line the range ends on.
+    let lines_in = |from: usize, to: usize, start_line: u32| -> u32 {
+        let mut l = start_line;
+        for &c in &b[from..to] {
+            if c == b'\n' {
+                l += 1;
+            }
+        }
+        l
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // Comments.
+        if c == b'/' && i + 1 < n {
+            if b[i + 1] == b'/' {
+                let start = i;
+                while i < n && b[i] != b'\n' {
+                    i += 1;
+                }
+                toks.push(Tok { kind: Kind::LineComment, start, end: i, line, end_line: line });
+                continue;
+            }
+            if b[i + 1] == b'*' {
+                let start = i;
+                let start_line = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                toks.push(Tok {
+                    kind: Kind::BlockComment,
+                    start,
+                    end: i,
+                    line: start_line,
+                    end_line: line,
+                });
+                continue;
+            }
+        }
+
+        // String-literal prefixes: b" r" c" br" cr" and raw r#"…"#.
+        if is_ident_start(c) {
+            let rest = &b[i..];
+            let mut matched = false;
+            for pref in [&b"br"[..], &b"cr"[..], &b"b"[..], &b"c"[..], &b"r"[..]] {
+                if rest.len() <= pref.len() || !rest.starts_with(pref) {
+                    continue;
+                }
+                let after = rest[pref.len()];
+                // "r", "br", "cr" introduce raw strings; "b", "c" cooked ones.
+                let raw_capable = pref[pref.len() - 1] == b'r';
+                if after == b'"' && !raw_capable {
+                    // Cooked string with escapes.
+                    let start = i;
+                    let start_line = line;
+                    i += pref.len() + 1;
+                    while i < n {
+                        match b[i] {
+                            b'\\' => i = (i + 2).min(n),
+                            b'"' => {
+                                i += 1;
+                                break;
+                            }
+                            _ => i += 1,
+                        }
+                    }
+                    line = lines_in(start, i, start_line);
+                    toks.push(Tok { kind: Kind::Str, start, end: i, line: start_line, end_line: line });
+                    matched = true;
+                    break;
+                }
+                if raw_capable && (after == b'"' || after == b'#') {
+                    // Raw string: count hashes, then scan for `"` + hashes.
+                    let mut j = i + pref.len();
+                    let mut hashes = 0usize;
+                    while j < n && b[j] == b'#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'"' {
+                        let start = i;
+                        let start_line = line;
+                        j += 1;
+                        'scan: while j < n {
+                            if b[j] == b'"' {
+                                let mut k = 0usize;
+                                while k < hashes && j + 1 + k < n && b[j + 1 + k] == b'#' {
+                                    k += 1;
+                                }
+                                if k == hashes {
+                                    j += 1 + hashes;
+                                    break 'scan;
+                                }
+                            }
+                            j += 1;
+                        }
+                        i = j;
+                        line = lines_in(start, i, start_line);
+                        toks.push(Tok {
+                            kind: Kind::Str,
+                            start,
+                            end: i,
+                            line: start_line,
+                            end_line: line,
+                        });
+                        matched = true;
+                        break;
+                    }
+                }
+            }
+            if matched {
+                continue;
+            }
+
+            // Plain identifier / keyword.
+            let start = i;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, start, end: i, line, end_line: line });
+            continue;
+        }
+
+        // Plain string literal.
+        if c == b'"' {
+            let start = i;
+            let start_line = line;
+            i += 1;
+            while i < n {
+                match b[i] {
+                    b'\\' => i = (i + 2).min(n),
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            line = lines_in(start, i, start_line);
+            toks.push(Tok { kind: Kind::Str, start, end: i, line: start_line, end_line: line });
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            let start = i;
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: the char after the backslash is the
+                // escapee even when it is `\` or `'` (so `'\\'` and `'\''`
+                // close correctly); `\u{…}` then runs to the quote.
+                i = (i + 3).min(n);
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                toks.push(Tok { kind: Kind::Char, start, end: i, line, end_line: line });
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' {
+                // 'x' — a one-byte char literal (covers '_' too).
+                i += 3;
+                toks.push(Tok { kind: Kind::Char, start, end: i, line, end_line: line });
+                continue;
+            }
+            // Lifetime: 'ident (no closing quote).
+            i += 1;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { kind: Kind::Lifetime, start, end: i, line, end_line: line });
+            continue;
+        }
+
+        // Numeric literal.
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            if i < n && (b[i] == b'x' || b[i] == b'o' || b[i] == b'b') && c == b'0' {
+                i += 1;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+                    i += 1;
+                }
+                // Fraction only when `.` is followed by a digit (so `1.max`
+                // and `0..n` lex as separate tokens).
+                if i + 1 < n && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+                        i += 1;
+                    }
+                }
+                // Exponent.
+                if i < n && (b[i] == b'e' || b[i] == b'E') {
+                    let mut j = i + 1;
+                    if j < n && (b[j] == b'+' || b[j] == b'-') {
+                        j += 1;
+                    }
+                    if j < n && b[j].is_ascii_digit() {
+                        i = j;
+                        while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+                            i += 1;
+                        }
+                    }
+                }
+                // Type suffix (f32, usize, …).
+                while i < n && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Num, start, end: i, line, end_line: line });
+            continue;
+        }
+
+        // Everything else: one byte of punctuation.
+        toks.push(Tok { kind: Kind::Punct, start: i, end: i + 1, line, end_line: line });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).iter().map(|t| (t.kind, t.text(src).to_string())).collect()
+    }
+
+    #[test]
+    fn idents_and_punct() {
+        let ks = kinds("let x = a.unwrap();");
+        let idents: Vec<_> =
+            ks.iter().filter(|(k, _)| *k == Kind::Ident).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(idents, ["let", "x", "a", "unwrap"]);
+    }
+
+    #[test]
+    fn unsafe_in_string_is_not_an_ident() {
+        let ks = kinds(r#"let s = "unsafe { }"; call();"#);
+        assert!(!ks.iter().any(|(k, s)| *k == Kind::Ident && s == "unsafe"));
+        assert!(ks.iter().any(|(k, s)| *k == Kind::Str && s.contains("unsafe")));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let src = r##"let a = r#"quote " inside"#; let b = b"bytes\""; let c = r"\";"##;
+        let ks = kinds(src);
+        let strs: Vec<_> =
+            ks.iter().filter(|(k, _)| *k == Kind::Str).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(strs.len(), 3, "{ks:?}");
+        assert!(strs[0].contains("quote"));
+        assert!(strs[1].starts_with("b\""));
+        // In a raw string the backslash does not escape the close quote.
+        assert_eq!(strs[2], "r\"\\\"");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; let e = '_'; }");
+        let lifetimes: Vec<_> =
+            ks.iter().filter(|(k, _)| *k == Kind::Lifetime).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(lifetimes, ["'a", "'a"]);
+        let chars = ks.iter().filter(|(k, _)| *k == Kind::Char).count();
+        assert_eq!(chars, 3);
+    }
+
+    #[test]
+    fn nested_block_comments_and_line_numbers() {
+        let src = "/* outer /* inner */ still comment */\nfn f() {}\n// tail";
+        let toks = lex(src);
+        assert_eq!(toks[0].kind, Kind::BlockComment);
+        assert_eq!((toks[0].line, toks[0].end_line), (1, 1));
+        let f = toks.iter().find(|t| t.kind == Kind::Ident && t.text(src) == "fn").unwrap();
+        assert_eq!(f.line, 2);
+        assert_eq!(toks.last().unwrap().kind, Kind::LineComment);
+        assert_eq!(toks.last().unwrap().line, 3);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let ks = kinds("for i in 0..n { let y = 1.max(2); let z = 1.0e-10f64; }");
+        assert!(ks.iter().any(|(k, s)| *k == Kind::Ident && s == "max"));
+        assert!(ks.iter().any(|(k, s)| *k == Kind::Num && s == "1.0e-10f64"));
+        assert!(ks.iter().any(|(k, s)| *k == Kind::Num && s == "0"));
+    }
+}

@@ -1,0 +1,688 @@
+//! Static invariant linter (`repro lint`).
+//!
+//! A dependency-free lexer + rules engine that walks `rust/src` and
+//! machine-checks the invariants the ROADMAP otherwise enforces only by
+//! convention and runtime tests:
+//!
+//! * **R1 `safety`** — every `unsafe` block / fn / impl must be preceded
+//!   (within 8 lines) by a `// SAFETY:` comment stating the invariant it
+//!   relies on.
+//! * **R2 `hot_path`** — hot-path modules (`coordinator::listener`,
+//!   `coordinator::batcher`, `json::pull`, `data::trace::wire`,
+//!   `runtime::kvcache`, and the decode/infer fns of `runtime::native`)
+//!   may not call `unwrap` / `expect` / `panic!` / `Vec::new` / `vec!` /
+//!   `Box::new` / `.to_vec` / `format!` / `String::from`.
+//! * **R3 `json_value`** — the tree-building `json::Value` is banned from
+//!   ingest modules; request bodies go through the pull parser.
+//! * **R4 `float_cmp`** — float ordering uses `total_cmp`, never
+//!   `partial_cmp(..).unwrap()` (crate-wide outside tests).
+//!
+//! Escape hatch: an inline marker of the form
+//!
+//! ```text
+//! // lint: allow(<rule>) -- <reason>
+//! ```
+//!
+//! on the offending line or the line above suppresses that one rule there;
+//! the reason is mandatory.  Test code (`#[cfg(test)]` modules / `#[test]`
+//! fns) is exempt from every rule.  Fixture files under
+//! `src/analysis/fixtures/` carry a `// lint: module = <path>` directive so
+//! they lint as if they lived in the module they imitate; the default walk
+//! skips that directory, and explicit `repro lint <path>` arguments do not.
+
+pub mod lexer;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use self::lexer::{lex, Kind, Tok};
+
+/// Modules under the zero-alloc / no-panic serving contract (R2).
+/// A module matches exactly or by `::` prefix.
+const HOT_MODULES: &[&str] = &[
+    "coordinator::listener",
+    "coordinator::batcher",
+    "json::pull",
+    "data::trace::wire",
+    "runtime::kvcache",
+];
+
+/// In `runtime::native` only the serving forward/decode fns are hot —
+/// construction (`from_student`) may allocate freely.
+const NATIVE_HOT_FNS: &[&str] =
+    &["forward", "forward_window", "forward_into", "prefill", "decode_step", "forward_incremental"];
+
+/// Ingest modules where the tree-building `json::Value` is banned (R3).
+const INGEST_MODULES: &[&str] = &["json::pull", "data::trace::wire", "coordinator::listener"];
+
+/// How far above an `unsafe` token a `// SAFETY:` comment may sit (lines).
+/// Room for an attribute or a two-line fn signature in between.
+const SAFETY_WINDOW: u32 = 8;
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: PathBuf,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.msg)
+    }
+}
+
+/// An inline `// lint: allow(rule) -- reason` marker.
+struct Allow {
+    rule: String,
+    /// Lines the marker covers: its own line and the next.
+    line: u32,
+}
+
+/// Scope element pushed at `{`.
+struct Scope {
+    /// Inline `mod name` segment, if this brace opened one.
+    mod_seg: Option<String>,
+    /// Fn name, if this brace opened a fn body.
+    fn_name: Option<String>,
+    /// Inside `#[cfg(test)]` / `#[test]` — every rule is off.
+    test: bool,
+}
+
+/// Lint one file.  `default_module` is the module path derived from the
+/// file's location (overridden by a `// lint: module = …` directive).
+pub fn lint_source(src: &str, default_module: &str, file: &Path) -> Vec<Finding> {
+    let toks = lex(src);
+    let mut findings = Vec::new();
+
+    // ---- comment pass: SAFETY lines, allow markers, module directive ----
+    let mut safety_lines: Vec<u32> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut file_module = default_module.to_string();
+    for t in &toks {
+        if t.kind != Kind::LineComment && t.kind != Kind::BlockComment {
+            continue;
+        }
+        let text = t.text(src);
+        if text.contains("SAFETY:") {
+            safety_lines.push(t.end_line);
+        }
+        if let Some(at) = text.find("lint:") {
+            let body = text[at + 5..].trim();
+            if let Some(rest) = body.strip_prefix("allow(") {
+                if let Some(close) = rest.find(')') {
+                    let rule = rest[..close].trim().to_string();
+                    let reason = rest[close + 1..].trim();
+                    if let Some(why) = reason.strip_prefix("--") {
+                        if !why.trim().is_empty() {
+                            allows.push(Allow { rule, line: t.line });
+                            continue;
+                        }
+                    }
+                    findings.push(Finding {
+                        file: file.to_path_buf(),
+                        line: t.line,
+                        rule: "marker",
+                        msg: format!(
+                            "allow({rule}) marker needs a justification: \
+                             `// lint: allow({rule}) -- <reason>`"
+                        ),
+                    });
+                }
+            } else if let Some(rest) = body.strip_prefix("module") {
+                if let Some(path) = rest.trim_start().strip_prefix('=') {
+                    file_module = path.trim().to_string();
+                }
+            }
+        }
+    }
+    let allowed = |rule: &str, line: u32| {
+        allows.iter().any(|a| a.rule == rule && (a.line == line || a.line + 1 == line))
+    };
+    let mut push = |findings: &mut Vec<Finding>, rule: &'static str, line: u32, msg: String| {
+        if !allowed(rule, line)
+            && !findings.iter().any(|f: &Finding| f.rule == rule && f.line == line)
+        {
+            findings.push(Finding { file: file.to_path_buf(), line, rule, msg });
+        }
+    };
+
+    // ---- code pass: scopes + rules ----
+    let code: Vec<&Tok> = toks
+        .iter()
+        .filter(|t| t.kind != Kind::LineComment && t.kind != Kind::BlockComment)
+        .collect();
+    let punct = |i: usize, ch: u8| -> bool {
+        code.get(i).is_some_and(|t| t.kind == Kind::Punct && src.as_bytes()[t.start] == ch)
+    };
+    let ident_at = |i: usize| -> Option<&str> {
+        code.get(i).and_then(|t| (t.kind == Kind::Ident).then(|| t.text(src)))
+    };
+
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut pending_mod: Option<(String, bool)> = None;
+    let mut pending_fn: Option<(String, bool)> = None;
+    let mut pending_test_attr = false;
+    let mut paren_depth = 0i32;
+
+    let mut i = 0usize;
+    while i < code.len() {
+        let t = code[i];
+        let in_test = pending_test_attr || scopes.iter().any(|s| s.test);
+        match t.kind {
+            Kind::Punct => {
+                let c = src.as_bytes()[t.start];
+                match c {
+                    b'#' => {
+                        // Attribute: skip `#[…]` / `#![…]` wholesale, noting
+                        // `cfg(test)` / `test`.
+                        let mut j = i + 1;
+                        if punct(j, b'!') {
+                            j += 1;
+                        }
+                        if punct(j, b'[') {
+                            let mut depth = 0i32;
+                            let mut is_test = false;
+                            while j < code.len() {
+                                if punct(j, b'[') {
+                                    depth += 1;
+                                } else if punct(j, b']') {
+                                    depth -= 1;
+                                    if depth == 0 {
+                                        break;
+                                    }
+                                } else if ident_at(j) == Some("test") {
+                                    is_test = true;
+                                }
+                                j += 1;
+                            }
+                            // `#[test]` and `#[cfg(test)]` mark test code;
+                            // `#[cfg(not(test))]` also names `test` but gates
+                            // *non*-test code, so exclude the negated form.
+                            let attr_src = &src[t.start..code[j.min(code.len() - 1)].end];
+                            if is_test && !attr_src.contains("not(") {
+                                pending_test_attr = true;
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                    b'(' => paren_depth += 1,
+                    b')' => paren_depth -= 1,
+                    b';' => {
+                        if paren_depth == 0 {
+                            pending_fn = None;
+                            pending_mod = None;
+                            pending_test_attr = false;
+                        }
+                    }
+                    b'{' => {
+                        let (mod_seg, fn_name, own_test) = if let Some((m, tst)) =
+                            pending_mod.take()
+                        {
+                            (Some(m), None, tst)
+                        } else if let Some((f, tst)) = pending_fn.take() {
+                            (None, Some(f), tst)
+                        } else {
+                            // A `#[cfg(test)]` on an impl/const block lands
+                            // here: the brace consumes the pending flag.
+                            (None, None, std::mem::take(&mut pending_test_attr))
+                        };
+                        let parent_test = scopes.iter().any(|s| s.test);
+                        scopes.push(Scope { mod_seg, fn_name, test: parent_test || own_test });
+                    }
+                    b'}' => {
+                        scopes.pop();
+                    }
+                    _ => {}
+                }
+            }
+            Kind::Ident => {
+                let id = t.text(src);
+                match id {
+                    "mod" => {
+                        if let Some(name) = ident_at(i + 1) {
+                            pending_mod = Some((name.to_string(), pending_test_attr));
+                            pending_test_attr = false;
+                            i += 2;
+                            continue;
+                        }
+                    }
+                    "fn" => {
+                        if let Some(name) = ident_at(i + 1) {
+                            pending_fn = Some((name.to_string(), pending_test_attr));
+                            pending_test_attr = false;
+                            i += 2;
+                            continue;
+                        }
+                    }
+                    _ if in_test => {}
+                    "unsafe" => {
+                        let lo = t.line.saturating_sub(SAFETY_WINDOW);
+                        let covered =
+                            safety_lines.iter().any(|&l| l >= lo && l <= t.line);
+                        if !covered {
+                            push(
+                                &mut findings,
+                                "safety",
+                                t.line,
+                                "`unsafe` without a `// SAFETY:` comment stating its \
+                                 invariant (within the preceding 8 lines)"
+                                    .to_string(),
+                            );
+                        }
+                    }
+                    "use" => {
+                        // R3 at the import: `use …json…::{…, Value, …}`.
+                        let module = module_path(&file_module, &scopes);
+                        if is_ingest(&module) {
+                            let mut j = i + 1;
+                            let mut saw_json = false;
+                            while j < code.len() && !punct(j, b';') {
+                                match ident_at(j) {
+                                    Some("json") => saw_json = true,
+                                    Some("Value") if saw_json => {
+                                        push(
+                                            &mut findings,
+                                            "json_value",
+                                            code[j].line,
+                                            format!(
+                                                "`json::Value` imported in ingest module \
+                                                 `{module}` — request parsing must stay on \
+                                                 the pull parser"
+                                            ),
+                                        );
+                                    }
+                                    _ => {}
+                                }
+                                j += 1;
+                            }
+                        }
+                    }
+                    _ => {
+                        let module = module_path(&file_module, &scopes);
+                        check_code_ident(
+                            src, &code, i, t, id, &module, &scopes, &mut findings, &mut push,
+                        );
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    findings
+}
+
+/// Rules that fire on an ordinary (non-keyword) ident in non-test code.
+#[allow(clippy::too_many_arguments)]
+fn check_code_ident(
+    src: &str,
+    code: &[&Tok],
+    i: usize,
+    t: &Tok,
+    id: &str,
+    module: &str,
+    scopes: &[Scope],
+    findings: &mut Vec<Finding>,
+    push: &mut impl FnMut(&mut Vec<Finding>, &'static str, u32, String),
+) {
+    let punct = |i: usize, ch: u8| -> bool {
+        code.get(i).is_some_and(|t| t.kind == Kind::Punct && src.as_bytes()[t.start] == ch)
+    };
+    let ident_at = |i: usize| -> Option<&str> {
+        code.get(i).and_then(|t| (t.kind == Kind::Ident).then(|| t.text(src)))
+    };
+    let prev_dot = i > 0 && punct(i - 1, b'.');
+    let next_bang = punct(i + 1, b'!');
+    let path_new = |what: &str| -> bool {
+        punct(i + 1, b':') && punct(i + 2, b':') && ident_at(i + 3) == Some(what)
+    };
+
+    // R4: `.partial_cmp(…).unwrap()` / `.expect(` — crate-wide.
+    if id == "partial_cmp" && prev_dot && punct(i + 1, b'(') {
+        let mut j = i + 1;
+        let mut depth = 0i32;
+        while j < code.len() {
+            if punct(j, b'(') {
+                depth += 1;
+            } else if punct(j, b')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        if punct(j + 1, b'.') && matches!(ident_at(j + 2), Some("unwrap") | Some("expect")) {
+            push(
+                findings,
+                "float_cmp",
+                t.line,
+                "float ordering via `partial_cmp(..).unwrap()` — use `total_cmp` \
+                 (NaN-safe, total order)"
+                    .to_string(),
+            );
+        }
+        return;
+    }
+
+    // R3 fully-qualified use: `json::Value` anywhere in an ingest module.
+    if id == "Value"
+        && is_ingest(module)
+        && i >= 3
+        && punct(i - 1, b':')
+        && punct(i - 2, b':')
+        && ident_at(i - 3) == Some("json")
+    {
+        push(
+            findings,
+            "json_value",
+            t.line,
+            format!(
+                "`json::Value` used in ingest module `{module}` — request parsing \
+                 must stay on the pull parser"
+            ),
+        );
+        return;
+    }
+
+    // R2: banned calls in hot modules.
+    if !is_hot(module, scopes) {
+        return;
+    }
+    let hit: Option<&str> = match id {
+        "unwrap" | "expect" if prev_dot && punct(i + 1, b'(') => Some("panics on the hot path"),
+        "panic" if next_bang => Some("panics on the hot path"),
+        "vec" | "format" if next_bang => Some("allocates on the hot path"),
+        "to_vec" if prev_dot => Some("allocates on the hot path"),
+        "Vec" | "Box" if path_new("new") => Some("allocates on the hot path"),
+        "String" if path_new("from") => Some("allocates on the hot path"),
+        _ => None,
+    };
+    if let Some(why) = hit {
+        let what = match id {
+            "Vec" => "Vec::new".to_string(),
+            "Box" => "Box::new".to_string(),
+            "String" => "String::from".to_string(),
+            "panic" | "vec" | "format" => format!("{id}!"),
+            _ => format!(".{id}()"),
+        };
+        push(
+            findings,
+            "hot_path",
+            t.line,
+            format!(
+                "`{what}` in hot module `{module}` — {why}; return an error / reuse a \
+                 buffer, or justify with `// lint: allow(hot_path) -- <reason>`"
+            ),
+        );
+    }
+}
+
+/// Full module path: file-derived path plus inline `mod` segments.
+fn module_path(file_module: &str, scopes: &[Scope]) -> String {
+    let mut path = file_module.to_string();
+    for s in scopes {
+        if let Some(m) = &s.mod_seg {
+            if !path.is_empty() {
+                path.push_str("::");
+            }
+            path.push_str(m);
+        }
+    }
+    path
+}
+
+fn matches_module(module: &str, pat: &str) -> bool {
+    module == pat || module.starts_with(&format!("{pat}::"))
+}
+
+fn is_ingest(module: &str) -> bool {
+    INGEST_MODULES.iter().any(|m| matches_module(module, m))
+}
+
+fn is_hot(module: &str, scopes: &[Scope]) -> bool {
+    if HOT_MODULES.iter().any(|m| matches_module(module, m)) {
+        return true;
+    }
+    if matches_module(module, "runtime::native") {
+        // Only the serving forward/decode fns; innermost named fn decides.
+        if let Some(name) = scopes.iter().rev().find_map(|s| s.fn_name.as_deref()) {
+            return NATIVE_HOT_FNS.contains(&name);
+        }
+    }
+    false
+}
+
+/// Derive a module path from a file path: everything after the last `src/`
+/// component, `lib.rs`/`main.rs` → crate root, `mod.rs` → its directory.
+pub fn module_from_path(path: &Path) -> String {
+    let mut comps: Vec<String> = Vec::new();
+    let mut after_src = false;
+    for c in path.components() {
+        let s = c.as_os_str().to_string_lossy().to_string();
+        if s == "src" {
+            after_src = true;
+            comps.clear();
+            continue;
+        }
+        if after_src {
+            comps.push(s);
+        }
+    }
+    if !after_src {
+        return String::new();
+    }
+    if let Some(last) = comps.last_mut() {
+        let trimmed = last.strip_suffix(".rs").map(str::to_string);
+        if let Some(t) = trimmed {
+            *last = t;
+        }
+    }
+    if comps.last().is_some_and(|l| matches!(l.as_str(), "lib" | "main" | "mod")) {
+        comps.pop();
+    }
+    comps.join("::")
+}
+
+/// Lint one file from disk.
+pub fn lint_file(path: &Path) -> Result<Vec<Finding>> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("repro lint: reading {}", path.display()))?;
+    Ok(lint_source(&src, &module_from_path(path), path))
+}
+
+/// Recursively collect `.rs` files under `dir`, skipping the linter's own
+/// fixture corpus (those files *seed* violations).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("repro lint: walking {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "fixtures")
+                && p.parent().and_then(|d| d.file_name()).is_some_and(|n| n == "analysis")
+            {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `dir`.
+pub fn lint_dir(dir: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(dir, &mut files)?;
+    let mut findings = Vec::new();
+    for f in &files {
+        findings.extend(lint_file(f)?);
+    }
+    Ok(findings)
+}
+
+/// `repro lint [path…]` — lint the crate sources (default `src/` next to
+/// the manifest) or explicit files/directories; nonzero exit on findings.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let targets: Vec<PathBuf> = if args.positional.is_empty() {
+        vec![Path::new(env!("CARGO_MANIFEST_DIR")).join("src")]
+    } else {
+        args.positional.iter().map(PathBuf::from).collect()
+    };
+    let mut findings = Vec::new();
+    let mut n_files = 0usize;
+    for t in &targets {
+        if t.is_dir() {
+            let mut files = Vec::new();
+            collect_rs(t, &mut files)?;
+            n_files += files.len();
+            for f in &files {
+                findings.extend(lint_file(f)?);
+            }
+        } else {
+            n_files += 1;
+            findings.extend(lint_file(t)?);
+        }
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    if !findings.is_empty() {
+        bail!("repro lint: {} finding(s) across {} file(s)", findings.len(), n_files);
+    }
+    println!("repro lint: clean ({n_files} files, rules R1 safety / R2 hot_path / R3 json_value / R4 float_cmp)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("src/analysis/fixtures").join(name)
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn fixture_r1_unsafe_without_safety_fires_once() {
+        let f = lint_file(&fixture("r1_missing_safety.rs")).unwrap();
+        assert_eq!(rules(&f), ["safety"], "{f:?}");
+    }
+
+    #[test]
+    fn fixture_r2_hot_path_alloc_fires_once() {
+        let f = lint_file(&fixture("r2_hot_path_unwrap.rs")).unwrap();
+        assert_eq!(rules(&f), ["hot_path"], "{f:?}");
+    }
+
+    #[test]
+    fn fixture_r3_json_value_fires_once() {
+        let f = lint_file(&fixture("r3_json_value_ingest.rs")).unwrap();
+        assert_eq!(rules(&f), ["json_value"], "{f:?}");
+    }
+
+    #[test]
+    fn fixture_r4_partial_cmp_fires_once() {
+        let f = lint_file(&fixture("r4_partial_cmp_unwrap.rs")).unwrap();
+        assert_eq!(rules(&f), ["float_cmp"], "{f:?}");
+    }
+
+    #[test]
+    fn whole_crate_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let findings = lint_dir(&src).unwrap();
+        assert!(
+            findings.is_empty(),
+            "repro lint found {} violation(s) in the crate:\n{}",
+            findings.len(),
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn safety_comment_within_window_passes() {
+        let src = "// SAFETY: len checked above\npub fn f(x: &[f32]) -> f32 {\n    unsafe { *x.get_unchecked(0) }\n}\n";
+        let f = lint_source(src, "linalg::demo", Path::new("demo.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn safety_comment_too_far_fails() {
+        let blank = "\n".repeat(10);
+        let src = format!(
+            "// SAFETY: stale, ten lines up\n{blank}pub fn f(x: &[f32]) -> f32 {{\n    unsafe {{ *x.get_unchecked(0) }}\n}}\n"
+        );
+        let f = lint_source(&src, "linalg::demo", Path::new("demo.rs"));
+        assert_eq!(rules(&f), ["safety"]);
+    }
+
+    #[test]
+    fn cfg_test_module_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(v: Option<u32>) -> u32 { v.unwrap() }\n}\n";
+        let f = lint_source(src, "coordinator::batcher", Path::new("demo.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "pub fn f(v: Option<u32>) -> u32 { v.unwrap_or_else(|| 0).max(v.unwrap_or(1)) }\n";
+        let f = lint_source(src, "coordinator::listener", Path::new("demo.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn allow_marker_suppresses_only_its_rule() {
+        let src = "pub fn f() -> Vec<u32> {\n    // lint: allow(hot_path) -- construction-time, not per-request\n    Vec::new()\n}\n";
+        let f = lint_source(src, "runtime::kvcache", Path::new("demo.rs"));
+        assert!(f.is_empty(), "{f:?}");
+        let wrong = src.replace("allow(hot_path)", "allow(float_cmp)");
+        let f = lint_source(&wrong, "runtime::kvcache", Path::new("demo.rs"));
+        assert_eq!(rules(&f), ["hot_path"]);
+    }
+
+    #[test]
+    fn allow_marker_requires_reason() {
+        let src = "pub fn f() -> Vec<u32> {\n    // lint: allow(hot_path)\n    Vec::new()\n}\n";
+        let f = lint_source(src, "runtime::kvcache", Path::new("demo.rs"));
+        assert_eq!(rules(&f), ["marker", "hot_path"], "{f:?}");
+    }
+
+    #[test]
+    fn native_hot_fns_are_scoped() {
+        let hot = "impl M {\n    pub fn decode_step(&self) { let v: Vec<u32> = Vec::new(); let _ = v; }\n}\n";
+        let f = lint_source(hot, "runtime::native", Path::new("demo.rs"));
+        assert_eq!(rules(&f), ["hot_path"]);
+        let cold = hot.replace("decode_step", "from_student");
+        let f = lint_source(&cold, "runtime::native", Path::new("demo.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn inline_wire_module_is_hot() {
+        let src = "pub mod wire {\n    pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n}\n";
+        let f = lint_source(src, "data::trace", Path::new("demo.rs"));
+        assert_eq!(rules(&f), ["hot_path"]);
+    }
+
+    #[test]
+    fn module_paths_from_file_paths() {
+        assert_eq!(module_from_path(Path::new("rust/src/coordinator/listener.rs")), "coordinator::listener");
+        assert_eq!(module_from_path(Path::new("rust/src/lib.rs")), "");
+        assert_eq!(module_from_path(Path::new("rust/src/json/mod.rs")), "json");
+        assert_eq!(module_from_path(Path::new("src/data/trace.rs")), "data::trace");
+    }
+}

@@ -47,7 +47,7 @@ pub fn magnitude_profiles(
             comps.push((nu * nv, li));
         }
     }
-    comps.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    comps.sort_by(|a, b| b.0.total_cmp(&a.0));
 
     let full_cost: usize = layers
         .iter()

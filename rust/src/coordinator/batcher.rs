@@ -34,6 +34,7 @@ pub struct DynamicBatcher {
 
 impl DynamicBatcher {
     pub fn new(n_tiers: usize, max_batch: usize, max_wait: Duration) -> Self {
+        // lint: allow(hot_path) -- one allocation at batcher construction.
         Self::with_tier_waits(max_batch, vec![max_wait; n_tiers])
     }
 

@@ -41,6 +41,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::trace::wire::{self, Status};
 use crate::data::trace::Request;
+// lint: allow(json_value) -- response/stats side only: the ingest path decodes through the wire pull parser; Value builds the metrics snapshot and the HTTP fallback bodies.
 use crate::json::{self, Value};
 use crate::runtime::ServingBackend;
 
@@ -199,6 +200,7 @@ impl ListenReport {
 
     pub fn to_json(&self) -> String {
         let l = self.request_latency();
+        // lint: allow(hot_path) -- metrics snapshot, off the serving path.
         json::to_string(&json::obj(vec![
             ("accepted_conns", Value::Num(self.accepted_conns as f64)),
             ("rejected_conns", Value::Num(self.rejected_conns as f64)),
@@ -240,6 +242,7 @@ impl Listener {
         ensure!(cfg.max_connections >= 1, "max_connections must be >= 1");
         ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
         ensure!(cfg.conn_pipeline >= 1, "conn_pipeline must be >= 1");
+        // lint: allow(hot_path) -- bind-time error context, runs once.
         let socket = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         Ok(Listener { socket, cfg, shared: Arc::new(Shared::new()) })
     }
@@ -296,12 +299,16 @@ impl Listener {
 
         // Reply channels live in a slab indexed by the batcher tag — no
         // per-request map insertions on the ingest path.
+        // lint: allow(hot_path) -- serving-loop startup; the slab grows to steady state then stops allocating.
         let mut slab: Vec<Option<mpsc::Sender<Reply>>> = Vec::new();
+        // lint: allow(hot_path) -- serving-loop startup (free-list companion of the slab).
         let mut free: Vec<usize> = Vec::new();
         let mut active: Vec<Active> = Vec::with_capacity(backend.decode_slots());
         let mut step_slots: Vec<usize> = Vec::with_capacity(backend.decode_slots());
         let mut step_tokens: Vec<i32> = Vec::with_capacity(backend.decode_slots());
+        // lint: allow(hot_path) -- per-tier counters sized once at loop startup.
         let mut tier_requests = vec![0usize; n_tiers];
+        // lint: allow(hot_path) -- latency samples; serving-loop bookkeeping, amortized.
         let mut latency_ms: Vec<f64> = Vec::new();
         let (mut requests_done, mut steps) = (0usize, 0usize);
         let (mut tokens_prefilled, mut tokens_generated) = (0usize, 0usize);
@@ -369,7 +376,13 @@ impl Listener {
                     None => break,
                 };
                 let Some(slot) = backend.acquire_slot(need) else { break };
-                let p = batcher.pop_head(tier).expect("peeked head vanished");
+                // The head can only vanish if the queue was drained between
+                // peek and pop (a bookkeeping bug); give the slot back and
+                // stop admitting rather than panic the serving loop.
+                let Some(p) = batcher.pop_head(tier) else {
+                    backend.release_slot(slot);
+                    break;
+                };
                 let tag = p.tag as usize;
                 let first = match backend.prefill(tier, slot, &p.req.tokens) {
                     Ok(logits) => {
@@ -388,6 +401,7 @@ impl Listener {
                             &mut slab,
                             &mut free,
                             tag,
+                            // lint: allow(hot_path) -- error reply carries no tokens; an empty Vec never allocates.
                             Reply { id: p.req.id, status: Status::Error, tokens: Vec::new() },
                         );
                         continue;
@@ -579,6 +593,7 @@ fn accept_loop(
         shared.shutdown.store(true, Ordering::Relaxed);
         return;
     }
+    // lint: allow(hot_path) -- accept-loop startup; one handle per connection thread.
     let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !shared.is_shutdown() {
         match socket.accept() {
@@ -625,6 +640,7 @@ fn accept_loop(
 /// Best-effort shed answer for a connection refused at the accept gate
 /// (protocol unknown at this point, so it gets a shed frame).
 fn refuse(mut stream: TcpStream) {
+    // lint: allow(hot_path) -- refusal path for a connection being dropped, off the serving path.
     let mut out = Vec::new();
     wire::encode_response(&mut out, 0, Status::Shed, &[]);
     let _ = stream.write_all(&out);
@@ -759,7 +775,11 @@ fn handle_framed(
     // empty is the connection's pipelining backpressure.
     let (pool_tx, pool_rx) = mpsc::sync_channel::<Vec<i32>>(pipeline);
     for _ in 0..pipeline {
-        pool_tx.send(Vec::with_capacity(seq)).expect("pool channel sized to pipeline");
+        // The receiver is local and alive, so the only way this fails is a
+        // closed channel — report it instead of panicking the handler.
+        if pool_tx.send(Vec::with_capacity(seq)).is_err() {
+            bail!("connection buffer pool closed before startup");
+        }
     }
 
     let writer = {
@@ -851,6 +871,7 @@ fn writer_loop(
     write_half: Arc<Mutex<TcpStream>>,
     pool_tx: mpsc::SyncSender<Vec<i32>>,
 ) {
+    // lint: allow(hot_path) -- per-connection writer scratch, reused across every reply.
     let mut out: Vec<u8> = Vec::new();
     while let Ok(mut reply) = reply_rx.recv() {
         out.clear();
@@ -947,8 +968,10 @@ fn handle_http(
     if let Err(e) = wire::decode_request_json(&body, seq, &mut req_slot)
         .and_then(|()| validate_contract(&req_slot, seq))
     {
+        // lint: allow(hot_path) -- HTTP fallback error body; the fallback path is documented as non-zero-alloc.
         let msg = json::to_string(&json::obj(vec![(
             "error",
+            // lint: allow(hot_path) -- HTTP fallback error body (see above).
             Value::Str(format!("{e:#}")),
         )]));
         http_respond(&mut stream, 400, msg.as_bytes())?;
@@ -960,6 +983,7 @@ fn handle_http(
         return Ok(());
     }
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    // lint: allow(hot_path) -- empty budget-token seed; an empty Vec never allocates.
     let req = req_slot.take_request(0.0, Vec::new());
     if tx.send(IngestItem { req, reply: reply_tx }).is_err() {
         shared.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -982,6 +1006,7 @@ fn handle_http(
         Status::Shed => "shed",
         Status::Error => "error",
     };
+    // lint: allow(hot_path) -- HTTP fallback response body; the fallback path is documented as non-zero-alloc.
     let body = json::to_string(&json::obj(vec![
         ("id", Value::Num(reply.id as f64)),
         ("status", Value::Str(status_txt.to_string())),
@@ -1002,6 +1027,7 @@ fn http_respond(stream: &mut TcpStream, code: u16, body: &[u8]) -> Result<()> {
         503 => "Service Unavailable",
         _ => "Error",
     };
+    // lint: allow(hot_path) -- HTTP fallback response head (see above).
     let head = format!(
         "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n",

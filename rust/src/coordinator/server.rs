@@ -523,7 +523,13 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
                 None => break,
             };
             let Some(slot) = backend.acquire_slot(need) else { break };
-            let p = batcher.pop_head(tier).expect("peeked head vanished");
+            // The head can only vanish if the queue was drained between
+            // peek and pop (a bookkeeping bug); give the slot back and
+            // stop admitting rather than panic the serving loop.
+            let Some(p) = batcher.pop_head(tier) else {
+                backend.release_slot(slot);
+                break;
+            };
             let t0 = Instant::now();
             let first = {
                 let logits = backend.prefill(tier, slot, &p.req.tokens)?;

@@ -654,7 +654,7 @@ fn fig9(args: &Args) -> Result<()> {
             .iter()
             .filter(|(s, _, _)| full_cost - s <= cap)
             .map(|(s, e, p)| (*e, *s, p))
-            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
         if let Some((_, _, prof)) = pick {
             // True probing loss of the DP profile.
             let f_dp = probe(prof);
@@ -669,7 +669,7 @@ fn fig9(args: &Args) -> Result<()> {
         }
     }
     let p = hits as f64 / budgets.len() as f64;
-    regrets.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    regrets.sort_by(|a, b| a.total_cmp(b));
 
     println!("Fig 9 metrics over {total} submodels:");
     println!("  Spearman rho          = {rho:.4}   (paper: 0.991)");
@@ -686,7 +686,7 @@ fn fig9(args: &Args) -> Result<()> {
     // CSV: ranking scatter + regret CDF.
     let rank_of = |vals: &[f64]| -> Vec<f64> {
         let mut idx: Vec<usize> = (0..vals.len()).collect();
-        idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+        idx.sort_by(|&a, &b| vals[a].total_cmp(&vals[b]));
         let mut r = vec![0.0; vals.len()];
         for (pos, &i) in idx.iter().enumerate() {
             r[i] = pos as f64 / vals.len() as f64;
@@ -720,7 +720,7 @@ fn spearman(a: &[f64], b: &[f64]) -> f64 {
     let n = a.len() as f64;
     let rank = |vals: &[f64]| -> Vec<f64> {
         let mut idx: Vec<usize> = (0..vals.len()).collect();
-        idx.sort_by(|&x, &y| vals[x].partial_cmp(&vals[y]).unwrap());
+        idx.sort_by(|&x, &y| vals[x].total_cmp(&vals[y]));
         let mut r = vec![0.0; vals.len()];
         for (pos, &i) in idx.iter().enumerate() {
             r[i] = pos as f64;

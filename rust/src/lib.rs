@@ -27,7 +27,11 @@
 //! * [`eval`] — evaluation harnesses and figure/table printers.
 //! * Support substrates (offline image has no tokio/clap/serde/criterion):
 //!   [`json`], [`cli`], [`bench_harness`], [`prop`], [`rng`], [`config`].
+//! * [`analysis`] — the in-tree invariant linter behind `repro lint`:
+//!   SAFETY-comment, hot-path-allocation, pull-parser, and float-ordering
+//!   rules, machine-checking what ROADMAP.md §Static invariants states.
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod cli;
 pub mod config;

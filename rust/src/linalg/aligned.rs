@@ -58,6 +58,8 @@ impl<T: Copy + Default> AlignedVec<T> {
             self.grow(new_len);
         }
         while self.len < new_len {
+            // SAFETY: `grow` above guarantees `cap >= new_len`, so every
+            // index written here is inside the live allocation.
             unsafe { self.ptr.as_ptr().add(self.len).write(fill) };
             self.len += 1;
         }
@@ -77,6 +79,8 @@ impl<T: Copy + Default> AlignedVec<T> {
     fn grow(&mut self, new_cap: usize) {
         debug_assert!(std::mem::align_of::<T>() <= ALIGN, "AlignedVec: over-aligned element");
         let layout = Self::layout(new_cap);
+        // SAFETY: `layout` has nonzero size (new_cap > cap >= 0 elements of
+        // a sized `T`) and a valid 64-byte alignment from `Self::layout`.
         let raw = unsafe { alloc::alloc(layout) } as *mut T;
         let Some(ptr) = NonNull::new(raw) else { alloc::handle_alloc_error(layout) };
         debug_assert_eq!(
@@ -84,6 +88,9 @@ impl<T: Copy + Default> AlignedVec<T> {
             0,
             "scratch allocation must be 64-byte aligned"
         );
+        // SAFETY: both regions hold at least `len` initialized `T`s —
+        // the source by the struct invariant (len <= cap), the destination
+        // because new_cap >= len — and a fresh allocation cannot overlap.
         unsafe { std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.len) };
         self.release();
         self.ptr = ptr;
@@ -92,6 +99,9 @@ impl<T: Copy + Default> AlignedVec<T> {
 
     fn release(&mut self) {
         if self.cap > 0 {
+            // SAFETY: `cap > 0` means `ptr` came from `alloc` with exactly
+            // `Self::layout(self.cap)`, and it is deallocated only once
+            // (release() resets through grow()/Drop ownership).
             unsafe { alloc::dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
         }
     }
@@ -118,12 +128,16 @@ impl<T: Copy + Default> Clone for AlignedVec<T> {
 impl<T: Copy + Default> Deref for AlignedVec<T> {
     type Target = [T];
     fn deref(&self) -> &[T] {
+        // SAFETY: struct invariant — the first `len` elements are
+        // initialized and live for as long as `self` borrows them.
         unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
     }
 }
 
 impl<T: Copy + Default> DerefMut for AlignedVec<T> {
     fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: same invariant as `deref`, and `&mut self` guarantees
+        // exclusive access to the buffer.
         unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
     }
 }
@@ -140,7 +154,9 @@ impl<T: Copy + Default + PartialEq> PartialEq for AlignedVec<T> {
     }
 }
 
-// The buffer owns its (plain-scalar) elements exactly like Vec<T>.
+// SAFETY: the buffer owns its (plain-scalar) elements exactly like
+// `Vec<T>` — sending or sharing the vec sends/shares only `T`s, so the
+// usual `T: Send` / `T: Sync` bounds carry over unchanged.
 unsafe impl<T: Copy + Default + Send> Send for AlignedVec<T> {}
 unsafe impl<T: Copy + Default + Sync> Sync for AlignedVec<T> {}
 

@@ -80,7 +80,7 @@ pub fn sym_eig(a: &Mat) -> SymEig {
 
     // Sort descending by eigenvalue.
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+    idx.sort_by(|&i, &j| m[(j, j)].total_cmp(&m[(i, i)]));
     let mut ql = Mat::zeros(n, n);
     let mut l = Vec::with_capacity(n);
     for (dst, &src) in idx.iter().enumerate() {

@@ -46,6 +46,9 @@ struct Job {
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
 }
 
+// SAFETY: the raw `task` pointer is the only non-auto field; the doc
+// comment above pins the claim protocol under which it is dereferenced
+// (closure outlives every claim), and the closure itself is `Sync`.
 unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
@@ -160,7 +163,7 @@ fn run_chunks(pool: &Pool, job: &Job) {
         if ci >= job.n_chunks {
             break;
         }
-        // Safety: deref only after a successful claim — the claim proves
+        // SAFETY: deref only after a successful claim — the claim proves
         // this chunk has not run, so the submitter is still blocked on
         // `done < n_chunks` and the borrowed closure is alive.  A retired
         // job's counter is exhausted, so its (dangling) pointer is never
@@ -189,6 +192,9 @@ fn run_chunks(pool: &Pool, job: &Job) {
 /// disjointness arguments documented at each dereference.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+// SAFETY: `SendPtr` is an address, not an access — every dereference
+// happens under the per-chunk disjointness contract documented above, so
+// moving/sharing the wrapper across worker threads is sound.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -211,7 +217,7 @@ pub fn parallel_for_rows<T: Send + Sync>(
     parallel_for(rows.div_ceil(rows_per), &|ci| {
         let i0 = ci * rows_per;
         let rows_c = rows_per.min(rows - i0);
-        // Safety: chunk `ci` covers elements [i0·row_len, (i0+rows_c)·row_len)
+        // SAFETY: chunk `ci` covers elements [i0·row_len, (i0+rows_c)·row_len)
         // — in-bounds by the assert above, disjoint across chunk indices.
         let chunk = unsafe {
             std::slice::from_raw_parts_mut(base.0.add(i0 * row_len), rows_c * row_len)

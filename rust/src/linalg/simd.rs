@@ -147,6 +147,10 @@ scalar_micro!(f32, dot_f32_scalar, axpy4_f32_scalar);
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     match isa() {
+        // SAFETY: `isa()` only ever returns an ISA tier after the one-time
+        // runtime probe confirmed the CPU supports it, which is exactly the
+        // caller contract of these `#[target_feature]` kernels; the kernels
+        // take slices and handle bounds/tails internally.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::dot(a, b) },
         #[cfg(target_arch = "aarch64")]
@@ -159,6 +163,10 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 pub fn axpy4_f32(aseg: &[f32], b_panel: &[f32], n: usize, orow: &mut [f32]) {
     match isa() {
+        // SAFETY: `isa()` only ever returns an ISA tier after the one-time
+        // runtime probe confirmed the CPU supports it, which is exactly the
+        // caller contract of these `#[target_feature]` kernels; the kernels
+        // take slices and handle bounds/tails internally.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::axpy4(aseg, b_panel, n, orow) },
         #[cfg(target_arch = "aarch64")]
@@ -177,6 +185,10 @@ pub fn axpy4_f32(aseg: &[f32], b_panel: &[f32], n: usize, orow: &mut [f32]) {
 #[inline]
 pub fn scale_max(row: &mut [f32], scale: f32) -> f32 {
     match isa() {
+        // SAFETY: `isa()` only ever returns an ISA tier after the one-time
+        // runtime probe confirmed the CPU supports it, which is exactly the
+        // caller contract of these `#[target_feature]` kernels; the kernels
+        // take slices and handle bounds/tails internally.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::scale_max(row, scale) },
         #[cfg(target_arch = "aarch64")]
@@ -201,6 +213,10 @@ pub fn scale_max_scalar(row: &mut [f32], scale: f32) -> f32 {
 #[inline]
 pub fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
     match isa() {
+        // SAFETY: `isa()` only ever returns an ISA tier after the one-time
+        // runtime probe confirmed the CPU supports it, which is exactly the
+        // caller contract of these `#[target_feature]` kernels; the kernels
+        // take slices and handle bounds/tails internally.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::exp_sub_sum(row, mx) },
         #[cfg(target_arch = "aarch64")]
@@ -223,6 +239,10 @@ pub fn exp_sub_sum_scalar(row: &mut [f32], mx: f32) -> f32 {
 #[inline]
 pub fn scale_in_place(row: &mut [f32], c: f32) {
     match isa() {
+        // SAFETY: `isa()` only ever returns an ISA tier after the one-time
+        // runtime probe confirmed the CPU supports it, which is exactly the
+        // caller contract of these `#[target_feature]` kernels; the kernels
+        // take slices and handle bounds/tails internally.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::scale_in_place(row, c) },
         #[cfg(target_arch = "aarch64")]
@@ -242,6 +262,10 @@ pub fn scale_in_place_scalar(row: &mut [f32], c: f32) {
 #[inline]
 pub fn rescale_add(out: &mut [f32], add: &[f32], corr: f32) {
     match isa() {
+        // SAFETY: `isa()` only ever returns an ISA tier after the one-time
+        // runtime probe confirmed the CPU supports it, which is exactly the
+        // caller contract of these `#[target_feature]` kernels; the kernels
+        // take slices and handle bounds/tails internally.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::rescale_add(out, add, corr) },
         #[cfg(target_arch = "aarch64")]
@@ -263,6 +287,10 @@ pub fn rescale_add_scalar(out: &mut [f32], add: &[f32], corr: f32) {
 #[inline]
 pub fn exp_recompute(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
     match isa() {
+        // SAFETY: `isa()` only ever returns an ISA tier after the one-time
+        // runtime probe confirmed the CPU supports it, which is exactly the
+        // caller contract of these `#[target_feature]` kernels; the kernels
+        // take slices and handle bounds/tails internally.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2Fma => unsafe { avx2::exp_recompute(row, scale, mi, inv_l) },
         #[cfg(target_arch = "aarch64")]
@@ -286,6 +314,9 @@ pub fn exp_recompute_scalar(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
 mod avx2 {
     use std::arch::x86_64::*;
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn hsum(v: __m256) -> f32 {
         let mut t = [0f32; 8];
@@ -293,6 +324,9 @@ mod avx2 {
         ((t[0] + t[4]) + (t[1] + t[5])) + ((t[2] + t[6]) + (t[3] + t[7]))
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn hmax(v: __m256) -> f32 {
         let mut t = [0f32; 8];
@@ -304,6 +338,9 @@ mod avx2 {
     /// `|r| ≤ ln2/2`, degree-6 Taylor `P` (≈1e-7 relative error).  Inputs
     /// are clamped to the finite range; the softmax callers only pass
     /// `x ≤ 0`, where the clamp never fires.
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn exp8(x: __m256) -> __m256 {
         let x = _mm256_min_ps(x, _mm256_set1_ps(88.0));
@@ -333,6 +370,9 @@ mod avx2 {
         _mm256_mul_ps(p, pow2)
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
@@ -375,6 +415,9 @@ mod avx2 {
         s
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn axpy4(aseg: &[f32], b_panel: &[f32], n: usize, orow: &mut [f32]) {
         debug_assert_eq!(b_panel.len(), aseg.len() * n);
@@ -429,6 +472,9 @@ mod avx2 {
         }
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn scale_max(row: &mut [f32], scale: f32) -> f32 {
         let n = row.len();
@@ -454,6 +500,9 @@ mod avx2 {
         mx
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
         let n = row.len();
@@ -477,6 +526,9 @@ mod avx2 {
         sum
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn scale_in_place(row: &mut [f32], c: f32) {
         let n = row.len();
@@ -493,6 +545,9 @@ mod avx2 {
         }
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn rescale_add(out: &mut [f32], add: &[f32], corr: f32) {
         debug_assert_eq!(out.len(), add.len());
@@ -512,6 +567,9 @@ mod avx2 {
         }
     }
 
+    // SAFETY: callers must ensure AVX2+FMA are available (dispatch does,
+    // via `isa()`); beyond that the body uses unaligned loads/stores on
+    // in-bounds slice ranges only.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn exp_recompute(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
         let n = row.len();
@@ -540,6 +598,9 @@ mod avx2 {
 mod neon {
     use std::arch::aarch64::*;
 
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
@@ -570,6 +631,9 @@ mod neon {
         s
     }
 
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy4(aseg: &[f32], b_panel: &[f32], n: usize, orow: &mut [f32]) {
         debug_assert_eq!(b_panel.len(), aseg.len() * n);
@@ -627,6 +691,9 @@ mod neon {
     /// Polynomial exp for 4 lanes — the NEON mirror of `avx2::exp8`: same
     /// clamp, same ln2 split, same degree-6 Horner, so the two ISAs agree
     /// to the last coefficient (≈1e-7 relative error).
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     unsafe fn exp4(x: float32x4_t) -> float32x4_t {
         let x = vminq_f32(x, vdupq_n_f32(88.0));
@@ -653,6 +720,9 @@ mod neon {
         vmulq_f32(p, pow2)
     }
 
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     pub unsafe fn scale_max(row: &mut [f32], scale: f32) -> f32 {
         let n = row.len();
@@ -678,6 +748,9 @@ mod neon {
         mx
     }
 
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     pub unsafe fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
         let n = row.len();
@@ -701,6 +774,9 @@ mod neon {
         sum
     }
 
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     pub unsafe fn scale_in_place(row: &mut [f32], c: f32) {
         let n = row.len();
@@ -717,6 +793,9 @@ mod neon {
         }
     }
 
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     pub unsafe fn rescale_add(out: &mut [f32], add: &[f32], corr: f32) {
         debug_assert_eq!(out.len(), add.len());
@@ -736,6 +815,9 @@ mod neon {
         }
     }
 
+    // SAFETY: callers must ensure NEON is available (dispatch does, via
+    // `isa()`; it is also baseline on aarch64); the body uses unaligned
+    // loads/stores on in-bounds slice ranges only.
     #[target_feature(enable = "neon")]
     pub unsafe fn exp_recompute(row: &mut [f32], scale: f32, mi: f32, inv_l: f32) {
         let n = row.len();

@@ -27,7 +27,7 @@ pub fn lu_solve_many(a: &Mat, b: &Mat) -> Result<Mat> {
         // Pivot.
         let (pi, pmax) = (col..n)
             .map(|i| (i, lu[(i, col)].abs()))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         if pmax < 1e-300 {
             bail!("lu_solve: singular matrix (pivot {pmax:.3e} at col {col})");

@@ -108,7 +108,7 @@ pub fn svd(a: &Mat) -> Svd {
             (norm, j)
         })
         .collect();
-    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    svals.sort_by(|a, b| b.0.total_cmp(&a.0));
 
     let mut uu = Mat::zeros(m, n);
     let mut vv = Mat::zeros(n, n);

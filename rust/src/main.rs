@@ -14,6 +14,10 @@
 //!   figure <figN>         — regenerate a paper figure's series into results/
 //!   table  <tabN>         — regenerate a paper table
 //!   profiles              — write stage_dir()/profiles.json from DP selection
+//!   lint [path…]          — static invariant linter over rust/src (SAFETY
+//!                           comments, hot-path allocation/panic bans,
+//!                           pull-parser-only ingest, total_cmp float order);
+//!                           nonzero exit on findings
 
 use anyhow::Result;
 use flexrank::cli::Args;
@@ -28,15 +32,18 @@ fn main() -> Result<()> {
         Some("serve") => flexrank::coordinator::run_cli(&args),
         Some("figure") => flexrank::eval::figures::run_cli(&args),
         Some("table") => flexrank::eval::figures::run_table_cli(&args),
+        Some("lint") => flexrank::analysis::run_cli(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand: {o}");
             }
             eprintln!(
-                "usage: repro <smoke|pipeline|serve|figure|table|profiles> [--flags]\n\
+                "usage: repro <smoke|pipeline|serve|figure|table|profiles|lint> [--flags]\n\
                  figures: fig2 fig3 fig4 fig5 fig6 fig7a fig7b fig8 fig9 fig10; tables: tab1\n\
                  serve --listen [addr]: online front-end (default 127.0.0.1:7171; \
-                 --queue-cap N --max-conns N --conn-pipeline N --listen-secs S)"
+                 --queue-cap N --max-conns N --conn-pipeline N --listen-secs S)\n\
+                 lint [path…]: static invariant checks (R1 SAFETY / R2 hot-path \
+                 / R3 pull-parser ingest / R4 total_cmp); nonzero exit on findings"
             );
             Ok(())
         }

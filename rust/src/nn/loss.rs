@@ -48,7 +48,7 @@ pub fn accuracy(logits: &Mat, labels: &[usize]) -> f64 {
         let arg = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         if arg == labels[i] {

@@ -472,7 +472,7 @@ pub fn causal_attention(
         None => {
             let smat = ws_seq * ws_seq;
             pool::parallel_for(slots, &|ci| {
-                // Safety: slot regions `[ci·panel, ci·panel + t_len·hd)` are
+                // SAFETY: slot regions `[ci·panel, ci·panel + t_len·hd)` are
                 // disjoint across chunk indices (ci < slots), and `ws` is
                 // borrowed mutably for the whole dispatch, so nothing else
                 // touches them.
@@ -495,7 +495,7 @@ pub fn causal_attention(
                     gather_rows(qkv, base, w3, vo, hd, 0..t_len, vh);
                     // Scores land directly in the retained probs matrix when
                     // the caller keeps them, in the slot scratch otherwise.
-                    // Safety (Some): pair regions `[pair·t_len², (pair+1)·t_len²)`
+                    // SAFETY: (Some arm) pair regions `[pair·t_len², (pair+1)·t_len²)`
                     // are disjoint across pairs, and each pair is processed
                     // exactly once (strided partition over ci).
                     let sc: &mut [f32] = match probs_ptr {
@@ -512,7 +512,7 @@ pub fn causal_attention(
                     kernels::matmul_f32(sc, vh, t_len, t_len, hd, oh);
                     for t1 in 0..t_len {
                         let dst = (base + t1) * d + head * hd;
-                        // Safety: pair (b, head) owns columns
+                        // SAFETY: pair (b, head) owns columns
                         // [head·hd, (head+1)·hd) of rows [base, base + t_len)
                         // — disjoint across pairs.
                         let out =
@@ -526,7 +526,7 @@ pub fn causal_attention(
             let kpanel = tc * ws.hd;
             let ptile = ws_seq * tc;
             pool::parallel_for(slots, &|ci| {
-                // Safety: same per-slot disjointness as the blocked arm,
+                // SAFETY: same per-slot disjointness as the blocked arm,
                 // with the streaming strides (kpanel, ptile, 3·seq stats).
                 let (qh, kt, vt, oh, ot, pt, st) = unsafe {
                     (
@@ -554,7 +554,7 @@ pub fn causal_attention(
                     for t1 in 0..t_len {
                         let inv = 1.0 / l[t1];
                         let dst = (base + t1) * d + head * hd;
-                        // Safety: pair (b, head) owns columns
+                        // SAFETY: pair (b, head) owns columns
                         // [head·hd, (head+1)·hd) of rows [base, base + t_len)
                         // — disjoint across pairs.
                         let out =
@@ -716,7 +716,7 @@ pub fn paged_decode_attention(
     let scp = SendPtr(ws.scores.as_mut_ptr());
     let accp = SendPtr(ws.acc.as_mut_ptr());
     pool::parallel_for(slots, &|ci| {
-        // Safety: staging regions `[ci·ps, (ci+1)·ps)` / `[ci·hd, (ci+1)·hd)`
+        // SAFETY: staging regions `[ci·ps, (ci+1)·ps)` / `[ci·hd, (ci+1)·hd)`
         // are disjoint across chunk indices (ci < slots ≤ ws.slots), and
         // `ws` is borrowed mutably for the whole dispatch.
         let (sc, acc) = unsafe {
@@ -729,7 +729,7 @@ pub fn paged_decode_attention(
             let r = pair / heads;
             let head = pair % heads;
             let q = &qkv[r * w3 + head * hd..r * w3 + head * hd + hd];
-            // Safety: pair (r, head) owns columns [head·hd, (head+1)·hd) of
+            // SAFETY: pair (r, head) owns columns [head·hd, (head+1)·hd) of
             // att row r — disjoint across pairs, each processed once.
             let out = unsafe {
                 std::slice::from_raw_parts_mut(att_ptr.0.add(r * d + head * hd), hd)
@@ -789,7 +789,7 @@ pub fn causal_attention_backward(
     let slot_stride = 7 * panel + ws.seq * ws.seq;
 
     pool::parallel_for(slots, &|ci| {
-        // Safety: slot `ci` owns panels `[ci·slot_stride, (ci+1)·slot_stride)`
+        // SAFETY: slot `ci` owns panels `[ci·slot_stride, (ci+1)·slot_stride)`
         // — disjoint across chunk indices; `ws` is mutably borrowed for the
         // whole dispatch.
         let slot = unsafe {
@@ -843,7 +843,7 @@ pub fn causal_attention_backward(
             kernels::matmul_tn_acc_f32(ds, qh, t_len, t_len, hd, dkh);
             for t1 in 0..t_len {
                 let row = (base + t1) * w3;
-                // Safety: pair (b, head) owns the q/k/v column ranges of its
+                // SAFETY: pair (b, head) owns the q/k/v column ranges of its
                 // head within rows [base, base + t_len) — disjoint across
                 // pairs (every pair is processed exactly once).
                 let (dq, dk, dv) = unsafe {
@@ -908,7 +908,7 @@ pub fn causal_attention_backward_streaming(
     let ws_seq = ws.seq;
 
     pool::parallel_for(slots, &|ci| {
-        // Safety: slot `ci` owns panels `[ci·slot_stride, (ci+1)·slot_stride)`
+        // SAFETY: slot `ci` owns panels `[ci·slot_stride, (ci+1)·slot_stride)`
         // — disjoint across chunk indices; `ws` is mutably borrowed for the
         // whole dispatch.
         let slot = unsafe {
@@ -1040,7 +1040,7 @@ pub fn causal_attention_backward_streaming(
                 // Each key row lives in exactly one tile: scatter dK/dV now.
                 for (jj, t2) in (j0..j0 + jlen).enumerate() {
                     let row = (base + t2) * w3;
-                    // Safety: pair (b, head) owns the k/v column ranges of
+                    // SAFETY: pair (b, head) owns the k/v column ranges of
                     // its head within rows [base, base + t_len) — disjoint
                     // across pairs; each (pair, key row) is written once.
                     let (dk, dv) = unsafe {
@@ -1056,7 +1056,7 @@ pub fn causal_attention_backward_streaming(
             }
             for t1 in 0..t_len {
                 let row = (base + t1) * w3;
-                // Safety: as above — pair-owned query columns, written once.
+                // SAFETY: as above — pair-owned query columns, written once.
                 let dq = unsafe { std::slice::from_raw_parts_mut(dqkv_ptr.0.add(row + qo), hd) };
                 dq.copy_from_slice(&dqh[t1 * hd..(t1 + 1) * hd]);
             }

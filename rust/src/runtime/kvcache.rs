@@ -100,8 +100,11 @@ impl PagedKvCache {
             pool_k: AlignedVec::zeroed(n_pages * page_size * hd),
             pool_v: AlignedVec::zeroed(n_pages * page_size * hd),
             free,
+            // lint: allow(hot_path) -- page table sized once at pool construction.
             table: vec![NO_PAGE; max_slots * layers * heads * pages_per_stream],
+            // lint: allow(hot_path) -- per-slot lengths sized once at pool construction.
             len: vec![0; max_slots],
+            // lint: allow(hot_path) -- per-slot capacities sized once at pool construction.
             cap: vec![None; max_slots],
         }
     }
@@ -149,6 +152,7 @@ impl PagedKvCache {
 
     /// Reserved token capacity of an active `slot`.
     pub fn capacity(&self, slot: usize) -> usize {
+        // lint: allow(hot_path) -- free-slot misuse is a caller bug; surfacing it beats silent reads.
         self.cap[slot].expect("capacity() on a free slot")
     }
 
@@ -173,6 +177,7 @@ impl PagedKvCache {
             for head in 0..self.heads {
                 let base = self.stream_base(slot, layer, head);
                 for p in 0..per_stream {
+                    // lint: allow(hot_path) -- reserve() counted pages against the free list above; an empty pop is a bookkeeping bug.
                     self.table[base + p] = self.free.pop().expect("free list undercounted");
                 }
             }
@@ -184,6 +189,7 @@ impl PagedKvCache {
 
     /// Return every page of `slot` to the pool and free the slot.
     pub fn release(&mut self, slot: usize) {
+        // lint: allow(hot_path) -- releasing a free slot is a double-free; panicking is the contract.
         let cap = self.cap[slot].expect("release() on a free slot");
         let per_stream = cap.div_ceil(self.page_size);
         for layer in 0..self.layers {
@@ -210,6 +216,7 @@ impl PagedKvCache {
         let d = self.heads * self.hd;
         debug_assert!(k.len() >= d && v.len() >= d);
         debug_assert!(
+            // lint: allow(hot_path) -- inside debug_assert!: compiled out of release decode.
             pos < self.cap[slot].expect("write_kv() on a free slot"),
             "position {pos} outside the slot's reservation"
         );
@@ -226,6 +233,7 @@ impl PagedKvCache {
 
     /// Advance `slot`'s stream length by `n` freshly written tokens.
     pub fn advance(&mut self, slot: usize, n: usize) {
+        // lint: allow(hot_path) -- advancing a free slot is a caller bug; surfacing it beats corrupting the table.
         let cap = self.cap[slot].expect("advance() on a free slot");
         assert!(self.len[slot] + n <= cap, "stream overran its reservation");
         self.len[slot] += n;
@@ -251,6 +259,7 @@ impl PagedKvCache {
     /// Buffer base pointers + free-list capacity — the decode loop's
     /// zero-allocation pin (same contract as `Scratch::fingerprint`).
     pub fn fingerprint(&self) -> Vec<usize> {
+        // lint: allow(hot_path) -- fingerprint() is a test/debug pin, not on the decode path.
         vec![
             self.pool_k.as_ptr() as usize,
             self.pool_v.as_ptr() as usize,

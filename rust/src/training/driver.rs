@@ -168,7 +168,7 @@ pub fn student_accuracy(
                 let arg = logits
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .unwrap()
                     .0;
                 total += 1;

@@ -189,7 +189,7 @@ pub fn eval_answer_accuracy(
             let arg = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             total += 1;

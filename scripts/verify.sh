@@ -29,6 +29,9 @@ cargo test --release -q --test fuzz_ingest
 echo "== listener e2e (release: sockets ≡ in-process replay, shed, drain, adversarial streams) =="
 cargo test --release -q --test listener_serving
 
+echo "== repro lint (static invariants R1-R4 over rust/src) =="
+cargo run --release --bin repro -- lint
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   echo "== kernel bench smoke (BENCH_QUICK=1) =="
   BENCH_QUICK=1 cargo bench -p flexrank --bench kernels
