@@ -7,13 +7,15 @@
 //! Run:
 //!   cargo run --release --example elastic_serving
 //!   cargo run --release --example elastic_serving -- --policy adaptive --rate 400
+//!   cargo run --release --example elastic_serving -- --policy elastic \
+//!       --scenario bursty --queue-cap 32 --rate 2000
 
 use anyhow::Result;
 use flexrank::cli::Args;
 use flexrank::coordinator::{
     load_tier_profiles, serve_trace, serving_student, PolicyKind, ServeCfg, SubmodelRegistry,
 };
-use flexrank::data::{Corpus, TraceCfg, TraceGen};
+use flexrank::data::{ArrivalShape, Corpus, TenantCfg, TraceCfg, TraceGen};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -25,7 +27,7 @@ fn main() -> Result<()> {
     // present, uniform budget ranks otherwise.
     let student = serving_student(&cfg, args.u64_or("seed", 7)?)?;
     let profiles = load_tier_profiles(&cfg, &student)?;
-    let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_deref())?;
+    let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_ref())?;
 
     let corpus = Corpus::generate(200_000, 5);
     let trace = TraceGen::new(
@@ -35,22 +37,27 @@ fn main() -> Result<()> {
             seq_len: cfg.seq_len,
             vocab: cfg.vocab,
             seed: args.u64_or("seed", 7)?,
+            // Arrival scenario + optional multi-tenant budget mix — the
+            // load shapes the elastic controller is built to ride out.
+            shape: ArrivalShape::parse(args.get_or("scenario", "steady"))?,
+            tenants: if args.flag("tenants") { TenantCfg::default_mix() } else { Vec::new() },
             ..Default::default()
         },
         &corpus.heldout,
-    )
+    )?
     .generate();
 
-    let policy = match args.get_or("policy", "static") {
-        "adaptive" => PolicyKind::Adaptive,
-        _ => PolicyKind::Static,
-    };
     let report = serve_trace(
         &mut registry,
         trace,
         &ServeCfg {
-            policy,
+            policy: PolicyKind::parse(args.get_or("policy", "static"))?,
             max_wait_ms: args.f64_or("max-wait-ms", 4.0)?,
+            // 0 = unbounded queue (serve everything); a positive cap turns
+            // on explicit shed and anchors the demote-before-shed band.
+            queue_cap: args.usize_or("queue-cap", 0)?,
+            dwell_ms: args.f64_or("dwell-ms", 25.0)?,
+            deadline_ms: args.f64_or("deadline-ms", 0.0)?,
             ..Default::default()
         },
     )?;

@@ -48,12 +48,12 @@ fn main() -> anyhow::Result<()> {
                     ..Default::default()
                 },
                 &corpus.heldout,
-            )
+            )?
             .generate();
             let report = serve_trace(
                 &mut registry,
                 trace,
-                &ServeCfg { policy, max_wait_ms: 4.0, replay_speed: 1.0 },
+                &ServeCfg { policy, max_wait_ms: 4.0, replay_speed: 1.0, ..Default::default() },
             )?;
             // Aggregate across tiers (exec_p50 is the kernel-path number
             // the pooled kernels + blocked attention move at batch ≥ 4).
@@ -100,12 +100,12 @@ fn main() -> anyhow::Result<()> {
                 ..Default::default()
             },
             &corpus.heldout,
-        )
+        )?
         .generate();
         let report = serve_trace_decode(
             &mut registry,
             trace,
-            &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0 },
+            &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0, ..Default::default() },
         )?;
         let d = report.decode_latency();
         let p = report.prefill_latency();
@@ -121,6 +121,89 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Quality-vs-load Pareto: the same overload trace per arrival scenario,
+    // served under each routing policy with an explicit queue cap (shed on)
+    // and a fast controller dwell.  Rows are the Pareto coordinates: the
+    // served-quality proxy (request-weighted tier calibration error — lower
+    // is better), the shed/demotion rates, the latency tail, and how often
+    // the elastic controller actually moved.  The watchpoint: under the
+    // bursty overload, Elastic must shed strictly less than Adaptive at an
+    // equal-or-better p99 (demote-before-shed doing its job), at the cost
+    // of a higher loss proxy while demoted.
+    println!();
+    println!(
+        "pareto    scenario     policy     loss_proxy  shed%   demote%  p50(ms)  p99(ms)  switches"
+    );
+    let pareto_cap = 2 * registry.batch();
+    let pareto_rate = if quick { 4000.0 } else { 8000.0 };
+    for scenario in ["steady", "diurnal", "bursty", "adversarial"] {
+        let shape = flexrank::data::ArrivalShape::parse(scenario)?;
+        let mut bursty_rows: Vec<(PolicyKind, f64, f64)> = Vec::new();
+        for policy in [PolicyKind::Static, PolicyKind::Adaptive, PolicyKind::Elastic] {
+            let trace = TraceGen::new(
+                TraceCfg {
+                    n_requests: n,
+                    rate: pareto_rate,
+                    seq_len: cfg.seq_len,
+                    vocab: cfg.vocab,
+                    seed: 7,
+                    shape,
+                    tenants: flexrank::data::TenantCfg::default_mix(),
+                    ..Default::default()
+                },
+                &corpus.heldout,
+            )?
+            .generate();
+            let report = serve_trace(
+                &mut registry,
+                trace,
+                &ServeCfg {
+                    policy,
+                    max_wait_ms: 4.0,
+                    replay_speed: 1.0,
+                    queue_cap: pareto_cap,
+                    dwell_ms: 2.0,
+                    ..Default::default()
+                },
+            )?;
+            let mut all: Vec<f64> = Vec::new();
+            for t in 0..report.tier_budgets.len() {
+                all.extend(report.metrics.latency_ms[t].iter());
+            }
+            let stats = flexrank::coordinator::LatencyStats::from_samples(&all);
+            println!(
+                "{:>8}  {scenario:>11}  {:>8}  {:>10.4}  {:>5.1}  {:>7.1}  {:>7.1}  {:>7.1}  {:>8}",
+                "pareto",
+                policy.label(),
+                report.eval_loss_proxy(),
+                report.shed_rate() * 100.0,
+                report.metrics.demotion_rate() * 100.0,
+                stats.p50_ms,
+                stats.p99_ms,
+                report.tier_switches,
+            );
+            if scenario == "bursty" {
+                bursty_rows.push((policy, report.shed_rate(), stats.p99_ms));
+            }
+        }
+        if let (Some(adap), Some(elas)) = (
+            bursty_rows.iter().find(|r| r.0 == PolicyKind::Adaptive),
+            bursty_rows.iter().find(|r| r.0 == PolicyKind::Elastic),
+        ) {
+            let dominated = elas.1 < adap.1 && elas.2 <= adap.2 * 1.05
+                || elas.1 <= adap.1 && elas.2 < adap.2;
+            println!(
+                "pareto verdict (bursty overload): elastic shed {:.1}% p99 {:.1}ms vs \
+                 adaptive shed {:.1}% p99 {:.1}ms -> {}",
+                elas.1 * 100.0,
+                elas.2,
+                adap.1 * 100.0,
+                adap.2,
+                if dominated { "elastic dominates" } else { "no dominance (check load)" }
+            );
+        }
+    }
+
     // Online listener front-end over loopback: bursty multi-tenant clients
     // pipeline framed requests through real sockets; the headline is
     // sustained req/s and the end-to-end (send → response frame) latency
@@ -128,7 +211,7 @@ fn main() -> anyhow::Result<()> {
     println!();
     println!("listener  tenants  reqs  ok  shed  req/s  p50(ms)  p99(ms)");
     let lcfg = ListenCfg {
-        serve: ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0 },
+        serve: ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0, ..Default::default() },
         max_connections: 16,
         queue_cap: 64,
         conn_pipeline: 8,

@@ -45,6 +45,7 @@ use self::lexer::{lex, Kind, Tok};
 const HOT_MODULES: &[&str] = &[
     "coordinator::listener",
     "coordinator::batcher",
+    "coordinator::controller",
     "json::pull",
     "data::trace::wire",
     "runtime::kvcache",

@@ -155,6 +155,46 @@ mod tests {
     }
 
     #[test]
+    fn serving_pressure_knobs_default_parse_and_reject_inverted() {
+        // Configs without the knobs keep the derive-from-queue-cap defaults.
+        let mc = load_model_config("tiny").unwrap();
+        assert_eq!(mc.serve_queue_cap, 0);
+        assert_eq!(mc.serve_pressure_band(), None);
+        assert_eq!(mc.serve_dwell_ms, 25.0);
+
+        let good = std::fs::read_to_string(
+            crate::repo_root().join("configs").join("model_tiny.json"),
+        )
+        .unwrap();
+        let tuned = good.replace(
+            "\"seq_len\": 16,",
+            "\"seq_len\": 16,\n  \"serve_queue_cap\": 48,\n  \"serve_pressure_hi\": 18,\n  \
+             \"serve_pressure_lo\": 3,\n  \"serve_dwell_ms\": 10.0,",
+        );
+        assert!(tuned.contains("serve_queue_cap"), "fixture edit failed");
+        let mc = ModelConfig::from_json(&json::parse(&tuned).unwrap()).unwrap();
+        assert_eq!(mc.serve_queue_cap, 48);
+        assert_eq!(mc.serve_pressure_band(), Some((18, 3)));
+        assert_eq!(mc.serve_dwell_ms, 10.0);
+
+        // Regression: an inverted band (lo >= hi) silently never demoted —
+        // now it's a parse-time error, as is a band at/above the shed cap.
+        let inverted = good.replace(
+            "\"seq_len\": 16,",
+            "\"seq_len\": 16,\n  \"serve_pressure_hi\": 4,\n  \"serve_pressure_lo\": 24,",
+        );
+        let err = ModelConfig::from_json(&json::parse(&inverted).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("inverted band"), "{err}");
+        let above_cap = good.replace(
+            "\"seq_len\": 16,",
+            "\"seq_len\": 16,\n  \"serve_queue_cap\": 16,\n  \"serve_pressure_hi\": 16,\n  \
+             \"serve_pressure_lo\": 2,",
+        );
+        let err = ModelConfig::from_json(&json::parse(&above_cap).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("before admission sheds"), "{err}");
+    }
+
+    #[test]
     fn bad_head_split_fails_at_parse_time() {
         // d_model % n_heads != 0 must be rejected when the config is
         // loaded, not at the first forward (the check used to live,

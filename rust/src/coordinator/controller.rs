@@ -1,0 +1,555 @@
+//! Elastic routing layer: input-difficulty router + hysteresis load
+//! controller.
+//!
+//! This is the stateful half of tier selection that `coordinator::policy`
+//! admits it lacks.  Two cooperating pieces sit behind one facade,
+//! [`TierRouter`]:
+//!
+//! * **Input-difficulty router** — when per-tier calibration errors are
+//!   available (the `error` field written next to each tier in
+//!   `profiles.json` by the DP chain, or the backend's budget proxy), each
+//!   SLO class gets a quality bar interpolated across the tier error range
+//!   and a request routes to the *smallest* tier meeting its bar.  Without
+//!   a signal it falls back to the positional SLO map of
+//!   [`Policy::base_tier`].  The explicit-budget override is preserved
+//!   verbatim — a budget-contracted request is **never** demoted.
+//!
+//! * **Elastic load controller** — [`ElasticController`], a dwell-gated
+//!   level machine over the queue-depth [`PressureBand`] plus a fixed-size
+//!   latency ring (fraction of recent request latencies over the SLO
+//!   deadline).  Sustained pressure raises the demotion level one tier per
+//!   dwell window; sustained calm lowers it.  Distinct enter/exit
+//!   thresholds + the minimum dwell time are the hysteresis: a depth
+//!   oscillating around one threshold changes the level at most once per
+//!   dwell window instead of flapping per request.  Demotion engages well
+//!   below `queue_cap` (see [`PressureBand::from_queue_cap`]), so traffic
+//!   degrades to lower-rank profiles *before* the CAS admission bound ever
+//!   answers `Shed` — demote-before-shed, pinned in ROADMAP §Invariants.
+//!
+//! This module is on the per-request routing path and therefore in the R2
+//! `hot_path` lint set: no panics, no allocation after construction.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::data::trace::{Request, Slo};
+
+use super::policy::{Policy, PolicyKind, PressureBand};
+
+/// Recent-latency window (requests) feeding the controller's SLO signal.
+const LAT_WINDOW: usize = 64;
+/// Fraction of the latency window over the deadline that counts as
+/// pressure — a tail-heavy proxy for "p99 is violating the SLO" that needs
+/// neither a sort nor an allocation on the hot path.
+const LAT_HOT_FRAC: f64 = 0.25;
+
+/// Per-SLO quality bar as a fraction of the tier error range:
+/// `bar = err_best + frac · (err_worst - err_best)`.  Interactive accepts
+/// the full range (smallest tier), Quality essentially demands the best.
+const SLO_ERROR_FRAC: [f64; 3] = [1.0, 0.4, 0.05];
+
+/// Routing outcome for one request: the tier its SLO/difficulty/budget
+/// mapping asked for, and the tier it is actually served on after any
+/// load-based demotion.  `requested != served` is a demotion, surfaced by
+/// `Metrics::demotion_rate`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub requested: usize,
+    pub served: usize,
+}
+
+/// Stateful hysteresis controller: demotion level in `0..n_tiers`, raised
+/// under sustained pressure and lowered under sustained calm, with at most
+/// one level change per dwell window.
+#[derive(Debug, Clone)]
+pub struct ElasticController {
+    band: PressureBand,
+    dwell: Duration,
+    n_tiers: usize,
+    level: usize,
+    last_change: Option<Instant>,
+    switches: u64,
+    /// Preallocated latency ring (ms); `lat_len` valid samples, cursor at
+    /// `lat_pos`.  Zero-length when the deadline signal is disabled.
+    lat_ring: Vec<f64>,
+    lat_len: usize,
+    lat_pos: usize,
+    lat_over: usize,
+    /// SLO deadline (ms) for the latency signal; `<= 0` disables it.
+    deadline_ms: f64,
+}
+
+impl ElasticController {
+    pub fn new(
+        n_tiers: usize,
+        band: PressureBand,
+        dwell: Duration,
+        deadline_ms: f64,
+    ) -> Result<ElasticController> {
+        ensure!(n_tiers >= 1, "controller needs at least one tier");
+        let cap = if deadline_ms > 0.0 { LAT_WINDOW } else { 0 };
+        let mut lat_ring = Vec::with_capacity(cap);
+        lat_ring.resize(cap, 0.0);
+        Ok(ElasticController {
+            band,
+            dwell,
+            n_tiers,
+            level: 0,
+            last_change: None,
+            switches: 0,
+            lat_ring,
+            lat_len: 0,
+            lat_pos: 0,
+            lat_over: 0,
+            deadline_ms,
+        })
+    }
+
+    /// Current demotion level (0 = serving requested tiers).
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Total level changes since construction (the flapping metric).
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Record one finished request's latency into the ring.
+    pub fn observe_latency(&mut self, ms: f64) {
+        if self.lat_ring.is_empty() {
+            return;
+        }
+        if self.lat_len == self.lat_ring.len() {
+            // Evict the sample the cursor is about to overwrite.
+            if self.lat_ring[self.lat_pos] > self.deadline_ms {
+                self.lat_over -= 1;
+            }
+        } else {
+            self.lat_len += 1;
+        }
+        self.lat_ring[self.lat_pos] = ms;
+        if ms > self.deadline_ms {
+            self.lat_over += 1;
+        }
+        self.lat_pos = (self.lat_pos + 1) % self.lat_ring.len();
+    }
+
+    /// Whether the latency window currently signals SLO pressure.
+    fn latency_hot(&self) -> bool {
+        self.lat_len > 0 && (self.lat_over as f64) > LAT_HOT_FRAC * self.lat_len as f64
+    }
+
+    fn dwell_elapsed(&self, now: Instant) -> bool {
+        match self.last_change {
+            None => true,
+            Some(t) => now.saturating_duration_since(t) >= self.dwell,
+        }
+    }
+
+    /// Feed one load observation; at most one level change per dwell
+    /// window.  Depth at/above the band's `hi` (or a hot latency window)
+    /// raises the demotion level; depth at/below `lo` with a cool latency
+    /// window lowers it.  In between the level holds — that dead band plus
+    /// the dwell gate is the hysteresis.
+    pub fn observe(&mut self, now: Instant, queue_depth: usize) {
+        let lat_hot = self.latency_hot();
+        let hot = queue_depth >= self.band.hi() || lat_hot;
+        let calm = queue_depth <= self.band.lo() && !lat_hot;
+        if !self.dwell_elapsed(now) {
+            return;
+        }
+        if hot && self.level + 1 < self.n_tiers {
+            self.level += 1;
+            self.switches += 1;
+            self.last_change = Some(now);
+        } else if calm && self.level > 0 {
+            self.level -= 1;
+            self.switches += 1;
+            self.last_change = Some(now);
+        }
+    }
+}
+
+/// One facade over all three policies.  Static/Adaptive delegate to the
+/// stateless [`Policy`]; Elastic routes the base tier by difficulty signal
+/// and demotes by the controller's level.
+#[derive(Debug, Clone)]
+pub struct TierRouter {
+    policy: Policy,
+    controller: ElasticController,
+    /// Per-SLO base tier from the difficulty signal; mirrors
+    /// `Policy::base_tier` when no signal was supplied.
+    difficulty_base: [usize; 3],
+    /// Whether a real difficulty signal (tier calibration errors) backs
+    /// `difficulty_base`.
+    routed_by_difficulty: bool,
+}
+
+impl TierRouter {
+    /// Build a router.  `tier_errors` is the per-tier calibration error in
+    /// ascending-budget tier order (empty slice = no signal, positional SLO
+    /// map); `dwell` and `deadline_ms` configure the elastic controller
+    /// (ignored for Static/Adaptive).
+    pub fn new(
+        kind: PolicyKind,
+        n_tiers: usize,
+        band: PressureBand,
+        dwell: Duration,
+        deadline_ms: f64,
+        tier_errors: &[f64],
+    ) -> Result<TierRouter> {
+        ensure!(n_tiers >= 1, "router needs at least one tier");
+        let policy = Policy::with_band(kind, n_tiers, band);
+        let controller = ElasticController::new(n_tiers, band, dwell, deadline_ms)?;
+        let use_signal = !tier_errors.is_empty();
+        if use_signal {
+            ensure!(
+                tier_errors.len() == n_tiers,
+                "{} tier errors for {} tiers",
+                tier_errors.len(),
+                n_tiers
+            );
+            ensure!(
+                tier_errors.iter().all(|e| e.is_finite() && *e >= 0.0),
+                "tier errors must be finite and non-negative"
+            );
+        }
+        let mut difficulty_base = [0usize; 3];
+        for (si, slo) in Slo::ALL.iter().enumerate() {
+            difficulty_base[si] = if use_signal {
+                Self::bar_tier(tier_errors, SLO_ERROR_FRAC[si])
+            } else {
+                policy.base_tier(*slo)
+            };
+        }
+        Ok(TierRouter { policy, controller, difficulty_base, routed_by_difficulty: use_signal })
+    }
+
+    /// Convenience: SLO-map router with the band derived from `queue_cap`
+    /// (see [`PressureBand::from_queue_cap`]).
+    pub fn from_queue_cap(
+        kind: PolicyKind,
+        n_tiers: usize,
+        queue_cap: usize,
+        dwell: Duration,
+        deadline_ms: f64,
+        tier_errors: &[f64],
+    ) -> Result<TierRouter> {
+        let band = PressureBand::from_queue_cap(queue_cap);
+        TierRouter::new(kind, n_tiers, band, dwell, deadline_ms, tier_errors)
+    }
+
+    /// Smallest tier whose error meets `bar = best + frac·(worst - best)`.
+    fn bar_tier(errors: &[f64], frac: f64) -> usize {
+        let n = errors.len();
+        let mut worst = errors[0];
+        let mut best = errors[0];
+        for e in errors.iter() {
+            if *e > worst {
+                worst = *e;
+            }
+            if *e < best {
+                best = *e;
+            }
+        }
+        let bar = best + frac * (worst - best);
+        for (t, e) in errors.iter().enumerate() {
+            if *e <= bar {
+                return t;
+            }
+        }
+        n - 1
+    }
+
+    /// The base tier a request of this SLO class asks for, before any
+    /// load-based demotion.
+    pub fn base_tier(&self, slo: Slo) -> usize {
+        self.difficulty_base[slo.code() as usize]
+    }
+
+    /// Whether the base map came from a real calibration-error signal.
+    pub fn routed_by_difficulty(&self) -> bool {
+        self.routed_by_difficulty
+    }
+
+    /// Feed a load observation to the elastic controller (no-op for
+    /// Static/Adaptive).  Call once per scheduling step so the controller
+    /// sees queue depth even between arrivals.
+    pub fn observe(&mut self, now: Instant, queue_depth: usize) {
+        if self.policy.kind == PolicyKind::Elastic {
+            self.controller.observe(now, queue_depth);
+        }
+    }
+
+    /// Feed one finished request's latency (ms) to the controller.
+    pub fn observe_latency(&mut self, ms: f64) {
+        if self.policy.kind == PolicyKind::Elastic {
+            self.controller.observe_latency(ms);
+        }
+    }
+
+    /// Route one request.  Observes the queue depth first (Elastic), then
+    /// maps budget/SLO to a requested tier and applies demotion.
+    pub fn route(&mut self, req: &Request, queue_depth: usize, now: Instant) -> RouteDecision {
+        if let Some(b) = req.budget {
+            // Explicit budget contract: requested == served, never demoted.
+            let t = self.policy.budget_tier(b);
+            return RouteDecision { requested: t, served: t };
+        }
+        match self.policy.kind {
+            PolicyKind::Static | PolicyKind::Adaptive => {
+                let requested = self.policy.base_tier(req.slo);
+                let served = self.policy.select(req, queue_depth);
+                RouteDecision { requested, served }
+            }
+            PolicyKind::Elastic => {
+                self.controller.observe(now, queue_depth);
+                let requested = self.base_tier(req.slo);
+                let served = requested.saturating_sub(self.controller.level());
+                RouteDecision { requested, served }
+            }
+        }
+    }
+
+    /// Total controller level changes (0 for Static/Adaptive).
+    pub fn tier_switches(&self) -> u64 {
+        self.controller.switches()
+    }
+
+    /// Current demotion level (0 for Static/Adaptive).
+    pub fn level(&self) -> usize {
+        if self.policy.kind == PolicyKind::Elastic {
+            self.controller.level()
+        } else {
+            0
+        }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.policy.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn now0() -> Instant {
+        Instant::now()
+    }
+
+    fn req(slo: Slo) -> Request {
+        Request { id: 0, arrival_s: 0.0, slo, tokens: vec![], gen_len: 0, budget: None }
+    }
+
+    fn ctl(n_tiers: usize, dwell_ms: u64) -> ElasticController {
+        ElasticController::new(
+            n_tiers,
+            PressureBand::new(24, 4).unwrap(),
+            Duration::from_millis(dwell_ms),
+            0.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn level_climbs_one_step_per_dwell_window() {
+        let mut c = ctl(4, 10);
+        let t0 = now0();
+        // Sustained overload: depth pinned above hi.  First observation
+        // moves immediately (no prior change), then one step per window.
+        c.observe(t0, 100);
+        assert_eq!(c.level(), 1);
+        c.observe(t0 + Duration::from_millis(1), 100);
+        assert_eq!(c.level(), 1, "dwell must gate the second step");
+        c.observe(t0 + Duration::from_millis(11), 100);
+        assert_eq!(c.level(), 2);
+        c.observe(t0 + Duration::from_millis(22), 100);
+        assert_eq!(c.level(), 3);
+        // Saturates below n_tiers.
+        c.observe(t0 + Duration::from_millis(40), 100);
+        assert_eq!(c.level(), 3);
+        assert_eq!(c.switches(), 3);
+    }
+
+    #[test]
+    fn level_drains_under_sustained_calm() {
+        let mut c = ctl(4, 10);
+        let t0 = now0();
+        c.observe(t0, 100);
+        c.observe(t0 + Duration::from_millis(11), 100);
+        assert_eq!(c.level(), 2);
+        // Dead band: depth between lo and hi holds the level forever.
+        for k in 0..20 {
+            c.observe(t0 + Duration::from_millis(22 + k * 11), 10);
+        }
+        assert_eq!(c.level(), 2);
+        // Calm drains one per window.
+        c.observe(t0 + Duration::from_millis(500), 0);
+        assert_eq!(c.level(), 1);
+        c.observe(t0 + Duration::from_millis(511), 0);
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn latency_signal_raises_pressure() {
+        let mut c = ElasticController::new(
+            4,
+            PressureBand::new(24, 4).unwrap(),
+            Duration::from_millis(10),
+            5.0,
+        )
+        .unwrap();
+        let t0 = now0();
+        // Queue calm but latencies blowing the 5ms deadline.
+        for _ in 0..LAT_WINDOW {
+            c.observe_latency(50.0);
+        }
+        c.observe(t0, 0);
+        assert_eq!(c.level(), 1, "hot latency window must demote");
+        // Deadline-respecting window cools it back down.
+        for _ in 0..LAT_WINDOW {
+            c.observe_latency(1.0);
+        }
+        c.observe(t0 + Duration::from_millis(11), 0);
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn budget_requests_never_demoted() {
+        let mut r = TierRouter::from_queue_cap(
+            PolicyKind::Elastic,
+            4,
+            64,
+            Duration::from_millis(0),
+            0.0,
+            &[],
+        )
+        .unwrap();
+        let t0 = now0();
+        // Drive the controller to max demotion.
+        for k in 0..10 {
+            r.observe(t0 + Duration::from_millis(k), 1000);
+        }
+        assert_eq!(r.level(), 3);
+        let mut q = req(Slo::Quality);
+        q.budget = Some(1.0);
+        let d = r.route(&q, 1000, t0 + Duration::from_millis(20));
+        assert_eq!(d, RouteDecision { requested: 3, served: 3 });
+    }
+
+    #[test]
+    fn difficulty_signal_routes_smallest_adequate_tier() {
+        // DP-style descending chain errors: tier 0 worst, tier 3 best.
+        let errors = [0.9, 0.4, 0.15, 0.05];
+        let r = TierRouter::from_queue_cap(
+            PolicyKind::Elastic,
+            4,
+            64,
+            Duration::from_millis(0),
+            0.0,
+            &errors,
+        )
+        .unwrap();
+        assert!(r.routed_by_difficulty());
+        // Interactive accepts the whole range → smallest tier.
+        assert_eq!(r.base_tier(Slo::Interactive), 0);
+        // Quality's bar is 0.05 + 0.05·0.85 ≈ 0.0925 → only tier 3.
+        assert_eq!(r.base_tier(Slo::Quality), 3);
+        // Standard sits between, and never above quality.
+        let s = r.base_tier(Slo::Standard);
+        assert!(s >= r.base_tier(Slo::Interactive) && s <= r.base_tier(Slo::Quality));
+    }
+
+    #[test]
+    fn no_signal_falls_back_to_slo_map() {
+        let r = TierRouter::from_queue_cap(
+            PolicyKind::Elastic,
+            4,
+            64,
+            Duration::from_millis(0),
+            0.0,
+            &[],
+        )
+        .unwrap();
+        assert!(!r.routed_by_difficulty());
+        assert_eq!(r.base_tier(Slo::Interactive), 0);
+        assert_eq!(r.base_tier(Slo::Standard), 1);
+        assert_eq!(r.base_tier(Slo::Quality), 3);
+    }
+
+    #[test]
+    fn bad_signal_rejected() {
+        let mk = |errs: &[f64]| {
+            TierRouter::from_queue_cap(
+                PolicyKind::Elastic,
+                4,
+                64,
+                Duration::from_millis(0),
+                0.0,
+                errs,
+            )
+        };
+        assert!(mk(&[0.5, 0.4]).is_err(), "wrong length");
+        assert!(mk(&[0.5, 0.4, f64::NAN, 0.1]).is_err(), "NaN");
+        assert!(mk(&[0.5, 0.4, -0.1, 0.0]).is_err(), "negative");
+    }
+
+    #[test]
+    fn static_and_adaptive_delegate_to_stateless_policy() {
+        let mut r = TierRouter::from_queue_cap(
+            PolicyKind::Adaptive,
+            4,
+            64,
+            Duration::from_millis(0),
+            0.0,
+            &[],
+        )
+        .unwrap();
+        let p = Policy::new(PolicyKind::Adaptive, 4);
+        let t0 = now0();
+        for depth in [0usize, 10, 30, 100] {
+            for slo in Slo::ALL {
+                let d = r.route(&req(slo), depth, t0);
+                assert_eq!(d.served, p.select(&req(slo), depth));
+                assert_eq!(d.requested, p.base_tier(slo));
+            }
+        }
+        assert_eq!(r.tier_switches(), 0);
+    }
+
+    #[test]
+    fn property_settled_level_monotone_in_sustained_load() {
+        // Monotonicity: a strictly heavier sustained load never settles at
+        // a lower demotion level.
+        crate::prop::forall(
+            143,
+            60,
+            |rng| {
+                let n = 2 + rng.below(4);
+                let d1 = rng.below(120);
+                let d2 = d1 + rng.below(120);
+                (n, d1, d2)
+            },
+            |(n, d1, d2)| {
+                let settle = |depth: usize| {
+                    let mut c = ctl(*n, 5);
+                    let t0 = now0();
+                    for k in 0..32u64 {
+                        c.observe(t0 + Duration::from_millis(k * 6), depth);
+                    }
+                    c.level()
+                };
+                let (l1, l2) = (settle(*d1), settle(*d2));
+                if l1 > l2 {
+                    return Err(format!(
+                        "depth {d1}→level {l1} but heavier depth {d2}→level {l2} (n={n})"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

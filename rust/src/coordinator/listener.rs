@@ -46,9 +46,10 @@ use crate::json::{self, Value};
 use crate::runtime::ServingBackend;
 
 use super::batcher::DynamicBatcher;
+use super::controller::TierRouter;
 use super::metrics::LatencyStats;
-use super::policy::Policy;
-use super::server::ServeCfg;
+use super::policy::PressureBand;
+use super::server::{backend_tier_errors, ServeCfg};
 
 /// Listener configuration on top of the serving knobs.
 #[derive(Debug, Clone)]
@@ -165,6 +166,11 @@ pub struct ListenReport {
     /// End-to-end latency samples (ms), enqueue → reply handed off.
     pub latency_ms: Vec<f64>,
     pub tier_requests: Vec<usize>,
+    /// Requests served below the tier their SLO/difficulty asked for —
+    /// the elastic controller's demote-before-shed work.
+    pub demotions: usize,
+    /// Elastic controller level changes over the run (0 for static/adaptive).
+    pub tier_switches: u64,
 }
 
 impl ListenReport {
@@ -193,6 +199,10 @@ impl ListenReport {
              fingerprint drift {}",
             l.p50_ms, l.p95_ms, l.p99_ms, self.ingest_fingerprint_drift
         );
+        println!(
+            "routing: demotions {}  tier switches {}",
+            self.demotions, self.tier_switches
+        );
         for (i, &n) in self.tier_requests.iter().enumerate() {
             println!("tier {i}: {n} reqs");
         }
@@ -218,6 +228,8 @@ impl ListenReport {
             ("latency_p50_ms", json::finite_num(l.p50_ms)),
             ("latency_p95_ms", json::finite_num(l.p95_ms)),
             ("latency_p99_ms", json::finite_num(l.p99_ms)),
+            ("demotions", Value::Num(self.demotions as f64)),
+            ("tier_switches", Value::Num(self.tier_switches as f64)),
             (
                 "tier_requests",
                 Value::Arr(
@@ -266,7 +278,23 @@ impl Listener {
         );
         let n_tiers = backend.n_tiers();
         let seq = backend.seq_len();
-        let policy = Policy::new(self.cfg.serve.policy, n_tiers);
+        // The listener's admission bound is its own `queue_cap`, so unless
+        // an explicit band override is set, the demote-before-shed band is
+        // anchored to *that* cap — demotion pressure always engages below
+        // the depth at which `try_admit` starts answering Shed.
+        let band = match self.cfg.serve.pressure {
+            Some(b) => b,
+            None => PressureBand::from_queue_cap(self.cfg.queue_cap),
+        };
+        let tier_errors = backend_tier_errors(backend);
+        let mut router = TierRouter::new(
+            self.cfg.serve.policy,
+            n_tiers,
+            band,
+            Duration::from_secs_f64(self.cfg.serve.dwell_ms.max(0.0) / 1e3),
+            self.cfg.serve.deadline_ms,
+            &tier_errors,
+        )?;
         let base = Duration::from_secs_f64(self.cfg.serve.max_wait_ms / 1e3);
         let mut batcher =
             DynamicBatcher::with_tier_waits(backend.batch(), tier_waits(base, n_tiers));
@@ -310,6 +338,7 @@ impl Listener {
         let mut tier_requests = vec![0usize; n_tiers];
         // lint: allow(hot_path) -- latency samples; serving-loop bookkeeping, amortized.
         let mut latency_ms: Vec<f64> = Vec::new();
+        let mut demotions = 0usize;
         let (mut requests_done, mut steps) = (0usize, 0usize);
         let (mut tokens_prefilled, mut tokens_generated) = (0usize, 0usize);
 
@@ -338,7 +367,7 @@ impl Listener {
                 match rx.try_recv() {
                     Ok(item) => {
                         let now = Instant::now();
-                        let tier = policy.select(&item.req, batcher.depth());
+                        let d = router.route(&item.req, batcher.depth(), now);
                         let tag = match free.pop() {
                             Some(i) => {
                                 slab[i] = Some(item.reply);
@@ -349,8 +378,11 @@ impl Listener {
                                 slab.len() - 1
                             }
                         };
-                        tier_requests[tier] += 1;
-                        batcher.push_tagged(tier, item.req, now, tag as u64);
+                        tier_requests[d.served] += 1;
+                        if d.served < d.requested {
+                            demotions += 1;
+                        }
+                        batcher.push_tagged(d.served, item.req, now, tag as u64);
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
@@ -359,6 +391,10 @@ impl Listener {
                     }
                 }
             }
+            // The controller watches the post-drain depth every loop pass,
+            // so pressure is observed even when no request arrives (drain
+            // phases recover the level once the queue empties).
+            router.observe(Instant::now(), batcher.depth());
 
             // Admission between decode steps: deadline-expired tiers first
             // (per-tier SLO waits), otherwise the oldest queue head — the
@@ -417,7 +453,9 @@ impl Listener {
                 }
                 if gen_len <= 1 {
                     backend.release_slot(slot);
-                    latency_ms.push(enqueued.elapsed().as_secs_f64() * 1e3);
+                    let ms = enqueued.elapsed().as_secs_f64() * 1e3;
+                    latency_ms.push(ms);
+                    router.observe_latency(ms);
                     requests_done += 1;
                     finish(
                         &mut slab,
@@ -487,7 +525,9 @@ impl Listener {
                 if active[i].remaining == 0 {
                     let a = active.swap_remove(i);
                     backend.release_slot(a.slot);
-                    latency_ms.push(a.enqueued.elapsed().as_secs_f64() * 1e3);
+                    let ms = a.enqueued.elapsed().as_secs_f64() * 1e3;
+                    latency_ms.push(ms);
+                    router.observe_latency(ms);
                     requests_done += 1;
                     finish(
                         &mut slab,
@@ -516,6 +556,8 @@ impl Listener {
             wall_s,
             latency_ms,
             tier_requests,
+            demotions,
+            tier_switches: router.tier_switches(),
         })
     }
 }
@@ -1109,9 +1151,13 @@ mod tests {
             wall_s: f64::INFINITY, // degenerate timing must still be JSON
             latency_ms: vec![1.0, 2.0],
             tier_requests: vec![30, 10],
+            demotions: 4,
+            tier_switches: 3,
         };
         let parsed = crate::json::parse(&report.to_json()).expect("must re-parse");
         assert_eq!(parsed.get("requests").unwrap().as_f64().unwrap(), 40.0);
         assert_eq!(parsed.get("wall_s").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(parsed.get("demotions").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(parsed.get("tier_switches").unwrap().as_f64().unwrap(), 3.0);
     }
 }

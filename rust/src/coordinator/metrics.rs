@@ -50,6 +50,14 @@ pub struct Metrics {
     pub occupancy: Vec<f64>,
     pub batches: usize,
     pub requests_done: usize,
+    /// Requests whose routing *asked* for each tier (SLO/difficulty/budget
+    /// mapping, before load-based demotion).
+    pub requested_by_tier: Vec<usize>,
+    /// Requests actually *served* on each tier after demotion.
+    pub served_by_tier: Vec<usize>,
+    /// Requests served below their requested tier — the demotion count the
+    /// old served-tier-only attribution made invisible.
+    pub demotions: usize,
 }
 
 impl Metrics {
@@ -60,6 +68,9 @@ impl Metrics {
             occupancy: Vec::new(),
             batches: 0,
             requests_done: 0,
+            requested_by_tier: vec![0; n_tiers],
+            served_by_tier: vec![0; n_tiers],
+            demotions: 0,
         }
     }
 
@@ -73,10 +84,44 @@ impl Metrics {
     ) {
         self.batches += 1;
         self.requests_done += batch_fill;
-        self.occupancy.push(batch_fill as f64 / batch_cap as f64);
+        // A zero-capacity batch carries no occupancy information; pushing
+        // `fill / 0` would feed NaN straight into mean_occupancy.
+        if batch_cap > 0 {
+            self.occupancy.push(batch_fill as f64 / batch_cap as f64);
+        }
         self.exec_ms[tier].push(exec.as_secs_f64() * 1e3);
         for l in per_request_latency {
             self.latency_ms[tier].push(l.as_secs_f64() * 1e3);
+        }
+    }
+
+    /// Record one routing decision: the tier the request asked for and the
+    /// tier it was placed on.  `served < requested` counts as a demotion.
+    pub fn record_route(&mut self, requested: usize, served: usize) {
+        if let Some(c) = self.requested_by_tier.get_mut(requested) {
+            *c += 1;
+        }
+        if let Some(c) = self.served_by_tier.get_mut(served) {
+            *c += 1;
+        }
+        if served < requested {
+            self.demotions += 1;
+        }
+    }
+
+    /// Total routed requests (route decisions observed at arrival — may
+    /// exceed `requests_done` while requests are still in flight).
+    pub fn routed(&self) -> usize {
+        self.requested_by_tier.iter().sum()
+    }
+
+    /// Fraction of routed requests served below their requested tier.
+    pub fn demotion_rate(&self) -> f64 {
+        let routed = self.routed();
+        if routed == 0 {
+            0.0
+        } else {
+            self.demotions as f64 / routed as f64
         }
     }
 
@@ -152,5 +197,46 @@ mod tests {
         assert!((m.mean_occupancy() - 0.75).abs() < 1e-12);
         assert_eq!(m.tier_latency(1).count, 3);
         assert_eq!(m.tier_latency(0).count, 0);
+    }
+
+    #[test]
+    fn zero_batch_cap_does_not_poison_occupancy() {
+        // Regression: batch_fill / 0 pushed NaN into the occupancy series,
+        // and NaN propagates through mean_occupancy forever after.
+        let mut m = Metrics::new(1);
+        m.record_batch(0, 2, 0, Duration::from_millis(1), &[]);
+        assert!(m.mean_occupancy().is_finite());
+        assert_eq!(m.mean_occupancy(), 0.0);
+        m.record_batch(0, 2, 4, Duration::from_millis(1), &[]);
+        assert!((m.mean_occupancy() - 0.5).abs() < 1e-12);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.requests_done, 4);
+    }
+
+    #[test]
+    fn route_records_requested_vs_served() {
+        let mut m = Metrics::new(4);
+        m.record_route(3, 3); // served where asked
+        m.record_route(3, 1); // demoted two tiers
+        m.record_route(0, 0);
+        m.record_route(2, 1); // demoted one tier
+        assert_eq!(m.requested_by_tier, vec![1, 0, 1, 2]);
+        assert_eq!(m.served_by_tier, vec![1, 2, 0, 1]);
+        assert_eq!(m.demotions, 2);
+        assert_eq!(m.routed(), 4);
+        assert!((m.demotion_rate() - 0.5).abs() < 1e-12);
+        // Promotion (served above requested) is not a demotion.
+        m.record_route(0, 3);
+        assert_eq!(m.demotions, 2);
+        // Out-of-range tiers are ignored rather than panicking.
+        m.record_route(99, 99);
+        assert_eq!(m.routed(), 5, "out-of-range decision must not count");
+    }
+
+    #[test]
+    fn empty_metrics_demotion_rate_is_zero() {
+        let m = Metrics::new(2);
+        assert_eq!(m.demotion_rate(), 0.0);
+        assert_eq!(m.routed(), 0);
     }
 }

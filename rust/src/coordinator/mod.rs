@@ -16,6 +16,7 @@
 //! (`linalg::pool`) inside each forward.
 
 mod batcher;
+mod controller;
 mod listener;
 mod metrics;
 mod policy;
@@ -23,12 +24,13 @@ mod registry;
 mod server;
 
 pub use batcher::{DynamicBatcher, Pending};
+pub use controller::{ElasticController, RouteDecision, TierRouter};
 pub use listener::{tier_waits, ListenCfg, ListenReport, Listener, ShutdownHandle};
 pub use metrics::{LatencyStats, Metrics};
-pub use policy::{Policy, PolicyKind};
+pub use policy::{Policy, PolicyKind, PressureBand};
 #[cfg(feature = "pjrt")]
 pub use registry::{PjrtRegistry, PjrtServing};
-pub use registry::{load_tier_profiles, SubmodelRegistry, Tier};
+pub use registry::{load_tier_profiles, SubmodelRegistry, Tier, TierProfiles};
 pub use server::{
     ingest_bound, serve_trace, serve_trace_decode, DecodeReport, ServeCfg, ServeReport,
 };
@@ -68,8 +70,10 @@ pub fn serving_student(cfg: &crate::runtime::ModelConfig, seed: u64) -> Result<P
     student_from_factors(cfg, &teacher, &factors)
 }
 
-/// `repro serve [--requests N] [--rate R] [--policy static|adaptive]
-/// [--config base|tiny] [--backend native|pjrt]`
+/// `repro serve [--requests N] [--rate R] [--policy static|adaptive|elastic]
+/// [--scenario steady|diurnal|bursty|adversarial] [--tenants] [--queue-cap N]
+/// [--dwell-ms MS] [--deadline-ms MS] [--config base|tiny]
+/// [--backend native|pjrt]`
 ///
 /// Builds the requested [`ServingBackend`] and drives it through the
 /// backend-agnostic serving stack — native kernels by default, the PJRT
@@ -99,10 +103,14 @@ pub fn run_cli(args: &Args) -> Result<()> {
     // for this config *and* this student; uniform budget profiles otherwise.
     let profiles = load_tier_profiles(&cfg, &student)?;
     match &profiles {
-        Some(p) => eprintln!("[serve] using {} DP-selected tier profiles from profiles.json", p.len()),
+        Some(p) => eprintln!(
+            "[serve] using {} DP-selected tier profiles from profiles.json \
+             (difficulty signal: per-tier calibration error)",
+            p.profiles.len()
+        ),
         None => eprintln!("[serve] no DP profiles; serving uniform budget ranks"),
     }
-    let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_deref())
+    let mut registry = SubmodelRegistry::load_native(&cfg, &student, profiles.as_ref())
         .context("registry load")?;
     serve_cli_on(&mut registry, &cfg, args, seed)
 }
@@ -120,7 +128,7 @@ fn serve_cli_on<B: ServingBackend>(
     seed: u64,
 ) -> Result<()> {
     if let Some(addr) = args.get("listen") {
-        return listen_cli_on(backend, args, addr);
+        return listen_cli_on(backend, cfg, args, addr);
     }
     let corpus = crate::data::Corpus::generate(crate::training::CORPUS_BYTES, 5);
     let mode = args.get_or("mode", "window");
@@ -141,17 +149,32 @@ fn serve_cli_on<B: ServingBackend>(
         prompt_len_max: if decode { cfg.seq_len } else { 0 },
         gen_len_min: if decode { 1 } else { 0 },
         gen_len_max: if decode { (cfg.seq_len / 2).max(1) } else { 0 },
+        // Arrival-shape scenario (steady|diurnal|bursty|adversarial) and
+        // the optional multi-tenant budget mix.
+        shape: crate::data::trace::ArrivalShape::parse(args.get_or("scenario", "steady"))?,
+        tenants: if args.flag("tenants") {
+            crate::data::trace::TenantCfg::default_mix()
+        } else {
+            Vec::new()
+        },
         ..Default::default()
     };
-    let trace = TraceGen::new(trace_cfg, &corpus.heldout).generate();
+    let trace = TraceGen::new(trace_cfg, &corpus.heldout)?.generate();
 
-    let policy = match args.get_or("policy", "static") {
-        "adaptive" => PolicyKind::Adaptive,
-        _ => PolicyKind::Static,
-    };
     let serve_cfg = ServeCfg {
         max_wait_ms: args.f64_or("max-wait-ms", 4.0)?,
-        policy,
+        policy: PolicyKind::parse(args.get_or("policy", "static"))?,
+        // 0 (default) = unbounded replay queue, legacy serve-everything
+        // semantics; a positive cap sheds explicitly and anchors the
+        // elastic controller's demote-before-shed band.  Flags override
+        // the (parse-time-validated) config knobs.
+        queue_cap: args.usize_or("queue-cap", cfg.serve_queue_cap)?,
+        dwell_ms: args.f64_or("dwell-ms", cfg.serve_dwell_ms)?,
+        deadline_ms: args.f64_or("deadline-ms", 0.0)?,
+        pressure: cfg
+            .serve_pressure_band()
+            .map(|(hi, lo)| PressureBand::new(hi, lo))
+            .transpose()?,
         ..Default::default()
     };
 
@@ -176,16 +199,24 @@ fn serve_cli_on<B: ServingBackend>(
 /// `repro serve --listen [addr]` — the online front-end: accept real
 /// sockets (framed protocol + HTTP POST fallback) and serve through the
 /// decode seam until `--listen-secs` elapses (0 = until killed).
-fn listen_cli_on<B: ServingBackend>(backend: &mut B, args: &Args, addr: &str) -> Result<()> {
+fn listen_cli_on<B: ServingBackend>(
+    backend: &mut B,
+    cfg: &ModelConfig,
+    args: &Args,
+    addr: &str,
+) -> Result<()> {
     // A bare `--listen` parses as the value "true"; use the default addr.
     let addr = if addr == "true" { "127.0.0.1:7171" } else { addr };
     let lcfg = ListenCfg {
         serve: ServeCfg {
             max_wait_ms: args.f64_or("max-wait-ms", 4.0)?,
-            policy: match args.get_or("policy", "static") {
-                "adaptive" => PolicyKind::Adaptive,
-                _ => PolicyKind::Static,
-            },
+            policy: PolicyKind::parse(args.get_or("policy", "static"))?,
+            dwell_ms: args.f64_or("dwell-ms", cfg.serve_dwell_ms)?,
+            deadline_ms: args.f64_or("deadline-ms", 0.0)?,
+            pressure: cfg
+                .serve_pressure_band()
+                .map(|(hi, lo)| PressureBand::new(hi, lo))
+                .transpose()?,
             ..Default::default()
         },
         max_connections: args.usize_or("max-conns", 32)?,

@@ -5,11 +5,21 @@
 //! * **Adaptive** — starts from the static map, then downgrades under queue
 //!   pressure: the budget-conditioned inference the paper's elasticity
 //!   enables (Sec. 7 "budget-conditioned or input-adaptive inference").
+//! * **Elastic** — handled one layer up by
+//!   [`crate::coordinator::TierRouter`]: the same SLO map (or the
+//!   difficulty-signal router when tier calibration errors are available)
+//!   plus a stateful hysteresis controller instead of the per-request
+//!   threshold check.
 //!
-//! The pressure thresholds are **stateless**: every request is classified
-//! independently from the queue depth observed at its arrival.  There is no
-//! hysteresis — nothing remembers whether the policy was recently shedding,
-//! so a depth oscillating around a threshold flips the decision per request.
+//! The Static/Adaptive pressure thresholds are **stateless**: every request
+//! is classified independently from the queue depth observed at its
+//! arrival.  There is no hysteresis — nothing remembers whether the policy
+//! was recently shedding, so a depth oscillating around a threshold flips
+//! the decision per request.  That flapping is exactly what the Elastic
+//! controller's dwell-gated level machine exists to fix (and what the
+//! property tests in `tests/routing_controller.rs` pin).
+
+use anyhow::{ensure, Result};
 
 use crate::data::trace::{Request, Slo};
 
@@ -18,6 +28,78 @@ use crate::data::trace::{Request, Slo};
 pub enum PolicyKind {
     Static,
     Adaptive,
+    /// Difficulty-routed base tier + stateful hysteresis demotion
+    /// ([`crate::coordinator::ElasticController`]).
+    Elastic,
+}
+
+impl PolicyKind {
+    /// Parse a CLI/config spelling ("static" | "adaptive" | "elastic").
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "static" => Ok(PolicyKind::Static),
+            "adaptive" => Ok(PolicyKind::Adaptive),
+            "elastic" => Ok(PolicyKind::Elastic),
+            other => anyhow::bail!("unknown policy {other:?} (static|adaptive|elastic)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Static => "static",
+            PolicyKind::Adaptive => "adaptive",
+            PolicyKind::Elastic => "elastic",
+        }
+    }
+}
+
+/// Queue-depth demotion band: pressure enters at `hi`, exits at `lo`.
+///
+/// The two thresholds are what make hysteresis possible at all — a single
+/// threshold (or an inverted band, `lo >= hi`) degenerates into the
+/// per-request flapping the stateless policy admits to.  Construction is
+/// therefore validating: an inverted or degenerate band is a config error,
+/// never something to route with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PressureBand {
+    hi: usize,
+    lo: usize,
+}
+
+impl PressureBand {
+    /// Validated construction: requires `lo < hi` and `hi >= 1`.
+    pub fn new(hi: usize, lo: usize) -> Result<PressureBand> {
+        ensure!(hi >= 1, "pressure_hi must be >= 1, got {hi}");
+        ensure!(
+            lo < hi,
+            "inverted pressure band: pressure_lo ({lo}) must be strictly below \
+             pressure_hi ({hi})"
+        );
+        Ok(PressureBand { hi, lo })
+    }
+
+    /// Derive the band from the admission bound instead of magic numbers:
+    /// enter pressure at 3/8 of `queue_cap`, exit at 1/16 — demotion kicks
+    /// in well before the CAS admission check starts answering `Shed`, and
+    /// releases only once the queue has genuinely drained.  `queue_cap == 0`
+    /// (unbounded replay queue) falls back to the listener's default cap so
+    /// the band stays finite.
+    pub fn from_queue_cap(queue_cap: usize) -> PressureBand {
+        let cap = if queue_cap == 0 { 64 } else { queue_cap };
+        let hi = (cap * 3 / 8).max(2);
+        let lo = (cap / 16).min(hi - 1);
+        PressureBand { hi, lo }
+    }
+
+    /// Depth at/above which pressure is entered.
+    pub fn hi(&self) -> usize {
+        self.hi
+    }
+
+    /// Depth at/below which pressure is exited.
+    pub fn lo(&self) -> usize {
+        self.lo
+    }
 }
 
 /// Tier-selection policy over `n_tiers` tiers (ascending budget order).
@@ -25,19 +107,25 @@ pub enum PolicyKind {
 pub struct Policy {
     pub kind: PolicyKind,
     pub n_tiers: usize,
-    /// Queue depth (requests) at or above which the adaptive policy
-    /// downgrades every request a step, quality included (stateless
-    /// threshold, re-evaluated per request).  In the intermediate band
-    /// `pressure_lo..pressure_hi` only non-quality requests are demoted.
-    pub pressure_hi: usize,
-    /// Queue depth at or below which the adaptive policy serves the plain
-    /// SLO tier (stateless threshold, re-evaluated per request).
-    pub pressure_lo: usize,
+    /// Demotion band for the adaptive policy (stateless thresholds,
+    /// re-evaluated per request).  At/above `band.hi()` every request is
+    /// downgraded a step, quality included; in the intermediate band only
+    /// non-quality requests are demoted; at/below `band.lo()` the plain SLO
+    /// tier is served.
+    pub band: PressureBand,
 }
 
 impl Policy {
+    /// Policy with the band derived from the default admission bound
+    /// (`PressureBand::from_queue_cap(64)` — the listener's default
+    /// `queue_cap`, reproducing the historical 24/4 thresholds).
     pub fn new(kind: PolicyKind, n_tiers: usize) -> Self {
-        Policy { kind, n_tiers, pressure_hi: 24, pressure_lo: 4 }
+        Policy { kind, n_tiers, band: PressureBand::from_queue_cap(64) }
+    }
+
+    /// Policy with an explicit (already validated) demotion band.
+    pub fn with_band(kind: PolicyKind, n_tiers: usize, band: PressureBand) -> Self {
+        Policy { kind, n_tiers, band }
     }
 
     /// Base tier from the SLO class alone.
@@ -49,6 +137,11 @@ impl Policy {
         }
     }
 
+    /// Smallest tier index covering an explicit budget fraction in (0, 1].
+    pub fn budget_tier(&self, budget: f64) -> usize {
+        ((budget * self.n_tiers as f64).ceil() as usize).clamp(1, self.n_tiers) - 1
+    }
+
     /// Tier for a request given current total queue depth.
     ///
     /// An explicit `req.budget` must satisfy the (0, 1] contract — the
@@ -58,17 +151,20 @@ impl Policy {
     pub fn select(&self, req: &Request, queue_depth: usize) -> usize {
         if let Some(b) = req.budget {
             // Explicit budget override: smallest tier index covering it.
-            let idx = ((b * self.n_tiers as f64).ceil() as usize).clamp(1, self.n_tiers) - 1;
-            return idx;
+            return self.budget_tier(b);
         }
         let base = self.base_tier(req.slo);
         match self.kind {
             PolicyKind::Static => base,
+            // Elastic is routed through TierRouter; when constructed with
+            // kind Elastic but driven through the bare stateless entry
+            // point, behave like the static map (no hidden state here).
+            PolicyKind::Elastic => base,
             PolicyKind::Adaptive => {
-                if queue_depth >= self.pressure_hi {
+                if queue_depth >= self.band.hi() {
                     // Shed load: drop everything one tier (floor at 0).
                     base.saturating_sub(1)
-                } else if queue_depth <= self.pressure_lo {
+                } else if queue_depth <= self.band.lo() {
                     base
                 } else {
                     // Intermediate pressure: only quality keeps its tier.
@@ -125,6 +221,59 @@ mod tests {
     }
 
     #[test]
+    fn default_band_matches_legacy_thresholds() {
+        // The historical hardcoded 24/4 must fall out of the derivation at
+        // the listener's default queue_cap = 64 — same behaviour, no magic.
+        let band = PressureBand::from_queue_cap(64);
+        assert_eq!(band.hi(), 24);
+        assert_eq!(band.lo(), 4);
+        let p = Policy::new(PolicyKind::Adaptive, 4);
+        assert_eq!(p.band, band);
+        // Unbounded (replay) queues reuse the same reference cap.
+        assert_eq!(PressureBand::from_queue_cap(0), band);
+    }
+
+    #[test]
+    fn inverted_band_rejected() {
+        // Regression: pressure_lo >= pressure_hi used to silently invert
+        // the intermediate demotion band; now it's a construction error.
+        assert!(PressureBand::new(4, 24).is_err());
+        assert!(PressureBand::new(8, 8).is_err());
+        assert!(PressureBand::new(0, 0).is_err());
+        let b = PressureBand::new(24, 4).unwrap();
+        assert_eq!((b.hi(), b.lo()), (24, 4));
+        // Tight-but-valid band: lo = hi - 1.
+        assert!(PressureBand::new(2, 1).is_ok());
+    }
+
+    #[test]
+    fn derived_band_always_valid() {
+        crate::prop::forall(
+            142,
+            200,
+            |rng| rng.below(4096),
+            |cap| {
+                let band = PressureBand::from_queue_cap(*cap);
+                if band.lo() >= band.hi() {
+                    return Err(format!("cap {cap}: inverted derived band {band:?}"));
+                }
+                if *cap >= 8 && band.hi() >= *cap {
+                    return Err(format!("cap {cap}: band {band:?} enters at/above the cap"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for kind in [PolicyKind::Static, PolicyKind::Adaptive, PolicyKind::Elastic] {
+            assert_eq!(PolicyKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(PolicyKind::parse("bogus").is_err());
+    }
+
+    #[test]
     fn property_tier_always_valid() {
         crate::prop::forall(
             141,
@@ -134,7 +283,11 @@ mod tests {
                 let slo = crate::data::trace::Slo::ALL[rng.below(3)];
                 let depth = rng.below(200);
                 let budget = if rng.f64() < 0.3 { Some(rng.f64().max(0.01)) } else { None };
-                let kind = if rng.f64() < 0.5 { PolicyKind::Static } else { PolicyKind::Adaptive };
+                let kind = match rng.below(3) {
+                    0 => PolicyKind::Static,
+                    1 => PolicyKind::Adaptive,
+                    _ => PolicyKind::Elastic,
+                };
                 (n, slo, depth, budget, kind)
             },
             |(n, slo, depth, budget, kind)| {

@@ -35,6 +35,18 @@ fn student_full_cost(cfg: &ModelConfig, student: &ParamSet) -> Result<u64> {
     Ok(cost)
 }
 
+/// DP-selected serving artifacts loaded from `profiles.json`: one rank
+/// profile per tier plus the chain's measured per-tier calibration error —
+/// the difficulty signal the input-adaptive router's quality bars
+/// interpolate over.
+#[derive(Debug, Clone)]
+pub struct TierProfiles {
+    pub profiles: Vec<Vec<usize>>,
+    /// Per-tier calibration error (`error` field; lower = closer to the
+    /// teacher).  Files predating the field get the `1 - budget` proxy.
+    pub errors: Vec<f64>,
+}
+
 /// Load the DP-selected per-tier profiles the native pipeline persisted as
 /// `training::stage_dir()/profiles.json` (see the schema in ROADMAP.md).
 ///
@@ -53,7 +65,7 @@ fn student_full_cost(cfg: &ModelConfig, student: &ParamSet) -> Result<u64> {
 /// is treated as stale (rerun `repro profiles`).
 /// A file that claims to match but is malformed is a hard error: serving
 /// silently wrong submodels is never acceptable.
-pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Option<Vec<Vec<usize>>>> {
+pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Option<TierProfiles>> {
     let path = crate::training::stage_dir().join("profiles.json");
     if !path.exists() {
         return Ok(None);
@@ -117,6 +129,7 @@ pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Optio
         return Ok(None);
     }
     let mut out = Vec::with_capacity(tiers.len());
+    let mut errors = Vec::with_capacity(tiers.len());
     for (i, t) in tiers.iter().enumerate() {
         let budget = t.req("budget")?.as_f64()?;
         if (budget - cfg.serve_tiers[i]).abs() > 1e-9 {
@@ -171,9 +184,26 @@ pub fn load_tier_profiles(cfg: &ModelConfig, student: &ParamSet) -> Result<Optio
                 cfg.rank_full()
             );
         }
+        // Difficulty signal: the DP chain's measured calibration error.
+        // Absent (pre-signal schema) falls back to the budget proxy — the
+        // profiles themselves are still valid — but a present-yet-broken
+        // value is a hard error, not something to route quality bars with.
+        let error = match t.get("error").map(|e| e.as_f64()).transpose()? {
+            Some(e) => {
+                ensure!(
+                    e.is_finite() && e >= 0.0,
+                    "{}: tier {i} error {e} is not a usable difficulty signal \
+                     (must be finite and non-negative)",
+                    path.display()
+                );
+                e
+            }
+            None => (1.0 - budget).max(0.0),
+        };
+        errors.push(error);
         out.push(profile);
     }
-    Ok(Some(out))
+    Ok(Some(TierProfiles { profiles: out, errors }))
 }
 
 /// One deployable tier.
@@ -187,6 +217,9 @@ pub struct Tier {
     pub params: usize,
     /// Factor storage precision the submodel was quantized to.
     pub precision: Precision,
+    /// Calibration error (difficulty signal) — the DP chain's measured
+    /// value when loaded from `profiles.json`, else the `1 - budget` proxy.
+    pub error: f64,
     model: GarSubmodel,
 }
 
@@ -212,7 +245,7 @@ impl SubmodelRegistry {
     pub fn load_native(
         cfg: &ModelConfig,
         student: &ParamSet,
-        profiles: Option<&[Vec<usize>]>,
+        profiles: Option<&TierProfiles>,
     ) -> Result<SubmodelRegistry> {
         ensure!(!cfg.serve_tiers.is_empty(), "no serving tiers configured");
         // The rank-collision bump below (and every consumer of tier order)
@@ -225,17 +258,23 @@ impl SubmodelRegistry {
         );
         if let Some(ps) = profiles {
             ensure!(
-                ps.len() == cfg.serve_tiers.len(),
+                ps.profiles.len() == cfg.serve_tiers.len(),
                 "{} profiles for {} tiers",
-                ps.len(),
+                ps.profiles.len(),
                 cfg.serve_tiers.len()
+            );
+            ensure!(
+                ps.errors.len() == ps.profiles.len(),
+                "{} tier errors for {} profiles",
+                ps.errors.len(),
+                ps.profiles.len()
             );
         }
         let mut tiers = Vec::with_capacity(cfg.serve_tiers.len());
         let mut prev_rank: Option<usize> = None;
         for (i, &budget) in cfg.serve_tiers.iter().enumerate() {
             let profile = match profiles {
-                Some(ps) => ps[i].clone(),
+                Some(ps) => ps.profiles[i].clone(),
                 None => {
                     // Nearby budgets can round to the same uniform rank (and
                     // with it identical submodels), silently collapsing two
@@ -262,12 +301,17 @@ impl SubmodelRegistry {
             // mutate serve_tiers in place) pads with f32.
             let prec = cfg.tier_precision.get(i).copied().unwrap_or(Precision::F32);
             let model = GarSubmodel::from_student_prec(cfg, student, &profile, prec)?;
+            let error = match profiles {
+                Some(ps) => ps.errors[i],
+                None => (1.0 - budget).max(0.0),
+            };
             tiers.push(Tier {
                 idx: i,
                 budget,
                 profile,
                 params: model.n_params,
                 precision: prec,
+                error,
                 model,
             });
         }
@@ -349,6 +393,9 @@ impl ServingBackend for SubmodelRegistry {
     }
     fn tier_params(&self, tier: usize) -> usize {
         self.tiers[tier].params
+    }
+    fn tier_error(&self, tier: usize) -> f64 {
+        self.tiers[tier].error
     }
     fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]> {
         SubmodelRegistry::infer(self, tier, tokens)
@@ -559,5 +606,34 @@ mod tests {
         cfg.serve_tiers = vec![0.9, 0.1];
         let err = SubmodelRegistry::load_native(&cfg, &student, None).unwrap_err();
         assert!(err.to_string().contains("ascending"), "{err}");
+    }
+
+    #[test]
+    fn tier_errors_flow_from_profiles_to_backend_seam() {
+        let cfg = crate::config::load_model_config("tiny").unwrap();
+        let teacher = random_teacher(&cfg, 7);
+        let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+        let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+        // Without profiles, the difficulty signal is the 1 - budget proxy.
+        let reg = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+        for (i, &b) in cfg.serve_tiers.iter().enumerate() {
+            assert!((reg.tier_error(i) - (1.0 - b).max(0.0)).abs() < 1e-12);
+        }
+        // With profiles, the DP chain's measured errors reach the seam.
+        let n_layers = cfg.n_fact_layers();
+        let profiles = TierProfiles {
+            profiles: vec![vec![16; n_layers], vec![32; n_layers]],
+            errors: vec![0.42, 0.07],
+        };
+        let reg = SubmodelRegistry::load_native(&cfg, &student, Some(&profiles)).unwrap();
+        assert_eq!(reg.tier_error(0), 0.42);
+        assert_eq!(reg.tier_error(1), 0.07);
+        // A length mismatch between errors and profiles is a load error.
+        let broken = TierProfiles {
+            profiles: vec![vec![16; n_layers], vec![32; n_layers]],
+            errors: vec![0.42],
+        };
+        let err = SubmodelRegistry::load_native(&cfg, &student, Some(&broken)).unwrap_err();
+        assert!(err.to_string().contains("tier errors"), "{err}");
     }
 }

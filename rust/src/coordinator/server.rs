@@ -12,8 +12,9 @@ use crate::json::{self, Value};
 use crate::runtime::ServingBackend;
 
 use super::batcher::{DynamicBatcher, Pending};
+use super::controller::TierRouter;
 use super::metrics::{LatencyStats, Metrics};
-use super::policy::{Policy, PolicyKind};
+use super::policy::{PolicyKind, PressureBand};
 
 /// Serving-run configuration.
 #[derive(Debug, Clone)]
@@ -23,12 +24,65 @@ pub struct ServeCfg {
     pub max_wait_ms: f64,
     /// Replay speed: 1.0 = real-time per the trace, 0.0 = as-fast-as-possible.
     pub replay_speed: f64,
+    /// Queue bound for the replay paths: an arrival seeing this many queued
+    /// requests is shed explicitly (counted in the report, never served).
+    /// `0` (the default) keeps the legacy unbounded replay queue — every
+    /// trace request is served.  The listener has its own `queue_cap`.
+    pub queue_cap: usize,
+    /// Elastic controller: minimum dwell between tier-level changes (ms).
+    pub dwell_ms: f64,
+    /// Elastic controller: SLO latency deadline (ms) feeding the latency
+    /// pressure signal; `0` disables it (queue depth only).
+    pub deadline_ms: f64,
+    /// Demotion band override; `None` derives it from `queue_cap` via
+    /// [`PressureBand::from_queue_cap`] so demotion always engages below
+    /// the shed bound (demote-before-shed).
+    pub pressure: Option<PressureBand>,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { policy: PolicyKind::Static, max_wait_ms: 4.0, replay_speed: 1.0 }
+        ServeCfg {
+            policy: PolicyKind::Static,
+            max_wait_ms: 4.0,
+            replay_speed: 1.0,
+            queue_cap: 0,
+            dwell_ms: 25.0,
+            deadline_ms: 0.0,
+            pressure: None,
+        }
     }
+}
+
+impl ServeCfg {
+    /// The demotion band in effect: the explicit override, else derived
+    /// from `queue_cap`.
+    pub fn band(&self) -> PressureBand {
+        match self.pressure {
+            Some(b) => b,
+            None => PressureBand::from_queue_cap(self.queue_cap),
+        }
+    }
+
+    /// Build the routing layer for a backend with `n_tiers` tiers.
+    /// `tier_errors` is the per-tier difficulty signal (empty = positional
+    /// SLO map).
+    pub fn router(&self, n_tiers: usize, tier_errors: &[f64]) -> Result<TierRouter> {
+        TierRouter::new(
+            self.policy,
+            n_tiers,
+            self.band(),
+            Duration::from_secs_f64(self.dwell_ms.max(0.0) / 1e3),
+            self.deadline_ms,
+            tier_errors,
+        )
+    }
+}
+
+/// Per-tier difficulty signal off the backend seam (calibration error, or
+/// its `1 - budget` proxy) — what the router's quality bars interpolate.
+pub(super) fn backend_tier_errors<B: ServingBackend + ?Sized>(backend: &B) -> Vec<f64> {
+    (0..backend.n_tiers()).map(|t| backend.tier_error(t)).collect()
 }
 
 /// Capacity of the bounded ingest channel, sized off the batcher: enough to
@@ -70,12 +124,45 @@ pub struct ServeReport {
     pub tier_budgets: Vec<f64>,
     pub tier_params: Vec<usize>,
     pub tier_requests: Vec<usize>,
+    /// Per-tier difficulty signal the run routed with (calibration error
+    /// or budget proxy) — feeds `eval_loss_proxy`.
+    pub tier_errors: Vec<f64>,
+    /// Arrivals shed at the replay queue bound (only with `queue_cap > 0`).
+    pub shed: usize,
+    /// Elastic controller level changes over the run (0 for Static/Adaptive).
+    pub tier_switches: u64,
     pub wall_s: f64,
 }
 
 impl ServeReport {
     pub fn throughput_rps(&self) -> f64 {
         self.metrics.requests_done as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Served-traffic quality proxy: request-weighted mean tier error.
+    /// Lower is better; demotions push it up, which is exactly the
+    /// quality-vs-load trade the Pareto rows plot.
+    pub fn eval_loss_proxy(&self) -> f64 {
+        let total: usize = self.tier_requests.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.tier_requests
+            .iter()
+            .zip(self.tier_errors.iter())
+            .map(|(&n, &e)| n as f64 * e)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Fraction of arrivals shed at the queue bound.
+    pub fn shed_rate(&self) -> f64 {
+        let arrivals = self.metrics.routed() + self.shed;
+        if arrivals == 0 {
+            0.0
+        } else {
+            self.shed as f64 / arrivals as f64
+        }
     }
 
     pub fn print(&self) {
@@ -87,6 +174,16 @@ impl ServeReport {
             self.wall_s,
             self.throughput_rps(),
             self.metrics.mean_occupancy() * 100.0
+        );
+        println!(
+            "routing: shed {} ({:.1}%)  demotions {} ({:.1}%)  tier switches {}  \
+             loss proxy {:.4}",
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.metrics.demotions,
+            self.metrics.demotion_rate() * 100.0,
+            self.tier_switches,
+            self.eval_loss_proxy()
         );
         for (i, &b) in self.tier_budgets.iter().enumerate() {
             let l = self.metrics.tier_latency(i);
@@ -132,6 +229,12 @@ impl ServeReport {
             ("wall_s", json::finite_num(self.wall_s)),
             ("throughput_rps", json::finite_num(self.throughput_rps())),
             ("mean_occupancy", json::finite_num(self.metrics.mean_occupancy())),
+            ("shed", Value::Num(self.shed as f64)),
+            ("shed_rate", json::finite_num(self.shed_rate())),
+            ("demotions", Value::Num(self.metrics.demotions as f64)),
+            ("demotion_rate", json::finite_num(self.metrics.demotion_rate())),
+            ("tier_switches", Value::Num(self.tier_switches as f64)),
+            ("eval_loss_proxy", json::finite_num(self.eval_loss_proxy())),
             ("tiers", Value::Arr(tiers)),
         ]))
     }
@@ -237,7 +340,8 @@ pub fn serve_trace<B: ServingBackend + ?Sized>(
     cfg: &ServeCfg,
 ) -> Result<ServeReport> {
     let n_tiers = backend.n_tiers();
-    let policy = Policy::new(cfg.policy, n_tiers);
+    let tier_errors = backend_tier_errors(backend);
+    let mut router = cfg.router(n_tiers, &tier_errors)?;
     let mut batcher = DynamicBatcher::new(
         n_tiers,
         backend.batch(),
@@ -245,6 +349,7 @@ pub fn serve_trace<B: ServingBackend + ?Sized>(
     );
     let mut metrics = Metrics::new(n_tiers);
     let mut tier_requests = vec![0usize; n_tiers];
+    let mut shed = 0usize;
     // Reused across batches so the hot path stays allocation-free.
     let mut tokens: Vec<i32> = Vec::with_capacity(backend.batch() * backend.seq_len());
     let mut lats: Vec<Duration> = Vec::with_capacity(backend.batch());
@@ -277,9 +382,19 @@ pub fn serve_trace<B: ServingBackend + ?Sized>(
             match rx.try_recv() {
                 Ok(req) => {
                     let now = Instant::now();
-                    let tier = policy.select(&req, batcher.depth());
-                    tier_requests[tier] += 1;
-                    batcher.push(tier, req, now);
+                    let depth = batcher.depth();
+                    // Route before the shed check: the elastic controller
+                    // observes every arrival's depth, so demotion pressure
+                    // builds *before* the bound starts refusing work
+                    // (demote-before-shed).
+                    let d = router.route(&req, depth, now);
+                    if cfg.queue_cap > 0 && depth >= cfg.queue_cap {
+                        shed += 1;
+                        continue;
+                    }
+                    metrics.record_route(d.requested, d.served);
+                    tier_requests[d.served] += 1;
+                    batcher.push(d.served, req, now);
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -290,9 +405,13 @@ pub fn serve_trace<B: ServingBackend + ?Sized>(
         }
 
         let now = Instant::now();
+        router.observe(now, batcher.depth());
         if let Some(tier) = batcher.ready_tier(now) {
             let batch = batcher.take_batch(tier);
             run_batch(backend, &mut metrics, &mut tokens, &mut lats, tier, &batch)?;
+            for l in lats.iter() {
+                router.observe_latency(l.as_secs_f64() * 1e3);
+            }
         } else if open {
             // Idle: wait for the next deadline or a short poll tick.
             let wait = batcher
@@ -319,6 +438,9 @@ pub fn serve_trace<B: ServingBackend + ?Sized>(
         tier_budgets: (0..n_tiers).map(|t| backend.tier_budget(t)).collect(),
         tier_params: (0..n_tiers).map(|t| backend.tier_params(t)).collect(),
         tier_requests,
+        tier_errors,
+        shed,
+        tier_switches: router.tier_switches(),
         wall_s,
     })
 }
@@ -338,6 +460,14 @@ pub struct DecodeReport {
     /// End-to-end request latency samples (ms): queueing + prefill + decode.
     pub latency_ms: Vec<f64>,
     pub tier_requests: Vec<usize>,
+    /// Per-tier difficulty signal the run routed with.
+    pub tier_errors: Vec<f64>,
+    /// Arrivals shed at the replay queue bound (only with `queue_cap > 0`).
+    pub shed: usize,
+    /// Requests served below the tier their routing asked for.
+    pub demotions: usize,
+    /// Elastic controller level changes over the run.
+    pub tier_switches: u64,
 }
 
 impl DecodeReport {
@@ -356,6 +486,30 @@ impl DecodeReport {
 
     pub fn request_latency(&self) -> LatencyStats {
         LatencyStats::from_samples(&self.latency_ms)
+    }
+
+    /// Served-traffic quality proxy (see [`ServeReport::eval_loss_proxy`]).
+    pub fn eval_loss_proxy(&self) -> f64 {
+        let total: usize = self.tier_requests.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.tier_requests
+            .iter()
+            .zip(self.tier_errors.iter())
+            .map(|(&n, &e)| n as f64 * e)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Fraction of arrivals shed at the queue bound.
+    pub fn shed_rate(&self) -> f64 {
+        let arrivals = self.tier_requests.iter().sum::<usize>() + self.shed;
+        if arrivals == 0 {
+            0.0
+        } else {
+            self.shed as f64 / arrivals as f64
+        }
     }
 
     pub fn print(&self) {
@@ -377,6 +531,14 @@ impl DecodeReport {
             "decode step p50 {:.3}ms p99 {:.3}ms | prefill p50 {:.3}ms \
              p99 {:.3}ms | request p50 {:.1}ms p99 {:.1}ms",
             d.p50_ms, d.p99_ms, p.p50_ms, p.p99_ms, l.p50_ms, l.p99_ms
+        );
+        println!(
+            "routing: shed {} ({:.1}%)  demotions {}  tier switches {}  loss proxy {:.4}",
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.demotions,
+            self.tier_switches,
+            self.eval_loss_proxy()
         );
         for (i, &n) in self.tier_requests.iter().enumerate() {
             println!("tier {i}: {n} reqs");
@@ -402,6 +564,11 @@ impl DecodeReport {
             ("prefill_p99_ms", json::finite_num(p.p99_ms)),
             ("latency_p50_ms", json::finite_num(l.p50_ms)),
             ("latency_p99_ms", json::finite_num(l.p99_ms)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("shed_rate", json::finite_num(self.shed_rate())),
+            ("demotions", Value::Num(self.demotions as f64)),
+            ("tier_switches", Value::Num(self.tier_switches as f64)),
+            ("eval_loss_proxy", json::finite_num(self.eval_loss_proxy())),
         ]))
     }
 }
@@ -433,13 +600,16 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
     );
     let n_tiers = backend.n_tiers();
     let seq = backend.seq_len();
-    let policy = Policy::new(cfg.policy, n_tiers);
+    let tier_errors = backend_tier_errors(backend);
+    let mut router = cfg.router(n_tiers, &tier_errors)?;
     let mut batcher = DynamicBatcher::new(
         n_tiers,
         backend.batch(),
         Duration::from_secs_f64(cfg.max_wait_ms / 1e3),
     );
     let mut tier_requests = vec![0usize; n_tiers];
+    let mut shed = 0usize;
+    let mut demotions = 0usize;
 
     // Same ingest contracts as `serve_trace`, checked before the replay
     // thread spawns so an abort leaves no detached thread behind.  The
@@ -496,14 +666,24 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
     let start = Instant::now();
     let mut open = true;
     while open || batcher.depth() > 0 || !active.is_empty() {
-        // Drain arrivals.
+        // Drain arrivals.  Route-then-shed ordering as in `serve_trace`:
+        // the controller sees every arrival's depth, so demotion engages
+        // before the bound refuses work.
         loop {
             match rx.try_recv() {
                 Ok(req) => {
                     let now = Instant::now();
-                    let tier = policy.select(&req, batcher.depth());
-                    tier_requests[tier] += 1;
-                    batcher.push(tier, req, now);
+                    let depth = batcher.depth();
+                    let d = router.route(&req, depth, now);
+                    if cfg.queue_cap > 0 && depth >= cfg.queue_cap {
+                        shed += 1;
+                        continue;
+                    }
+                    if d.served < d.requested {
+                        demotions += 1;
+                    }
+                    tier_requests[d.served] += 1;
+                    batcher.push(d.served, req, now);
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -512,6 +692,7 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
                 }
             }
         }
+        router.observe(Instant::now(), batcher.depth());
 
         // Admission: between steps, queued requests join the running batch
         // as long as a slot plus a full eager page reservation is free;
@@ -543,7 +724,9 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
                 // off the prompt logits — complete without entering decode.
                 tokens_generated += p.req.gen_len;
                 backend.release_slot(slot);
-                latency_ms.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
+                let ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                latency_ms.push(ms);
+                router.observe_latency(ms);
                 requests_done += 1;
                 continue;
             }
@@ -609,7 +792,9 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
             if active[i].remaining == 0 {
                 let a = active.swap_remove(i);
                 backend.release_slot(a.slot);
-                latency_ms.push(a.enqueued.elapsed().as_secs_f64() * 1e3);
+                let ms = a.enqueued.elapsed().as_secs_f64() * 1e3;
+                latency_ms.push(ms);
+                router.observe_latency(ms);
                 requests_done += 1;
             } else {
                 i += 1;
@@ -629,6 +814,10 @@ pub fn serve_trace_decode<B: ServingBackend + ?Sized>(
         prefill_ms,
         latency_ms,
         tier_requests,
+        tier_errors,
+        shed,
+        demotions,
+        tier_switches: router.tier_switches(),
     })
 }
 
@@ -662,7 +851,12 @@ mod tests {
             gen_len: 0,
             budget,
         };
-        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let scfg = ServeCfg {
+            policy: PolicyKind::Static,
+            max_wait_ms: 1.0,
+            replay_speed: 0.0,
+            ..Default::default()
+        };
         for bad in [f64::NAN, 0.0, -0.5, 1.5, f64::INFINITY] {
             let err = serve_trace(&mut registry, vec![req(7, Some(bad))], &scfg).unwrap_err();
             let msg = err.to_string();
@@ -690,7 +884,12 @@ mod tests {
             gen_len: 0,
             budget: None,
         };
-        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let scfg = ServeCfg {
+            policy: PolicyKind::Static,
+            max_wait_ms: 1.0,
+            replay_speed: 0.0,
+            ..Default::default()
+        };
 
         // An over-long window fits neither the packed batch nor a K/V
         // stream: the run must abort naming the offender.
@@ -730,10 +929,17 @@ mod tests {
             gen_len_max: cfg.seq_len / 2,
             ..Default::default()
         };
-        let trace = TraceGen::new(tcfg, b"decode trace source text for the tiny registry").generate();
+        let trace = TraceGen::new(tcfg, b"decode trace source text for the tiny registry")
+            .unwrap()
+            .generate();
         let want_gen: usize = trace.iter().map(|r| r.gen_len).sum();
         let want_prefill: usize = trace.iter().map(|r| r.tokens.len()).sum();
-        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let scfg = ServeCfg {
+            policy: PolicyKind::Static,
+            max_wait_ms: 1.0,
+            replay_speed: 0.0,
+            ..Default::default()
+        };
         let report = serve_trace_decode(&mut registry, trace, &scfg).unwrap();
         assert_eq!(report.requests_done, n);
         assert_eq!(report.tokens_prefilled, want_prefill);
@@ -791,6 +997,9 @@ mod tests {
             tier_budgets: vec![0.5, f64::NAN],
             tier_params: vec![1000, 2000],
             tier_requests: vec![0, 0],
+            tier_errors: vec![0.5, f64::NAN],
+            shed: 0,
+            tier_switches: 0,
             wall_s: f64::INFINITY,
         };
         let parsed = json::parse(&serve.to_json()).expect("ServeReport JSON must re-parse");
@@ -806,6 +1015,10 @@ mod tests {
             prefill_ms: vec![],
             latency_ms: vec![f64::INFINITY],
             tier_requests: vec![1],
+            tier_errors: vec![f64::NAN],
+            shed: 0,
+            demotions: 0,
+            tier_switches: 0,
         };
         let parsed = json::parse(&decode.to_json()).expect("DecodeReport JSON must re-parse");
         assert!(parsed.get("decode_p50_ms").unwrap().as_f64().unwrap().is_finite());
@@ -820,7 +1033,12 @@ mod tests {
             gen_len: 0,
             budget: None,
         };
-        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let scfg = ServeCfg {
+            policy: PolicyKind::Static,
+            max_wait_ms: 1.0,
+            replay_speed: 0.0,
+            ..Default::default()
+        };
         let report = serve_trace(&mut registry, vec![req], &scfg).unwrap();
         json::parse(&report.to_json()).expect("live ServeReport JSON must re-parse");
     }
@@ -836,7 +1054,12 @@ mod tests {
             gen_len: 5,
             budget: None,
         };
-        let scfg = ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 };
+        let scfg = ServeCfg {
+            policy: PolicyKind::Static,
+            max_wait_ms: 1.0,
+            replay_speed: 0.0,
+            ..Default::default()
+        };
         let err = serve_trace_decode(&mut registry, vec![req], &scfg).unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("request 5"), "error must name the request: {msg}");

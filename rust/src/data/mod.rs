@@ -17,4 +17,4 @@ pub mod trace;
 
 pub use corpus::{Corpus, TokenBatcher};
 pub use digits::Digits;
-pub use trace::{Request, TraceCfg, TraceGen};
+pub use trace::{ArrivalShape, Request, TenantCfg, TraceCfg, TraceGen};

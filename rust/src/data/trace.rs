@@ -5,6 +5,8 @@
 //! Stands in for the production traces the paper's deployment story
 //! assumes (DESIGN.md §substitutions).
 
+use anyhow::{ensure, Result};
+
 use crate::rng::Rng;
 
 /// SLO class of a request — maps to a serving tier (budget) by policy.
@@ -62,6 +64,83 @@ impl Request {
     }
 }
 
+/// Arrival-shape of the trace: how the instantaneous Poisson rate evolves
+/// over the trace clock.  Shapes the load the elastic controller must ride
+/// out; the serving bench sweeps policies across these scenarios.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalShape {
+    /// Constant-rate Poisson arrivals (the legacy trace).
+    Steady,
+    /// Sinusoidal rate swing: `rate · (1 + swing · sin(2π t / period_s))`.
+    /// Models the slow day/night cycle a deployed fleet sees.
+    Diurnal { period_s: f64, swing: f64 },
+    /// Alternating phases: `burst_s` seconds at `mult ×` the base rate,
+    /// then `idle_s` seconds at the base rate.  The overload scenario the
+    /// Pareto acceptance criterion measures.
+    Bursty { burst_s: f64, idle_s: f64, mult: f64 },
+    /// Worst-case clumping: every `clump` consecutive requests arrive at
+    /// the same instant, all Quality-class with full-length prompts —
+    /// load concentrated on the largest tier.
+    Adversarial { clump: usize },
+}
+
+impl ArrivalShape {
+    /// Parse a CLI scenario name with built-in default parameters
+    /// ("steady" | "diurnal" | "bursty" | "adversarial").
+    pub fn parse(s: &str) -> Result<ArrivalShape> {
+        match s {
+            "steady" => Ok(ArrivalShape::Steady),
+            "diurnal" => Ok(ArrivalShape::Diurnal { period_s: 2.0, swing: 0.8 }),
+            "bursty" => Ok(ArrivalShape::Bursty { burst_s: 0.25, idle_s: 0.75, mult: 8.0 }),
+            "adversarial" => Ok(ArrivalShape::Adversarial { clump: 8 }),
+            other => anyhow::bail!(
+                "unknown scenario {other:?} (steady|diurnal|bursty|adversarial)"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalShape::Steady => "steady",
+            ArrivalShape::Diurnal { .. } => "diurnal",
+            ArrivalShape::Bursty { .. } => "bursty",
+            ArrivalShape::Adversarial { .. } => "adversarial",
+        }
+    }
+}
+
+impl Default for ArrivalShape {
+    fn default() -> Self {
+        ArrivalShape::Steady
+    }
+}
+
+/// One tenant in a multi-tenant trace mix: a traffic share, an optional
+/// contracted budget override stamped onto every request, and the tenant's
+/// own SLO mix.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantCfg {
+    /// Relative traffic weight (positive; normalised across tenants).
+    pub weight: f64,
+    /// Contracted budget in (0, 1] stamped as the explicit per-request
+    /// override, or `None` for SLO-routed traffic.
+    pub budget: Option<f64>,
+    pub slo_mix: [f64; 3],
+}
+
+impl TenantCfg {
+    /// A representative 4-tenant mix: two SLO-routed tenants plus two
+    /// budget-contracted ones (a cheap bulk tenant and a premium one).
+    pub fn default_mix() -> Vec<TenantCfg> {
+        vec![
+            TenantCfg { weight: 0.4, budget: None, slo_mix: [0.7, 0.2, 0.1] },
+            TenantCfg { weight: 0.3, budget: None, slo_mix: [0.1, 0.3, 0.6] },
+            TenantCfg { weight: 0.2, budget: Some(0.3), slo_mix: [0.5, 0.5, 0.0] },
+            TenantCfg { weight: 0.1, budget: Some(1.0), slo_mix: [0.0, 0.2, 0.8] },
+        ]
+    }
+}
+
 /// Trace generation knobs.
 #[derive(Debug, Clone)]
 pub struct TraceCfg {
@@ -84,6 +163,11 @@ pub struct TraceCfg {
     /// the legacy one-shot trace.
     pub gen_len_min: usize,
     pub gen_len_max: usize,
+    /// How the instantaneous arrival rate evolves (default: steady).
+    pub shape: ArrivalShape,
+    /// Multi-tenant mix; empty (the default) keeps the single-tenant
+    /// legacy trace driven by `slo_mix` alone.
+    pub tenants: Vec<TenantCfg>,
 }
 
 impl Default for TraceCfg {
@@ -99,7 +183,98 @@ impl Default for TraceCfg {
             prompt_len_max: 0,
             gen_len_min: 0,
             gen_len_max: 0,
+            shape: ArrivalShape::Steady,
+            tenants: Vec::new(),
         }
+    }
+}
+
+impl TraceCfg {
+    /// Reject contradictory configs loudly instead of silently degrading.
+    ///
+    /// The headline case (regression-tested): `gen_len_max > 0` with the
+    /// legacy fixed-length prompts (`prompt_len_max == 0`) used to clamp
+    /// every `gen_len` to 0 — full-`seq_len` prompts leave no positional
+    /// room — turning a decode trace into prefill-only without a word.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.rate.is_finite() && self.rate > 0.0,
+            "trace rate must be positive and finite, got {}",
+            self.rate
+        );
+        ensure!(self.seq_len >= 1, "seq_len must be >= 1");
+        ensure!(self.vocab >= 1, "vocab must be >= 1");
+        ensure!(
+            self.slo_mix.iter().all(|w| w.is_finite() && *w >= 0.0)
+                && self.slo_mix.iter().sum::<f64>() > 0.0,
+            "slo_mix must be non-negative with positive mass, got {:?}",
+            self.slo_mix
+        );
+        ensure!(
+            self.gen_len_max == 0 || self.prompt_len_max > 0,
+            "contradictory trace config: gen_len_max = {} asks for generation, but \
+             prompt_len_max == 0 keeps legacy fixed seq_len ({}) prompts that fill \
+             the positional table — every gen_len would silently clamp to 0.  Set \
+             prompt_len_max < seq_len (variable prompts) or gen_len_max = 0 \
+             (one-shot window trace)",
+            self.gen_len_max,
+            self.seq_len
+        );
+        if self.gen_len_max > 0 {
+            ensure!(
+                self.prompt_len_min.max(1) + self.gen_len_min <= self.seq_len,
+                "prompt_len_min ({}) + gen_len_min ({}) exceeds seq_len ({})",
+                self.prompt_len_min,
+                self.gen_len_min,
+                self.seq_len
+            );
+        }
+        match self.shape {
+            ArrivalShape::Steady => {}
+            ArrivalShape::Diurnal { period_s, swing } => {
+                ensure!(
+                    period_s.is_finite() && period_s > 0.0,
+                    "diurnal period_s must be positive, got {period_s}"
+                );
+                ensure!(
+                    (0.0..1.0).contains(&swing),
+                    "diurnal swing must be in [0, 1), got {swing}"
+                );
+            }
+            ArrivalShape::Bursty { burst_s, idle_s, mult } => {
+                ensure!(
+                    burst_s.is_finite() && burst_s > 0.0 && idle_s.is_finite() && idle_s >= 0.0,
+                    "bursty phases must be positive, got burst_s={burst_s} idle_s={idle_s}"
+                );
+                ensure!(
+                    mult.is_finite() && mult >= 1.0,
+                    "bursty mult must be >= 1, got {mult}"
+                );
+            }
+            ArrivalShape::Adversarial { clump } => {
+                ensure!(clump >= 2, "adversarial clump must be >= 2, got {clump}");
+            }
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            ensure!(
+                t.weight.is_finite() && t.weight > 0.0,
+                "tenant {i}: weight must be positive, got {}",
+                t.weight
+            );
+            if let Some(b) = t.budget {
+                ensure!(
+                    b.is_finite() && b > 0.0 && b <= 1.0,
+                    "tenant {i}: budget must be in (0, 1], got {b}"
+                );
+            }
+            ensure!(
+                t.slo_mix.iter().all(|w| w.is_finite() && *w >= 0.0)
+                    && t.slo_mix.iter().sum::<f64>() > 0.0,
+                "tenant {i}: slo_mix must be non-negative with positive mass, got {:?}",
+                t.slo_mix
+            );
+        }
+        Ok(())
     }
 }
 
@@ -113,9 +288,32 @@ pub struct TraceGen {
 }
 
 impl TraceGen {
-    pub fn new(cfg: TraceCfg, source_text: &[u8]) -> Self {
+    /// Validating constructor — a contradictory [`TraceCfg`] is rejected
+    /// here, before a single request is drawn.
+    pub fn new(cfg: TraceCfg, source_text: &[u8]) -> Result<Self> {
+        cfg.validate()?;
         let rng = Rng::new(cfg.seed);
-        TraceGen { cfg, rng, t: 0.0, issued: 0, source: source_text.to_vec() }
+        Ok(TraceGen { cfg, rng, t: 0.0, issued: 0, source: source_text.to_vec() })
+    }
+
+    /// Instantaneous arrival rate at trace time `t` under the configured
+    /// shape (adversarial clumping is handled in `next_request` directly).
+    fn rate_at(&self, t: f64) -> f64 {
+        let base = self.cfg.rate;
+        match self.cfg.shape {
+            ArrivalShape::Steady | ArrivalShape::Adversarial { .. } => base,
+            ArrivalShape::Diurnal { period_s, swing } => {
+                base * (1.0 + swing * (std::f64::consts::TAU * t / period_s).sin())
+            }
+            ArrivalShape::Bursty { burst_s, idle_s, mult } => {
+                let phase = t % (burst_s + idle_s);
+                if phase < burst_s {
+                    base * mult
+                } else {
+                    base
+                }
+            }
+        }
     }
 
     /// Generate the full trace.
@@ -128,12 +326,33 @@ impl TraceGen {
     }
 
     fn next_request(&mut self) -> Request {
-        // Exponential inter-arrival.
-        let u = self.rng.f64().max(1e-12);
-        self.t += -u.ln() / self.cfg.rate;
-        let slo = Slo::ALL[self.rng.weighted(&self.cfg.slo_mix)];
-        let prompt_len = if self.cfg.prompt_len_max == 0 {
-            self.cfg.seq_len
+        // Adversarial clumping: all but the first request of each clump
+        // arrive at the same instant as the clump head.
+        let clumped = match self.cfg.shape {
+            ArrivalShape::Adversarial { clump } => self.issued % clump as u64 != 0,
+            _ => false,
+        };
+        if !clumped {
+            // Exponential inter-arrival at the shape's instantaneous rate.
+            let u = self.rng.f64().max(1e-12);
+            self.t += -u.ln() / self.rate_at(self.t);
+        }
+        // Tenant mix overrides the trace-wide SLO mix and may stamp a
+        // contracted budget; adversarial clumps force Quality-class load.
+        let (mix, budget) = if self.cfg.tenants.is_empty() {
+            (self.cfg.slo_mix, None)
+        } else {
+            let mut weights = [0.0f64; 8];
+            let n = self.cfg.tenants.len().min(weights.len());
+            for (w, t) in weights.iter_mut().zip(self.cfg.tenants.iter()) {
+                *w = t.weight;
+            }
+            let tenant = &self.cfg.tenants[self.rng.weighted(&weights[..n])];
+            (tenant.slo_mix, tenant.budget)
+        };
+        let slo = if clumped { Slo::Quality } else { Slo::ALL[self.rng.weighted(&mix)] };
+        let prompt_len = if self.cfg.prompt_len_max == 0 || clumped {
+            self.cfg.seq_len.saturating_sub(if clumped { self.cfg.gen_len_min } else { 0 })
         } else {
             let lo = self.cfg.prompt_len_min.clamp(1, self.cfg.seq_len);
             let hi = self.cfg.prompt_len_max.clamp(lo, self.cfg.seq_len);
@@ -155,7 +374,7 @@ impl TraceGen {
             })
             .collect();
         self.issued += 1;
-        Request { id: self.issued, arrival_s: self.t, slo, tokens, gen_len, budget: None }
+        Request { id: self.issued, arrival_s: self.t, slo, tokens, gen_len, budget }
     }
 }
 
@@ -617,7 +836,7 @@ mod tests {
 
     fn trace(n: usize, seed: u64) -> Vec<Request> {
         let cfg = TraceCfg { n_requests: n, seed, ..Default::default() };
-        TraceGen::new(cfg, b"hello world this is source text for requests").generate()
+        TraceGen::new(cfg, b"hello world this is source text for requests").unwrap().generate()
     }
 
     #[test]
@@ -660,7 +879,9 @@ mod tests {
             seed: 9,
             ..Default::default()
         };
-        let a = TraceGen::new(cfg, b"variable length source text for decode traces").generate();
+        let a = TraceGen::new(cfg, b"variable length source text for decode traces")
+            .unwrap()
+            .generate();
         for r in &a {
             assert!((4..=24).contains(&r.tokens.len()), "prompt {}", r.tokens.len());
             assert!(r.gen_len <= 16);
@@ -669,5 +890,116 @@ mod tests {
         // Both knobs actually vary…
         assert!(a.iter().any(|r| r.tokens.len() != a[0].tokens.len()));
         assert!(a.iter().any(|r| r.gen_len >= 1), "generation lengths all clamped to zero");
+    }
+
+    #[test]
+    fn decode_trace_with_legacy_prompts_rejected_loudly() {
+        // Regression: gen_len_max > 0 with prompt_len_max == 0 used to
+        // silently clamp every gen_len to 0 (full-seq_len prompts leave no
+        // positional room) — a decode trace degrading to prefill-only.
+        let cfg = TraceCfg { gen_len_max: 8, ..Default::default() };
+        let err = TraceGen::new(cfg, b"source").unwrap_err();
+        assert!(err.to_string().contains("prompt_len_max"), "{err}");
+        // The validation names both halves of the contradiction.
+        assert!(err.to_string().contains("gen_len_max"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_rate_and_mix_rejected() {
+        let bad_rate = TraceCfg { rate: 0.0, ..Default::default() };
+        assert!(TraceGen::new(bad_rate, b"x").is_err());
+        let bad_mix = TraceCfg { slo_mix: [0.0, 0.0, 0.0], ..Default::default() };
+        assert!(TraceGen::new(bad_mix, b"x").is_err());
+    }
+
+    #[test]
+    fn scenario_parse_and_validation() {
+        for name in ["steady", "diurnal", "bursty", "adversarial"] {
+            let shape = ArrivalShape::parse(name).unwrap();
+            assert_eq!(shape.label(), name);
+            let cfg = TraceCfg { shape, ..Default::default() };
+            assert!(cfg.validate().is_ok(), "{name} defaults must validate");
+        }
+        assert!(ArrivalShape::parse("sawtooth").is_err());
+        let bad = TraceCfg {
+            shape: ArrivalShape::Diurnal { period_s: 2.0, swing: 1.5 },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = TraceCfg { shape: ArrivalShape::Adversarial { clump: 1 }, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn bursty_shape_compresses_arrivals() {
+        // Same request count and mean rate: the bursty trace must finish in
+        // less wall time than steady (bursts at mult× the base rate), and
+        // stay deterministic and monotone.
+        let steady = trace(400, 5);
+        let cfg = TraceCfg {
+            n_requests: 400,
+            seed: 5,
+            shape: ArrivalShape::parse("bursty").unwrap(),
+            ..Default::default()
+        };
+        let bursty = TraceGen::new(cfg, b"hello world this is source text for requests")
+            .unwrap()
+            .generate();
+        for w in bursty.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        let steady_span = steady.last().unwrap().arrival_s;
+        let bursty_span = bursty.last().unwrap().arrival_s;
+        assert!(
+            bursty_span < steady_span,
+            "bursty span {bursty_span} not compressed vs steady {steady_span}"
+        );
+    }
+
+    #[test]
+    fn adversarial_shape_clumps_quality_requests() {
+        let cfg = TraceCfg {
+            n_requests: 64,
+            seed: 11,
+            shape: ArrivalShape::Adversarial { clump: 8 },
+            ..Default::default()
+        };
+        let a = TraceGen::new(cfg, b"adversarial source text").unwrap().generate();
+        // Within each clump of 8, requests 1..8 share the head's arrival
+        // instant and are all Quality-class with full prompts.
+        for (i, r) in a.iter().enumerate() {
+            if i % 8 != 0 {
+                assert_eq!(r.arrival_s, a[i - i % 8].arrival_s, "request {i} not clumped");
+                assert_eq!(r.slo, Slo::Quality, "request {i} not quality");
+                assert_eq!(r.tokens.len(), 64, "request {i} prompt not full");
+            }
+        }
+        // Clump heads advance the clock.
+        assert!(a[8].arrival_s > a[0].arrival_s);
+    }
+
+    #[test]
+    fn tenant_mix_stamps_budgets_and_respects_weights() {
+        let cfg = TraceCfg {
+            n_requests: 2000,
+            seed: 13,
+            tenants: TenantCfg::default_mix(),
+            ..Default::default()
+        };
+        let a = TraceGen::new(cfg, b"tenant mix source text").unwrap().generate();
+        let budgeted = a.iter().filter(|r| r.budget.is_some()).count() as f64 / 2000.0;
+        // Tenants 3+4 carry 30% of the traffic weight.
+        assert!((budgeted - 0.3).abs() < 0.05, "budgeted fraction {budgeted}");
+        for r in &a {
+            if let Some(b) = r.budget {
+                assert!(b > 0.0 && b <= 1.0);
+            }
+        }
+        // A bad tenant budget is a config error.
+        let bad = TraceCfg {
+            tenants: vec![TenantCfg { weight: 1.0, budget: Some(1.5), slo_mix: [1.0, 0.0, 0.0] }],
+            ..Default::default()
+        };
+        assert!(TraceGen::new(bad, b"x").is_err());
     }
 }

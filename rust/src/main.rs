@@ -40,6 +40,10 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: repro <smoke|pipeline|serve|figure|table|profiles|lint> [--flags]\n\
                  figures: fig2 fig3 fig4 fig5 fig6 fig7a fig7b fig8 fig9 fig10; tables: tab1\n\
+                 serve: --policy static|adaptive|elastic  --scenario \
+                 steady|diurnal|bursty|adversarial  --tenants (multi-tenant budget mix)\n\
+                 \x20       --queue-cap N (0 = unbounded; positive sheds + anchors the \
+                 demote-before-shed band)  --dwell-ms MS  --deadline-ms MS\n\
                  serve --listen [addr]: online front-end (default 127.0.0.1:7171; \
                  --queue-cap N --max-conns N --conn-pipeline N --listen-secs S)\n\
                  lint [path…]: static invariant checks (R1 SAFETY / R2 hot-path \

@@ -40,6 +40,15 @@ pub trait ServingBackend {
     fn tier_budget(&self, tier: usize) -> f64;
     /// Inference parameter count of a tier's submodel.
     fn tier_params(&self, tier: usize) -> usize;
+    /// Calibration error of a tier — the difficulty signal the
+    /// input-adaptive router's per-SLO quality bars interpolate over
+    /// (lower = closer to the teacher).  Backends loaded from
+    /// `profiles.json` report the DP chain's measured per-tier `error`;
+    /// the default is the `1 - budget` proxy, which preserves the tier
+    /// ordering without claiming measured quality.
+    fn tier_error(&self, tier: usize) -> f64 {
+        (1.0 - self.tier_budget(tier)).max(0.0)
+    }
     /// Execute one batch (row-major `(batch, seq_len)` tokens, padded to the
     /// fixed serving batch) on a tier.
     fn infer(&mut self, tier: usize, tokens: &[i32]) -> Result<&[f32]>;

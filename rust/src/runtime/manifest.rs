@@ -98,6 +98,23 @@ pub struct ModelConfig {
     /// `seq_len` stream simultaneously; a smaller explicit value makes
     /// continuous-batching admission contend for pages.
     pub kv_max_pages: usize,
+    /// Serving queue bound for trace replay.  Optional in configs/*.json;
+    /// `0` (the default) keeps the unbounded serve-everything replay queue,
+    /// a positive cap sheds explicitly and anchors the elastic controller's
+    /// demote-before-shed band.  CLI `--queue-cap` overrides.
+    pub serve_queue_cap: usize,
+    /// Explicit demotion-band thresholds (queue depths): pressure enters at
+    /// `serve_pressure_hi`, exits at `serve_pressure_lo`.  Optional; both
+    /// `0` (the default) derives the band from the queue cap
+    /// ([`crate::coordinator::PressureBand::from_queue_cap`]).  Set, they
+    /// must satisfy `lo < hi` — validated at parse time, because an
+    /// inverted band silently disables demotion (the regression this knob's
+    /// validation pins).
+    pub serve_pressure_hi: usize,
+    pub serve_pressure_lo: usize,
+    /// Elastic controller minimum dwell between tier-level changes (ms).
+    /// Optional; defaults to 25 ms.  CLI `--dwell-ms` overrides.
+    pub serve_dwell_ms: f64,
 }
 
 impl ModelConfig {
@@ -145,6 +162,26 @@ impl ModelConfig {
                 .map(|x| x.as_usize())
                 .transpose()?
                 .unwrap_or(0),
+            serve_queue_cap: v
+                .get("serve_queue_cap")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            serve_pressure_hi: v
+                .get("serve_pressure_hi")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            serve_pressure_lo: v
+                .get("serve_pressure_lo")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            serve_dwell_ms: v
+                .get("serve_dwell_ms")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(25.0),
         };
         let mut cfg = cfg;
         cfg.tier_precision = match v.get("tier_precision") {
@@ -206,7 +243,44 @@ impl ModelConfig {
             self.tier_precision.len(),
             self.serve_tiers.len()
         );
+        // Serving-pressure knobs: an inverted or degenerate band would
+        // silently disable demotion at serve time, so reject it at parse.
+        anyhow::ensure!(
+            (self.serve_pressure_hi == 0 && self.serve_pressure_lo == 0)
+                || self.serve_pressure_lo < self.serve_pressure_hi,
+            "config '{}': serve_pressure_lo {} must be < serve_pressure_hi {} \
+             (an inverted band never demotes)",
+            self.name,
+            self.serve_pressure_lo,
+            self.serve_pressure_hi
+        );
+        anyhow::ensure!(
+            self.serve_queue_cap == 0
+                || self.serve_pressure_hi == 0
+                || self.serve_pressure_hi < self.serve_queue_cap,
+            "config '{}': serve_pressure_hi {} must sit below serve_queue_cap {} \
+             so demotion engages before admission sheds",
+            self.name,
+            self.serve_pressure_hi,
+            self.serve_queue_cap
+        );
+        anyhow::ensure!(
+            self.serve_dwell_ms.is_finite() && self.serve_dwell_ms >= 0.0,
+            "config '{}': serve_dwell_ms {} must be finite and non-negative",
+            self.name,
+            self.serve_dwell_ms
+        );
         Ok(())
+    }
+
+    /// The explicit demotion band when both pressure knobs are set, `None`
+    /// to derive from the queue cap.
+    pub fn serve_pressure_band(&self) -> Option<(usize, usize)> {
+        if self.serve_pressure_hi > 0 {
+            Some((self.serve_pressure_hi, self.serve_pressure_lo))
+        } else {
+            None
+        }
     }
 
     /// Attention path selection the serving/training workspaces resolve at

@@ -1122,6 +1122,10 @@ mod tests {
             tier_precision: vec![crate::linalg::quant::Precision::F32; 2],
             kv_page_size: crate::runtime::kvcache::DEFAULT_KV_PAGE_SIZE,
             kv_max_pages: 0,
+            serve_queue_cap: 0,
+            serve_pressure_hi: 0,
+            serve_pressure_lo: 0,
+            serve_dwell_ms: 25.0,
         }
     }
 

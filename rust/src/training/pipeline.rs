@@ -447,6 +447,14 @@ fn select_tier_indices(chain: &NestedChain, tiers: &[f64], full_cost: usize) -> 
 /// rejects the file when the served student fingerprints differently — a
 /// re-trained same-shape student silently invalidating its DP profiles was
 /// the one staleness class the `full_cost` dimensional check could not see.
+///
+/// `error` is the DP chain's measured calibration loss for the tier and
+/// doubles as the serving router's **difficulty signal**: the
+/// input-adaptive router interpolates per-SLO quality bars over these
+/// values and maps each request to the smallest tier whose error clears
+/// its bar ([`crate::coordinator::TierRouter`]).  Absent (legacy files),
+/// loading falls back to the `1 - budget` ordering proxy; present, it must
+/// be finite and non-negative or the load fails loudly.
 pub fn write_profiles_json(
     cfg: &ModelConfig,
     chain: &NestedChain,

@@ -30,6 +30,7 @@ fn trace(cfg: &ModelConfig, n: usize, rate: f64) -> Vec<flexrank::data::Request>
         },
         &corpus.heldout,
     )
+    .expect("trace cfg must validate")
     .generate()
 }
 
@@ -40,7 +41,7 @@ fn serves_every_request_exactly_once() {
     let report = serve_trace(
         &mut registry,
         t,
-        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 0.0 },
+        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 0.0, ..Default::default() },
     )
     .unwrap();
     assert_eq!(report.metrics.requests_done, 60);
@@ -58,7 +59,7 @@ fn quality_requests_go_to_biggest_tier_statically() {
     let report = serve_trace(
         &mut registry,
         t,
-        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 0.0 },
+        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 0.0, ..Default::default() },
     )
     .unwrap();
     let last = report.tier_requests.len() - 1;
@@ -74,7 +75,7 @@ fn adaptive_policy_sheds_load_downward() {
         serve_trace(
             registry,
             trace(&cfg, 120, 1e9),
-            &ServeCfg { policy, max_wait_ms: 1.0, replay_speed: 0.0 },
+            &ServeCfg { policy, max_wait_ms: 1.0, replay_speed: 0.0, ..Default::default() },
         )
         .unwrap()
     };
@@ -106,7 +107,7 @@ fn serving_hot_path_reuses_scratch() {
     let report = serve_trace(
         &mut registry,
         t,
-        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 },
+        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0, ..Default::default() },
     )
     .unwrap();
     assert_eq!(report.metrics.requests_done, 40);

@@ -58,11 +58,20 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
 
     // --- profiles.json round trip ------------------------------------------
     assert!(pipeline::profiles_path().exists(), "pipeline must persist profiles.json");
-    let profiles = load_tier_profiles(&cfg, &out.student)
+    let tp = load_tier_profiles(&cfg, &out.student)
         .expect("profiles.json must parse")
         .expect("profiles.json must be picked up for the matching config");
+    let profiles = tp.profiles.clone();
     assert_eq!(profiles, out.tier_profiles);
     assert_eq!(profiles.len(), cfg.serve_tiers.len());
+    // The DP chain's measured per-tier calibration error rides along as the
+    // router's difficulty signal.
+    assert_eq!(tp.errors.len(), profiles.len());
+    assert!(
+        tp.errors.iter().all(|e| e.is_finite() && *e >= 0.0),
+        "tier errors must be finite and non-negative: {:?}",
+        tp.errors
+    );
     for w in profiles.windows(2) {
         assert!(is_nested(&w[0], &w[1]), "tier profiles must be nested: {profiles:?}");
     }
@@ -99,11 +108,14 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
     }
 
     // --- serve the DP-selected submodels offline ---------------------------
-    let mut registry = SubmodelRegistry::load_native(&cfg, &out.student, Some(profiles.as_slice()))
+    let mut registry = SubmodelRegistry::load_native(&cfg, &out.student, Some(&tp))
         .expect("registry must load DP profiles");
     assert_eq!(registry.n_tiers(), cfg.serve_tiers.len());
     for (tier, p) in registry.tiers.iter().zip(&profiles) {
         assert_eq!(&tier.profile, p, "registry must serve the DP profile verbatim");
+    }
+    for (t, e) in tp.errors.iter().enumerate() {
+        assert_eq!(registry.tier_error(t), *e, "backend must expose the DP error verbatim");
     }
     let trace = TraceGen::new(
         TraceCfg {
@@ -116,11 +128,17 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
         },
         &corpus.heldout,
     )
+    .expect("trace cfg must validate")
     .generate();
     let report = serve_trace(
         &mut registry,
         trace,
-        &ServeCfg { policy: PolicyKind::Static, max_wait_ms: 1.0, replay_speed: 0.0 },
+        &ServeCfg {
+            policy: PolicyKind::Static,
+            max_wait_ms: 1.0,
+            replay_speed: 0.0,
+            ..Default::default()
+        },
     )
     .expect("serving over DP profiles failed");
     assert_eq!(report.metrics.requests_done, 24);
@@ -163,7 +181,7 @@ fn native_pipeline_to_dp_profile_serving_round_trip() {
     }
     let mut cfg_q = cfg.clone();
     cfg_q.tier_precision = vec![Precision::I8, Precision::Bf16];
-    let mut reg_q = SubmodelRegistry::load_native(&cfg_q, &out.student, Some(profiles.as_slice()))
+    let mut reg_q = SubmodelRegistry::load_native(&cfg_q, &out.student, Some(&tp))
         .expect("quantized registry must load");
     assert_eq!(reg_q.tier_precision_label(0), "i8");
     assert_eq!(reg_q.tier_precision_label(1), "bf16");

@@ -139,7 +139,7 @@ fn sequential_oracle(cfg: &ModelConfig, reg: &mut SubmodelRegistry, req: &Reques
 
 fn lcfg(queue_cap: usize, conn_pipeline: usize) -> ListenCfg {
     ListenCfg {
-        serve: ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 1.0 },
+        serve: ServeCfg { policy: PolicyKind::Static, max_wait_ms: 2.0, replay_speed: 1.0, ..Default::default() },
         max_connections: 8,
         queue_cap,
         conn_pipeline,
@@ -172,6 +172,7 @@ fn socket_responses_match_in_process_replay() {
         },
         &corpus.heldout,
     )
+    .expect("trace cfg must validate")
     .generate();
 
     let want: HashMap<u64, Vec<i32>> = trace

@@ -1,0 +1,307 @@
+//! Routing/controller suite: the hysteresis and never-demote contracts of
+//! the elastic tier controller, pinned as properties, plus an end-to-end
+//! elastic-vs-adaptive comparison under bursty overload.
+//!
+//! The headline pins (ISSUE acceptance):
+//! * hysteresis bounds the controller to ≤ 1 level change per dwell window
+//!   while the stateless adaptive policy measurably flaps on the same
+//!   oscillating depth sequence;
+//! * an explicit-budget request is never demoted, at any pressure;
+//! * the settled demotion level is monotone in sustained load;
+//! * under bursty overload with a shed bound, Elastic is not Pareto-worse
+//!   than Adaptive on (shed, p99), and its demote-before-shed machinery
+//!   actually engages (demotions > 0, switches ≥ 1).
+
+use std::time::{Duration, Instant};
+
+use flexrank::coordinator::{
+    serve_trace, Policy, PolicyKind, PressureBand, ServeCfg, SubmodelRegistry, TierRouter,
+};
+use flexrank::data::trace::Slo;
+use flexrank::data::{ArrivalShape, Corpus, Request, TraceCfg, TraceGen};
+use flexrank::runtime::{ModelConfig, ServingBackend};
+use flexrank::training::params::{decompose_teacher, random_teacher, student_from_factors};
+
+fn req(slo: Slo) -> Request {
+    Request { id: 0, arrival_s: 0.0, slo, tokens: vec![0i32; 4], gen_len: 0, budget: None }
+}
+
+fn elastic_router(n_tiers: usize, dwell_ms: u64) -> TierRouter {
+    TierRouter::new(
+        PolicyKind::Elastic,
+        n_tiers,
+        PressureBand::new(24, 4).unwrap(),
+        Duration::from_millis(dwell_ms),
+        0.0,
+        &[],
+    )
+    .unwrap()
+}
+
+/// Hysteresis acceptance pin: an oscillating queue depth straddling both
+/// thresholds (hot ↔ calm every observation) changes the elastic level at
+/// most once per dwell window, while the stateless adaptive `select` flips
+/// its answer on nearly every observation of the same sequence.
+#[test]
+fn hysteresis_bounds_switches_while_stateless_policy_flaps() {
+    const DWELL_MS: u64 = 10;
+    const STEP_MS: u64 = 1;
+    const STEPS: u64 = 200;
+    let windows = (STEPS * STEP_MS) / DWELL_MS; // 20 dwell windows
+
+    let mut router = elastic_router(4, DWELL_MS);
+    let stateless = Policy::new(PolicyKind::Adaptive, 4);
+    let standard = req(Slo::Standard);
+
+    let t0 = Instant::now();
+    let mut stateless_flips = 0usize;
+    let mut prev_pick: Option<usize> = None;
+    for k in 0..STEPS {
+        // Above hi (25) on even ticks, full calm (0) on odd ticks: the
+        // worst-case flapping load for a threshold rule.
+        let depth = if k % 2 == 0 { 25 } else { 0 };
+        let now = t0 + Duration::from_millis(k * STEP_MS);
+        router.observe(now, depth);
+        let pick = stateless.select(&standard, depth);
+        if prev_pick.is_some_and(|p| p != pick) {
+            stateless_flips += 1;
+        }
+        prev_pick = Some(pick);
+    }
+
+    // ≤ 1 switch per dwell window (+1 for the ungated first observation).
+    assert!(
+        router.tier_switches() <= windows + 1,
+        "elastic flapped: {} switches over {} dwell windows",
+        router.tier_switches(),
+        windows
+    );
+    // The same sequence makes the stateless policy change its answer on
+    // every tick — the bug class the controller exists to fix.
+    assert!(
+        stateless_flips as u64 >= 5 * (windows + 1),
+        "expected the stateless policy to flap (got {stateless_flips} flips \
+         vs {} elastic switches)",
+        router.tier_switches()
+    );
+}
+
+/// Explicit-budget contract under arbitrary pressure: whatever level the
+/// controller reaches, a budget-carrying request routes to its contracted
+/// tier with `requested == served`.
+#[test]
+fn property_budget_requests_never_demoted() {
+    flexrank::prop::forall(
+        144,
+        120,
+        |rng| {
+            let n_tiers = 2 + rng.below(6);
+            let budget = (1 + rng.below(100)) as f64 / 100.0; // (0, 1]
+            let depth = rng.below(4096);
+            let heat_steps = rng.below(24);
+            (n_tiers, budget, depth, heat_steps)
+        },
+        |(n_tiers, budget, depth, heat_steps)| {
+            let mut router = elastic_router(*n_tiers, 1);
+            let t0 = Instant::now();
+            // Sustained overload first, so the demotion level is nonzero
+            // whenever heat_steps allows it.
+            for k in 0..*heat_steps as u64 {
+                router.observe(t0 + Duration::from_millis(2 * k), 10_000);
+            }
+            let mut r = req(Slo::Quality);
+            r.budget = Some(*budget);
+            let d = router.route(&r, *depth, t0 + Duration::from_secs(1));
+            if d.requested != d.served {
+                return Err(format!("budget {budget} demoted: {d:?}"));
+            }
+            let expect = ((budget * *n_tiers as f64).ceil() as usize).clamp(1, *n_tiers) - 1;
+            if d.served != expect {
+                return Err(format!("budget {budget} -> tier {} (want {expect})", d.served));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Monotonicity through the router facade: with heavier sustained load the
+/// settled served tier for a Quality request never rises.
+#[test]
+fn property_served_tier_monotone_under_sustained_load() {
+    flexrank::prop::forall(
+        145,
+        60,
+        |rng| {
+            let n_tiers = 2 + rng.below(4);
+            let d1 = rng.below(100);
+            let d2 = d1 + rng.below(100);
+            (n_tiers, d1, d2)
+        },
+        |(n_tiers, d1, d2)| {
+            let settle = |depth: usize| {
+                let mut router = elastic_router(*n_tiers, 1);
+                let t0 = Instant::now();
+                for k in 0..24u64 {
+                    router.observe(t0 + Duration::from_millis(2 * k), depth);
+                }
+                router.route(&req(Slo::Quality), depth, t0 + Duration::from_secs(1)).served
+            };
+            let (s1, s2) = (settle(*d1), settle(*d2));
+            if s2 > s1 {
+                return Err(format!(
+                    "served tier rose under heavier load: depth {d1}->{s1}, {d2}->{s2}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: bursty overload through serve_trace with an explicit shed
+// bound.  Release-only (the debug-build kernel path is too slow to create
+// honest overload dynamics).
+
+fn tiny_registry(seed: u64) -> (ModelConfig, SubmodelRegistry) {
+    let cfg = flexrank::config::load_model_config("tiny").expect("configs/model_tiny.json");
+    let teacher = random_teacher(&cfg, seed);
+    let factors = decompose_teacher(&cfg, &teacher, None).unwrap();
+    let student = student_from_factors(&cfg, &teacher, &factors).unwrap();
+    let registry = SubmodelRegistry::load_native(&cfg, &student, None).unwrap();
+    (cfg, registry)
+}
+
+fn bursty_trace(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<Request> {
+    let corpus = Corpus::generate(50_000, 5);
+    TraceGen::new(
+        TraceCfg {
+            n_requests: n,
+            rate: 900.0,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            seed,
+            // Short on/off cycles so one test run spans several of them.
+            shape: ArrivalShape::Bursty { burst_s: 0.015, idle_s: 0.03, mult: 6.0 },
+            ..Default::default()
+        },
+        &corpus.heldout,
+    )
+    .expect("trace cfg must validate")
+    .generate()
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: needs realistic service rates")]
+fn elastic_demotes_before_shedding_under_bursty_overload() {
+    let (cfg, mut registry) = tiny_registry(77);
+    let n = 160;
+    let queue_cap = 2 * registry.batch();
+    let run = |registry: &mut SubmodelRegistry, policy| {
+        serve_trace(
+            registry,
+            bursty_trace(&cfg, n, 21),
+            &ServeCfg {
+                policy,
+                max_wait_ms: 1.0,
+                // Flood replay: guaranteed overload regardless of how fast
+                // this machine serves, so the controller must engage.
+                replay_speed: 0.0,
+                queue_cap,
+                dwell_ms: 4.0,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let adap = run(&mut registry, PolicyKind::Adaptive);
+    let elas = run(&mut registry, PolicyKind::Elastic);
+
+    // Shed-explicit accounting: every arrival is either served or counted
+    // shed — nothing vanishes.
+    assert_eq!(adap.metrics.requests_done + adap.shed, n, "adaptive accounting");
+    assert_eq!(elas.metrics.requests_done + elas.shed, n, "elastic accounting");
+
+    // Static/Adaptive never touch the controller.
+    assert_eq!(adap.tier_switches, 0);
+
+    // The elastic machinery must actually engage under this load...
+    assert!(
+        elas.metrics.demotions > 0,
+        "elastic never demoted under bursty overload: {:?}",
+        elas.metrics.requested_by_tier
+    );
+    // ...within the hysteresis bound (≤ 1 switch per dwell window).
+    let max_switches = (elas.wall_s * 1000.0 / 4.0).ceil() as u64 + 1;
+    assert!(
+        elas.tier_switches <= max_switches,
+        "elastic flapped e2e: {} switches in {:.2}s",
+        elas.tier_switches,
+        elas.wall_s
+    );
+
+    // Pareto: demote-before-shed must not lose on both axes at once.
+    let p99 = |r: &flexrank::coordinator::ServeReport| {
+        let mut all: Vec<f64> = Vec::new();
+        for t in 0..r.tier_budgets.len() {
+            all.extend(r.metrics.latency_ms[t].iter());
+        }
+        flexrank::coordinator::LatencyStats::from_samples(&all).p99_ms
+    };
+    // (Small slack absorbs scheduler jitter; the strict dominance check is
+    // the serving bench's Pareto verdict, which runs timed bursty replay.)
+    let (ap99, ep99) = (p99(&adap), p99(&elas));
+    assert!(
+        elas.shed <= adap.shed + n / 20 || ep99 <= ap99 * 1.1,
+        "elastic Pareto-dominated by adaptive: shed {} vs {}, p99 {ep99:.1}ms vs {ap99:.1}ms",
+        elas.shed,
+        adap.shed
+    );
+}
+
+/// The decode path threads the same router: an elastic decode run over a
+/// flooded variable-length trace reports its routing columns coherently.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: decode path under load")]
+fn decode_path_reports_elastic_routing() {
+    let (cfg, mut registry) = tiny_registry(78);
+    let corpus = Corpus::generate(50_000, 5);
+    let trace = TraceGen::new(
+        TraceCfg {
+            n_requests: 48,
+            rate: 2000.0,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            seed: 31,
+            prompt_len_min: (cfg.seq_len / 8).max(1),
+            prompt_len_max: cfg.seq_len,
+            gen_len_min: 1,
+            gen_len_max: (cfg.seq_len / 2).max(1),
+            shape: ArrivalShape::Bursty { burst_s: 0.01, idle_s: 0.02, mult: 8.0 },
+            ..Default::default()
+        },
+        &corpus.heldout,
+    )
+    .expect("trace cfg must validate")
+    .generate();
+    let report = flexrank::coordinator::serve_trace_decode(
+        &mut registry,
+        trace,
+        &ServeCfg {
+            policy: PolicyKind::Elastic,
+            max_wait_ms: 1.0,
+            replay_speed: 0.0,
+            queue_cap: 2 * registry.batch(),
+            dwell_ms: 2.0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.requests_done + report.shed, 48, "decode accounting");
+    assert!(report.eval_loss_proxy().is_finite());
+    assert!(report.shed_rate() >= 0.0 && report.shed_rate() <= 1.0);
+    // The emitted JSON must carry the routing columns.
+    let json = report.to_json();
+    for key in ["shed", "demotions", "tier_switches", "eval_loss_proxy"] {
+        assert!(json.contains(&format!("\"{key}\"")), "missing {key} in {json}");
+    }
+}

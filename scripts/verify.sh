@@ -29,6 +29,13 @@ cargo test --release -q --test fuzz_ingest
 echo "== listener e2e (release: sockets ≡ in-process replay, shed, drain, adversarial streams) =="
 cargo test --release -q --test listener_serving
 
+echo "== routing/controller suite (release: hysteresis ≤1 switch/dwell, never-demote budget, bursty e2e) =="
+cargo test --release -q --test routing_controller
+
+echo "== trace-scenario smoke (elastic policy over a bursty multi-tenant trace) =="
+cargo run --release --bin repro -- serve --config tiny --policy elastic --scenario bursty \
+  --tenants --requests 40 --rate 2000 --queue-cap 32 --dwell-ms 5
+
 echo "== repro lint (static invariants R1-R4 over rust/src) =="
 cargo run --release --bin repro -- lint
 
